@@ -1,0 +1,70 @@
+//! Quickstart: learn bitlengths for a small MLP on the blobs dataset.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the public API end to end: build a RunConfig, run the
+//! coordinator (learn → ceil → fine-tune), inspect learned per-layer
+//! bitlengths, and estimate the hardware benefit with the accelerator
+//! models — all through compiled HLO artifacts; python never runs.
+
+use anyhow::Result;
+
+use bitprune::accel;
+use bitprune::config::RunConfig;
+use bitprune::coordinator::run_experiment;
+use bitprune::metrics::Table;
+use bitprune::model::ModelMeta;
+use bitprune::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let cfg = RunConfig {
+        name: "quickstart".into(),
+        model: "mlp".into(),
+        dataset: "blobs".into(),
+        gamma: 1.0,
+        learn_steps: 150,
+        finetune_steps: 50,
+        eval_every: 25,
+        ..Default::default()
+    };
+
+    let rt = Runtime::cpu(&cfg.artifact_dir)?;
+    println!("platform: {}", rt.platform());
+
+    let outcome = run_experiment(&rt, &cfg)?;
+
+    println!("\n== learned bitlengths ==");
+    let meta = ModelMeta::load(
+        rt.artifact_dir().join(format!("{}_meta.json", cfg.model)),
+    )?;
+    let mut t = Table::new(&["layer", "weight bits", "activation bits"]);
+    for (i, l) in meta.layers.iter().enumerate() {
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.0}", outcome.final_.bits_w[i]),
+            format!("{:.0}", outcome.final_.bits_a[i]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "accuracy {:.2}% at avg {:.2}/{:.2} bits (W/A), {:.1}s",
+        outcome.final_.accuracy * 100.0,
+        outcome.final_.mean_bits_w(),
+        outcome.final_.mean_bits_a(),
+        outcome.wall_secs,
+    );
+
+    println!("\n== estimated accelerator benefit (vs 8-bit) ==");
+    let mut t = Table::new(&["accelerator", "speedup", "memory"]);
+    for r in accel::evaluate_all(&meta, &outcome.final_.bits_w, &outcome.final_.bits_a) {
+        t.row(vec![
+            r.accel.into(),
+            r.speedup.map_or("-".into(), |s| format!("{s:.2}x")),
+            format!("{:.2}x", r.mem_ratio),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

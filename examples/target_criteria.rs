@@ -1,0 +1,90 @@
+//! Weighted bit-loss targeting (paper §III-A5 / Table IV): the same
+//! network trained with four λ weightings — equal, batch-1 footprint
+//! (weight-heavy), batch-128 footprint (activation-heavy), and MAC
+//! count — and the resulting cost metrics compared.
+//!
+//! The expected shape: each targeted run wins on its own criterion.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example target_criteria [-- --model alexnet_s]
+//! ```
+
+use anyhow::Result;
+
+use bitprune::config::RunConfig;
+use bitprune::coordinator::run_experiment;
+use bitprune::metrics::Table;
+use bitprune::model::ModelMeta;
+use bitprune::quant::{self, Criterion};
+use bitprune::runtime::Runtime;
+use bitprune::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["model", "steps", "gamma"])?;
+    let model = args.get_or("model", "alexnet_s").to_string();
+    let steps = args.get_usize("steps", 150)?;
+
+    let base = RunConfig {
+        model: model.clone(),
+        dataset: "synthcifar".into(),
+        gamma: args.get_f64("gamma", 1.0)?,
+        learn_steps: steps,
+        finetune_steps: steps / 3,
+        eval_every: 50,
+        ..Default::default()
+    };
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    let meta = ModelMeta::load(
+        rt.artifact_dir().join(format!("{model}_meta.json")),
+    )?;
+
+    // Costs normalized to the 8-bit network (lower is better).
+    let b8 = vec![8.0f32; meta.num_quant_layers];
+    let fp1_8 = quant::total_footprint_bits(&meta, &b8, &b8, 1);
+    let fp128_8 = quant::total_footprint_bits(&meta, &b8, &b8, 128);
+    let mac_8 = quant::mac_cost(&meta, &b8, &b8);
+
+    let mut t = Table::new(&[
+        "target", "accuracy", "BS1 footprint", "BS128 footprint", "bit-MACs",
+    ]);
+    let mut results = Vec::new();
+    for crit in [
+        Criterion::Equal,
+        Criterion::FootprintBs1,
+        Criterion::FootprintBs128,
+        Criterion::MacOps,
+    ] {
+        let mut cfg = base.clone();
+        cfg.criterion = crit;
+        cfg.name = format!("criteria-{model}-{}", crit.name());
+        println!("training with criterion '{}'...", crit.name());
+        let out = run_experiment(&rt, &cfg)?;
+        let s = &out.final_;
+        let fp1 = quant::total_footprint_bits(&meta, &s.bits_w, &s.bits_a, 1) / fp1_8;
+        let fp128 =
+            quant::total_footprint_bits(&meta, &s.bits_w, &s.bits_a, 128) / fp128_8;
+        let mac = quant::mac_cost(&meta, &s.bits_w, &s.bits_a) / mac_8;
+        t.row(vec![
+            crit.name().into(),
+            format!("{:.2}%", s.accuracy * 100.0),
+            format!("{:.3}", fp1),
+            format!("{:.3}", fp128),
+            format!("{:.3}", mac),
+        ]);
+        results.push((crit, fp1, fp128, mac));
+    }
+    println!("\n(costs relative to the same network at uniform 8 bits)");
+    println!("{}", t.render());
+
+    // Shape check: each targeted criterion should beat the equal run on
+    // its own metric.
+    let equal = results[0];
+    let bs1_wins = results[1].1 <= equal.1;
+    let bs128_wins = results[2].2 <= equal.2;
+    let mac_wins = results[3].3 <= equal.3;
+    println!(
+        "targeted-wins: bs1 {} | bs128 {} | mac {}",
+        bs1_wins, bs128_wins, mac_wins
+    );
+    Ok(())
+}

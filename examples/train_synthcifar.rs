@@ -1,0 +1,130 @@
+//! End-to-end driver (DESIGN.md §7): train the ResNet-style CNN on the
+//! SynthCIFAR workload through the full three-layer stack, logging the
+//! loss curve, then validate the paper's headline shape:
+//!
+//!   1. a 16-bit (fp32-proxy) baseline and a BitPruning run train to
+//!      comparable accuracy,
+//!   2. BitPruning ends below 8 bits on average (aggressive quantization),
+//!   3. ceil+fine-tune recovers the integer-selection accuracy drop.
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_synthcifar [-- --steps 300]
+//! ```
+
+use anyhow::Result;
+
+use bitprune::baselines;
+use bitprune::config::RunConfig;
+use bitprune::coordinator::run_experiment;
+use bitprune::metrics::Table;
+use bitprune::model::ModelMeta;
+use bitprune::runtime::Runtime;
+use bitprune::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["steps", "finetune", "gamma", "model", "out"])?;
+    let learn_steps = args.get_usize("steps", 300)?;
+    let finetune_steps = args.get_usize("finetune", 100)?;
+    let gamma = args.get_f64("gamma", 1.0)?;
+    let model = args.get_or("model", "resnet_s").to_string();
+
+    let base = RunConfig {
+        name: format!("e2e-{model}"),
+        model: model.clone(),
+        dataset: "synthcifar".into(),
+        gamma,
+        learn_steps,
+        finetune_steps,
+        eval_every: 25,
+        out_dir: args.get_or("out", "reports").to_string(),
+        ..Default::default()
+    };
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    let meta = ModelMeta::load(
+        rt.artifact_dir().join(format!("{model}_meta.json")),
+    )?;
+    println!(
+        "end-to-end: {} ({} quant layers, {} params tensors, {:.1}K MACs/sample) on synthcifar",
+        model,
+        meta.num_quant_layers,
+        meta.num_params,
+        meta.total_macs_per_sample() as f64 / 1e3,
+    );
+
+    // 1. fp32-proxy baseline.
+    let bl_cfg = baselines::fp32_proxy_config(&base, &format!("e2e-{model}-baseline"));
+    println!("\n[1/2] baseline (16-bit proxy), {} steps...", bl_cfg.learn_steps + bl_cfg.finetune_steps);
+    let baseline = run_experiment(&rt, &bl_cfg)?;
+    println!(
+        "  baseline accuracy: {:.2}%",
+        baseline.final_.accuracy * 100.0
+    );
+
+    // 2. BitPruning.
+    println!("\n[2/2] bitpruning (gamma={gamma}), {} steps...", learn_steps + finetune_steps);
+    let bp = run_experiment(&rt, &base)?;
+    let names: Vec<String> = meta.layers.iter().map(|l| l.name.clone()).collect();
+    bp.recorder.write_csvs(&base.out_dir, &names)?;
+    baseline
+        .recorder
+        .write_csvs(&base.out_dir, &names)?;
+
+    // Loss curve (logged).
+    println!("\nloss curve (every 25 steps):");
+    for r in bp.recorder.steps.iter().step_by(25) {
+        println!(
+            "  step {:4} [{}] loss {:.4} (task {:.4} + γ·bits {:.4}) acc {:.2}% bits W {:.2} A {:.2}",
+            r.step, r.phase, r.loss, r.task_loss, r.bit_loss,
+            r.train_acc * 100.0, r.mean_bits_w, r.mean_bits_a
+        );
+    }
+
+    let mut t = Table::new(&["run", "stage", "accuracy", "W bits", "A bits"]);
+    t.row(vec![
+        "baseline".into(), "final".into(),
+        format!("{:.2}%", baseline.final_.accuracy * 100.0),
+        "16".into(), "16".into(),
+    ]);
+    if let Some(ni) = &bp.noninteger {
+        t.row(vec![
+            "bitpruning".into(), "non-integer".into(),
+            format!("{:.2}%", ni.accuracy * 100.0),
+            format!("{:.2}", ni.mean_bits_w()),
+            format!("{:.2}", ni.mean_bits_a()),
+        ]);
+    }
+    t.row(vec![
+        "bitpruning".into(), "final (int + finetune)".into(),
+        format!("{:.2}%", bp.final_.accuracy * 100.0),
+        format!("{:.2}", bp.final_.mean_bits_w()),
+        format!("{:.2}", bp.final_.mean_bits_a()),
+    ]);
+    println!("\n{}", t.render());
+
+    // Headline-shape checks.
+    let acc_gap = baseline.final_.accuracy - bp.final_.accuracy;
+    let avg_bits =
+        (bp.final_.mean_bits_w() + bp.final_.mean_bits_a()) / 2.0;
+    println!(
+        "accuracy gap vs baseline: {:.2}pp | average bits: {:.2}",
+        acc_gap * 100.0,
+        avg_bits
+    );
+    println!(
+        "csv: {}/e2e-{}.steps.csv (loss curve), .curve.csv (eval curve), .layers.csv (fig3)",
+        base.out_dir, model
+    );
+    if avg_bits >= 8.0 {
+        anyhow::bail!("FAIL: learned bits not below 8 — regularizer ineffective");
+    }
+    if acc_gap > 0.10 {
+        anyhow::bail!(
+            "FAIL: accuracy gap {:.1}pp exceeds 10pp — quantization destroyed accuracy",
+            acc_gap * 100.0
+        );
+    }
+    println!("END-TO-END OK");
+    Ok(())
+}

@@ -1,0 +1,131 @@
+"""AOT exporter: lower every (model, variant) to HLO text + meta JSON.
+
+HLO *text* (NOT .serialize()) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Artifacts per model (artifacts/):
+    <model>_init.hlo.txt    seed(u32) -> flat params
+    <model>_train.hlo.txt   see train.TrainGraph.train_step
+    <model>_eval.hlo.txt    see train.TrainGraph.eval_step
+    <model>_meta.json       shapes/names/layer geometry for the rust side
+
+Plus kernel-level artifacts used by the rust<->python bit-exactness
+integration tests:
+    fake_quant.hlo.txt      (x[4096], n) -> Q_r(x, n)
+    quant_matmul.hlo.txt    (a[64,128], w[128,96], n_a, n_w) -> a_q @ w_q
+
+Python runs ONCE: `make artifacts` is a no-op when inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models, train
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_fn(fn, specs, path):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text) // 1024} KiB)")
+
+
+def export_model(name: str, batch_size: int, out_dir: str, *,
+                 tag: str | None = None, **model_kw):
+    m = models.build(name, **model_kw)
+    tg = train.TrainGraph(m, batch_size)
+    tag = tag or name
+    print(f"[{tag}] layers={m.num_quant_layers} params={tg.num_params}")
+    export_fn(tg.init_params, tg.init_specs(),
+              os.path.join(out_dir, f"{tag}_init.hlo.txt"))
+    export_fn(tg.train_step, tg.train_specs(),
+              os.path.join(out_dir, f"{tag}_train.hlo.txt"))
+    export_fn(tg.eval_step, tg.eval_specs(),
+              os.path.join(out_dir, f"{tag}_eval.hlo.txt"))
+    meta = tg.meta()
+    meta["tag"] = tag
+    meta["model_kw"] = {k: v for k, v in model_kw.items() if k != "width_mults"}
+    if "width_mults" in model_kw:
+        meta["width_mults"] = {str(k): v for k, v in model_kw["width_mults"].items()}
+    with open(os.path.join(out_dir, f"{tag}_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def export_kernels(out_dir: str):
+    """Standalone kernel artifacts for the rust bit-exactness tests."""
+    from .quant import fake_quant
+    from .kernels.quant_matmul import quant_matmul_pallas
+
+    f32 = jnp.float32
+    export_fn(
+        lambda x, n: (fake_quant(x, n),),
+        (jax.ShapeDtypeStruct((4096,), f32), jax.ShapeDtypeStruct((), f32)),
+        os.path.join(out_dir, "fake_quant.hlo.txt"))
+    export_fn(
+        lambda a, w, na, nw: (quant_matmul_pallas(a, w, na, nw),),
+        (jax.ShapeDtypeStruct((64, 128), f32),
+         jax.ShapeDtypeStruct((128, 96), f32),
+         jax.ShapeDtypeStruct((), f32), jax.ShapeDtypeStruct((), f32)),
+        os.path.join(out_dir, "quant_matmul.hlo.txt"))
+
+
+# Table V (channel-depth ablation): alexnet_s with one conv widened x4 or
+# narrowed x0.25.  Conv indices 0..3.
+TABLE5_VARIANTS = [(i, m) for i in range(4) for m in (4.0, 0.25)]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--models", nargs="*",
+                    default=["mlp", "alexnet_s", "resnet_s", "mobilenet_s"])
+    ap.add_argument("--table5", action="store_true",
+                    help="also export alexnet_s width variants (Table V)")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--forward", choices=["pallas", "ref"], default="pallas",
+                    help="fake-quant forward implementation baked into the "
+                         "artifacts: the production pallas kernel, or the "
+                         "numerically-identical pure-jnp reference (used by "
+                         "the L2 perf comparison, EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+
+    if args.forward == "ref":
+        from . import quant
+        quant.USE_PALLAS_FORWARD = False
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    if not args.skip_kernels:
+        export_kernels(args.out_dir)
+    for name in args.models:
+        export_model(name, args.batch, args.out_dir)
+    if args.table5:
+        for idx, mult in TABLE5_VARIANTS:
+            mtag = "x4" if mult > 1 else "x025"
+            export_model("alexnet_s", args.batch, args.out_dir,
+                         tag=f"alexnet_s_w{idx}_{mtag}",
+                         width_mults={idx: mult})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""L1 Pallas kernels: interpolated-bitlength fake quantization.
+
+Two kernels implement the BitPruning hot path:
+
+  * ``minmax_pallas`` — grid reduction producing the group Lmin/Lmax.
+  * ``fake_quant_pallas`` — single fused pass applying the interpolated
+    quantizer Q_r to a VMEM-sized block: scale computation, round,
+    dequant and interpolation all happen in-register, one HBM read and
+    one HBM write per element.
+
+TPU adaptation (DESIGN.md §4): the paper's CUDA-era mental model
+(elementwise grid-stride loop) becomes a BlockSpec-tiled VMEM schedule.
+Blocks are sized by ``pick_block`` to land in the 16-128 KiB VMEM sweet
+spot.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so the kernels lower to plain HLO and the real-TPU
+numbers are estimated structurally (EXPERIMENTS.md §Perf).
+
+Scalars (n, lmin, lmax) are passed as (1, 1) f32 arrays: on real TPU they
+would live in SMEM; in interpret mode they are ordinary refs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM budget per operand block.  Real TPUv4 VMEM is ~16 MiB/core; we keep
+# each block well under that so double-buffering and the output block fit.
+_VMEM_BLOCK_BYTES = 128 * 1024
+_LANE = 128  # TPU lane width; last dim of any block should be a multiple.
+
+
+def pick_block(dim: int, max_elems: int) -> int:
+    """Largest lane-aligned block <= max_elems that divides/covers `dim`."""
+    if dim <= max_elems:
+        return dim
+    blk = (max_elems // _LANE) * _LANE
+    return max(blk, _LANE)
+
+
+def _pad_to(x, mult):
+    """Pad trailing dim of a flat vector up to a multiple of `mult`."""
+    n = x.shape[-1]
+    rem = (-n) % mult
+    if rem:
+        # Padding with the first element keeps min/max unchanged.
+        x = jnp.concatenate([x, jnp.broadcast_to(x[..., :1], x.shape[:-1] + (rem,))], -1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# min/max grid reduction
+# ---------------------------------------------------------------------------
+
+def _minmax_kernel(x_ref, mn_ref, mx_ref):
+    """Each grid step reduces one block to a partial (min, max) pair."""
+    blk = x_ref[...]
+    mn_ref[0, 0] = jnp.min(blk)
+    mx_ref[0, 0] = jnp.max(blk)
+
+
+def minmax_pallas(x):
+    """Group min/max of an arbitrary tensor via a two-stage reduction:
+    pallas block partials, then a tiny jnp reduce over the partial vector
+    (the second stage is O(num_blocks) and fuses into the same HLO)."""
+    flat = x.reshape(-1)
+    blk = pick_block(flat.shape[0], _VMEM_BLOCK_BYTES // 4)
+    flat = _pad_to(flat, blk)
+    nblk = flat.shape[0] // blk
+    mn, mx = pl.pallas_call(
+        _minmax_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((blk,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblk, 1), x.dtype),
+            jax.ShapeDtypeStruct((nblk, 1), x.dtype),
+        ],
+        interpret=True,
+    )(flat)
+    return jnp.min(mn), jnp.max(mx)
+
+
+# ---------------------------------------------------------------------------
+# fused interpolated quantizer
+# ---------------------------------------------------------------------------
+
+def _fake_quant_kernel(n_ref, mn_ref, mx_ref, x_ref, o_ref):
+    """One fused VMEM pass of Q_r over a block.
+
+    Everything is computed from three scalars; the per-element work is
+    2 fma-class ops per Q_i plus the interpolation blend — bandwidth
+    bound, which is why the single-pass fusion matters.
+    """
+    n = jnp.clip(n_ref[0, 0], ref.N_MIN, ref.N_MAX)
+    lmin = mn_ref[0, 0]
+    lmax = mx_ref[0, 0]
+    rng = jnp.maximum(lmax - lmin, ref._RANGE_EPS)
+    b = jnp.floor(n)
+    a = n - b
+    s_b = rng / (jnp.exp2(b) - 1.0)
+    s_b1 = rng / (jnp.exp2(b + 1.0) - 1.0)
+
+    x = x_ref[...]
+    centred = x - lmin
+    qb = lmin + jnp.round(centred / s_b) * s_b
+    qb1 = lmin + jnp.round(centred / s_b1) * s_b1
+    o_ref[...] = (1.0 - a) * qb + a * qb1
+
+
+def fake_quant_pallas(x, n, lmin=None, lmax=None):
+    """Interpolated fake-quantization of a whole tensor (per-tensor group).
+
+    If lmin/lmax are not supplied they are computed by the pallas
+    reduction above (training path: batch min/max, paper §II-A).
+    `n` is a scalar (learned bitlength parameter, pre-clip).
+    """
+    if lmin is None or lmax is None:
+        lmin, lmax = minmax_pallas(x)
+    shape = x.shape
+    flat = x.reshape(-1)
+    orig = flat.shape[0]
+    blk = pick_block(orig, _VMEM_BLOCK_BYTES // 4)
+    flat = _pad_to(flat, blk)
+    nblk = flat.shape[0] // blk
+
+    as11 = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _fake_quant_kernel,
+        grid=(nblk,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # n
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # lmin
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # lmax
+            pl.BlockSpec((blk,), lambda i: (i,)),    # x block
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=True,
+    )(as11(n), as11(lmin), as11(lmax), flat)
+    return out[:orig].reshape(shape)
+
+
+# Structural perf model (DESIGN.md §8): bytes moved per element for the
+# fused kernel vs the unfused reference graph.  Used by EXPERIMENTS.md
+# §Perf to report the expected TPU-side win of the fusion.
+FUSED_HBM_BYTES_PER_ELEM = 8      # 1 read + 1 write (f32)
+UNFUSED_HBM_BYTES_PER_ELEM = 28   # minmax read + qb rt + qb1 rt + blend w
+
+
+def vmem_bytes(block_elems: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one fake-quant grid step (in + out block)."""
+    return 2 * block_elems * dtype_bytes

@@ -1,0 +1,129 @@
+"""Pure-jnp reference oracle for the BitPruning quantizer.
+
+This module is the *ground truth* for every other implementation in the
+repo: the Pallas kernels (fake_quant.py, quant_matmul.py) are checked
+against it in python/tests, and the rust mirror (rust/src/quant/) is
+checked against the exported HLO of these functions in the rust
+integration tests.
+
+Math (paper §II-A), per value-group (layer by default):
+
+    Scale(n)   = (Lmax - Lmin) / (2^n - 1)
+    Int(V, n)  = Round((V - Lmin) / Scale(n))
+    Q_i(V, n)  = Lmin + Int(V, n) * Scale(n)
+    Q_r(V, b+a)= (1-a) * Q_i(V, b) + a * Q_i(V, b+1)      , 0 <= a < 1
+
+with n clipped to [N_MIN, N_MAX].  Rounding is round-half-to-even
+(jnp.round semantics); the rust mirror uses f32::round_ties_even to stay
+bit-compatible.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Paper clips bitlengths at 1.0 from below; we also cap above.  16 bits is
+# beyond any useful quantization target and keeps 2^n exactly
+# representable in f32.
+N_MIN = 1.0
+N_MAX = 16.0
+
+# Guards the degenerate all-equal group (Lmax == Lmin): the quantizer is
+# the identity there and gradients w.r.t. n vanish.
+_RANGE_EPS = 1e-12
+
+
+def clip_bits(n):
+    """Clip a (possibly learned, non-integer) bitlength into the valid range."""
+    return jnp.clip(n, N_MIN, N_MAX)
+
+
+def group_minmax(x, axes=None):
+    """Lmin/Lmax of a value group.
+
+    axes=None reduces over everything (per-tensor / per-layer group, the
+    paper's reported granularity); an axes tuple keeps the remaining
+    dimensions as independent groups (e.g. per-channel).
+    """
+    lmin = jnp.min(x, axis=axes, keepdims=axes is not None)
+    lmax = jnp.max(x, axis=axes, keepdims=axes is not None)
+    return lmin, lmax
+
+
+def scale(lmin, lmax, n):
+    """Smallest representable step for an n-bit group over [lmin, lmax]."""
+    rng = jnp.maximum(lmax - lmin, _RANGE_EPS)
+    return rng / (jnp.exp2(n) - 1.0)
+
+
+def quantize_int(x, lmin, lmax, n):
+    """Q_i: uniform min/max quantization with (float-typed) bitlength n.
+
+    Valid for integer n; also evaluated at floor(n)/floor(n)+1 by the
+    interpolated quantizer.  Returns the *dequantized* float value.
+    """
+    s = scale(lmin, lmax, n)
+    q = jnp.round((x - lmin) / s)
+    return lmin + q * s
+
+
+def quantize_interp(x, lmin, lmax, n):
+    """Q_r: interpolated non-integer-bitlength quantization (paper eq. 4).
+
+    n may be a scalar or broadcastable against x; it is clipped to
+    [N_MIN, N_MAX] here so callers can hand in raw learned parameters.
+    """
+    n = clip_bits(n)
+    b = jnp.floor(n)
+    a = n - b
+    qb = quantize_int(x, lmin, lmax, b)
+    qb1 = quantize_int(x, lmin, lmax, b + 1.0)
+    return (1.0 - a) * qb + a * qb1
+
+
+def interp_delta(x, lmin, lmax, n):
+    """dQ_r/dn = Q_i(V, b+1) - Q_i(V, b): the bitlength gradient kernel.
+
+    (The a-derivative of the interpolation; used by the custom_vjp in
+    quant.py and finite-difference-checked in tests.)
+    """
+    n = clip_bits(n)
+    b = jnp.floor(n)
+    return quantize_int(x, lmin, lmax, b + 1.0) - quantize_int(x, lmin, lmax, b)
+
+
+def fake_quant_ref(x, n, axes=None):
+    """Full reference path: group min/max + interpolated quantization."""
+    lmin, lmax = group_minmax(x, axes)
+    return quantize_interp(x, lmin, lmax, n)
+
+
+def quant_matmul_ref(a, w, n_a, n_w):
+    """Reference for the fused kernel: quantize both operands (per-tensor
+    groups), then matmul in f32."""
+    aq = fake_quant_ref(a, n_a)
+    wq = fake_quant_ref(w, n_w)
+    return aq @ wq
+
+
+def bit_loss(bits, lam):
+    """Regularizer term: sum_i lambda_i * n_i (paper §II-B).
+
+    `bits` and `lam` are flat vectors over all weight/activation groups.
+    The total training loss is L_task + gamma * bit_loss.
+    """
+    return jnp.sum(clip_bits(bits) * lam)
+
+
+def equal_layer_lambdas(num_groups):
+    """lambda_i such that an all-8-bit network yields bit_loss == 1.0 with
+    every group weighted equally (paper §II-B default)."""
+    return jnp.full((num_groups,), 1.0 / (8.0 * num_groups), dtype=jnp.float32)
+
+
+def weighted_lambdas(costs):
+    """lambda_i proportional to a per-group cost (element count for memory
+    footprint, MAC count for compute — paper §III-A5), normalized so an
+    all-8-bit network yields bit_loss == 1.0."""
+    costs = jnp.asarray(costs, dtype=jnp.float32)
+    return costs / (8.0 * jnp.sum(costs))

@@ -1,0 +1,151 @@
+"""L2 quantized layers.
+
+Every compute layer quantizes its input activations (one learned
+bitlength per layer, `n_a`) and its weights (`n_w`) with the BitPruning
+interpolated quantizer before the underlying op.  Biases and norm
+parameters stay full precision (standard practice; the paper quantizes
+weights and activations).
+
+The network is end-to-end quantized — first layer input (the image) and
+last layer included — matching the paper's "quantize all layers" stance.
+
+Layers are pure functions over param dicts; models.py assembles them and
+records per-layer geometry (element/MAC counts) for the loss weighting
+and the rust accelerator models.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .quant import fake_quant
+
+# When set (by collect_act_ranges), every quantized layer appends the
+# (min, max) of its input activations, in apply order — which matches the
+# LayerInfo order for all models.  Feeds the eval artifact's per-layer
+# range outputs, which the rust profiled baseline consumes.
+_ACT_RANGE_COLLECTOR = None
+
+
+@contextlib.contextmanager
+def collect_act_ranges():
+    global _ACT_RANGE_COLLECTOR
+    prev = _ACT_RANGE_COLLECTOR
+    _ACT_RANGE_COLLECTOR = taps = []
+    try:
+        yield taps
+    finally:
+        _ACT_RANGE_COLLECTOR = prev
+
+
+def _tap_act(x):
+    if _ACT_RANGE_COLLECTOR is not None:
+        _ACT_RANGE_COLLECTOR.append((jnp.min(x), jnp.max(x)))
+
+
+# ---------------------------------------------------------------------------
+# init helpers (used by the exported init artifact)
+# ---------------------------------------------------------------------------
+
+def he_conv(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * std
+
+
+def he_dense(key, din, dout):
+    std = (2.0 / din) ** 0.5
+    return jax.random.normal(key, (din, dout), jnp.float32) * std
+
+
+# ---------------------------------------------------------------------------
+# quantized primitives
+# ---------------------------------------------------------------------------
+
+def conv2d_q(x, p, n_w, n_a, stride=1, padding="SAME", groups=1):
+    """Quantized 2D conv, NHWC / HWIO. p = {'w': [kh,kw,cin/groups,cout], 'b': [cout]}."""
+    _tap_act(x)
+    xq = fake_quant(x, n_a)
+    wq = fake_quant(p["w"], n_w)
+    y = lax.conv_general_dilated(
+        xq, wq,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + p["b"]
+
+
+def dense_q(x, p, n_w, n_a):
+    """Quantized fully-connected layer. p = {'w': [din,dout], 'b': [dout]}."""
+    _tap_act(x)
+    xq = fake_quant(x, n_a)
+    wq = fake_quant(p["w"], n_w)
+    return xq @ wq + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# non-quantized support ops
+# ---------------------------------------------------------------------------
+
+def batch_norm(x, p, eps=1e-5):
+    """Batch-statistics normalization (no running stats).
+
+    Used identically in the train and eval graphs: statistics always come
+    from the current batch, which keeps the exported eval artifact
+    deterministic and stateless.  p = {'g': [c], 'beta': [c]}.
+    """
+    axes = tuple(range(x.ndim - 1))
+    mu = jnp.mean(x, axis=axes, keepdims=True)
+    var = jnp.var(x, axis=axes, keepdims=True)
+    xn = (x - mu) * lax.rsqrt(var + eps)
+    return xn * p["g"] + p["beta"]
+
+
+def max_pool(x, size=2, stride=2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max,
+        (1, size, size, 1), (1, stride, stride, 1), "VALID")
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# layer geometry record — consumed by the loss weighting (lambda vectors)
+# and by the rust accelerator models via the exported meta JSON
+# ---------------------------------------------------------------------------
+
+class LayerInfo:
+    """Static geometry of one quantized layer (one (n_w, n_a) pair)."""
+
+    def __init__(self, name, kind, weight_elems, act_in_elems, macs,
+                 cin, cout, kernel, out_spatial):
+        self.name = name
+        self.kind = kind                  # 'conv' | 'dwconv' | 'dense'
+        self.weight_elems = int(weight_elems)   # per network
+        self.act_in_elems = int(act_in_elems)   # per sample
+        self.macs = int(macs)                   # per sample
+        self.cin = int(cin)
+        self.cout = int(cout)
+        self.kernel = int(kernel)
+        self.out_spatial = int(out_spatial)
+
+    def to_json(self):
+        return {
+            "name": self.name, "kind": self.kind,
+            "weight_elems": self.weight_elems,
+            "act_in_elems": self.act_in_elems,
+            "macs": self.macs, "cin": self.cin, "cout": self.cout,
+            "kernel": self.kernel, "out_spatial": self.out_spatial,
+        }

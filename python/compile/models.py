@@ -1,0 +1,317 @@
+"""L2 model zoo: scaled-down counterparts of the paper's architectures.
+
+Each builder returns a `Model` with:
+  * init(key)                      -> params pytree (list of layer dicts)
+  * apply(params, x, bits_w, bits_a) -> logits
+  * infos                          -> [LayerInfo] (one per quantized layer,
+                                      index i consumes bits_w[i]/bits_a[i])
+
+Architectures (DESIGN.md §3 substitutions):
+  * mlp         — 3 dense layers, for blobs/spirals workloads
+  * alexnet_s   — conv stack + fc head, AlexNet's role (plain deep CNN)
+  * resnet_s    — residual blocks, ResNet18's role (skip connections)
+  * mobilenet_s — depthwise-separable blocks, MobileNetV2's role
+
+`alexnet_s` accepts per-layer width multipliers to regenerate the paper's
+Table V channel-depth ablation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .layers import LayerInfo
+
+
+class Model:
+    def __init__(self, name, init, apply, infos, input_shape, num_classes):
+        self.name = name
+        self.init = init
+        self.apply = apply
+        self.infos = infos            # list[LayerInfo]
+        self.input_shape = input_shape  # (H, W, C) or (D,)
+        self.num_classes = num_classes
+
+    @property
+    def num_quant_layers(self):
+        return len(self.infos)
+
+
+def _split(key, k):
+    return list(jax.random.split(key, k))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(din=32, hidden=(256, 128), num_classes=10):
+    dims = [din, *hidden, num_classes]
+    infos = []
+    for i in range(len(dims) - 1):
+        infos.append(LayerInfo(
+            name=f"fc{i}", kind="dense",
+            weight_elems=dims[i] * dims[i + 1],
+            act_in_elems=dims[i], macs=dims[i] * dims[i + 1],
+            cin=dims[i], cout=dims[i + 1], kernel=1, out_spatial=1))
+
+    def init(key):
+        ks = _split(key, len(dims) - 1)
+        return [{"w": L.he_dense(k, dims[i], dims[i + 1]),
+                 "b": jnp.zeros((dims[i + 1],), jnp.float32)}
+                for i, k in enumerate(ks)]
+
+    def apply(params, x, bits_w, bits_a):
+        h = x
+        last = len(params) - 1
+        for i, p in enumerate(params):
+            h = L.dense_q(h, p, bits_w[i], bits_a[i])
+            if i != last:
+                h = L.relu(h)
+        return h
+
+    return Model("mlp", init, apply, infos, (din,), num_classes)
+
+
+# ---------------------------------------------------------------------------
+# AlexNet-S
+# ---------------------------------------------------------------------------
+
+def alexnet_s(input_size=16, num_classes=10, width_mults=None, fc_width=256):
+    """Plain conv stack. width_mults: optional {conv_index: multiplier}
+    applied to that conv's output channels (Table V ablation)."""
+    width_mults = width_mults or {}
+    base = [32, 64, 128, 128]
+    chans = [max(4, int(round(c * width_mults.get(i, 1.0)))) for i, c in enumerate(base)]
+    pool_after = {0, 1, 3}          # halve spatial after these convs
+
+    infos, spatial, cin = [], input_size, 3
+    for i, cout in enumerate(chans):
+        infos.append(LayerInfo(
+            name=f"conv{i}", kind="conv",
+            weight_elems=3 * 3 * cin * cout,
+            act_in_elems=spatial * spatial * cin,
+            macs=spatial * spatial * cout * 3 * 3 * cin,
+            cin=cin, cout=cout, kernel=3, out_spatial=spatial))
+        if i in pool_after:
+            spatial //= 2
+        cin = cout
+    flat = spatial * spatial * cin
+    for j, (di, do) in enumerate([(flat, fc_width), (fc_width, num_classes)]):
+        infos.append(LayerInfo(
+            name=f"fc{j}", kind="dense", weight_elems=di * do,
+            act_in_elems=di, macs=di * do,
+            cin=di, cout=do, kernel=1, out_spatial=1))
+
+    def init(key):
+        ks = _split(key, len(chans) + 2)
+        params, ci = [], 3
+        for i, co in enumerate(chans):
+            params.append({"w": L.he_conv(ks[i], 3, 3, ci, co),
+                           "b": jnp.zeros((co,), jnp.float32),
+                           "bn": {"g": jnp.ones((co,), jnp.float32),
+                                  "beta": jnp.zeros((co,), jnp.float32)}})
+            ci = co
+        params.append({"w": L.he_dense(ks[-2], flat, fc_width),
+                       "b": jnp.zeros((fc_width,), jnp.float32)})
+        params.append({"w": L.he_dense(ks[-1], fc_width, num_classes),
+                       "b": jnp.zeros((num_classes,), jnp.float32)})
+        return params
+
+    def apply(params, x, bits_w, bits_a):
+        h = x
+        for i in range(len(chans)):
+            p = params[i]
+            h = L.conv2d_q(h, p, bits_w[i], bits_a[i])
+            h = L.batch_norm(h, p["bn"])
+            h = L.relu(h)
+            if i in pool_after:
+                h = L.max_pool(h)
+        h = h.reshape(h.shape[0], -1)
+        k = len(chans)
+        h = L.relu(L.dense_q(h, params[k], bits_w[k], bits_a[k]))
+        return L.dense_q(h, params[k + 1], bits_w[k + 1], bits_a[k + 1])
+
+    return Model("alexnet_s", init, apply, infos,
+                 (input_size, input_size, 3), num_classes)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-S
+# ---------------------------------------------------------------------------
+
+def resnet_s(input_size=16, num_classes=10, stem=16, stages=((16, 2), (32, 2), (64, 2))):
+    """ResNet-style: stem conv, residual stages (stride 2 between stages),
+    global average pool, fc.  Projection shortcuts are quantized layers
+    too (everything end-to-end)."""
+    infos = []
+    plan = []  # (kind, cin, cout, stride, spatial_in) in apply order
+
+    spatial, cin = input_size, 3
+    plan.append(("stem", cin, stem, 1, spatial)); cin = stem
+    for si, (cout, blocks) in enumerate(stages):
+        for bi in range(blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            proj = stride != 1 or cin != cout
+            plan.append(("conv_a", cin, cout, stride, spatial))
+            s_out = spatial // stride
+            plan.append(("conv_b", cout, cout, 1, s_out))
+            if proj:
+                plan.append(("proj", cin, cout, stride, spatial))
+            spatial, cin = s_out, cout
+    plan.append(("fc", cin, num_classes, 1, 1))
+
+    for kind, ci, co, stride, sp in plan:
+        if kind == "fc":
+            infos.append(LayerInfo("fc", "dense", ci * co, ci, ci * co,
+                                   ci, co, 1, 1))
+        else:
+            k = 1 if kind == "proj" else 3
+            so = sp // stride
+            infos.append(LayerInfo(
+                name=f"{kind}_{len(infos)}", kind="conv",
+                weight_elems=k * k * ci * co,
+                act_in_elems=sp * sp * ci,
+                macs=so * so * co * k * k * ci,
+                cin=ci, cout=co, kernel=k, out_spatial=so))
+
+    def init(key):
+        ks = _split(key, len(plan))
+        params = []
+        for (kind, ci, co, stride, sp), k in zip(plan, ks):
+            if kind == "fc":
+                params.append({"w": L.he_dense(k, ci, co),
+                               "b": jnp.zeros((co,), jnp.float32)})
+            else:
+                ksz = 1 if kind == "proj" else 3
+                params.append({"w": L.he_conv(k, ksz, ksz, ci, co),
+                               "b": jnp.zeros((co,), jnp.float32),
+                               "bn": {"g": jnp.ones((co,), jnp.float32),
+                                      "beta": jnp.zeros((co,), jnp.float32)}})
+        return params
+
+    def apply(params, x, bits_w, bits_a):
+        i = 0
+
+        def step(h, stride):
+            nonlocal i
+            p = params[i]
+            y = L.conv2d_q(h, p, bits_w[i], bits_a[i], stride=stride)
+            y = L.batch_norm(y, p["bn"])
+            i += 1
+            return y
+
+        h = L.relu(step(x, 1))                      # stem
+        for si, (cout, blocks) in enumerate(stages):
+            for bi in range(blocks):
+                stride = 2 if (bi == 0 and si > 0) else 1
+                cin_blk = h.shape[-1]
+                proj = stride != 1 or cin_blk != cout
+                y = L.relu(step(h, stride))          # conv_a
+                y = step(y, 1)                       # conv_b
+                sc = step(h, stride) if proj else h  # proj shortcut
+                h = L.relu(y + sc)
+        h = L.global_avg_pool(h)
+        p = params[i]
+        return L.dense_q(h, p, bits_w[i], bits_a[i])
+
+    return Model("resnet_s", init, apply, infos,
+                 (input_size, input_size, 3), num_classes)
+
+
+# ---------------------------------------------------------------------------
+# MobileNet-S
+# ---------------------------------------------------------------------------
+
+def mobilenet_s(input_size=16, num_classes=10,
+                blocks=((16, 32, 2), (32, 64, 2), (64, 64, 1))):
+    """Depthwise-separable stack: stem conv, then (dw3x3 + pw1x1) blocks.
+    Each dw and pw conv is its own quantized layer (they stress the
+    quantizer differently — dw convs are famously sensitive, mirroring
+    the paper's MobileNetV2 needing more bits)."""
+    infos, plan = [], []
+    spatial, cin = input_size, 3
+    plan.append(("stem", cin, 16, 1, spatial)); cin = 16
+    for (ci, co, stride) in blocks:
+        assert ci == cin, f"block chain mismatch {ci} != {cin}"
+        plan.append(("dw", ci, ci, stride, spatial))
+        spatial //= stride
+        plan.append(("pw", ci, co, 1, spatial))
+        cin = co
+    plan.append(("fc", cin, num_classes, 1, 1))
+
+    for kind, ci, co, stride, sp in plan:
+        so = sp // stride
+        if kind == "fc":
+            infos.append(LayerInfo("fc", "dense", ci * co, ci, ci * co,
+                                   ci, co, 1, 1))
+        elif kind == "dw":
+            infos.append(LayerInfo(
+                f"dw_{len(infos)}", "dwconv",
+                weight_elems=3 * 3 * ci,
+                act_in_elems=sp * sp * ci,
+                macs=so * so * ci * 3 * 3,
+                cin=ci, cout=ci, kernel=3, out_spatial=so))
+        else:  # stem or pw
+            k = 3 if kind == "stem" else 1
+            infos.append(LayerInfo(
+                f"{kind}_{len(infos)}", "conv",
+                weight_elems=k * k * ci * co,
+                act_in_elems=sp * sp * ci,
+                macs=so * so * co * k * k * ci,
+                cin=ci, cout=co, kernel=k, out_spatial=so))
+
+    def init(key):
+        ks = _split(key, len(plan))
+        params = []
+        for (kind, ci, co, stride, sp), k in zip(plan, ks):
+            if kind == "fc":
+                params.append({"w": L.he_dense(k, ci, co),
+                               "b": jnp.zeros((co,), jnp.float32)})
+            elif kind == "dw":
+                params.append({"w": L.he_conv(k, 3, 3, 1, ci),
+                               "b": jnp.zeros((ci,), jnp.float32),
+                               "bn": {"g": jnp.ones((ci,), jnp.float32),
+                                      "beta": jnp.zeros((ci,), jnp.float32)}})
+            else:
+                ksz = 3 if kind == "stem" else 1
+                params.append({"w": L.he_conv(k, ksz, ksz, ci, co),
+                               "b": jnp.zeros((co,), jnp.float32),
+                               "bn": {"g": jnp.ones((co,), jnp.float32),
+                                      "beta": jnp.zeros((co,), jnp.float32)}})
+        return params
+
+    def apply(params, x, bits_w, bits_a):
+        h = x
+        for i, (kind, ci, co, stride, sp) in enumerate(plan):
+            p = params[i]
+            if kind == "fc":
+                h = L.global_avg_pool(h)
+                return L.dense_q(h, p, bits_w[i], bits_a[i])
+            groups = ci if kind == "dw" else 1
+            h = L.conv2d_q(h, p, bits_w[i], bits_a[i],
+                           stride=stride, groups=groups)
+            h = L.batch_norm(h, p["bn"])
+            h = L.relu(h)
+        raise AssertionError("unreachable: fc layer terminates the plan")
+
+    return Model("mobilenet_s", init, apply, infos,
+                 (input_size, input_size, 3), num_classes)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def build(name: str, **kw) -> Model:
+    builders = {
+        "mlp": mlp,
+        "alexnet_s": alexnet_s,
+        "resnet_s": resnet_s,
+        "mobilenet_s": mobilenet_s,
+    }
+    if name not in builders:
+        raise KeyError(f"unknown model '{name}'; have {sorted(builders)}")
+    return builders[name](**kw)

@@ -1,0 +1,69 @@
+"""Differentiable BitPruning quantizer: custom_vjp STE wrappers.
+
+Forward: the Pallas fused kernel (or the jnp reference — selectable, the
+exported HLO is identical after interpret-mode lowering, but the pallas
+path exercises the production kernel).
+
+Backward (paper §II):
+  * d/dV  — straight-through estimator: gradient passes unchanged through
+    Round and through the (stop-gradiented) batch min/max.
+  * d/dn  — through the interpolation weight alpha:
+    dQ_r/dn = Q_i(V, b+1) - Q_i(V, b), reduced over the group.
+    Recomputed in the backward pass (not stashed) to keep training-memory
+    2x rather than 3x the fp32 baseline — matching the paper's §IV cost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.fake_quant import fake_quant_pallas
+
+# The exported artifacts use the pallas forward; tests flip this to check
+# both paths produce identical HLO-level numerics.
+USE_PALLAS_FORWARD = True
+
+
+@jax.custom_vjp
+def fake_quant(x, n):
+    """Q_r(x, n) over a per-tensor group with batch min/max."""
+    if USE_PALLAS_FORWARD:
+        return fake_quant_pallas(x, n)
+    return ref.fake_quant_ref(x, n)
+
+
+def _fwd(x, n):
+    return fake_quant(x, n), (x, n)
+
+
+def _bwd(res, g):
+    x, n = res
+    lmin, lmax = ref.group_minmax(x)
+    # STE for values; interpolation delta for the bitlength.
+    dn = jnp.sum(g * ref.interp_delta(x, lmin, lmax, n))
+    # Clip gating: outside [N_MIN, N_MAX] the clipped n is constant, so
+    # the true derivative is 0 there (prevents n drifting ever lower
+    # once pinned at 1 bit).
+    gate = ((n > ref.N_MIN) | (dn < 0)) & ((n < ref.N_MAX) | (dn > 0))
+    dn = jnp.where(gate, dn, 0.0)
+    return g, dn.astype(jnp.float32).reshape(jnp.shape(n))
+
+
+fake_quant.defvjp(_fwd, _bwd)
+
+
+def fake_quant_frozen(x, n_int):
+    """Inference/fine-tune-phase quantizer: integer bitlength, STE on
+    values only (bitlength receives no gradient because it is passed as a
+    constant/stop_gradient input)."""
+    return fake_quant(x, jax.lax.stop_gradient(n_int))
+
+
+def select_integer_bits(n):
+    """Final bitlength selection (paper §II-C): smallest integer >= n,
+    after clipping into the valid range."""
+    return jnp.ceil(ref.clip_bits(n))

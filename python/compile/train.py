@@ -1,0 +1,192 @@
+"""L2 training/eval graphs and their flattened AOT-facing signatures.
+
+The rust coordinator drives training through two compiled artifacts per
+model:
+
+  train_step(*params, *momenta, bits_w, bits_a, lam_w, lam_a,
+             x, y, lr, bits_lr, gamma, bits_mask)
+      -> (*new_params, *new_momenta, new_bits_w, new_bits_a,
+          loss, task_loss, bit_loss, correct)
+
+  eval_step(*params, bits_w, bits_a, x, y)
+      -> (loss, correct, act_min[num_layers], act_max[num_layers])
+
+Everything the paper's phases need is runtime-switchable without
+re-export:
+  * gamma, lam_w, lam_a     — regularizer strength / criterion weighting
+                              (Tables II, IV)
+  * bits_mask (0.0 / 1.0)   — gates the bitlength update: 1.0 in the
+                              learning phase, 0.0 after integer selection
+                              (paper §II-C) and for PACT-style fixed-
+                              uniform baselines
+  * lr, bits_lr             — one-cycle schedule is computed in rust and
+                              fed per step
+  * bits_w / bits_a         — state tensors; rust ceils them between
+                              phases (select_integer_bits)
+
+eval_step additionally reports per-layer activation ranges, feeding the
+profiled post-training baseline (Table VII) without a separate artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .kernels import ref
+
+MOMENTUM = 0.9
+WEIGHT_DECAY = 5e-4
+
+
+def _path_name(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "key"):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+class TrainGraph:
+    """Binds a Model to flattened, AOT-exportable train/eval functions."""
+
+    def __init__(self, model, batch_size):
+        self.model = model
+        self.batch_size = batch_size
+        example = model.init(jax.random.PRNGKey(0))
+        leaves_with_path, self.treedef = jax.tree_util.tree_flatten_with_path(example)
+        self.param_names = [_path_name(p) for p, _ in leaves_with_path]
+        self.param_shapes = [tuple(v.shape) for _, v in leaves_with_path]
+        self.num_params = len(self.param_names)
+        # Weight decay only on the matmul/conv weights, not biases/norms.
+        self.wd_mask = [name.endswith("/w") for name in self.param_names]
+        self.nl = model.num_quant_layers
+
+    # -- pytree plumbing ----------------------------------------------------
+
+    def unflatten(self, leaves):
+        return jax.tree_util.tree_unflatten(self.treedef, list(leaves))
+
+    def flatten(self, tree):
+        return jax.tree_util.tree_leaves(tree)
+
+    # -- losses ---------------------------------------------------------------
+
+    def task_loss_and_correct(self, params, bits_w, bits_a, x, y):
+        logits = self.model.apply(params, x, bits_w, bits_a)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return nll, correct
+
+    # -- exported functions ---------------------------------------------------
+
+    def train_step(self, *args):
+        np_ = self.num_params
+        params = self.unflatten(args[:np_])
+        mom = self.unflatten(args[np_:2 * np_])
+        (bits_w, bits_a, lam_w, lam_a, x, y,
+         lr, bits_lr, gamma, bits_mask) = args[2 * np_:]
+
+        def loss_fn(params, bits_w, bits_a):
+            task, correct = self.task_loss_and_correct(params, bits_w, bits_a, x, y)
+            bl = ref.bit_loss(bits_w, lam_w) + ref.bit_loss(bits_a, lam_a)
+            return task + gamma * bl, (task, bl, correct)
+
+        grad_fn = jax.grad(loss_fn, argnums=(0, 1, 2), has_aux=True)
+        (g_p, g_bw, g_ba), (task, bl, correct) = grad_fn(params, bits_w, bits_a)
+
+        # SGD + momentum, decoupled weight decay on weight matrices.
+        new_p, new_m = [], []
+        for leaf, g, m, wd in zip(self.flatten(params), self.flatten(g_p),
+                                  self.flatten(mom), self.wd_mask):
+            if wd:
+                g = g + WEIGHT_DECAY * leaf
+            m2 = MOMENTUM * m + g
+            new_p.append(leaf - lr * m2)
+            new_m.append(m2)
+
+        nbw = ref.clip_bits(bits_w - bits_lr * bits_mask * g_bw)
+        nba = ref.clip_bits(bits_a - bits_lr * bits_mask * g_ba)
+        loss = task + gamma * bl
+        return (*new_p, *new_m, nbw, nba, loss, task, bl, correct)
+
+    def eval_step(self, *args):
+        np_ = self.num_params
+        params = self.unflatten(args[:np_])
+        bits_w, bits_a, x, y = args[np_:]
+        with L.collect_act_ranges() as taps:
+            task, correct = self.task_loss_and_correct(params, bits_w, bits_a, x, y)
+        act_min = jnp.stack([t[0] for t in taps])
+        act_max = jnp.stack([t[1] for t in taps])
+        return task, correct, act_min, act_max
+
+    def init_params(self, seed):
+        """Exported init artifact: u32 seed -> flat param leaves."""
+        params = self.model.init(jax.random.PRNGKey(seed))
+        return tuple(self.flatten(params))
+
+    # -- example args for lowering -------------------------------------------
+
+    def _data_specs(self):
+        xs = jax.ShapeDtypeStruct((self.batch_size, *self.model.input_shape), jnp.float32)
+        ys = jax.ShapeDtypeStruct((self.batch_size,), jnp.int32)
+        return xs, ys
+
+    def train_specs(self):
+        f32 = jnp.float32
+        p = [jax.ShapeDtypeStruct(s, f32) for s in self.param_shapes]
+        vec = jax.ShapeDtypeStruct((self.nl,), f32)
+        sc = jax.ShapeDtypeStruct((), f32)
+        xs, ys = self._data_specs()
+        return (*p, *p, vec, vec, vec, vec, xs, ys, sc, sc, sc, sc)
+
+    def eval_specs(self):
+        f32 = jnp.float32
+        p = [jax.ShapeDtypeStruct(s, f32) for s in self.param_shapes]
+        vec = jax.ShapeDtypeStruct((self.nl,), f32)
+        xs, ys = self._data_specs()
+        return (*p, vec, vec, xs, ys)
+
+    def init_specs(self):
+        return (jax.ShapeDtypeStruct((), jnp.uint32),)
+
+    # -- metadata for the rust side -------------------------------------------
+
+    def meta(self):
+        m = self.model
+        return {
+            "model": m.name,
+            "batch_size": self.batch_size,
+            "input_shape": list(m.input_shape),
+            "num_classes": m.num_classes,
+            "num_quant_layers": m.num_quant_layers,
+            "num_params": self.num_params,
+            "param_names": self.param_names,
+            "param_shapes": [list(s) for s in self.param_shapes],
+            "layers": [i.to_json() for i in m.infos],
+            "momentum": MOMENTUM,
+            "weight_decay": WEIGHT_DECAY,
+            "n_min": ref.N_MIN,
+            "n_max": ref.N_MAX,
+            "train_inputs": {
+                "params": self.num_params,
+                "momenta": self.num_params,
+                "then": ["bits_w", "bits_a", "lam_w", "lam_a", "x", "y",
+                         "lr", "bits_lr", "gamma", "bits_mask"],
+            },
+            "train_outputs": {
+                "params": self.num_params,
+                "momenta": self.num_params,
+                "then": ["bits_w", "bits_a", "loss", "task_loss", "bit_loss",
+                         "correct"],
+            },
+            "eval_inputs": {"params": self.num_params,
+                            "then": ["bits_w", "bits_a", "x", "y"]},
+            "eval_outputs": ["loss", "correct", "act_min", "act_max"],
+        }

@@ -1,0 +1,112 @@
+"""L2 model zoo: shapes, geometry accounting, and quantization wiring."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import models
+
+
+def batch_for(m, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n, *m.input_shape)).astype(np.float32))
+
+
+@pytest.mark.parametrize("name", ["mlp", "alexnet_s", "resnet_s", "mobilenet_s"])
+class TestModelZoo:
+    def test_apply_shape(self, name):
+        m = models.build(name)
+        params = m.init(jax.random.PRNGKey(0))
+        nl = m.num_quant_layers
+        bits = jnp.full((nl,), 8.0)
+        logits = m.apply(params, batch_for(m), bits, bits)
+        assert logits.shape == (4, m.num_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_infos_match_quant_calls(self, name):
+        # Each quantized layer consumes exactly one bits index: the
+        # gradient of the logits w.r.t. the bits vectors must touch
+        # every entry (a layer that skipped its index would leave a
+        # structurally-zero column).
+        m = models.build(name)
+        params = m.init(jax.random.PRNGKey(0))
+        nl = m.num_quant_layers
+        x = batch_for(m)
+
+        def f(bw, ba):
+            return jnp.sum(m.apply(params, x, bw, ba) ** 2)
+
+        bw = jnp.full((nl,), 3.3)
+        ba = jnp.full((nl,), 4.7)
+        gw, ga = jax.grad(f, argnums=(0, 1))(bw, ba)
+        assert gw.shape == (nl,) and ga.shape == (nl,)
+        # every layer's weight bits participate
+        assert np.count_nonzero(np.asarray(gw)) >= nl - 1, np.asarray(gw)
+        assert np.count_nonzero(np.asarray(ga)) >= nl - 1, np.asarray(ga)
+
+    def test_param_count_matches_geometry(self, name):
+        # Total weight elements from LayerInfo equals actual quantized
+        # weight tensor sizes.
+        m = models.build(name)
+        params = m.init(jax.random.PRNGKey(0))
+        actual = sum(
+            int(np.prod(p["w"].shape)) for p in params if isinstance(p, dict) and "w" in p
+        )
+        declared = sum(i.weight_elems for i in m.infos)
+        assert actual == declared
+
+    def test_init_deterministic(self, name):
+        m = models.build(name)
+        a = m.init(jax.random.PRNGKey(5))
+        b = m.init(jax.random.PRNGKey(5))
+        for pa, pb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(pa, pb)
+
+    def test_bits_affect_output(self, name):
+        # 1-bit quantization must change the logits vs 8-bit.
+        m = models.build(name)
+        params = m.init(jax.random.PRNGKey(0))
+        nl = m.num_quant_layers
+        x = batch_for(m)
+        hi = m.apply(params, x, jnp.full((nl,), 8.0), jnp.full((nl,), 8.0))
+        lo = m.apply(params, x, jnp.full((nl,), 1.0), jnp.full((nl,), 1.0))
+        assert not np.allclose(hi, lo)
+
+
+class TestWidthVariants:
+    def test_width_mult_changes_channels(self):
+        base = models.alexnet_s()
+        wide = models.alexnet_s(width_mults={1: 4.0})
+        narrow = models.alexnet_s(width_mults={1: 0.25})
+        assert wide.infos[1].cout == base.infos[1].cout * 4
+        assert narrow.infos[1].cout == base.infos[1].cout // 4
+        # Downstream layer input channels follow.
+        assert wide.infos[2].cin == base.infos[2].cin * 4
+
+    def test_width_variant_trains_shape(self):
+        m = models.alexnet_s(width_mults={0: 0.25})
+        params = m.init(jax.random.PRNGKey(1))
+        nl = m.num_quant_layers
+        bits = jnp.full((nl,), 8.0)
+        out = m.apply(params, batch_for(m), bits, bits)
+        assert out.shape == (4, 10)
+
+
+class TestGeometry:
+    def test_macs_consistent_with_shapes(self):
+        m = models.alexnet_s(input_size=16)
+        conv0 = m.infos[0]
+        # 16x16 output spatial, 3x3x3 kernel, 32 filters
+        assert conv0.macs == 16 * 16 * 32 * 9 * 3
+        assert conv0.act_in_elems == 16 * 16 * 3
+
+    def test_depthwise_macs(self):
+        m = models.mobilenet_s()
+        dw = next(i for i in m.infos if i.kind == "dwconv")
+        # depthwise: macs = out_spatial^2 * channels * k*k (no cin factor)
+        assert dw.macs == dw.out_spatial**2 * dw.cout * dw.kernel**2
+
+    def test_unknown_model_rejected(self):
+        with pytest.raises(KeyError):
+            models.build("vgg")

@@ -1,0 +1,138 @@
+"""L2 train/eval graph semantics: loss composition, bit updates, masking,
+momentum, and the flattened AOT signatures the rust side relies on."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import models, train
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tg():
+    return train.TrainGraph(models.mlp(din=8, hidden=(16,), num_classes=3), batch_size=8)
+
+
+def make_args(tg, *, gamma=1.0, lr=0.05, bits_lr=1.0, mask=1.0, bits=8.0, seed=0):
+    rng = np.random.default_rng(seed)
+    params = tg.init_params(0)
+    mom = [jnp.zeros_like(p) for p in params]
+    nl = tg.nl
+    bw = jnp.full((nl,), bits)
+    ba = jnp.full((nl,), bits)
+    lam = jnp.full((nl,), 1.0 / (8.0 * 2 * nl), dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, 8).astype(np.int32))
+    return (*params, *mom, bw, ba, lam, lam, x, y,
+            jnp.float32(lr), jnp.float32(bits_lr), jnp.float32(gamma),
+            jnp.float32(mask))
+
+
+class TestTrainStep:
+    def test_output_arity(self, tg):
+        out = tg.train_step(*make_args(tg))
+        assert len(out) == 2 * tg.num_params + 6
+
+    def test_loss_composition(self, tg):
+        out = tg.train_step(*make_args(tg, gamma=2.0))
+        np_ = tg.num_params
+        loss, task, bl = (float(v) for v in out[2 * np_ + 2: 2 * np_ + 5])
+        assert loss == pytest.approx(task + 2.0 * bl, rel=1e-5)
+        # 8-bit network with normalized lambdas -> bit loss 1.0
+        assert bl == pytest.approx(1.0, rel=1e-5)
+
+    def test_bits_move_only_when_unmasked(self, tg):
+        np_ = tg.num_params
+        out_on = tg.train_step(*make_args(tg, mask=1.0))
+        out_off = tg.train_step(*make_args(tg, mask=0.0))
+        bw_on = np.asarray(out_on[2 * np_])
+        bw_off = np.asarray(out_off[2 * np_])
+        assert not np.allclose(bw_on, 8.0)
+        np.testing.assert_array_equal(bw_off, 8.0)
+
+    def test_bits_clipped_to_range(self, tg):
+        np_ = tg.num_params
+        out = tg.train_step(*make_args(tg, bits_lr=1e6))
+        for v in (out[2 * np_], out[2 * np_ + 1]):
+            v = np.asarray(v)
+            assert (v >= ref.N_MIN - 1e-6).all() and (v <= ref.N_MAX + 1e-6).all()
+
+    def test_params_update_against_gradient(self, tg):
+        np_ = tg.num_params
+        args = make_args(tg, lr=0.05)
+        out = tg.train_step(*args)
+        moved = sum(
+            float(jnp.sum(jnp.abs(new - old)))
+            for new, old in zip(out[:np_], args[:np_])
+        )
+        assert moved > 0.0
+
+    def test_momentum_accumulates(self, tg):
+        np_ = tg.num_params
+        args = make_args(tg)
+        out1 = tg.train_step(*args)
+        # second step from updated state: momentum tensors are non-zero
+        mom1 = out1[np_:2 * np_]
+        assert any(float(jnp.max(jnp.abs(m))) > 0 for m in mom1)
+
+    def test_zero_lr_freezes_params(self, tg):
+        np_ = tg.num_params
+        args = make_args(tg, lr=0.0, bits_lr=0.0)
+        out = tg.train_step(*args)
+        for new, old in zip(out[:np_], args[:np_]):
+            np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+    def test_stronger_gamma_faster_bit_descent(self, tg):
+        np_ = tg.num_params
+        weak = tg.train_step(*make_args(tg, gamma=0.5, bits_lr=2.0))
+        strong = tg.train_step(*make_args(tg, gamma=5.0, bits_lr=2.0))
+        assert float(jnp.mean(strong[2 * np_])) < float(jnp.mean(weak[2 * np_]))
+
+
+class TestEvalStep:
+    def test_outputs(self, tg):
+        params = tg.init_params(0)
+        nl = tg.nl
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+        y = jnp.asarray(rng.integers(0, 3, 8).astype(np.int32))
+        loss, correct, amn, amx = tg.eval_step(
+            *params, jnp.full((nl,), 8.0), jnp.full((nl,), 8.0), x, y)
+        assert amn.shape == (nl,)
+        assert amx.shape == (nl,)
+        assert bool(jnp.all(amn <= amx))
+        assert 0 <= float(correct) <= 8
+        assert float(loss) > 0
+
+    def test_act_ranges_track_input(self, tg):
+        # Layer-0 activation range is the input batch range.
+        params = tg.init_params(0)
+        nl = tg.nl
+        x = jnp.asarray(np.linspace(-3, 5, 64).reshape(8, 8).astype(np.float32))
+        y = jnp.zeros((8,), jnp.int32)
+        _, _, amn, amx = tg.eval_step(
+            *params, jnp.full((nl,), 8.0), jnp.full((nl,), 8.0), x, y)
+        assert float(amn[0]) == pytest.approx(-3.0)
+        assert float(amx[0]) == pytest.approx(5.0)
+
+
+class TestSignatures:
+    def test_specs_match_functions(self, tg):
+        # Lowering with the declared specs must succeed (what aot.py does).
+        jax.eval_shape(tg.train_step, *tg.train_specs())
+        jax.eval_shape(tg.eval_step, *tg.eval_specs())
+        jax.eval_shape(tg.init_params, *tg.init_specs())
+
+    def test_meta_consistency(self, tg):
+        meta = tg.meta()
+        assert meta["num_params"] == tg.num_params == len(meta["param_names"])
+        assert meta["num_quant_layers"] == tg.nl == len(meta["layers"])
+        assert meta["train_outputs"]["then"][-1] == "correct"
+        total_w = sum(l["weight_elems"] for l in meta["layers"])
+        assert total_w > 0
+
+    def test_wd_mask_targets_weights_only(self, tg):
+        for name, wd in zip(tg.param_names, tg.wd_mask):
+            assert wd == name.endswith("/w")

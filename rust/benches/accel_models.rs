@@ -1,0 +1,66 @@
+//! Accelerator-model benchmarks (Table VIII machinery): evaluation cost
+//! of each analytical model and the full evaluate_all sweep, plus a
+//! printed mini Table VIII at representative bitlengths so `cargo bench`
+//! output doubles as a smoke regeneration of the table's shape.
+
+use bitprune::accel;
+use bitprune::model::ModelMeta;
+use bitprune::util::bench::Bench;
+use bitprune::util::json;
+
+/// A resnet_s-shaped meta without needing artifacts on disk.
+fn synthetic_meta(layers: usize) -> ModelMeta {
+    let mut layer_objs = Vec::new();
+    for i in 0..layers {
+        layer_objs.push(format!(
+            r#"{{"name": "conv{i}", "kind": "conv", "weight_elems": {we},
+                "act_in_elems": {ae}, "macs": {macs}, "cin": 64, "cout": 64,
+                "kernel": 3, "out_spatial": 8}}"#,
+            we = 36864 + i * 1000,
+            ae = 4096,
+            macs = 2359296
+        ));
+    }
+    let meta = format!(
+        r#"{{"tag": "synth", "model": "synth", "batch_size": 32,
+            "input_shape": [16,16,3], "num_classes": 10,
+            "num_quant_layers": {layers}, "num_params": 0,
+            "param_names": [], "param_shapes": [],
+            "layers": [{}], "momentum": 0.9, "weight_decay": 0.0005,
+            "n_min": 1.0, "n_max": 16.0}}"#,
+        layer_objs.join(",")
+    );
+    ModelMeta::from_json(&json::parse(&meta).unwrap()).unwrap()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    for &nl in &[8usize, 16, 64] {
+        let meta = synthetic_meta(nl);
+        let bw: Vec<f32> = (0..nl).map(|i| 2.0 + (i % 4) as f32).collect();
+        let ba: Vec<f32> = (0..nl).map(|i| 3.0 + (i % 3) as f32).collect();
+        b.run(&format!("accel/evaluate_all/{nl}-layers"), || {
+            accel::evaluate_all(&meta, &bw, &ba)
+        });
+    }
+
+    let meta = synthetic_meta(16);
+    for model in accel::all_models() {
+        let bw = vec![3.0f32; 16];
+        let ba = vec![4.0f32; 16];
+        b.run(&format!("accel/{}/16-layers", model.name()), || {
+            accel::evaluate(model.as_ref(), &meta, &bw, &ba)
+        });
+    }
+
+    // Shape smoke: print the mini Table VIII at 3/4 bits.
+    println!("\nmini Table VIII (16-layer synthetic net, W=3b A=4b):");
+    for r in accel::evaluate_all(&meta, &vec![3.0; 16], &vec![4.0; 16]) {
+        println!(
+            "  {:<10} perf {:>6} mem {:.2}x",
+            r.accel,
+            r.speedup.map_or("-".into(), |s| format!("{s:.2}x")),
+            r.mem_ratio
+        );
+    }
+}

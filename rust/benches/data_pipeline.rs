@@ -1,0 +1,40 @@
+//! Data-pipeline throughput: synthetic sample generation, batch
+//! assembly and augmentation.  The pipeline must stay far off the
+//! critical path (train_step dominates); this bench verifies that and
+//! feeds the L3 perf iteration log.
+
+use bitprune::data::{self, Loader, Split};
+use bitprune::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    for name in ["synthcifar", "synthcifar-hard", "blobs", "spirals"] {
+        let ds = data::build(name, 7).unwrap();
+        let elems: usize = ds.input_shape().iter().product();
+        let mut buf = vec![0.0f32; elems];
+        let mut i = 0usize;
+        b.run_elems(&format!("sample/{name}"), elems as f64, || {
+            i = (i + 1) % ds.len(Split::Train);
+            ds.sample(Split::Train, i, &mut buf)
+        });
+    }
+
+    let ds = data::build("synthcifar", 7).unwrap();
+    for (label, augment) in [("plain", false), ("augmented", true)] {
+        let mut loader = Loader::new(ds.as_ref(), Split::Train, 32, augment, 0);
+        let per_batch = 32.0 * 16.0 * 16.0 * 3.0;
+        b.run_elems(&format!("batch32/synthcifar/{label}"), per_batch, || {
+            loader.next_batch().unwrap()
+        });
+    }
+
+    // Epoch-scale: full shuffled epoch of batches.
+    let mut loader = Loader::new(ds.as_ref(), Split::Train, 32, true, 0);
+    let n = loader.batches_per_epoch();
+    b.run(&format!("epoch/synthcifar/{n}-batches"), || {
+        for _ in 0..n {
+            loader.next_batch().unwrap();
+        }
+    });
+}

@@ -1,0 +1,79 @@
+//! End-to-end coordinator benchmark: steps/second of the full training
+//! loop (data pipeline + PJRT step + metric recording + phase machine),
+//! the headline number for the perf pass, plus the γ-sweep driver cost
+//! that Tables II-VI pay per run.
+
+use bitprune::config::{PlanKind, RunConfig};
+use bitprune::coordinator::run_experiment;
+use bitprune::runtime::Runtime;
+use bitprune::util::bench::{Bench, BenchConfig};
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("mlp_meta.json").exists() {
+        eprintln!("SKIP end_to_end bench: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu(&dir).unwrap();
+    // Whole-run iterations are seconds each; keep samples small.
+    let mut b = Bench::with_config(BenchConfig {
+        warmup_iters: 1,
+        max_samples: 5,
+        time_budget: std::time::Duration::from_secs(60),
+    });
+
+    let base = RunConfig {
+        model: "mlp".into(),
+        dataset: "blobs".into(),
+        learn_steps: 30,
+        finetune_steps: 10,
+        eval_every: 1000, // exclude periodic evals from the loop cost
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        out_dir: std::env::temp_dir()
+            .join("bitprune-bench")
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    };
+
+    let steps = (base.learn_steps + base.finetune_steps) as f64;
+    let r = b.run_elems("e2e/mlp-blobs/40-steps", steps, || {
+        run_experiment(&rt, &base).unwrap()
+    });
+    println!(
+        "  -> {:.1} steps/s end-to-end (mlp, batch {})",
+        r.throughput().unwrap_or(0.0),
+        32
+    );
+
+    // Frozen-bits variant isolates the BitPruning overhead end to end.
+    let mut frozen = base.clone();
+    frozen.plan = PlanKind::FixedBits;
+    frozen.init_bits = 8.0;
+    b.run_elems("e2e/mlp-blobs/frozen-bits", steps, || {
+        run_experiment(&rt, &frozen).unwrap()
+    });
+
+    if dir.join("resnet_s_meta.json").exists() {
+        let mut cnn = base.clone();
+        cnn.model = "resnet_s".into();
+        cnn.dataset = "synthcifar".into();
+        cnn.learn_steps = 10;
+        cnn.finetune_steps = 0;
+        cnn.eval_every = 1000;
+        // warmup >= 1 so the first sample does not absorb the one-time
+        // artifact compilation (~30s for resnet_s).
+        let mut bb = Bench::with_config(BenchConfig {
+            warmup_iters: 1,
+            max_samples: 3,
+            time_budget: std::time::Duration::from_secs(60),
+        });
+        let r = bb.run_elems("e2e/resnet_s-synthcifar/10-steps", 10.0, || {
+            run_experiment(&rt, &cnn).unwrap()
+        });
+        println!(
+            "  -> {:.2} steps/s end-to-end (resnet_s, batch 32)",
+            r.throughput().unwrap_or(0.0)
+        );
+    }
+}

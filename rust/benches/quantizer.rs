@@ -1,0 +1,73 @@
+//! Quantizer micro-benchmarks: the rust mirror and the compiled Pallas
+//! fake-quant artifact (L1 kernel through PJRT), across sizes and
+//! bitlengths.  Supports the §IV training-cost analysis (quant overhead
+//! per element) and the L1 perf iteration log in EXPERIMENTS.md.
+
+use bitprune::quant;
+use bitprune::runtime::Runtime;
+use bitprune::tensor::HostTensor;
+use bitprune::util::bench::Bench;
+use bitprune::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(1);
+
+    // Rust mirror across sizes.
+    for &size in &[1usize << 10, 1 << 14, 1 << 18] {
+        let xs: Vec<f32> = (0..size).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        b.run_elems(&format!("rust/fake_quant/{size}"), size as f64, || {
+            let mut v = xs.clone();
+            quant::fake_quant_slice(&mut v, 4.3);
+            v
+        });
+    }
+
+    // Integer vs interpolated bitlengths (the interpolation costs one
+    // extra round+fma pair per element).
+    let xs: Vec<f32> = (0..1 << 14).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for &n in &[4.0f32, 4.5] {
+        b.run_elems(&format!("rust/fake_quant/n={n}"), (1 << 14) as f64, || {
+            let mut v = xs.clone();
+            quant::fake_quant_slice(&mut v, n);
+            v
+        });
+    }
+
+    // Selection + cost accounting (coordinator hot helpers).
+    let bits: Vec<f32> = (0..64).map(|_| rng.range_f32(1.0, 8.0)).collect();
+    b.run("rust/select_integer_bits/64", || quant::select_integer_bits(&bits));
+
+    // Compiled L1 kernel through PJRT (includes transfer overhead — the
+    // number the coordinator actually pays).
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("fake_quant.hlo.txt").exists() {
+        let rt = Runtime::cpu(&dir).unwrap();
+        let exe = rt.load("fake_quant").unwrap();
+        let xs: Vec<f32> = (0..4096).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let x = HostTensor::f32(&[4096], xs).unwrap();
+        let n = HostTensor::scalar_f32(4.3);
+        b.run_elems("pjrt/fake_quant/4096", 4096.0, || {
+            exe.run(&[x.clone(), n.clone()]).unwrap()
+        });
+
+        let qmm = rt.load("quant_matmul").unwrap();
+        let a = HostTensor::f32(&[64, 128], vec![0.1; 64 * 128]).unwrap();
+        let w = HostTensor::f32(&[128, 96], vec![0.1; 128 * 96]).unwrap();
+        b.run_elems(
+            "pjrt/quant_matmul/64x128x96",
+            (64 * 128 * 96) as f64,
+            || {
+                qmm.run(&[
+                    a.clone(),
+                    w.clone(),
+                    HostTensor::scalar_f32(4.0),
+                    HostTensor::scalar_f32(4.0),
+                ])
+                .unwrap()
+            },
+        );
+    } else {
+        eprintln!("SKIP pjrt benches: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,102 @@
+//! Train-step latency per model through PJRT (the §IV training-cost
+//! analysis): BitPruning's per-step overhead vs a frozen-bits step on
+//! the same artifact, and the transfer-vs-execute split the L3 perf
+//! iteration optimizes.
+
+use bitprune::model::ModelMeta;
+use bitprune::runtime::Runtime;
+use bitprune::tensor::HostTensor;
+use bitprune::util::bench::Bench;
+use bitprune::util::rng::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("mlp_meta.json").exists() {
+        eprintln!("SKIP train_step bench: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut b = Bench::new();
+    let mut rng = Rng::new(3);
+
+    for model in ["mlp", "alexnet_s", "resnet_s", "mobilenet_s"] {
+        let meta_path = dir.join(format!("{model}_meta.json"));
+        if !meta_path.exists() {
+            continue;
+        }
+        let meta = ModelMeta::load(&meta_path).unwrap();
+        let init = rt.load(&meta.init_artifact()).unwrap();
+        let train = rt.load(&meta.train_artifact()).unwrap();
+        let eval = rt.load(&meta.eval_artifact()).unwrap();
+
+        let params = init.run(&[HostTensor::scalar_u32(0)]).unwrap();
+        let momenta: Vec<HostTensor> =
+            params.iter().map(|p| HostTensor::zeros_f32(p.dims())).collect();
+        let nl = meta.num_quant_layers;
+        let bits = HostTensor::full_f32(&[nl], 8.0);
+        let lam = HostTensor::full_f32(&[nl], 1.0 / (8.0 * 2.0 * nl as f32));
+        let xdim: usize = meta.input_shape.iter().product();
+        let x = HostTensor::f32(
+            &[meta.batch_size]
+                .iter()
+                .chain(meta.input_shape.iter())
+                .copied()
+                .collect::<Vec<_>>(),
+            (0..meta.batch_size * xdim)
+                .map(|_| rng.normal_f32(0.0, 1.0))
+                .collect(),
+        )
+        .unwrap();
+        let y = HostTensor::i32(
+            &[meta.batch_size],
+            (0..meta.batch_size)
+                .map(|_| rng.below(meta.num_classes as u64) as i32)
+                .collect(),
+        )
+        .unwrap();
+
+        let mk_args = |mask: f32| {
+            let mut args: Vec<HostTensor> = Vec::new();
+            args.extend(params.iter().cloned());
+            args.extend(momenta.iter().cloned());
+            args.push(bits.clone());
+            args.push(bits.clone());
+            args.push(lam.clone());
+            args.push(lam.clone());
+            args.push(x.clone());
+            args.push(y.clone());
+            args.push(HostTensor::scalar_f32(0.01));
+            args.push(HostTensor::scalar_f32(1.0));
+            args.push(HostTensor::scalar_f32(1.0));
+            args.push(HostTensor::scalar_f32(mask));
+            args
+        };
+
+        let samples = meta.batch_size as f64;
+        let learn_args = mk_args(1.0);
+        b.run_elems(&format!("train_step/{model}/learn-bits"), samples, || {
+            train.run(&learn_args).unwrap()
+        });
+        let frozen_args = mk_args(0.0);
+        b.run_elems(&format!("train_step/{model}/frozen-bits"), samples, || {
+            train.run(&frozen_args).unwrap()
+        });
+
+        let mut eval_args: Vec<HostTensor> = params.clone();
+        eval_args.push(bits.clone());
+        eval_args.push(bits.clone());
+        eval_args.push(x.clone());
+        eval_args.push(y.clone());
+        b.run_elems(&format!("eval_step/{model}"), samples, || {
+            eval.run(&eval_args).unwrap()
+        });
+
+        let s = train.stats();
+        println!(
+            "  {model}: exec {:.1}us/step, transfer {:.1}us/step ({}% of total)",
+            s.total_exec_nanos as f64 / s.executions as f64 / 1e3,
+            s.total_transfer_nanos as f64 / s.executions as f64 / 1e3,
+            (100 * s.total_transfer_nanos / (s.total_exec_nanos + s.total_transfer_nanos).max(1))
+        );
+    }
+}

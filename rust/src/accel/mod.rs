@@ -1,0 +1,390 @@
+//! Analytical performance models of variable-bitlength accelerators
+//! (paper Table VIII).
+//!
+//! Each model maps per-layer (weight, activation) bitlengths plus the
+//! static layer geometry onto relative execution cycles and storage,
+//! following the published scaling rule of each design:
+//!
+//! * **Stripes** (Judd et al., MICRO'16) — bit-serial *activations*:
+//!   per-MAC cycles ∝ n_a; weights processed bit-parallel.
+//! * **Dpred** (Delmas et al.) — Stripes plus dynamic per-group
+//!   precision detection: the serial loop runs at the bits *needed by
+//!   the group's actual values*, modeled as a constant detection factor
+//!   below the static/learned bitlength.
+//! * **BitFusion** (Sharma et al., ISCA'18) — spatially composable 2-bit
+//!   PEs for weights *and* activations; supported operand widths are
+//!   powers of two, so bitlengths round up to {1,2,4,8,16}.
+//! * **Loom** (Sharify et al.) — bit-serial in *both* operands:
+//!   per-MAC cycles ∝ n_w · n_a.
+//! * **Proteus** (Judd et al., ICS'16) — memory-only: values stored at
+//!   reduced precision, compute unchanged.
+//!
+//! All performance numbers are speedups against the same design running
+//! an 8-bit network (the paper's baseline convention), so the *shape* of
+//! Table VIII — who gains, by what factor, trained > profiled — is what
+//! the model reproduces, not testbed-absolute cycles.
+
+use crate::model::{LayerGeom, ModelMeta};
+use crate::quant::clip_bits;
+
+/// Baseline bitlength the speedups are measured against.
+pub const BASE_BITS: f64 = 8.0;
+
+/// Dpred's dynamic-precision detection: the fraction of the static
+/// bitlength the serial pipeline actually needs on typical value groups
+/// (the original paper reports ~2x over static per-layer precision).
+pub const DPRED_DYNAMIC_FACTOR: f64 = 0.55;
+
+/// What a design accelerates / compresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    Activations,
+    WeightsAndActivations,
+    MemoryOnly,
+}
+
+/// An accelerator performance model.
+pub trait AccelModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn target(&self) -> Target;
+
+    /// Relative per-MAC cost (cycles) at the given operand bitlengths;
+    /// `None` for memory-only designs.
+    fn mac_cost(&self, n_w: f64, n_a: f64) -> Option<f64>;
+
+    /// Per-MAC cost of the 8-bit reference point the speedup is quoted
+    /// against.  Defaults to the design itself running an 8/8 network;
+    /// Dpred overrides it with the *static* 8-bit serial cost, because
+    /// its contribution (dynamic per-group precision detection) applies
+    /// to the accelerated run, not the reference (paper Table VIII shows
+    /// Dpred gaining even on profiled networks for exactly this reason).
+    fn baseline_mac_cost(&self) -> Option<f64> {
+        self.mac_cost(BASE_BITS, BASE_BITS)
+    }
+
+    /// Storage bits per (weight element, activation element).
+    fn storage_bits(&self, n_w: f64, n_a: f64) -> (f64, f64);
+}
+
+fn ceil_bits(n: f64) -> f64 {
+    clip_bits(n as f32).ceil() as f64
+}
+
+fn pow2_bits(n: f64) -> f64 {
+    let n = ceil_bits(n);
+    let mut p = 1.0;
+    while p < n {
+        p *= 2.0;
+    }
+    p
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct Stripes;
+
+impl AccelModel for Stripes {
+    fn name(&self) -> &'static str {
+        "stripes"
+    }
+
+    fn target(&self) -> Target {
+        Target::Activations
+    }
+
+    fn mac_cost(&self, _n_w: f64, n_a: f64) -> Option<f64> {
+        Some(ceil_bits(n_a))
+    }
+
+    fn storage_bits(&self, _n_w: f64, n_a: f64) -> (f64, f64) {
+        // Weights stay at the baseline container; activations shrink.
+        (BASE_BITS, ceil_bits(n_a))
+    }
+}
+
+pub struct Dpred;
+
+impl AccelModel for Dpred {
+    fn name(&self) -> &'static str {
+        "dpred"
+    }
+
+    fn target(&self) -> Target {
+        Target::Activations
+    }
+
+    fn mac_cost(&self, _n_w: f64, n_a: f64) -> Option<f64> {
+        // Dynamic detection runs below the static bitlength but never
+        // below 1 bit.
+        Some((ceil_bits(n_a) * DPRED_DYNAMIC_FACTOR).max(1.0))
+    }
+
+    fn baseline_mac_cost(&self) -> Option<f64> {
+        // Static bit-serial reference at 8 bits (see trait docs).
+        Some(BASE_BITS)
+    }
+
+    fn storage_bits(&self, _n_w: f64, n_a: f64) -> (f64, f64) {
+        // Grouped dynamic storage keeps a small per-group width field.
+        (BASE_BITS, (ceil_bits(n_a) * DPRED_DYNAMIC_FACTOR).max(1.0) + 0.25)
+    }
+}
+
+pub struct BitFusion;
+
+impl AccelModel for BitFusion {
+    fn name(&self) -> &'static str {
+        "bitfusion"
+    }
+
+    fn target(&self) -> Target {
+        Target::WeightsAndActivations
+    }
+
+    fn mac_cost(&self, n_w: f64, n_a: f64) -> Option<f64> {
+        // Fused PEs compose in powers of two in each operand.
+        Some(pow2_bits(n_w) * pow2_bits(n_a))
+    }
+
+    fn storage_bits(&self, n_w: f64, n_a: f64) -> (f64, f64) {
+        (pow2_bits(n_w), pow2_bits(n_a))
+    }
+}
+
+pub struct Loom;
+
+impl AccelModel for Loom {
+    fn name(&self) -> &'static str {
+        "loom"
+    }
+
+    fn target(&self) -> Target {
+        Target::WeightsAndActivations
+    }
+
+    fn mac_cost(&self, n_w: f64, n_a: f64) -> Option<f64> {
+        Some(ceil_bits(n_w) * ceil_bits(n_a))
+    }
+
+    fn storage_bits(&self, n_w: f64, n_a: f64) -> (f64, f64) {
+        (ceil_bits(n_w), ceil_bits(n_a))
+    }
+}
+
+pub struct Proteus;
+
+impl AccelModel for Proteus {
+    fn name(&self) -> &'static str {
+        "proteus"
+    }
+
+    fn target(&self) -> Target {
+        Target::MemoryOnly
+    }
+
+    fn mac_cost(&self, _n_w: f64, _n_a: f64) -> Option<f64> {
+        None
+    }
+
+    fn storage_bits(&self, n_w: f64, n_a: f64) -> (f64, f64) {
+        (ceil_bits(n_w), ceil_bits(n_a))
+    }
+}
+
+/// All Table VIII designs.
+pub fn all_models() -> Vec<Box<dyn AccelModel>> {
+    vec![
+        Box::new(Stripes),
+        Box::new(Dpred),
+        Box::new(BitFusion),
+        Box::new(Loom),
+        Box::new(Proteus),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// evaluation
+// ---------------------------------------------------------------------------
+
+/// Result of evaluating one model on one bitlength assignment.
+#[derive(Debug, Clone)]
+pub struct AccelReport {
+    pub accel: &'static str,
+    /// Speedup vs the same design at 8/8 bits; None for memory-only.
+    pub speedup: Option<f64>,
+    /// Total storage relative to 8-bit containers.
+    pub mem_ratio: f64,
+}
+
+/// Evaluate an accelerator on a network: cycles weighted by per-layer
+/// MACs, storage weighted by element counts (weights network-wide,
+/// activations per-sample).
+pub fn evaluate(
+    model: &dyn AccelModel,
+    meta: &ModelMeta,
+    bits_w: &[f32],
+    bits_a: &[f32],
+) -> AccelReport {
+    assert_eq!(bits_w.len(), meta.layers.len());
+    assert_eq!(bits_a.len(), meta.layers.len());
+
+    let mut cycles = 0.0;
+    let mut base_cycles = 0.0;
+    let mut bits_total = 0.0;
+    let mut base_bits_total = 0.0;
+
+    for (i, l) in meta.layers.iter().enumerate() {
+        let (nw, na) = (bits_w[i] as f64, bits_a[i] as f64);
+        if let (Some(c), Some(cb)) = (model.mac_cost(nw, na), model.baseline_mac_cost()) {
+            cycles += l.macs as f64 * c;
+            base_cycles += l.macs as f64 * cb;
+        }
+        let (wb, ab) = model.storage_bits(nw, na);
+        bits_total += l.weight_elems as f64 * wb + l.act_in_elems as f64 * ab;
+        base_bits_total += (l.weight_elems + l.act_in_elems) as f64 * BASE_BITS;
+    }
+
+    AccelReport {
+        accel: model.name(),
+        speedup: (cycles > 0.0).then(|| base_cycles / cycles),
+        mem_ratio: bits_total / base_bits_total,
+    }
+}
+
+/// Evaluate every design for one bitlength assignment (one Table VIII
+/// column pair).
+pub fn evaluate_all(meta: &ModelMeta, bits_w: &[f32], bits_a: &[f32]) -> Vec<AccelReport> {
+    all_models()
+        .iter()
+        .map(|m| evaluate(m.as_ref(), meta, bits_w, bits_a))
+        .collect()
+}
+
+/// Estimate of layer-wise utilization loss for spatially composable
+/// designs: fraction of PE capability wasted when a layer's bitlength
+/// does not fill the composed tile.  Reported alongside Table VIII as a
+/// model-fidelity diagnostic.
+pub fn composition_waste(geom: &LayerGeom, n_bits: f64) -> f64 {
+    let used = ceil_bits(n_bits);
+    let alloc = pow2_bits(n_bits);
+    let _ = geom;
+    1.0 - used / alloc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelMeta;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn tiny_meta() -> ModelMeta {
+        let j = crate::util::json::parse(&crate::model::tiny_meta_json()).unwrap();
+        ModelMeta::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn baseline_is_identity() {
+        let meta = tiny_meta();
+        let b8 = vec![8.0f32; 2];
+        for r in evaluate_all(&meta, &b8, &b8) {
+            // Dpred gains even on an 8-bit network (dynamic detection vs
+            // the static reference); everything else is exactly 1.0.
+            if r.accel == "dpred" {
+                assert!(r.speedup.unwrap() > 1.0);
+                assert!(r.mem_ratio < 1.0);
+            } else {
+                if let Some(s) = r.speedup {
+                    assert!((s - 1.0).abs() < 1e-9, "{}: speedup {s}", r.accel);
+                }
+                assert!((r.mem_ratio - 1.0).abs() < 1e-9, "{}: mem {}", r.accel, r.mem_ratio);
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_bits_never_hurt() {
+        let meta = tiny_meta();
+        check(
+            "accel-monotone",
+            128,
+            |rng: &mut Rng| {
+                let b = |rng: &mut Rng| {
+                    (0..2).map(|_| rng.range_f32(1.0, 8.0)).collect::<Vec<f32>>()
+                };
+                (b(rng), b(rng))
+            },
+            |(bw, ba)| {
+                let b8 = vec![8.0f32; 2];
+                for m in all_models() {
+                    let low = evaluate(m.as_ref(), &meta, bw, ba);
+                    let base = evaluate(m.as_ref(), &meta, &b8, &b8);
+                    if let (Some(s_low), Some(s_base)) = (low.speedup, base.speedup) {
+                        if s_low + 1e-9 < s_base {
+                            return Err(format!("{}: slower at fewer bits", m.name()));
+                        }
+                    }
+                    if low.mem_ratio > base.mem_ratio + 1e-9 {
+                        return Err(format!("{}: more memory at fewer bits", m.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn stripes_scales_with_activation_bits_only() {
+        let meta = tiny_meta();
+        let r4 = evaluate(&Stripes, &meta, &[8.0, 8.0], &[4.0, 4.0]);
+        assert!((r4.speedup.unwrap() - 2.0).abs() < 1e-9);
+        // weight bits are irrelevant to stripes perf
+        let r4w = evaluate(&Stripes, &meta, &[2.0, 2.0], &[4.0, 4.0]);
+        assert_eq!(r4.speedup, r4w.speedup);
+    }
+
+    #[test]
+    fn loom_compounds_both_operands() {
+        let meta = tiny_meta();
+        let r = evaluate(&Loom, &meta, &[4.0, 4.0], &[4.0, 4.0]);
+        assert!((r.speedup.unwrap() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bitfusion_rounds_to_power_of_two() {
+        let meta = tiny_meta();
+        // 3 bits uses the 4-bit composition: same speedup as 4 bits.
+        let r3 = evaluate(&BitFusion, &meta, &[3.0, 3.0], &[3.0, 3.0]);
+        let r4 = evaluate(&BitFusion, &meta, &[4.0, 4.0], &[4.0, 4.0]);
+        assert_eq!(r3.speedup, r4.speedup);
+        // 5 bits pays for 8: no gain over baseline.
+        let r5 = evaluate(&BitFusion, &meta, &[5.0, 5.0], &[5.0, 5.0]);
+        assert!((r5.speedup.unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn proteus_is_memory_only() {
+        let meta = tiny_meta();
+        let r = evaluate(&Proteus, &meta, &[4.0, 4.0], &[4.0, 4.0]);
+        assert!(r.speedup.is_none());
+        assert!((r.mem_ratio - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dpred_beats_stripes() {
+        let meta = tiny_meta();
+        let bw = vec![3.0f32; 2];
+        let ba = vec![4.0f32; 2];
+        let s = evaluate(&Stripes, &meta, &bw, &ba).speedup.unwrap();
+        let d = evaluate(&Dpred, &meta, &bw, &ba).speedup.unwrap();
+        assert!(d > s, "dpred {d} <= stripes {s}");
+    }
+
+    #[test]
+    fn composition_waste_bounds() {
+        let geom = tiny_meta().layers[0].clone();
+        assert_eq!(composition_waste(&geom, 4.0), 0.0);
+        let w3 = composition_waste(&geom, 3.0);
+        assert!(w3 > 0.0 && w3 < 1.0);
+    }
+}

@@ -1,0 +1,292 @@
+//! Bit-packed tensor storage: the memory half of the paper's claims,
+//! made concrete.
+//!
+//! The accelerator table (Table VIII) credits designs like Proteus [15]
+//! with storing each layer at its learned bitlength.  This module *is*
+//! that storage layer: it encodes a fake-quantized f32 tensor into
+//! `n`-bit integer codes (LSB-first contiguous bit stream, no padding
+//! between values) plus the `(lmin, scale)` dequantization header, and
+//! decodes it back bit-exactly.
+//!
+//! Lossless property: for a tensor that is *already* n-bit quantized
+//! (the output of `quant::fake_quant_slice` at integer n), pack → unpack
+//! reproduces the input exactly (up to f32 rounding in the affine map,
+//! verified ≤ 1 ulp-scale epsilon in tests).  This is what lets the
+//! coordinator checkpoint quantized networks at their true footprint,
+//! and what the Proteus row of Table VIII measures.
+
+use anyhow::{bail, Result};
+
+use crate::quant;
+
+/// A bit-packed quantized tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedTensor {
+    /// Bitlength (1..=16).
+    pub bits: u32,
+    /// Number of encoded values.
+    pub len: usize,
+    /// Dequantization: value = lmin + code * scale.
+    pub lmin: f32,
+    pub scale: f32,
+    /// LSB-first packed codes.
+    pub data: Vec<u8>,
+}
+
+impl PackedTensor {
+    /// Packed payload size in bytes (excluding the fixed header).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Compression ratio vs f32 storage.
+    pub fn ratio_vs_f32(&self) -> f64 {
+        (self.len * 4) as f64 / self.payload_bytes().max(1) as f64
+    }
+}
+
+/// Quantize (min/max uniform, integer bitlength) and pack in one pass.
+///
+/// Returns the packed tensor; `xs` is not modified.  `bits` must be an
+/// integer in [1, 16] — packing interpolated non-integer bitlengths is
+/// meaningless (inference hardware stores integer codes; §II-C).
+pub fn pack(xs: &[f32], bits: u32) -> Result<PackedTensor> {
+    if !(1..=16).contains(&bits) {
+        bail!("pack: bits must be in [1,16], got {bits}");
+    }
+    if xs.is_empty() {
+        return Ok(PackedTensor { bits, len: 0, lmin: 0.0, scale: 1.0, data: vec![] });
+    }
+    let (lmin, lmax) = quant::group_minmax(xs);
+    let levels = (1u32 << bits) - 1;
+    let scale = quant::scale(lmin, lmax, bits as f32);
+
+    let total_bits = xs.len() * bits as usize;
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &x in xs {
+        let code = (((x - lmin) / scale).round_ties_even() as i64)
+            .clamp(0, levels as i64) as u32;
+        write_bits(&mut data, bitpos, bits, code);
+        bitpos += bits as usize;
+    }
+    Ok(PackedTensor { bits, len: xs.len(), lmin, scale, data })
+}
+
+/// Unpack to dequantized f32 values.
+pub fn unpack(p: &PackedTensor) -> Vec<f32> {
+    let mut out = Vec::with_capacity(p.len);
+    let mut bitpos = 0usize;
+    for _ in 0..p.len {
+        let code = read_bits(&p.data, bitpos, p.bits);
+        out.push(p.lmin + code as f32 * p.scale);
+        bitpos += p.bits as usize;
+    }
+    out
+}
+
+/// Unpack the raw integer codes (what integer inference consumes).
+pub fn unpack_codes(p: &PackedTensor) -> Vec<u32> {
+    let mut out = Vec::with_capacity(p.len);
+    let mut bitpos = 0usize;
+    for _ in 0..p.len {
+        out.push(read_bits(&p.data, bitpos, p.bits));
+        bitpos += p.bits as usize;
+    }
+    out
+}
+
+fn write_bits(data: &mut [u8], bitpos: usize, bits: u32, value: u32) {
+    let mut v = value as u64;
+    let mut pos = bitpos;
+    let mut remaining = bits;
+    while remaining > 0 {
+        let byte = pos / 8;
+        let off = (pos % 8) as u32;
+        let take = remaining.min(8 - off);
+        let mask = ((1u64 << take) - 1) as u8;
+        data[byte] |= (((v & mask as u64) as u8) << off) & (mask << off);
+        v >>= take;
+        pos += take as usize;
+        remaining -= take;
+    }
+}
+
+fn read_bits(data: &[u8], bitpos: usize, bits: u32) -> u32 {
+    let mut out = 0u64;
+    let mut got = 0u32;
+    let mut pos = bitpos;
+    while got < bits {
+        let byte = pos / 8;
+        let off = (pos % 8) as u32;
+        let take = (bits - got).min(8 - off);
+        let mask = ((1u32 << take) - 1) as u8;
+        let chunk = (data[byte] >> off) & mask;
+        out |= (chunk as u64) << got;
+        got += take;
+        pos += take as usize;
+    }
+    out as u32
+}
+
+// ---------------------------------------------------------------------------
+// network-level packing
+// ---------------------------------------------------------------------------
+
+/// Footprint report for packing a whole network at learned bitlengths.
+#[derive(Debug, Clone)]
+pub struct PackReport {
+    pub total_f32_bytes: usize,
+    pub total_packed_bytes: usize,
+    pub per_layer: Vec<(String, usize, usize)>, // (name, f32, packed)
+}
+
+impl PackReport {
+    pub fn ratio(&self) -> f64 {
+        self.total_f32_bytes as f64 / self.total_packed_bytes.max(1) as f64
+    }
+}
+
+/// Pack a set of named weight tensors at their per-layer bitlengths.
+pub fn pack_network(
+    tensors: &[(String, &[f32])],
+    bits: &[f32],
+) -> Result<(Vec<PackedTensor>, PackReport)> {
+    if tensors.len() != bits.len() {
+        bail!("pack_network: {} tensors vs {} bitlengths", tensors.len(), bits.len());
+    }
+    let mut packed = Vec::with_capacity(tensors.len());
+    let mut per_layer = Vec::new();
+    let mut total_f32 = 0;
+    let mut total_packed = 0;
+    for ((name, xs), &b) in tensors.iter().zip(bits) {
+        let ib = quant::clip_bits(b).ceil() as u32;
+        let p = pack(xs, ib)?;
+        let f32_bytes = xs.len() * 4;
+        // 16-byte header per tensor (bits, len, lmin, scale).
+        let packed_bytes = p.payload_bytes() + 16;
+        per_layer.push((name.clone(), f32_bytes, packed_bytes));
+        total_f32 += f32_bytes;
+        total_packed += packed_bytes;
+        packed.push(p);
+    }
+    Ok((packed, PackReport { total_f32_bytes: total_f32, total_packed_bytes: total_packed, per_layer }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_codes_every_bitlength() {
+        check(
+            "bitpack-roundtrip",
+            128,
+            |rng: &mut Rng| {
+                let bits = 1 + rng.below(16) as u32;
+                let len = 1 + rng.below_usize(300);
+                let xs: Vec<f32> =
+                    (0..len).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                (xs, bits)
+            },
+            |(xs, bits)| {
+                let p = pack(xs, *bits).map_err(|e| e.to_string())?;
+                // Unpacked values must equal the n-bit quantized input.
+                let mut want = xs.clone();
+                quant::fake_quant_slice(&mut want, *bits as f32);
+                let got = unpack(&p);
+                if got.len() != xs.len() {
+                    return Err("length mismatch".into());
+                }
+                let (lmin, lmax) = quant::group_minmax(xs);
+                let tol = 1e-5 * (lmax - lmin).abs().max(1e-5);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    if (g - w).abs() > tol {
+                        return Err(format!("elem {i}: {g} vs {w} at {bits} bits"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn payload_size_is_exact() {
+        let xs = vec![0.5f32; 100];
+        for bits in [1u32, 3, 7, 8, 13] {
+            let p = pack(&xs, bits).unwrap();
+            assert_eq!(p.payload_bytes(), (100 * bits as usize).div_ceil(8));
+        }
+    }
+
+    #[test]
+    fn codes_within_range() {
+        check(
+            "bitpack-code-range",
+            64,
+            |rng: &mut Rng| {
+                let bits = 1 + rng.below(8) as u32;
+                let xs: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                (xs, bits)
+            },
+            |(xs, bits)| {
+                let p = pack(xs, *bits).map_err(|e| e.to_string())?;
+                let max_code = (1u32 << bits) - 1;
+                for c in unpack_codes(&p) {
+                    if c > max_code {
+                        return Err(format!("code {c} exceeds {max_code}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn extremes_map_to_end_codes() {
+        let xs = vec![-2.0f32, 0.0, 3.0];
+        let p = pack(&xs, 4).unwrap();
+        let codes = unpack_codes(&p);
+        assert_eq!(codes[0], 0);
+        assert_eq!(codes[2], 15);
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let xs = vec![1.0f32; 1000];
+        let p = pack(&xs, 4).unwrap();
+        assert!((p.ratio_vs_f32() - 8.0).abs() < 0.1); // 32/4
+    }
+
+    #[test]
+    fn empty_and_invalid() {
+        assert_eq!(pack(&[], 4).unwrap().len, 0);
+        assert!(pack(&[1.0], 0).is_err());
+        assert!(pack(&[1.0], 17).is_err());
+    }
+
+    #[test]
+    fn pack_network_accounts_footprint() {
+        let a = vec![0.5f32; 256];
+        let b = vec![-1.0f32; 128];
+        let tensors = vec![("l0".to_string(), a.as_slice()), ("l1".to_string(), b.as_slice())];
+        let (packed, report) = pack_network(&tensors, &[4.0, 2.0]).unwrap();
+        assert_eq!(packed.len(), 2);
+        assert_eq!(report.total_f32_bytes, (256 + 128) * 4);
+        // 256*4 bits + 128*2 bits = 128 + 32 bytes + 2 headers
+        assert_eq!(report.total_packed_bytes, 128 + 32 + 32);
+        assert!(report.ratio() > 1.0);
+        // Non-integer learned bits are ceiled.
+        let (_, r2) = pack_network(&tensors, &[3.2, 1.7]).unwrap();
+        assert_eq!(r2.per_layer[0].2, 256 / 2 + 16); // 4 bits
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        let a = vec![0.0f32; 8];
+        let tensors = vec![("x".to_string(), a.as_slice())];
+        assert!(pack_network(&tensors, &[4.0, 4.0]).is_err());
+    }
+}

@@ -1,0 +1,234 @@
+//! Checkpointing: params / momenta / bitlengths snapshot save + load.
+//!
+//! Custom little-endian binary format (no serde in the environment):
+//!
+//! ```text
+//! magic "BPCK" | version u32 | n_tensors u32
+//! per tensor: name_len u32 | name bytes | rank u32 | dims u32* |
+//!             dtype u8 (0=f32,1=i32,2=u32) | payload
+//! ```
+//!
+//! Tensors are stored by name so checkpoints survive reordering; the
+//! coordinator stores params as `p/<name>`, momenta as `m/<name>`, and
+//! bitlengths as `bits_w` / `bits_a`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{HostTensor, TensorData};
+
+const MAGIC: &[u8; 4] = b"BPCK";
+const VERSION: u32 = 1;
+
+/// A named collection of tensors.
+#[derive(Debug, Default, Clone)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, HostTensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: HostTensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor '{name}'"))
+    }
+
+    /// All tensors under a prefix, in lexicographic name order.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<(&str, &HostTensor)> {
+        self.tensors
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.as_str(), v))
+            .collect()
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(t.dims().len() as u32).to_le_bytes());
+            for &d in t.dims() {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            match t.data() {
+                TensorData::F32(v) => {
+                    buf.push(0);
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::I32(v) => {
+                    buf.push(1);
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::U32(v) => {
+                    buf.push(2);
+                    for x in v {
+                        buf.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint '{}'", path.display()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint '{}'", path.display()))?
+            .read_to_end(&mut bytes)?;
+        let mut r = Reader { bytes: &bytes, pos: 0 };
+
+        if r.take(4)? != MAGIC {
+            bail!("'{}' is not a bitprune checkpoint", path.display());
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = r.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .context("checkpoint tensor name is not UTF-8")?;
+            let rank = r.u32()? as usize;
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(r.u32()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let dtype = r.take(1)?[0];
+            let t = match dtype {
+                0 => {
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+                    }
+                    HostTensor::f32(&dims, v)?
+                }
+                1 => {
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(i32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+                    }
+                    HostTensor::i32(&dims, v)?
+                }
+                2 => {
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(u32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+                    }
+                    HostTensor::u32(&dims, v)?
+                }
+                d => bail!("unknown dtype tag {d}"),
+            };
+            tensors.insert(name, t);
+        }
+        Ok(Self { tensors })
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated checkpoint (at byte {})", self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("bitprune-ckpt-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new();
+        c.insert("p/0/w", HostTensor::f32(&[2, 2], vec![1.0, -2.0, 3.5, 0.25]).unwrap());
+        c.insert("bits_w", HostTensor::f32(&[3], vec![2.0, 3.5, 4.0]).unwrap());
+        c.insert("y", HostTensor::i32(&[2], vec![-7, 9]).unwrap());
+        c.insert("seed", HostTensor::scalar_u32(42));
+        let path = tmpfile("roundtrip.bpck");
+        c.save(&path).unwrap();
+        let loaded = Checkpoint::load(&path).unwrap();
+        assert_eq!(loaded.tensors.len(), 4);
+        assert_eq!(loaded.get("p/0/w").unwrap(), c.get("p/0/w").unwrap());
+        assert_eq!(loaded.get("y").unwrap(), c.get("y").unwrap());
+        assert_eq!(loaded.get("seed").unwrap().scalar().unwrap(), 42.0);
+    }
+
+    #[test]
+    fn prefix_query_ordered() {
+        let mut c = Checkpoint::new();
+        c.insert("p/1", HostTensor::scalar_f32(1.0));
+        c.insert("p/0", HostTensor::scalar_f32(0.0));
+        c.insert("m/0", HostTensor::scalar_f32(9.0));
+        let ps = c.with_prefix("p/");
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].0, "p/0");
+        assert_eq!(ps[1].0, "p/1");
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let path = tmpfile("corrupt.bpck");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        // truncated after header
+        let mut good = Vec::new();
+        good.extend_from_slice(b"BPCK");
+        good.extend_from_slice(&1u32.to_le_bytes());
+        good.extend_from_slice(&5u32.to_le_bytes()); // claims 5 tensors
+        std::fs::write(&path, &good).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let c = Checkpoint::new();
+        assert!(c.get("nope").is_err());
+    }
+}

@@ -1,0 +1,290 @@
+//! Minimal TOML-subset parser for experiment config files.
+//!
+//! Supported: `[section]` headers, `key = value` with string, integer,
+//! float, boolean and homogeneous-array values, `#` comments, and dotted
+//! access (`section.key`).  This covers every config the repo ships;
+//! unsupported TOML constructs produce a parse error rather than
+//! silently wrong values.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => bail!("expected non-negative integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        match self {
+            TomlValue::Array(v) => v.iter().map(|x| x.as_f64()).collect(),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// Flat table of `section.key` (or bare `key`) to value.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected 'key = value'", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let parsed = parse_value(value.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            if doc.values.insert(full_key.clone(), parsed).is_some() {
+                bail!("line {}: duplicate key '{full_key}'", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading config '{}': {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            None => Ok(default.to_string()),
+            Some(v) => Ok(v.as_str()?.to_string()),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_f64(),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_usize(),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_u64(),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.as_bool(),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue> {
+    if text.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        if inner.contains('"') {
+            bail!("escaped quotes are not supported");
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(TomlValue::Array(items));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{text}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment
+            name = "table2"          # trailing comment
+            seed = 42
+            [train]
+            lr_max = 0.05
+            steps = 300
+            augment = true
+            gammas = [0.5, 1.0, 2.5]
+            models = ["alexnet_s", "resnet_s"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", "").unwrap(), "table2");
+        assert_eq!(doc.u64_or("seed", 0).unwrap(), 42);
+        assert_eq!(doc.f64_or("train.lr_max", 0.0).unwrap(), 0.05);
+        assert_eq!(doc.usize_or("train.steps", 0).unwrap(), 300);
+        assert!(doc.bool_or("train.augment", false).unwrap());
+        assert_eq!(
+            doc.get("train.gammas").unwrap().as_f64_vec().unwrap(),
+            vec![0.5, 1.0, 2.5]
+        );
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.f64_or("missing", 1.5).unwrap(), 1.5);
+        assert_eq!(doc.str_or("missing", "x").unwrap(), "x");
+    }
+
+    #[test]
+    fn errors_are_informative() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+        let dup = TomlDoc::parse("a = 1\na = 2");
+        assert!(dup.is_err());
+    }
+
+    #[test]
+    fn type_mismatches_caught() {
+        let doc = TomlDoc::parse("k = 1.5").unwrap();
+        assert!(doc.get("k").unwrap().as_usize().is_err());
+        assert!(doc.get("k").unwrap().as_str().is_err());
+        assert_eq!(doc.get("k").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse(r##"k = "a#b" # comment"##).unwrap();
+        assert_eq!(doc.str_or("k", "").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let doc = TomlDoc::parse("a = -3\nb = -0.5").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_f64().unwrap(), -3.0);
+        assert!(doc.get("a").unwrap().as_usize().is_err());
+        assert_eq!(doc.get("b").unwrap().as_f64().unwrap(), -0.5);
+    }
+}

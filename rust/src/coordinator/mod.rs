@@ -1,0 +1,66 @@
+//! The training coordinator: drives BitPruning runs through the
+//! AOT-compiled train/eval artifacts.
+//!
+//! Everything the paper's method does at training time happens here, in
+//! rust, against PJRT executables — python never runs:
+//!
+//! * phase state machine (learn bits → ceil to integers → fine-tune),
+//! * one-cycle LR fed per step,
+//! * batch staging from the synthetic datasets,
+//! * bitlength selection between phases (quant::select_integer_bits),
+//! * metric recording for the figure/table regeneration,
+//! * checkpointing (incl. warm starts for the §III-B5 ablation).
+
+pub mod scheduler;
+mod trainer;
+
+pub use trainer::{
+    run_experiment, EvalOutcome, EvalSession, RunOutcome, StageResult, Trainer,
+};
+
+use crate::config::RunConfig;
+use crate::runtime::Runtime;
+
+/// Convenience: run a list of configs sequentially against one runtime,
+/// returning all outcomes (the sweep drivers in report/ use this).
+pub fn run_all(
+    rt: &Runtime,
+    configs: &[RunConfig],
+    quiet: bool,
+) -> anyhow::Result<Vec<RunOutcome>> {
+    let mut outcomes = Vec::with_capacity(configs.len());
+    for (i, cfg) in configs.iter().enumerate() {
+        if !quiet {
+            eprintln!(
+                "[{}/{}] {} (model={}, gamma={}, plan={})",
+                i + 1,
+                configs.len(),
+                cfg.name,
+                cfg.model,
+                cfg.gamma,
+                cfg.plan.name()
+            );
+        }
+        outcomes.push(run_experiment(rt, cfg)?);
+    }
+    Ok(outcomes)
+}
+
+/// Run configs across worker threads (each worker owns its own PJRT
+/// client — the xla handles are not Send).  Results keep config order.
+pub fn run_all_parallel(
+    configs: &[RunConfig],
+    workers: usize,
+) -> anyhow::Result<Vec<RunOutcome>> {
+    let jobs: Vec<Box<dyn FnOnce() -> anyhow::Result<RunOutcome> + Send>> = configs
+        .iter()
+        .cloned()
+        .map(|cfg| {
+            Box::new(move || {
+                let rt = Runtime::cpu(&cfg.artifact_dir)?;
+                run_experiment(&rt, &cfg)
+            }) as Box<dyn FnOnce() -> anyhow::Result<RunOutcome> + Send>
+        })
+        .collect();
+    scheduler::run_jobs(jobs, workers).into_all()
+}

@@ -1,0 +1,227 @@
+//! Experiment scheduler: a work-stealing job queue over OS threads.
+//!
+//! Sweeps (Tables II-VI) are embarrassingly parallel across runs; on a
+//! multi-core host the scheduler fans configs out to worker threads,
+//! each with its own PJRT executable cache.  Results return in
+//! submission order regardless of completion order, so table rows stay
+//! deterministic.
+//!
+//! The testbed here has one core (workers default to
+//! `available_parallelism`), but the scheduler is exercised by unit
+//! tests with synthetic jobs and by the sweep drivers with `--workers`.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+/// A scheduled job: index + closure.
+type Job<T> = (usize, Box<dyn FnOnce() -> Result<T> + Send>);
+
+/// Outcome of a sweep: per-job results in submission order.
+pub struct SweepResults<T> {
+    results: Vec<Result<T>>,
+}
+
+impl<T> SweepResults<T> {
+    /// All successes, failing on the first error (with its job index).
+    pub fn into_all(self) -> Result<Vec<T>> {
+        self.results
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| r.map_err(|e| anyhow!("job {i}: {e}")))
+            .collect()
+    }
+
+    /// Successes and errors separately.
+    pub fn partition(self) -> (Vec<(usize, T)>, Vec<(usize, String)>) {
+        let mut ok = Vec::new();
+        let mut err = Vec::new();
+        for (i, r) in self.results.into_iter().enumerate() {
+            match r {
+                Ok(v) => ok.push((i, v)),
+                Err(e) => err.push((i, format!("{e:#}"))),
+            }
+        }
+        (ok, err)
+    }
+}
+
+/// Run `jobs` on `workers` threads; returns results in submission order.
+pub fn run_jobs<T: Send + 'static>(
+    jobs: Vec<Box<dyn FnOnce() -> Result<T> + Send>>,
+    workers: usize,
+) -> SweepResults<T> {
+    let n = jobs.len();
+    if n == 0 {
+        return SweepResults { results: vec![] };
+    }
+    let workers = workers.clamp(1, n);
+
+    if workers == 1 {
+        // Fast path: in-place, no threads (the single-core testbed).
+        let results = jobs.into_iter().map(|j| j()).collect();
+        return SweepResults { results };
+    }
+
+    let queue: Arc<Mutex<Vec<Job<T>>>> = Arc::new(Mutex::new(
+        jobs.into_iter().enumerate().map(|(i, j)| (i, j)).collect(),
+    ));
+    let (tx, rx) = mpsc::channel::<(usize, Result<T>)>();
+
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((idx, f)) => {
+                    // A panicking job poisons nothing: catch and report.
+                    let result = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(f),
+                    )
+                    .unwrap_or_else(|p| {
+                        Err(anyhow!("job panicked: {}", panic_msg(&p)))
+                    });
+                    if tx.send((idx, result)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut collected: BTreeMap<usize, Result<T>> = BTreeMap::new();
+    for (idx, result) in rx {
+        collected.insert(idx, result);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    // Any job lost to a worker crash is reported as an error.
+    let results = (0..n)
+        .map(|i| {
+            collected
+                .remove(&i)
+                .unwrap_or_else(|| Err(anyhow!("job {i} was lost (worker died)")))
+        })
+        .collect();
+    SweepResults { results }
+}
+
+fn panic_msg(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// Default worker count: one per core, capped by job count.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn jobs_from<T: Send + 'static>(
+        fns: Vec<impl FnOnce() -> Result<T> + Send + 'static>,
+    ) -> Vec<Box<dyn FnOnce() -> Result<T> + Send>> {
+        fns.into_iter()
+            .map(|f| Box::new(f) as Box<dyn FnOnce() -> Result<T> + Send>)
+            .collect()
+    }
+
+    #[test]
+    fn results_in_submission_order() {
+        for workers in [1, 4] {
+            let jobs = jobs_from(
+                (0..16)
+                    .map(|i| {
+                        move || {
+                            // Vary runtimes to scramble completion order.
+                            std::thread::sleep(std::time::Duration::from_millis(
+                                (16 - i) as u64,
+                            ));
+                            Ok(i * 10)
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            );
+            let out = run_jobs(jobs, workers).into_all().unwrap();
+            assert_eq!(out, (0..16).map(|i| i * 10).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn all_jobs_execute_exactly_once() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs = jobs_from(
+            (0..32)
+                .map(|_| {
+                    let c = counter.clone();
+                    move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        Ok(())
+                    }
+                })
+                .collect::<Vec<_>>(),
+        );
+        run_jobs(jobs, 4).into_all().unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn errors_are_indexed_not_fatal() {
+        let jobs = jobs_from(vec![
+            (|| Ok(1)) as fn() -> Result<i32>,
+            || Err(anyhow!("boom")),
+            || Ok(3),
+        ]);
+        let (ok, err) = run_jobs(jobs, 2).partition();
+        assert_eq!(ok, vec![(0, 1), (2, 3)]);
+        assert_eq!(err.len(), 1);
+        assert_eq!(err[0].0, 1);
+        assert!(err[0].1.contains("boom"));
+    }
+
+    #[test]
+    fn panicking_job_is_contained() {
+        let jobs = jobs_from(vec![
+            (|| Ok(1)) as fn() -> Result<i32>,
+            || panic!("kaboom"),
+            || Ok(3),
+        ]);
+        let (ok, err) = run_jobs(jobs, 2).partition();
+        assert_eq!(ok.len(), 2);
+        assert!(err[0].1.contains("kaboom"));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<Box<dyn FnOnce() -> Result<()> + Send>> = vec![];
+        assert!(run_jobs(empty, 4).into_all().unwrap().is_empty());
+        let one = jobs_from(vec![|| Ok(42)]);
+        assert_eq!(run_jobs(one, 8).into_all().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn into_all_propagates_first_error() {
+        let jobs = jobs_from(vec![
+            (|| Ok(1)) as fn() -> Result<i32>,
+            || Err(anyhow!("x")),
+        ]);
+        assert!(run_jobs(jobs, 1).into_all().is_err());
+    }
+}

@@ -1,0 +1,457 @@
+//! The per-run training loop.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::config::{PlanKind, RunConfig};
+use crate::data::{self, Dataset, Loader, Split};
+use crate::metrics::{EvalRecord, RunRecorder, StepRecord};
+use crate::model::ModelMeta;
+use crate::quant::{self, mean_bits};
+use crate::runtime::{Executable, Runtime};
+use crate::schedule::{PhaseCursor, PhasePlan};
+use crate::tensor::HostTensor;
+
+/// Eval batches used for *periodic* evals (full test set at stage ends).
+const PERIODIC_EVAL_BATCHES: usize = 8;
+
+/// Accuracy/bits snapshot at a stage boundary (one Table II column set).
+#[derive(Debug, Clone)]
+pub struct StageResult {
+    pub accuracy: f64,
+    pub loss: f64,
+    pub bits_w: Vec<f32>,
+    pub bits_a: Vec<f32>,
+}
+
+impl StageResult {
+    pub fn mean_bits_w(&self) -> f64 {
+        mean_bits(&self.bits_w)
+    }
+
+    pub fn mean_bits_a(&self) -> f64 {
+        mean_bits(&self.bits_a)
+    }
+}
+
+/// Full-test-set evaluation outcome.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub loss: f64,
+    pub accuracy: f64,
+    /// Aggregated per-layer activation ranges (min over batches, max
+    /// over batches) — consumed by the profiled baseline.
+    pub act_min: Vec<f32>,
+    pub act_max: Vec<f32>,
+}
+
+/// Everything a finished run reports.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub name: String,
+    pub model: String,
+    pub gamma: f64,
+    /// Snapshot at the end of the bit-learning phase (non-integer bits),
+    /// i.e. the paper's "Non-Integer Bitlengths" columns. None for
+    /// fixed-bits plans.
+    pub noninteger: Option<StageResult>,
+    /// Final snapshot (integer bits + fine-tuning for standard plans).
+    pub final_: StageResult,
+    pub act_min: Vec<f32>,
+    pub act_max: Vec<f32>,
+    pub recorder: RunRecorder,
+    pub wall_secs: f64,
+    /// Final trained parameters, for post-training baselines (profiled,
+    /// MPDNN) which probe accuracy at other bitlength assignments.
+    pub final_params: Vec<HostTensor>,
+}
+
+/// Mutable training state: the artifact's state tensors, in signature
+/// order.
+struct TrainState {
+    params: Vec<HostTensor>,
+    momenta: Vec<HostTensor>,
+    bits_w: HostTensor,
+    bits_a: HostTensor,
+}
+
+pub struct Trainer<'a> {
+    rt: &'a Runtime,
+    cfg: RunConfig,
+    meta: ModelMeta,
+    train_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    dataset: Box<dyn Dataset>,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, cfg: &RunConfig) -> Result<Self> {
+        let meta_path = rt.artifact_dir().join(format!("{}_meta.json", cfg.model));
+        let meta = ModelMeta::load(&meta_path)?;
+        let dataset = data::build(&cfg.dataset, cfg.seed)?;
+
+        // Config/artifact/dataset consistency.
+        if dataset.input_shape() != meta.input_shape {
+            bail!(
+                "dataset '{}' shape {:?} does not match artifact '{}' input {:?}",
+                cfg.dataset,
+                dataset.input_shape(),
+                cfg.model,
+                meta.input_shape
+            );
+        }
+        if dataset.num_classes() > meta.num_classes {
+            bail!(
+                "dataset has {} classes but artifact supports {}",
+                dataset.num_classes(),
+                meta.num_classes
+            );
+        }
+
+        let train_exe = rt.load(&meta.train_artifact())?;
+        let eval_exe = rt.load(&meta.eval_artifact())?;
+        Ok(Self { rt, cfg: cfg.clone(), meta, train_exe, eval_exe, dataset })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn plan(&self) -> Result<PhasePlan> {
+        let c = &self.cfg;
+        let plan = match c.plan {
+            PlanKind::Standard => {
+                PhasePlan::standard(c.lr_max, c.learn_steps, c.finetune_steps)
+            }
+            PlanKind::EarlySelect => {
+                PhasePlan::early_select(c.lr_max, c.learn_steps, c.finetune_steps)
+            }
+            PlanKind::FixedBits => {
+                PhasePlan::fixed_bits(c.lr_max, c.learn_steps + c.finetune_steps)
+            }
+            PlanKind::Warmstart => {
+                PhasePlan::warmstart(c.lr_max, c.learn_steps, c.finetune_steps)
+            }
+        };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    fn init_state(&self) -> Result<TrainState> {
+        let nl = self.meta.num_quant_layers;
+        let (params, momenta) = match (&self.cfg.warmstart_ckpt, self.cfg.plan) {
+            (Some(path), PlanKind::Warmstart) => {
+                let ckpt = Checkpoint::load(path)
+                    .with_context(|| format!("loading warmstart checkpoint '{path}'"))?;
+                let mut params = Vec::with_capacity(self.meta.num_params);
+                for name in &self.meta.param_names {
+                    params.push(ckpt.get(&format!("p/{name}"))?.clone());
+                }
+                let momenta = params
+                    .iter()
+                    .map(|p| HostTensor::zeros_f32(p.dims()))
+                    .collect();
+                (params, momenta)
+            }
+            _ => {
+                let init_exe = self.rt.load(&self.meta.init_artifact())?;
+                let params = init_exe
+                    .run(&[HostTensor::scalar_u32(self.cfg.seed as u32)])?;
+                if params.len() != self.meta.num_params {
+                    bail!(
+                        "init artifact produced {} tensors, meta says {}",
+                        params.len(),
+                        self.meta.num_params
+                    );
+                }
+                let momenta = params
+                    .iter()
+                    .map(|p| HostTensor::zeros_f32(p.dims()))
+                    .collect();
+                (params, momenta)
+            }
+        };
+        let b = self.cfg.init_bits as f32;
+        Ok(TrainState {
+            params,
+            momenta,
+            bits_w: HostTensor::full_f32(&[nl], b),
+            bits_a: HostTensor::full_f32(&[nl], b),
+        })
+    }
+
+    fn lambdas(&self) -> (HostTensor, HostTensor) {
+        let (lw, la) = self.cfg.criterion.lambdas(&self.meta);
+        (
+            HostTensor::f32(&[lw.len()], lw).unwrap(),
+            HostTensor::f32(&[la.len()], la).unwrap(),
+        )
+    }
+
+    /// One train step; updates `state` in place, returns
+    /// (loss, task_loss, bit_loss, correct).
+    fn step(
+        &self,
+        state: &mut TrainState,
+        x: &HostTensor,
+        y: &HostTensor,
+        lam_w: &HostTensor,
+        lam_a: &HostTensor,
+        lr: f64,
+        bits_lr: f64,
+        bits_mask: f32,
+    ) -> Result<(f64, f64, f64, f64)> {
+        let np = self.meta.num_params;
+        // Borrowed argument list: no parameter/momentum copies per step.
+        let lr_t = HostTensor::scalar_f32(lr as f32);
+        let blr_t = HostTensor::scalar_f32(bits_lr as f32);
+        let gamma_t = HostTensor::scalar_f32(self.cfg.gamma as f32);
+        let mask_t = HostTensor::scalar_f32(bits_mask);
+        let mut args: Vec<&HostTensor> = Vec::with_capacity(2 * np + 10);
+        args.extend(state.params.iter());
+        args.extend(state.momenta.iter());
+        args.extend([
+            &state.bits_w, &state.bits_a, lam_w, lam_a, x, y,
+            &lr_t, &blr_t, &gamma_t, &mask_t,
+        ]);
+
+        let mut out = self.train_exe.run_refs(&args)?;
+        if out.len() != 2 * np + 6 {
+            bail!(
+                "train artifact returned {} outputs, expected {}",
+                out.len(),
+                2 * np + 6
+            );
+        }
+        // Unpack from the back to avoid shifting.
+        let correct = out.pop().unwrap().scalar()? as f64;
+        let bit_loss = out.pop().unwrap().scalar()? as f64;
+        let task_loss = out.pop().unwrap().scalar()? as f64;
+        let loss = out.pop().unwrap().scalar()? as f64;
+        state.bits_a = out.pop().unwrap();
+        state.bits_w = out.pop().unwrap();
+        state.momenta = out.split_off(np);
+        state.params = out;
+        Ok((loss, task_loss, bit_loss, correct))
+    }
+
+    /// Evaluate on the test split (at most `max_batches` batches).
+    fn eval(&self, state: &TrainState, max_batches: usize) -> Result<EvalOutcome> {
+        let mut loader = Loader::new(
+            self.dataset.as_ref(),
+            Split::Test,
+            self.meta.batch_size,
+            false,
+            self.cfg.seed,
+        );
+        let nl = self.meta.num_quant_layers;
+        let batches = loader.batches_per_epoch().min(max_batches).max(1);
+        let mut total_loss = 0.0;
+        let mut total_correct = 0.0;
+        let mut total_n = 0usize;
+        let mut act_min = vec![f32::INFINITY; nl];
+        let mut act_max = vec![f32::NEG_INFINITY; nl];
+
+        for _ in 0..batches {
+            let batch = loader.next_batch()?;
+            let mut args: Vec<&HostTensor> =
+                Vec::with_capacity(self.meta.num_params + 4);
+            args.extend(state.params.iter());
+            args.extend([&state.bits_w, &state.bits_a, &batch.x, &batch.y]);
+            let out = self.eval_exe.run_refs(&args)?;
+            if out.len() != 4 {
+                bail!("eval artifact returned {} outputs, expected 4", out.len());
+            }
+            total_loss += out[0].scalar()? as f64 * self.meta.batch_size as f64;
+            total_correct += out[1].scalar()? as f64;
+            total_n += self.meta.batch_size;
+            for (dst, src) in act_min.iter_mut().zip(out[2].as_f32()?) {
+                *dst = dst.min(*src);
+            }
+            for (dst, src) in act_max.iter_mut().zip(out[3].as_f32()?) {
+                *dst = dst.max(*src);
+            }
+        }
+        Ok(EvalOutcome {
+            loss: total_loss / total_n as f64,
+            accuracy: total_correct / total_n as f64,
+            act_min,
+            act_max,
+        })
+    }
+
+    /// Run the configured plan to completion.
+    pub fn run(&self) -> Result<RunOutcome> {
+        self.run_inner(None)
+    }
+
+    /// Run the plan and additionally save the final state to `ckpt_path`
+    /// (used to produce warm starts for the §III-B5 ablation).
+    pub fn run_and_checkpoint(&self, ckpt_path: Option<&str>) -> Result<RunOutcome> {
+        self.run_inner(ckpt_path)
+    }
+
+    fn run_inner(&self, ckpt_path: Option<&str>) -> Result<RunOutcome> {
+        let started = std::time::Instant::now();
+        let plan = self.plan()?;
+        let mut state = self.init_state()?;
+        let (lam_w, lam_a) = self.lambdas();
+        let mut loader = Loader::new(
+            self.dataset.as_ref(),
+            Split::Train,
+            self.meta.batch_size,
+            self.cfg.augment,
+            self.cfg.seed,
+        );
+        let mut recorder = RunRecorder::new(&self.cfg.name);
+        let mut cursor = PhaseCursor::new(&plan);
+        let mut noninteger: Option<StageResult> = None;
+        let mut step_idx = 0usize;
+
+        while let Some(d) = cursor.next() {
+            if d.select_integer_bits {
+                // Stage boundary (§II-C): full eval with the learned
+                // non-integer bits, then ceil.
+                let ev = self.eval(&state, usize::MAX)?;
+                noninteger = Some(StageResult {
+                    accuracy: ev.accuracy,
+                    loss: ev.loss,
+                    bits_w: state.bits_w.as_f32()?.to_vec(),
+                    bits_a: state.bits_a.as_f32()?.to_vec(),
+                });
+                let nl = self.meta.num_quant_layers;
+                state.bits_w = HostTensor::f32(
+                    &[nl],
+                    quant::select_integer_bits(state.bits_w.as_f32()?),
+                )?;
+                state.bits_a = HostTensor::f32(
+                    &[nl],
+                    quant::select_integer_bits(state.bits_a.as_f32()?),
+                )?;
+            }
+
+            let batch = loader.next_batch()?;
+            let (loss, task, bl, correct) = self.step(
+                &mut state,
+                &batch.x,
+                &batch.y,
+                &lam_w,
+                &lam_a,
+                d.lr,
+                self.cfg.bits_lr,
+                d.bits_mask,
+            )?;
+            recorder.record_step(StepRecord {
+                step: step_idx,
+                phase: d.phase_name,
+                lr: d.lr,
+                loss,
+                task_loss: task,
+                bit_loss: bl,
+                train_acc: correct / self.meta.batch_size as f64,
+                mean_bits_w: mean_bits(state.bits_w.as_f32()?),
+                mean_bits_a: mean_bits(state.bits_a.as_f32()?),
+            });
+
+            if (step_idx + 1) % self.cfg.eval_every == 0 {
+                let ev = self.eval(&state, PERIODIC_EVAL_BATCHES)?;
+                recorder.record_eval(EvalRecord {
+                    step: step_idx,
+                    loss: ev.loss,
+                    accuracy: ev.accuracy,
+                    mean_bits_w: mean_bits(state.bits_w.as_f32()?),
+                    mean_bits_a: mean_bits(state.bits_a.as_f32()?),
+                });
+            }
+            step_idx += 1;
+        }
+
+        // Final full evaluation.
+        let ev = self.eval(&state, usize::MAX)?;
+        recorder.record_eval(EvalRecord {
+            step: step_idx,
+            loss: ev.loss,
+            accuracy: ev.accuracy,
+            mean_bits_w: mean_bits(state.bits_w.as_f32()?),
+            mean_bits_a: mean_bits(state.bits_a.as_f32()?),
+        });
+        recorder.final_bits_w = state.bits_w.as_f32()?.to_vec();
+        recorder.final_bits_a = state.bits_a.as_f32()?.to_vec();
+
+        if let Some(path) = ckpt_path {
+            let mut ckpt = Checkpoint::new();
+            for (name, p) in self.meta.param_names.iter().zip(&state.params) {
+                ckpt.insert(&format!("p/{name}"), p.clone());
+            }
+            ckpt.insert("bits_w", state.bits_w.clone());
+            ckpt.insert("bits_a", state.bits_a.clone());
+            ckpt.save(path)?;
+        }
+
+        let final_ = StageResult {
+            accuracy: ev.accuracy,
+            loss: ev.loss,
+            bits_w: state.bits_w.as_f32()?.to_vec(),
+            bits_a: state.bits_a.as_f32()?.to_vec(),
+        };
+
+        Ok(RunOutcome {
+            name: self.cfg.name.clone(),
+            model: self.cfg.model.clone(),
+            gamma: self.cfg.gamma,
+            noninteger,
+            final_,
+            act_min: ev.act_min,
+            act_max: ev.act_max,
+            recorder,
+            wall_secs: started.elapsed().as_secs_f64(),
+            final_params: state.params,
+        })
+    }
+
+    /// Post-training evaluation session over fixed parameters: probes
+    /// arbitrary bitlength assignments (profiled / MPDNN baselines).
+    pub fn session<'s>(&'s self, params: &'s [HostTensor]) -> EvalSession<'s> {
+        EvalSession { trainer: self, params }
+    }
+}
+
+/// Probes accuracy of fixed trained parameters at arbitrary bitlengths.
+pub struct EvalSession<'s> {
+    trainer: &'s Trainer<'s>,
+    params: &'s [HostTensor],
+}
+
+impl EvalSession<'_> {
+    pub fn num_layers(&self) -> usize {
+        self.trainer.meta.num_quant_layers
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.trainer.meta
+    }
+
+    /// Accuracy at the given bitlengths over `max_batches` test batches.
+    pub fn accuracy(
+        &self,
+        bits_w: &[f32],
+        bits_a: &[f32],
+        max_batches: usize,
+    ) -> Result<f64> {
+        let nl = self.trainer.meta.num_quant_layers;
+        let state = TrainState {
+            params: self.params.to_vec(),
+            momenta: vec![],
+            bits_w: HostTensor::f32(&[nl], bits_w.to_vec())?,
+            bits_a: HostTensor::f32(&[nl], bits_a.to_vec())?,
+        };
+        Ok(self.trainer.eval(&state, max_batches)?.accuracy)
+    }
+}
+
+/// Run one experiment end to end.
+pub fn run_experiment(rt: &Runtime, cfg: &RunConfig) -> Result<RunOutcome> {
+    Trainer::new(rt, cfg)?.run()
+}

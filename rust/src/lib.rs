@@ -1,0 +1,34 @@
+//! # bitprune
+//!
+//! Production reproduction of *BitPruning: Learning Bitlengths for
+//! Aggressive and Accurate Quantization* (Nikolić et al., 2020) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas fake-quantization kernels (python/compile/kernels),
+//!   AOT-lowered into the model HLO.
+//! * **L2** — JAX quantized models + BitPruning loss + train/eval steps
+//!   (python/compile), exported once as HLO-text artifacts.
+//! * **L3** — this crate: the training coordinator, experiment
+//!   scheduler, datasets, baselines, accelerator performance models and
+//!   report generation.  Python never runs on the training path; the
+//!   binary drives everything through PJRT.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod accel;
+pub mod baselines;
+pub mod bitpack;
+pub mod checkpoint;
+pub mod hlo;
+pub mod infer;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,476 @@
+//! `bitprune` — the L3 coordinator CLI.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation (DESIGN.md §6):
+//!
+//! ```text
+//! bitprune train   [opts]                 one training run
+//! bitprune sweep   --table2|--table3|--table4|--table5|--table6|--ablations
+//! bitprune baseline --table7|--mpdnn      comparison baselines
+//! bitprune accel   [--model M]            Table VIII accelerator models
+//! bitprune parity                         rust quantizer vs fake_quant.hlo
+//! bitprune artifacts                      list compiled artifacts
+//! ```
+//!
+//! Common options: --config FILE, --model, --dataset, --gamma, --seed,
+//! --learn-steps, --finetune-steps, --lr-max, --bits-lr, --init-bits,
+//! --eval-every, --criterion, --plan, --artifacts DIR, --out DIR,
+//! --gammas A,B,C, --models a,b,c, --no-augment.
+
+use anyhow::{bail, Result};
+
+use bitprune::config::{toml::TomlDoc, RunConfig};
+use bitprune::coordinator::run_experiment;
+use bitprune::metrics::Table;
+use bitprune::quant;
+use bitprune::report;
+use bitprune::runtime::Runtime;
+use bitprune::tensor::HostTensor;
+use bitprune::util::args::Args;
+use bitprune::util::rng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn base_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_toml(&TomlDoc::load(path)?)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&RunConfig::cli_value_opts_extended())?;
+    let cmd = args.pos(0).unwrap_or("help").to_string();
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "baseline" => cmd_baseline(&args),
+        "accel" => cmd_accel(&args),
+        "parity" => cmd_parity(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "hlo" => cmd_hlo(&args),
+        "pack" => cmd_pack(&args),
+        "infer" => cmd_infer(&args),
+        "fig" => cmd_fig(&args),
+        "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' — try `bitprune help`"),
+    }
+}
+
+const HELP: &str = "\
+bitprune — BitPruning coordinator (learned bitlength quantization)
+
+USAGE: bitprune <command> [options]
+
+COMMANDS:
+  train       run one training experiment
+  sweep       regenerate paper tables II-VI + ablations
+                (--table2 --table3 --table4 --table5 --table6 --ablations)
+  baseline    comparison baselines (--table7 --mpdnn)
+  accel       accelerator performance models (Table VIII)
+  parity      rust quantizer vs compiled fake_quant artifact
+  artifacts   list compiled artifacts
+  hlo         static cost analysis of the compiled artifacts
+  pack        train + bit-pack weights; report real storage footprint
+  infer       pure-integer inference vs the compiled eval artifact
+  fig         render figure 1/3 ASCII charts from a reports/<run>.json
+
+OPTIONS (common):
+  --config FILE --model M --dataset D --gamma G --seed S
+  --learn-steps N --finetune-steps N --lr-max F --bits-lr F
+  --init-bits B --eval-every N --criterion equal|bs1|bs128|mac
+  --plan standard|early|fixed|warmstart --warmstart-ckpt FILE
+  --artifacts DIR --out DIR --gammas A,B,C --models a,b,c --no-augment
+";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = base_config(args)?;
+    let rt = Runtime::cpu(&cfg.artifact_dir)?;
+    eprintln!(
+        "training {} on {} (platform: {})",
+        cfg.model,
+        cfg.dataset,
+        rt.platform()
+    );
+    let outcome = run_experiment(&rt, &cfg)?;
+    let meta = bitprune::model::ModelMeta::load(
+        rt.artifact_dir().join(format!("{}_meta.json", cfg.model)),
+    )?;
+    let names: Vec<String> = meta.layers.iter().map(|l| l.name.clone()).collect();
+    outcome.recorder.write_csvs(&cfg.out_dir, &names)?;
+
+    let mut t = Table::new(&["stage", "accuracy", "W bits", "A bits"]);
+    if let Some(ni) = &outcome.noninteger {
+        t.row(vec![
+            "non-integer".into(),
+            format!("{:.2}%", ni.accuracy * 100.0),
+            format!("{:.2}", ni.mean_bits_w()),
+            format!("{:.2}", ni.mean_bits_a()),
+        ]);
+    }
+    t.row(vec![
+        "final".into(),
+        format!("{:.2}%", outcome.final_.accuracy * 100.0),
+        format!("{:.2}", outcome.final_.mean_bits_w()),
+        format!("{:.2}", outcome.final_.mean_bits_a()),
+    ]);
+    println!("{}", t.render());
+    println!("per-layer bits (W): {:?}", outcome.final_.bits_w);
+    println!("per-layer bits (A): {:?}", outcome.final_.bits_a);
+    println!("wall time: {:.1}s", outcome.wall_secs);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = base_config(args)?;
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    let models = args.get_str_list("models", &["alexnet_s", "resnet_s"]);
+    let gammas = args.get_f64_list("gammas", &[0.5, 1.0, 2.5, 5.0, 10.0])?;
+    let mut ran = false;
+
+    if args.flag("table2") {
+        println!("\n== Table II: regularizer sweep ==");
+        println!("{}", report::table2(&rt, &base, &models, &gammas)?.render());
+        ran = true;
+    }
+    if args.flag("table3") {
+        let m3 = args.get_str_list("models", &["mobilenet_s", "mlp"]);
+        println!("\n== Table III: other architectures ==");
+        println!("{}", report::table3(&rt, &base, &m3)?.render());
+        ran = true;
+    }
+    if args.flag("table4") {
+        println!("\n== Table IV: weighted bit-loss criteria ==");
+        println!("{}", report::table4(&rt, &base, &models)?.render());
+        ran = true;
+    }
+    if args.flag("table5") {
+        let variants: Vec<String> = rt
+            .list_artifacts()?
+            .into_iter()
+            .filter_map(|a| {
+                a.strip_suffix("_meta")
+                    .filter(|s| s.starts_with("alexnet_s_w"))
+                    .map(str::to_string)
+            })
+            .collect();
+        let variants = if variants.is_empty() {
+            // meta files are not artifacts; fall back to scanning metas
+            scan_width_variants(&rt)?
+        } else {
+            variants
+        };
+        if variants.is_empty() {
+            bail!("no alexnet_s width variants found — run `make artifacts-table5`");
+        }
+        println!("\n== Table V: channel-width ablation ==");
+        println!("{}", report::table5(&rt, &base, &variants)?.render());
+        ran = true;
+    }
+    if args.flag("table6") {
+        let m6 = args.get_str_list("models", &["alexnet_s", "resnet_s", "mobilenet_s"]);
+        println!("\n== Table VI: hard-benchmark headline ==");
+        println!("{}", report::table6(&rt, &base, &m6)?.render());
+        ran = true;
+    }
+    if args.flag("ablations") {
+        let model = args.get_or("model", "alexnet_s");
+        println!("\n== Ablations: early selection + warm start ==");
+        println!(
+            "{}",
+            report::ablation_early_and_warmstart(&rt, &base, model)?.render()
+        );
+        ran = true;
+    }
+    if !ran {
+        bail!("sweep: pass at least one of --table2..--table6 / --ablations");
+    }
+    Ok(())
+}
+
+fn scan_width_variants(rt: &Runtime) -> Result<Vec<String>> {
+    let mut variants = Vec::new();
+    for entry in std::fs::read_dir(rt.artifact_dir())? {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if let Some(stem) = name.strip_suffix("_meta.json") {
+            if stem.starts_with("alexnet_s_w") {
+                variants.push(stem.to_string());
+            }
+        }
+    }
+    variants.sort();
+    Ok(variants)
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let base = base_config(args)?;
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    let models = args.get_str_list("models", &["alexnet_s", "resnet_s"]);
+    let mut ran = false;
+    if args.flag("table7") {
+        println!("\n== Table VII: vs uniform + profiled quantization ==");
+        let out = report::table7(&rt, &base, &models)?;
+        println!("{}", out.table.render());
+        println!("\n== Table VIII: accelerator benefits (same assignments) ==");
+        println!(
+            "{}",
+            report::table8(&rt, &base.out_dir, &out.assignments)?.render()
+        );
+        ran = true;
+    }
+    if args.flag("mpdnn") {
+        println!("\n== MPDNN comparison (§III-B6) ==");
+        println!("{}", report::mpdnn_compare(&rt, &base, &models)?.render());
+        ran = true;
+    }
+    if !ran {
+        bail!("baseline: pass --table7 and/or --mpdnn");
+    }
+    Ok(())
+}
+
+fn cmd_accel(args: &Args) -> Result<()> {
+    // Standalone accelerator-model evaluation at given uniform bits, no
+    // training required — useful for sanity checks and the bench.
+    let base = base_config(args)?;
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    let model = args.get_or("model", "resnet_s");
+    let meta = bitprune::model::ModelMeta::load(
+        rt.artifact_dir().join(format!("{model}_meta.json")),
+    )?;
+    let bits = args.get_f64("bits", 4.0)? as f32;
+    let nl = meta.num_quant_layers;
+    let bw = vec![bits; nl];
+    let ba = vec![bits; nl];
+    let mut t = Table::new(&["accelerator", "speedup vs 8b", "memory vs 8b"]);
+    for r in bitprune::accel::evaluate_all(&meta, &bw, &ba) {
+        t.row(vec![
+            r.accel.into(),
+            r.speedup.map_or("-".into(), |s| format!("{s:.2}x")),
+            format!("{:.2}x", r.mem_ratio),
+        ]);
+    }
+    println!("{model} at uniform {bits} bits:\n{}", t.render());
+    Ok(())
+}
+
+fn cmd_parity(args: &Args) -> Result<()> {
+    // Bit-exactness check: compiled fake_quant artifact vs rust mirror.
+    let base = base_config(args)?;
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    let exe = rt.load("fake_quant")?;
+    let mut rng = Rng::new(base.seed);
+    let mut worst = 0.0f32;
+    for case in 0..16 {
+        let n = rng.range_f32(1.0, 9.0);
+        let xs: Vec<f32> = (0..4096).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let out = exe.run(&[
+            HostTensor::f32(&[4096], xs.clone())?,
+            HostTensor::scalar_f32(n),
+        ])?;
+        let got = out[0].as_f32()?;
+        let mut want = xs.clone();
+        quant::fake_quant_slice(&mut want, n);
+        for (g, w) in got.iter().zip(&want) {
+            worst = worst.max((g - w).abs());
+        }
+        println!("case {case:2}: n={n:.3} max|Δ|={worst:.2e}");
+    }
+    if worst > 1e-5 {
+        bail!("parity FAILED: max deviation {worst}");
+    }
+    println!("parity OK (max deviation {worst:.2e})");
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let base = base_config(args)?;
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    for name in rt.list_artifacts()? {
+        println!("{name}");
+    }
+    Ok(())
+}
+
+fn cmd_hlo(args: &Args) -> Result<()> {
+    // Static cost analysis (L2 perf pass): op mix, FLOPs, transfer bytes.
+    let base = base_config(args)?;
+    let rt = Runtime::cpu(&base.artifact_dir)?;
+    let filter = args.get("model");
+    let mut names = rt.list_artifacts()?;
+    if let Some(f) = filter {
+        names.retain(|n| n.starts_with(f));
+    }
+    for name in names {
+        let report = bitprune::hlo::analyze_file(rt.artifact_path(&name))?;
+        println!("{}", report.summary());
+    }
+    Ok(())
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    // Train quickly (or at the configured budget), then bit-pack the
+    // weights at the learned bitlengths: the Proteus row of Table VIII
+    // as actual bytes on disk.
+    let cfg = base_config(args)?;
+    let rt = Runtime::cpu(&cfg.artifact_dir)?;
+    let meta = bitprune::model::ModelMeta::load(
+        rt.artifact_dir().join(format!("{}_meta.json", cfg.model)),
+    )?;
+    eprintln!("training {} to learn bitlengths...", cfg.model);
+    let out = run_experiment(&rt, &cfg)?;
+
+    // Collect the quantized weight tensors in layer order.
+    let mut tensors: Vec<(String, &[f32])> = Vec::new();
+    for (i, geom) in meta.layers.iter().enumerate() {
+        let idx = meta
+            .param_names
+            .iter()
+            .position(|n| n == &format!("{i}/w"))
+            .ok_or_else(|| anyhow::anyhow!("no weight param for layer {i}"))?;
+        tensors.push((geom.name.clone(), out.final_params[idx].as_f32()?));
+    }
+    let (_, report) =
+        bitprune::bitpack::pack_network(&tensors, &out.final_.bits_w)?;
+    let mut t = Table::new(&["layer", "bits", "f32 KiB", "packed KiB", "ratio"]);
+    for ((name, f32b, packb), bits) in report.per_layer.iter().zip(&out.final_.bits_w) {
+        t.row(vec![
+            name.clone(),
+            format!("{bits:.0}"),
+            format!("{:.1}", *f32b as f64 / 1024.0),
+            format!("{:.2}", *packb as f64 / 1024.0),
+            format!("{:.1}x", *f32b as f64 / *packb as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "total: {:.1} KiB f32 -> {:.2} KiB packed ({:.1}x, vs 4.0x for uniform 8-bit)",
+        report.total_f32_bytes as f64 / 1024.0,
+        report.total_packed_bytes as f64 / 1024.0,
+        report.ratio()
+    );
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    // Integer-arithmetic deployment check on a dense model.
+    let mut cfg = base_config(args)?;
+    if args.get("model").is_none() {
+        cfg.model = "mlp".into();
+        cfg.dataset = "blobs".into();
+    }
+    let rt = Runtime::cpu(&cfg.artifact_dir)?;
+    eprintln!("training {} to learn bitlengths...", cfg.model);
+    let trainer = bitprune::coordinator::Trainer::new(&rt, &cfg)?;
+    let out = trainer.run()?;
+    let net = bitprune::infer::IntNet::from_trained(
+        trainer.meta(),
+        &out.final_params,
+        &out.final_.bits_w,
+        &out.final_.bits_a,
+    )?;
+
+    // Integer path over the full test split.
+    let ds = bitprune::data::build(&cfg.dataset, cfg.seed)?;
+    let mut loader = bitprune::data::Loader::new(
+        ds.as_ref(),
+        bitprune::data::Split::Test,
+        trainer.meta().batch_size,
+        false,
+        cfg.seed,
+    );
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..loader.batches_per_epoch() {
+        let b = loader.next_batch()?;
+        let preds = net.predict(b.x.as_f32()?, trainer.meta().batch_size);
+        for (p, y) in preds.iter().zip(b.y.as_i32()?) {
+            correct += (*p as i32 == *y) as usize;
+            total += 1;
+        }
+    }
+    let int_acc = correct as f64 / total as f64;
+    println!(
+        "integer-arithmetic accuracy: {:.2}% | XLA fake-quant accuracy: {:.2}%",
+        int_acc * 100.0,
+        out.final_.accuracy * 100.0
+    );
+    println!(
+        "packed model: {:.2} KiB (f32: {:.1} KiB, {:.1}x smaller)",
+        net.packed_bytes() as f64 / 1024.0,
+        net.f32_bytes() as f64 / 1024.0,
+        net.f32_bytes() as f64 / net.packed_bytes() as f64
+    );
+    let gap = (int_acc - out.final_.accuracy).abs();
+    if gap > 0.02 {
+        bail!("integer inference deviates {:.2}pp from the XLA path", gap * 100.0);
+    }
+    println!("INTEGER INFERENCE OK (gap {:.2}pp)", gap * 100.0);
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    // Render Fig 1/2 (training curve) and Fig 3 (per-layer bits) from a
+    // recorded run JSON.
+    use bitprune::report::plots::{bar_chart, line_chart, Series};
+    let path = args
+        .pos(1)
+        .ok_or_else(|| anyhow::anyhow!("usage: bitprune fig reports/<run>.json"))?;
+    let text = std::fs::read_to_string(path)?;
+    let v = bitprune::util::json::parse(&text)?;
+    let evals = v.get("evals")?.as_arr()?;
+    let acc: Vec<(f64, f64)> = evals
+        .iter()
+        .map(|e| {
+            Ok((
+                e.get("step")?.as_f64()?,
+                e.get("accuracy")?.as_f64()? * 100.0,
+            ))
+        })
+        .collect::<Result<_>>()?;
+    let bits: Vec<(f64, f64)> = evals
+        .iter()
+        .map(|e| Ok((e.get("step")?.as_f64()?, e.get("bits_w")?.as_f64()?)))
+        .collect::<Result<_>>()?;
+    println!("Fig 1/2 — accuracy (%) and mean weight bits vs step:");
+    println!(
+        "{}",
+        line_chart(
+            &[Series::new("accuracy %", acc), Series::new("bits (W)", bits)],
+            64,
+            16
+        )
+    );
+    let bw = v.get("final_bits_w")?.as_arr()?;
+    let ba = v.get("final_bits_a")?.as_arr()?;
+    let mut items = Vec::new();
+    for (i, (w, a)) in bw.iter().zip(ba).enumerate() {
+        items.push((format!("L{i} W"), w.as_f64()?));
+        items.push((format!("L{i} A"), a.as_f64()?));
+    }
+    println!("Fig 3 — final per-layer bitlengths:");
+    println!("{}", bar_chart(&items, 32));
+    Ok(())
+}
+
+// Extension trait workaround: keep CLI option list in one place.
+trait CliOpts {
+    fn cli_value_opts_extended() -> Vec<&'static str>;
+}
+
+impl CliOpts for RunConfig {
+    fn cli_value_opts_extended() -> Vec<&'static str> {
+        let mut v = RunConfig::cli_value_opts();
+        v.extend_from_slice(&["gammas", "models", "bits"]);
+        v
+    }
+}

@@ -1,0 +1,328 @@
+//! Metric collection: per-step training records, epoch summaries, and
+//! CSV/JSON sinks used to regenerate the paper's figures.
+//!
+//! Figure 1 / Figure 2 (accuracy + average bitlength vs training
+//! progress) are emitted as CSV series directly from [`RunRecorder`].
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One recorded training step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub phase: &'static str,
+    pub lr: f64,
+    pub loss: f64,
+    pub task_loss: f64,
+    pub bit_loss: f64,
+    pub train_acc: f64,
+    pub mean_bits_w: f64,
+    pub mean_bits_a: f64,
+}
+
+/// One evaluation point.
+#[derive(Debug, Clone)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub accuracy: f64,
+    pub mean_bits_w: f64,
+    pub mean_bits_a: f64,
+}
+
+/// Collects the full history of one training run.
+#[derive(Debug, Default)]
+pub struct RunRecorder {
+    pub run_name: String,
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    /// Final per-layer bitlengths (for Fig. 3).
+    pub final_bits_w: Vec<f32>,
+    pub final_bits_a: Vec<f32>,
+}
+
+impl RunRecorder {
+    pub fn new(run_name: &str) -> Self {
+        Self { run_name: run_name.to_string(), ..Default::default() }
+    }
+
+    pub fn record_step(&mut self, r: StepRecord) {
+        self.steps.push(r);
+    }
+
+    pub fn record_eval(&mut self, r: EvalRecord) {
+        self.evals.push(r);
+    }
+
+    pub fn best_eval(&self) -> Option<&EvalRecord> {
+        self.evals
+            .iter()
+            .max_by(|a, b| a.accuracy.total_cmp(&b.accuracy))
+    }
+
+    pub fn last_eval(&self) -> Option<&EvalRecord> {
+        self.evals.last()
+    }
+
+    /// Figure 1/2 series: step, eval accuracy, mean weight/act bits.
+    pub fn training_curve_csv(&self) -> String {
+        let mut out = String::from("step,accuracy,loss,mean_bits_w,mean_bits_a\n");
+        for e in &self.evals {
+            let _ = writeln!(
+                out,
+                "{},{:.4},{:.5},{:.4},{:.4}",
+                e.step, e.accuracy, e.loss, e.mean_bits_w, e.mean_bits_a
+            );
+        }
+        out
+    }
+
+    /// Per-step loss curve (end-to-end driver log).
+    pub fn loss_curve_csv(&self) -> String {
+        let mut out =
+            String::from("step,phase,lr,loss,task_loss,bit_loss,train_acc,bits_w,bits_a\n");
+        for r in &self.steps {
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{:.5},{:.5},{:.5},{:.4},{:.4},{:.4}",
+                r.step,
+                r.phase,
+                r.lr,
+                r.loss,
+                r.task_loss,
+                r.bit_loss,
+                r.train_acc,
+                r.mean_bits_w,
+                r.mean_bits_a
+            );
+        }
+        out
+    }
+
+    /// Figure 3 series: per-layer final bitlengths.
+    pub fn layer_bits_csv(&self, layer_names: &[String]) -> String {
+        let mut out = String::from("layer,name,bits_w,bits_a\n");
+        for (i, name) in layer_names.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{},{},{:.4},{:.4}",
+                i,
+                name,
+                self.final_bits_w.get(i).copied().unwrap_or(f32::NAN),
+                self.final_bits_a.get(i).copied().unwrap_or(f32::NAN)
+            );
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("run", s(&self.run_name)),
+            (
+                "evals",
+                arr(self.evals.iter().map(|e| {
+                    obj(vec![
+                        ("step", num(e.step as f64)),
+                        ("accuracy", num(e.accuracy)),
+                        ("loss", num(e.loss)),
+                        ("bits_w", num(e.mean_bits_w)),
+                        ("bits_a", num(e.mean_bits_a)),
+                    ])
+                })),
+            ),
+            (
+                "final_bits_w",
+                arr(self.final_bits_w.iter().map(|&b| num(b as f64))),
+            ),
+            (
+                "final_bits_a",
+                arr(self.final_bits_a.iter().map(|&b| num(b as f64))),
+            ),
+        ])
+    }
+
+    pub fn write_csvs(&self, dir: impl AsRef<Path>, layer_names: &[String]) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let base = dir.join(&self.run_name);
+        write_file(&base.with_extension("curve.csv"), &self.training_curve_csv())?;
+        write_file(&base.with_extension("steps.csv"), &self.loss_curve_csv())?;
+        write_file(
+            &base.with_extension("layers.csv"),
+            &self.layer_bits_csv(layer_names),
+        )?;
+        write_file(
+            &base.with_extension("json"),
+            &self.to_json().to_string(),
+        )?;
+        Ok(())
+    }
+}
+
+pub fn write_file(path: &Path, content: &str) -> Result<()> {
+    std::fs::write(path, content)
+        .with_context(|| format!("writing '{}'", path.display()))
+}
+
+/// Simple fixed-width table formatter for terminal report output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "| {:width$} ", c, width = widths[i]);
+            }
+            out.push_str("|\n");
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        for (i, w) in widths.iter().enumerate() {
+            let _ = write!(out, "|{:-<width$}", "", width = w + 2);
+            if i == widths.len() - 1 {
+                out.push_str("|\n");
+            }
+        }
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+
+    /// CSV rendering of the same table.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_recorder() -> RunRecorder {
+        let mut r = RunRecorder::new("test-run");
+        r.record_step(StepRecord {
+            step: 0,
+            phase: "learn",
+            lr: 0.01,
+            loss: 2.5,
+            task_loss: 2.0,
+            bit_loss: 0.5,
+            train_acc: 0.1,
+            mean_bits_w: 8.0,
+            mean_bits_a: 8.0,
+        });
+        r.record_eval(EvalRecord {
+            step: 0,
+            loss: 2.4,
+            accuracy: 0.12,
+            mean_bits_w: 8.0,
+            mean_bits_a: 8.0,
+        });
+        r.record_eval(EvalRecord {
+            step: 10,
+            loss: 1.2,
+            accuracy: 0.55,
+            mean_bits_w: 3.5,
+            mean_bits_a: 4.2,
+        });
+        r.final_bits_w = vec![3.0, 4.0];
+        r.final_bits_a = vec![4.0, 5.0];
+        r
+    }
+
+    #[test]
+    fn best_and_last_eval() {
+        let r = sample_recorder();
+        assert_eq!(r.best_eval().unwrap().accuracy, 0.55);
+        assert_eq!(r.last_eval().unwrap().step, 10);
+    }
+
+    #[test]
+    fn csv_emission() {
+        let r = sample_recorder();
+        let curve = r.training_curve_csv();
+        assert!(curve.starts_with("step,accuracy"));
+        assert_eq!(curve.lines().count(), 3);
+        let layers = r.layer_bits_csv(&["l0".into(), "l1".into()]);
+        assert!(layers.contains("0,l0,3.0000,4.0000"));
+        let steps = r.loss_curve_csv();
+        assert!(steps.contains("learn"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = sample_recorder();
+        let j = r.to_json().to_string();
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("run").unwrap().as_str().unwrap(),
+            "test-run"
+        );
+        assert_eq!(parsed.get("evals").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new(&["net", "acc", "bits"]);
+        t.row(vec!["alexnet_s".into(), "78.3".into(), "3.78".into()]);
+        let rendered = t.render();
+        assert!(rendered.contains("| alexnet_s |"));
+        assert!(rendered.lines().count() == 3);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("net,acc,bits\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "table row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

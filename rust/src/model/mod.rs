@@ -1,0 +1,220 @@
+//! Typed view of the exported artifact metadata (`<tag>_meta.json`).
+//!
+//! The python exporter (python/compile/aot.py) writes one meta file per
+//! model variant describing the flattened train/eval signatures and the
+//! static per-layer geometry.  Everything the coordinator, the loss
+//! weighting and the accelerator models need about a network comes from
+//! here — the rust side never hard-codes model structure.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Static geometry of one quantized layer (one (n_w, n_a) bitlength pair).
+#[derive(Debug, Clone)]
+pub struct LayerGeom {
+    pub name: String,
+    /// 'conv' | 'dwconv' | 'dense'
+    pub kind: String,
+    /// Weight elements for the whole network.
+    pub weight_elems: usize,
+    /// Input-activation elements per sample.
+    pub act_in_elems: usize,
+    /// MACs per sample.
+    pub macs: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kernel: usize,
+    pub out_spatial: usize,
+}
+
+impl LayerGeom {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            kind: v.get("kind")?.as_str()?.to_string(),
+            weight_elems: v.get("weight_elems")?.as_usize()?,
+            act_in_elems: v.get("act_in_elems")?.as_usize()?,
+            macs: v.get("macs")?.as_usize()?,
+            cin: v.get("cin")?.as_usize()?,
+            cout: v.get("cout")?.as_usize()?,
+            kernel: v.get("kernel")?.as_usize()?,
+            out_spatial: v.get("out_spatial")?.as_usize()?,
+        })
+    }
+}
+
+/// Parsed `<tag>_meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub tag: String,
+    pub model: String,
+    pub batch_size: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub num_quant_layers: usize,
+    pub num_params: usize,
+    pub param_names: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub layers: Vec<LayerGeom>,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    pub n_min: f64,
+    pub n_max: f64,
+}
+
+impl ModelMeta {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading meta '{}'", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing meta '{}'", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(LayerGeom::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let meta = Self {
+            tag: v.get("tag")?.as_str()?.to_string(),
+            model: v.get("model")?.as_str()?.to_string(),
+            batch_size: v.get("batch_size")?.as_usize()?,
+            input_shape: v.get("input_shape")?.usize_vec()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            num_quant_layers: v.get("num_quant_layers")?.as_usize()?,
+            num_params: v.get("num_params")?.as_usize()?,
+            param_names: v.get("param_names")?.str_vec()?,
+            param_shapes: v
+                .get("param_shapes")?
+                .as_arr()?
+                .iter()
+                .map(|s| s.usize_vec())
+                .collect::<Result<Vec<_>>>()?,
+            layers,
+            momentum: v.get("momentum")?.as_f64()?,
+            weight_decay: v.get("weight_decay")?.as_f64()?,
+            n_min: v.get("n_min")?.as_f64()?,
+            n_max: v.get("n_max")?.as_f64()?,
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.param_names.len() != self.num_params {
+            bail!(
+                "meta inconsistency: {} param names vs num_params {}",
+                self.param_names.len(),
+                self.num_params
+            );
+        }
+        if self.param_shapes.len() != self.num_params {
+            bail!("meta inconsistency: param_shapes length");
+        }
+        if self.layers.len() != self.num_quant_layers {
+            bail!(
+                "meta inconsistency: {} layers vs num_quant_layers {}",
+                self.layers.len(),
+                self.num_quant_layers
+            );
+        }
+        if self.batch_size == 0 || self.num_classes == 0 {
+            bail!("meta inconsistency: zero batch or classes");
+        }
+        Ok(())
+    }
+
+    // ---- artifact names -----------------------------------------------------
+
+    pub fn init_artifact(&self) -> String {
+        format!("{}_init", self.tag)
+    }
+
+    pub fn train_artifact(&self) -> String {
+        format!("{}_train", self.tag)
+    }
+
+    pub fn eval_artifact(&self) -> String {
+        format!("{}_eval", self.tag)
+    }
+
+    // ---- aggregate geometry ---------------------------------------------------
+
+    pub fn total_weight_elems(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_elems).sum()
+    }
+
+    pub fn total_macs_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    pub fn total_act_elems_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.act_in_elems).sum()
+    }
+
+    /// Largest single activation layer (elements per sample) — the
+    /// MPDNN-style activation memory metric (paper §III-B6).
+    pub fn max_act_elems_per_sample(&self) -> usize {
+        self.layers.iter().map(|l| l.act_in_elems).max().unwrap_or(0)
+    }
+}
+
+/// Shared test fixture: a tiny two-layer MLP meta (also used by the
+/// quant/accel unit tests).
+#[cfg(test)]
+pub(crate) fn tiny_meta_json() -> String {
+    tests::tiny_meta_json()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_meta_json() -> String {
+        r#"{
+          "tag": "tiny", "model": "mlp", "batch_size": 4,
+          "input_shape": [8], "num_classes": 3,
+          "num_quant_layers": 2, "num_params": 4,
+          "param_names": ["0/w", "0/b", "1/w", "1/b"],
+          "param_shapes": [[8, 16], [16], [16, 3], [3]],
+          "layers": [
+            {"name": "fc0", "kind": "dense", "weight_elems": 128,
+             "act_in_elems": 8, "macs": 128, "cin": 8, "cout": 16,
+             "kernel": 1, "out_spatial": 1},
+            {"name": "fc1", "kind": "dense", "weight_elems": 48,
+             "act_in_elems": 16, "macs": 48, "cin": 16, "cout": 3,
+             "kernel": 1, "out_spatial": 1}
+          ],
+          "momentum": 0.9, "weight_decay": 0.0005,
+          "n_min": 1.0, "n_max": 16.0
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_meta() {
+        let v = json::parse(&tiny_meta_json()).unwrap();
+        let m = ModelMeta::from_json(&v).unwrap();
+        assert_eq!(m.tag, "tiny");
+        assert_eq!(m.num_params, 4);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.total_weight_elems(), 176);
+        assert_eq!(m.total_macs_per_sample(), 176);
+        assert_eq!(m.max_act_elems_per_sample(), 16);
+        assert_eq!(m.train_artifact(), "tiny_train");
+    }
+
+    #[test]
+    fn inconsistent_meta_rejected() {
+        let bad = tiny_meta_json().replace("\"num_params\": 4", "\"num_params\": 3");
+        let v = json::parse(&bad).unwrap();
+        assert!(ModelMeta::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,491 @@
+//! Rust mirror of the BitPruning quantizer.
+//!
+//! Bit-compatible with python/compile/kernels/ref.py (checked by the
+//! `artifact_parity` integration test against the exported
+//! `fake_quant.hlo.txt`): same clipping bounds, same epsilon guard and
+//! round-half-to-even semantics (`f32::round_ties_even` ⇔ `jnp.round`).
+//!
+//! Used by the coordinator for bitlength selection between phases, by
+//! the profiled/MPDNN baselines, and by the report generation (footprint
+//! and MAC-cost accounting).
+
+use crate::model::ModelMeta;
+
+/// Paper clips learned bitlengths at 1.0 from below; 16 above (ref.py).
+pub const N_MIN: f32 = 1.0;
+pub const N_MAX: f32 = 16.0;
+const RANGE_EPS: f32 = 1e-12;
+
+/// Clip a learned bitlength into the valid range.
+pub fn clip_bits(n: f32) -> f32 {
+    n.clamp(N_MIN, N_MAX)
+}
+
+/// Smallest representable step of an n-bit group over [lmin, lmax].
+pub fn scale(lmin: f32, lmax: f32, n: f32) -> f32 {
+    let rng = (lmax - lmin).max(RANGE_EPS);
+    rng / (n.exp2() - 1.0)
+}
+
+/// Q_i: uniform min/max quantization at (integer-valued) bitlength n.
+pub fn quantize_int(v: f32, lmin: f32, lmax: f32, n: f32) -> f32 {
+    let s = scale(lmin, lmax, n);
+    lmin + ((v - lmin) / s).round_ties_even() * s
+}
+
+/// Q_r: interpolated non-integer-bitlength quantization (paper eq. 4).
+pub fn quantize_interp(v: f32, lmin: f32, lmax: f32, n: f32) -> f32 {
+    let n = clip_bits(n);
+    let b = n.floor();
+    let a = n - b;
+    let qb = quantize_int(v, lmin, lmax, b);
+    let qb1 = quantize_int(v, lmin, lmax, b + 1.0);
+    (1.0 - a) * qb + a * qb1
+}
+
+/// Group min/max of a slice.
+pub fn group_minmax(xs: &[f32]) -> (f32, f32) {
+    let mut lmin = f32::INFINITY;
+    let mut lmax = f32::NEG_INFINITY;
+    for &x in xs {
+        lmin = lmin.min(x);
+        lmax = lmax.max(x);
+    }
+    (lmin, lmax)
+}
+
+/// Full fake-quantization of a slice as one group (in place).
+pub fn fake_quant_slice(xs: &mut [f32], n: f32) {
+    if xs.is_empty() {
+        return;
+    }
+    let (lmin, lmax) = group_minmax(xs);
+    let n = clip_bits(n);
+    let b = n.floor();
+    let a = n - b;
+    let sb = scale(lmin, lmax, b);
+    let sb1 = scale(lmin, lmax, b + 1.0);
+    for x in xs.iter_mut() {
+        let c = *x - lmin;
+        let qb = lmin + (c / sb).round_ties_even() * sb;
+        let qb1 = lmin + (c / sb1).round_ties_even() * sb1;
+        *x = (1.0 - a) * qb + a * qb1;
+    }
+}
+
+/// Group-granularity fake quantization: `xs` is [groups x group_size]
+/// row-major; each row quantizes against its own min/max with its own
+/// bitlength (mirror of kernels/fake_quant_group.py, the per-channel
+/// path).  `bits` is one entry per group.
+pub fn fake_quant_groups(xs: &mut [f32], group_size: usize, bits: &[f32]) {
+    assert!(group_size > 0, "group_size must be positive");
+    assert_eq!(
+        xs.len(),
+        group_size * bits.len(),
+        "xs len {} != {} groups x {}",
+        xs.len(),
+        bits.len(),
+        group_size
+    );
+    for (row, &n) in xs.chunks_mut(group_size).zip(bits) {
+        fake_quant_slice(row, n);
+    }
+}
+
+/// Final bitlength selection (paper §II-C): ceil of the learned value.
+pub fn select_integer_bits(bits: &[f32]) -> Vec<f32> {
+    bits.iter().map(|&n| clip_bits(n).ceil()).collect()
+}
+
+/// Average bitlength over groups (paper reports per-layer averages).
+pub fn mean_bits(bits: &[f32]) -> f64 {
+    if bits.is_empty() {
+        return 0.0;
+    }
+    bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// Cost accounting (footprint / MAC criteria — paper §III-A5, Table IV)
+// ---------------------------------------------------------------------------
+
+/// Weight-memory footprint in bits for given per-layer weight bitlengths.
+pub fn weight_footprint_bits(meta: &ModelMeta, bits_w: &[f32]) -> f64 {
+    meta.layers
+        .iter()
+        .zip(bits_w)
+        .map(|(l, &b)| l.weight_elems as f64 * clip_bits(b) as f64)
+        .sum()
+}
+
+/// Activation footprint in bits for a batch size: per the paper/MPDNN
+/// convention, weights count fully while activations count as the
+/// *largest* single layer (what must be resident at once).
+pub fn act_footprint_bits(meta: &ModelMeta, bits_a: &[f32], batch: usize) -> f64 {
+    meta.layers
+        .iter()
+        .zip(bits_a)
+        .map(|(l, &b)| (l.act_in_elems * batch) as f64 * clip_bits(b) as f64)
+        .fold(0.0, f64::max)
+}
+
+/// Total inference footprint in bits at a given batch size
+/// (weights + largest activation layer).
+pub fn total_footprint_bits(
+    meta: &ModelMeta,
+    bits_w: &[f32],
+    bits_a: &[f32],
+    batch: usize,
+) -> f64 {
+    weight_footprint_bits(meta, bits_w) + act_footprint_bits(meta, bits_a, batch)
+}
+
+/// "Bit-MACs": Σ macs_l · (n_w,l + n_a,l) — the compute-cost proxy the
+/// paper's MAC-weighted regularizer minimizes (bit-serial hardware cost
+/// scales with operand bitlength).
+pub fn mac_cost(meta: &ModelMeta, bits_w: &[f32], bits_a: &[f32]) -> f64 {
+    meta.layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| l.macs as f64 * (clip_bits(bits_w[i]) + clip_bits(bits_a[i])) as f64)
+        .sum()
+}
+
+/// λ vectors for the regularizer criteria (paper §II-B / §III-A5).
+/// Normalized so an all-8-bit network yields bit-loss 1.0 across the
+/// *combined* weight+activation groups, matching the python side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Criterion {
+    /// Every group weighted equally.
+    Equal,
+    /// Weight by memory footprint at batch size 1 (weight-heavy).
+    FootprintBs1,
+    /// Weight by memory footprint at a large batch (activation-heavy).
+    FootprintBs128,
+    /// Weight by MAC count.
+    MacOps,
+}
+
+impl Criterion {
+    pub fn name(self) -> &'static str {
+        match self {
+            Criterion::Equal => "equal",
+            Criterion::FootprintBs1 => "bs1",
+            Criterion::FootprintBs128 => "bs128",
+            Criterion::MacOps => "mac",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "equal" => Some(Criterion::Equal),
+            "bs1" => Some(Criterion::FootprintBs1),
+            "bs128" => Some(Criterion::FootprintBs128),
+            "mac" => Some(Criterion::MacOps),
+            _ => None,
+        }
+    }
+
+    /// Per-group raw costs (weights groups first, then activations).
+    fn costs(self, meta: &ModelMeta) -> (Vec<f64>, Vec<f64>) {
+        let nl = meta.layers.len();
+        match self {
+            Criterion::Equal => (vec![1.0; nl], vec![1.0; nl]),
+            Criterion::FootprintBs1 => (
+                meta.layers.iter().map(|l| l.weight_elems as f64).collect(),
+                meta.layers.iter().map(|l| l.act_in_elems as f64).collect(),
+            ),
+            Criterion::FootprintBs128 => (
+                meta.layers.iter().map(|l| l.weight_elems as f64).collect(),
+                meta.layers
+                    .iter()
+                    .map(|l| (l.act_in_elems * 128) as f64)
+                    .collect(),
+            ),
+            Criterion::MacOps => (
+                meta.layers.iter().map(|l| l.macs as f64).collect(),
+                meta.layers.iter().map(|l| l.macs as f64).collect(),
+            ),
+        }
+    }
+
+    /// Normalized λ vectors: (lam_w, lam_a) with
+    /// Σ(λ · 8) over both vectors == 1.0.
+    pub fn lambdas(self, meta: &ModelMeta) -> (Vec<f32>, Vec<f32>) {
+        let (cw, ca) = self.costs(meta);
+        let total: f64 = cw.iter().chain(ca.iter()).sum();
+        let norm = 8.0 * total;
+        (
+            cw.iter().map(|&c| (c / norm) as f32).collect(),
+            ca.iter().map(|&c| (c / norm) as f32).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, close};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn integer_bits_are_idempotent() {
+        // Quantizing an already-quantized tensor at the same integer
+        // bitlength is a fixed point.
+        check(
+            "quant-idempotent",
+            128,
+            |rng| {
+                let n = (rng.below(7) + 2) as f32;
+                (rand_vec(rng, 64), n)
+            },
+            |(xs, n)| {
+                let mut once = xs.clone();
+                fake_quant_slice(&mut once, *n);
+                let mut twice = once.clone();
+                fake_quant_slice(&mut twice, *n);
+                for (a, b) in once.iter().zip(&twice) {
+                    // min/max of the quantized tensor may shrink, but the
+                    // grid over [min,max] keeps quantized points exactly
+                    // representable only when endpoints survive; allow
+                    // tiny drift.
+                    close(*a as f64, *b as f64, 1e-5, "idempotent")?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn quantized_values_stay_in_range() {
+        check(
+            "quant-in-range",
+            256,
+            |rng| {
+                let n = rng.range_f32(1.0, 9.0);
+                (rand_vec(rng, 33), n)
+            },
+            |(xs, n)| {
+                let (lmin, lmax) = group_minmax(xs);
+                let mut q = xs.clone();
+                fake_quant_slice(&mut q, *n);
+                for &v in &q {
+                    if v < lmin - 1e-4 || v > lmax + 1e-4 {
+                        return Err(format!("value {v} outside [{lmin}, {lmax}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        // Monotonicity on average: error at n+2 bits <= error at n bits.
+        check(
+            "quant-monotone",
+            64,
+            |rng| (rand_vec(rng, 256), (rng.below(6) + 2) as f32),
+            |(xs, n)| {
+                let err = |bits: f32| {
+                    let mut q = xs.clone();
+                    fake_quant_slice(&mut q, bits);
+                    xs.iter()
+                        .zip(&q)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                };
+                if err(*n + 2.0) <= err(*n) + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("error increased from {} to {} bits", n, n + 2.0))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn interpolation_endpoints() {
+        let xs: Vec<f32> = (0..50).map(|i| (i as f32 * 0.37).sin()).collect();
+        let (lmin, lmax) = group_minmax(&xs);
+        for &x in &xs {
+            // alpha == 0 reduces to the integer quantizer.
+            assert_eq!(
+                quantize_interp(x, lmin, lmax, 3.0),
+                quantize_int(x, lmin, lmax, 3.0)
+            );
+            // midpoint is the strict blend.
+            let mid = quantize_interp(x, lmin, lmax, 3.5);
+            let expect = 0.5 * quantize_int(x, lmin, lmax, 3.0)
+                + 0.5 * quantize_int(x, lmin, lmax, 4.0);
+            assert!((mid - expect).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn group_quant_rows_independent() {
+        check(
+            "group-quant-independent",
+            64,
+            |rng| {
+                let groups = 1 + rng.below_usize(8);
+                let size = 1 + rng.below_usize(64);
+                let xs = rand_vec(rng, groups * size);
+                let bits: Vec<f32> =
+                    (0..groups).map(|_| rng.range_f32(1.0, 9.0)).collect();
+                (xs, size, bits)
+            },
+            |(xs, size, bits)| {
+                let mut got = xs.clone();
+                fake_quant_groups(&mut got, *size, bits);
+                // Must equal quantizing each row separately.
+                for (g, (row, &n)) in xs.chunks(*size).zip(bits).enumerate() {
+                    let mut want = row.to_vec();
+                    fake_quant_slice(&mut want, n);
+                    let got_row = &got[g * size..(g + 1) * size];
+                    if got_row != want.as_slice() {
+                        return Err(format!("group {g} differs"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn group_quant_finer_granularity_lower_error() {
+        let mut rng = Rng::new(77);
+        // Rows with very different scales: per-group wins.
+        let mut xs = Vec::new();
+        for g in 0..8 {
+            let scale = 10f32.powi(g % 4 - 2);
+            xs.extend((0..32).map(|_| rng.normal_f32(0.0, scale)));
+        }
+        let sse = |q: &[f32]| -> f64 {
+            xs.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        let mut per_tensor = xs.clone();
+        fake_quant_slice(&mut per_tensor, 4.0);
+        let mut per_group = xs.clone();
+        fake_quant_groups(&mut per_group, 32, &[4.0; 8]);
+        assert!(sse(&per_group) < sse(&per_tensor));
+    }
+
+    #[test]
+    #[should_panic(expected = "groups x")]
+    fn group_quant_len_mismatch_panics() {
+        let mut xs = vec![0.0f32; 10];
+        fake_quant_groups(&mut xs, 4, &[4.0, 4.0]);
+    }
+
+    #[test]
+    fn one_bit_two_levels() {
+        let xs = [-1.0f32, -0.4, 0.3, 1.0];
+        let mut q = xs.to_vec();
+        fake_quant_slice(&mut q, 1.0);
+        for v in &q {
+            assert!(*v == -1.0 || *v == 1.0, "1-bit value {v}");
+        }
+    }
+
+    #[test]
+    fn degenerate_group_is_identity() {
+        let mut xs = vec![0.5f32; 16];
+        fake_quant_slice(&mut xs, 3.0);
+        assert!(xs.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn clip_and_ceil_selection() {
+        assert_eq!(clip_bits(0.2), 1.0);
+        assert_eq!(clip_bits(20.0), 16.0);
+        let sel = select_integer_bits(&[1.2, 3.0, 4.01, 0.5]);
+        assert_eq!(sel, vec![2.0, 3.0, 5.0, 1.0]);
+        // ceil(learned) is within [learned, learned+1]
+        check(
+            "ceil-bound",
+            128,
+            |rng| rng.range_f32(1.0, 16.0),
+            |&n| {
+                let s = select_integer_bits(&[n])[0];
+                if s >= n && s < n + 1.0 + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("select {s} not in [{n}, {n}+1]"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn round_ties_even_matches_numpy_semantics() {
+        // jnp.round(0.5) == 0.0, jnp.round(1.5) == 2.0
+        assert_eq!(0.5f32.round_ties_even(), 0.0);
+        assert_eq!(1.5f32.round_ties_even(), 2.0);
+        assert_eq!((-0.5f32).round_ties_even(), 0.0);
+        assert_eq!(2.5f32.round_ties_even(), 2.0);
+    }
+
+    fn tiny_meta() -> ModelMeta {
+        let j = crate::util::json::parse(&crate::model::tiny_meta_json()).unwrap();
+        ModelMeta::from_json(&j).unwrap()
+    }
+
+    #[test]
+    fn lambdas_normalize_to_one_at_8_bits() {
+        let meta = tiny_meta();
+        for crit in [
+            Criterion::Equal,
+            Criterion::FootprintBs1,
+            Criterion::FootprintBs128,
+            Criterion::MacOps,
+        ] {
+            let (lw, la) = crit.lambdas(&meta);
+            let loss: f64 = lw
+                .iter()
+                .chain(la.iter())
+                .map(|&l| l as f64 * 8.0)
+                .sum();
+            assert!((loss - 1.0).abs() < 1e-6, "{:?}: {}", crit, loss);
+        }
+    }
+
+    #[test]
+    fn footprint_and_mac_costs() {
+        let meta = tiny_meta();
+        let b8 = vec![8.0f32; 2];
+        let b4 = vec![4.0f32; 2];
+        // Halving bits halves footprint and MAC cost.
+        assert!(
+            (weight_footprint_bits(&meta, &b4) * 2.0
+                - weight_footprint_bits(&meta, &b8))
+            .abs()
+                < 1e-9
+        );
+        assert!((mac_cost(&meta, &b4, &b4) * 2.0 - mac_cost(&meta, &b8, &b8)).abs() < 1e-9);
+        // Activation footprint takes the max layer.
+        let af = act_footprint_bits(&meta, &b8, 2);
+        assert_eq!(af, (16 * 2) as f64 * 8.0);
+        assert_eq!(
+            total_footprint_bits(&meta, &b8, &b8, 2),
+            weight_footprint_bits(&meta, &b8) + af
+        );
+    }
+
+    #[test]
+    fn criterion_parse_roundtrip() {
+        for c in [
+            Criterion::Equal,
+            Criterion::FootprintBs1,
+            Criterion::FootprintBs128,
+            Criterion::MacOps,
+        ] {
+            assert_eq!(Criterion::parse(c.name()), Some(c));
+        }
+        assert_eq!(Criterion::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,484 @@
+//! Experiment drivers: regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §6 experiment index).
+//!
+//! Each `table*` function runs the required training sweeps through the
+//! coordinator, prints the paper-shaped table, and writes CSV/JSON into
+//! the output directory.  Figures are emitted as CSV series (the
+//! recorder writes `<run>.curve.csv` for Figs 1-2, `<run>.layers.csv`
+//! for Fig 3).
+
+pub mod plots;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::accel;
+use crate::baselines;
+use crate::config::{PlanKind, RunConfig};
+use crate::coordinator::{run_experiment, RunOutcome, Trainer};
+use crate::metrics::{write_file, Table};
+use crate::model::ModelMeta;
+use crate::quant::{self, Criterion};
+use crate::runtime::Runtime;
+
+/// Probe batches used by the post-training searches (profiled / MPDNN):
+/// 8 x batch 32 = 256 samples, 0.4% accuracy resolution.
+const PROBE_BATCHES: usize = 8;
+
+fn fmt(v: f64, prec: usize) -> String {
+    format!("{:.*}", prec, v)
+}
+
+fn pct(v: f64) -> String {
+    format!("{:.1}", v * 100.0)
+}
+
+fn save(out_dir: &str, name: &str, table: &Table) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    write_file(&Path::new(out_dir).join(name), &table.to_csv())
+}
+
+fn run_and_dump(rt: &Runtime, cfg: &RunConfig) -> Result<RunOutcome> {
+    let outcome = run_experiment(rt, cfg)?;
+    let meta = ModelMeta::load(
+        rt.artifact_dir().join(format!("{}_meta.json", cfg.model)),
+    )?;
+    let layer_names: Vec<String> =
+        meta.layers.iter().map(|l| l.name.clone()).collect();
+    outcome.recorder.write_csvs(&cfg.out_dir, &layer_names)?;
+    eprintln!(
+        "    {}: acc {} | bits W {:.2} A {:.2} | {:.1}s",
+        outcome.name,
+        pct(outcome.final_.accuracy),
+        outcome.final_.mean_bits_w(),
+        outcome.final_.mean_bits_a(),
+        outcome.wall_secs
+    );
+    Ok(outcome)
+}
+
+// ---------------------------------------------------------------------------
+// Table II — regularizer-strength sweep (+ Fig 1 CSVs as a side effect)
+// ---------------------------------------------------------------------------
+
+pub fn table2(
+    rt: &Runtime,
+    base: &RunConfig,
+    models: &[String],
+    gammas: &[f64],
+) -> Result<Table> {
+    let mut t = Table::new(&[
+        "network", "regularizer", "acc(non-int)", "W bits", "A bits",
+        "acc(final)", "W bits(int)", "A bits(int)",
+    ]);
+    for model in models {
+        // fp32-proxy baseline row.
+        let mut cfg = base.clone();
+        cfg.model = model.clone();
+        let bl = baselines::fp32_proxy_config(&cfg, &format!("t2-{model}-base"));
+        let out = run_and_dump(rt, &bl)?;
+        t.row(vec![
+            model.clone(), "baseline".into(), pct(out.final_.accuracy),
+            "16 (fp32-proxy)".into(), "16 (fp32-proxy)".into(),
+            pct(out.final_.accuracy), "16".into(), "16".into(),
+        ]);
+        for &gamma in gammas {
+            let mut cfg = base.clone();
+            cfg.model = model.clone();
+            cfg.gamma = gamma;
+            cfg.name = format!("t2-{model}-g{gamma}");
+            let out = run_and_dump(rt, &cfg)?;
+            let ni = out.noninteger.as_ref();
+            t.row(vec![
+                model.clone(),
+                format!("{gamma}"),
+                ni.map_or("-".into(), |s| pct(s.accuracy)),
+                ni.map_or("-".into(), |s| fmt(s.mean_bits_w(), 2)),
+                ni.map_or("-".into(), |s| fmt(s.mean_bits_a(), 2)),
+                pct(out.final_.accuracy),
+                fmt(out.final_.mean_bits_w(), 2),
+                fmt(out.final_.mean_bits_a(), 2),
+            ]);
+        }
+    }
+    save(&base.out_dir, "table2.csv", &t)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table III — other architectures
+// ---------------------------------------------------------------------------
+
+pub fn table3(rt: &Runtime, base: &RunConfig, models: &[String]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "network", "base acc", "quantized acc", "W bits", "A bits", "regularizer",
+    ]);
+    for model in models {
+        let mut cfg = base.clone();
+        cfg.model = model.clone();
+        // Vector models (1-D input) train on blobs, image models on the
+        // base dataset.
+        let meta = ModelMeta::load(
+            rt.artifact_dir().join(format!("{model}_meta.json")),
+        )?;
+        if meta.input_shape.len() == 1 {
+            cfg.dataset = "blobs".into();
+        }
+        let bl = baselines::fp32_proxy_config(&cfg, &format!("t3-{model}-base"));
+        let base_out = run_and_dump(rt, &bl)?;
+        cfg.name = format!("t3-{model}");
+        let out = run_and_dump(rt, &cfg)?;
+        t.row(vec![
+            model.clone(),
+            pct(base_out.final_.accuracy),
+            pct(out.final_.accuracy),
+            fmt(out.final_.mean_bits_w(), 2),
+            fmt(out.final_.mean_bits_a(), 2),
+            format!("{}", cfg.gamma),
+        ]);
+    }
+    save(&base.out_dir, "table3.csv", &t)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table IV — weighted bit-loss criteria
+// ---------------------------------------------------------------------------
+
+pub fn table4(rt: &Runtime, base: &RunConfig, models: &[String]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "network", "target", "accuracy",
+        "BS1 fp(non-int)", "BS128 fp(non-int)", "bitMACs(non-int)",
+        "BS1 fp(int)", "BS128 fp(int)", "bitMACs(int)",
+    ]);
+    let criteria = [
+        Criterion::Equal,
+        Criterion::FootprintBs1,
+        Criterion::FootprintBs128,
+        Criterion::MacOps,
+    ];
+    for model in models {
+        let meta = ModelMeta::load(
+            rt.artifact_dir().join(format!("{model}_meta.json")),
+        )?;
+        // Normalize metrics to the 8-bit network so rows are readable
+        // "average bits"-like numbers, as in the paper.
+        let b8 = vec![8.0f32; meta.num_quant_layers];
+        let fp1_8 = quant::total_footprint_bits(&meta, &b8, &b8, 1);
+        let fp128_8 = quant::total_footprint_bits(&meta, &b8, &b8, 128);
+        let mac_8 = quant::mac_cost(&meta, &b8, &b8);
+        for crit in criteria {
+            let mut cfg = base.clone();
+            cfg.model = model.clone();
+            cfg.criterion = crit;
+            cfg.name = format!("t4-{model}-{}", crit.name());
+            let out = run_and_dump(rt, &cfg)?;
+            let metrics = |s: &crate::coordinator::StageResult| {
+                (
+                    quant::total_footprint_bits(&meta, &s.bits_w, &s.bits_a, 1)
+                        / fp1_8 * 8.0,
+                    quant::total_footprint_bits(&meta, &s.bits_w, &s.bits_a, 128)
+                        / fp128_8 * 8.0,
+                    quant::mac_cost(&meta, &s.bits_w, &s.bits_a) / mac_8 * 8.0,
+                )
+            };
+            let (ni1, ni128, nim) = out
+                .noninteger
+                .as_ref()
+                .map(&metrics)
+                .unwrap_or((f64::NAN, f64::NAN, f64::NAN));
+            let (f1, f128, fm) = metrics(&out.final_);
+            t.row(vec![
+                model.clone(), crit.name().into(), pct(out.final_.accuracy),
+                fmt(ni1, 2), fmt(ni128, 2), fmt(nim, 2),
+                fmt(f1, 2), fmt(f128, 2), fmt(fm, 2),
+            ]);
+        }
+    }
+    save(&base.out_dir, "table4.csv", &t)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table V — channel-width ablation (needs the table5 artifact variants)
+// ---------------------------------------------------------------------------
+
+pub fn table5(rt: &Runtime, base: &RunConfig, variants: &[String]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "variant", "accuracy", "W bits", "A bits", "W bits(int)", "A bits(int)",
+    ]);
+    for variant in variants {
+        let mut cfg = base.clone();
+        cfg.model = variant.clone();
+        cfg.name = format!("t5-{variant}");
+        let out = run_and_dump(rt, &cfg)?;
+        let ni = out.noninteger.as_ref();
+        t.row(vec![
+            variant.clone(),
+            pct(out.final_.accuracy),
+            ni.map_or("-".into(), |s| fmt(s.mean_bits_w(), 2)),
+            ni.map_or("-".into(), |s| fmt(s.mean_bits_a(), 2)),
+            fmt(out.final_.mean_bits_w(), 2),
+            fmt(out.final_.mean_bits_a(), 2),
+        ]);
+    }
+    save(&base.out_dir, "table5.csv", &t)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table VI — the "large benchmark" headline (+ Fig 2 CSVs)
+// ---------------------------------------------------------------------------
+
+pub fn table6(rt: &Runtime, base: &RunConfig, models: &[String]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "network", "regularizer", "acc(non-int)", "W bits", "A bits",
+        "acc(final)", "W bits(int)", "A bits(int)",
+    ]);
+    for model in models {
+        let mut cfg = base.clone();
+        cfg.model = model.clone();
+        cfg.dataset = "synthcifar-hard".into();
+        let bl = baselines::fp32_proxy_config(&cfg, &format!("t6-{model}-base"));
+        let base_out = run_and_dump(rt, &bl)?;
+        t.row(vec![
+            model.clone(), "baseline".into(), pct(base_out.final_.accuracy),
+            "16".into(), "16".into(), pct(base_out.final_.accuracy),
+            "16".into(), "16".into(),
+        ]);
+        cfg.name = format!("t6-{model}");
+        let out = run_and_dump(rt, &cfg)?;
+        let ni = out.noninteger.as_ref();
+        t.row(vec![
+            model.clone(),
+            format!("{}", cfg.gamma),
+            ni.map_or("-".into(), |s| pct(s.accuracy)),
+            ni.map_or("-".into(), |s| fmt(s.mean_bits_w(), 2)),
+            ni.map_or("-".into(), |s| fmt(s.mean_bits_a(), 2)),
+            pct(out.final_.accuracy),
+            fmt(out.final_.mean_bits_w(), 2),
+            fmt(out.final_.mean_bits_a(), 2),
+        ]);
+    }
+    save(&base.out_dir, "table6.csv", &t)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table VII — vs uniform QAT + profiled baselines
+// ---------------------------------------------------------------------------
+
+pub struct Table7Outcome {
+    pub table: Table,
+    /// (model, trained bits, profiled bits) for Table VIII reuse.
+    pub assignments: Vec<(String, (Vec<f32>, Vec<f32>), (Vec<f32>, Vec<f32>))>,
+}
+
+pub fn table7(rt: &Runtime, base: &RunConfig, models: &[String]) -> Result<Table7Outcome> {
+    let mut t = Table::new(&["network", "method", "accuracy", "W bits", "A bits"]);
+    let mut assignments = Vec::new();
+    for model in models {
+        let mut cfg = base.clone();
+        cfg.model = model.clone();
+
+        // Uniform 4-bit QAT (PACT's role in the comparison).
+        let pact = baselines::uniform_qat_config(&cfg, 4.0, &format!("t7-{model}-uniform4"));
+        let pact_out = run_and_dump(rt, &pact)?;
+        t.row(vec![
+            model.clone(), "uniform-4b (PACT role)".into(),
+            pct(pact_out.final_.accuracy), "4.00".into(), "4.00".into(),
+        ]);
+
+        // fp32-proxy training, then profiled post-training selection.
+        let fp = baselines::fp32_proxy_config(&cfg, &format!("t7-{model}-fp"));
+        let trainer = Trainer::new(rt, &fp)?;
+        let fp_out = trainer.run()?;
+        let session = trainer.session(&fp_out.final_params);
+        let mut probe = |bw: &[f32], ba: &[f32]| {
+            session.accuracy(bw, ba, PROBE_BATCHES)
+        };
+        let prof = baselines::profiled_search(
+            trainer.meta().num_quant_layers,
+            8.0,
+            0.01,
+            &mut probe,
+        )?;
+        let prof_acc = session.accuracy(&prof.bits_w, &prof.bits_a, usize::MAX)?;
+        t.row(vec![
+            model.clone(), "profiled".into(), pct(prof_acc),
+            fmt(quant::mean_bits(&prof.bits_w), 2),
+            fmt(quant::mean_bits(&prof.bits_a), 2),
+        ]);
+
+        // BitPruning.
+        cfg.name = format!("t7-{model}-bitprune");
+        let bp_out = run_and_dump(rt, &cfg)?;
+        t.row(vec![
+            model.clone(), "bitpruning".into(), pct(bp_out.final_.accuracy),
+            fmt(bp_out.final_.mean_bits_w(), 2),
+            fmt(bp_out.final_.mean_bits_a(), 2),
+        ]);
+
+        assignments.push((
+            model.clone(),
+            (bp_out.final_.bits_w.clone(), bp_out.final_.bits_a.clone()),
+            (prof.bits_w.clone(), prof.bits_a.clone()),
+        ));
+    }
+    save(&base.out_dir, "table7.csv", &t)?;
+    Ok(Table7Outcome { table: t, assignments })
+}
+
+// ---------------------------------------------------------------------------
+// MPDNN comparison (§III-B6)
+// ---------------------------------------------------------------------------
+
+pub fn mpdnn_compare(rt: &Runtime, base: &RunConfig, models: &[String]) -> Result<Table> {
+    let mut t = Table::new(&[
+        "network", "method", "accuracy", "weight mem (KiB)", "act mem (KiB)",
+    ]);
+    for model in models {
+        let mut cfg = base.clone();
+        cfg.model = model.clone();
+        let meta = ModelMeta::load(
+            rt.artifact_dir().join(format!("{model}_meta.json")),
+        )?;
+
+        // BitPruning run (no memory budget given).
+        cfg.name = format!("mpdnn-{model}-bitprune");
+        let bp = run_and_dump(rt, &cfg)?;
+        let bp_w =
+            quant::weight_footprint_bits(&meta, &bp.final_.bits_w) / 8.0 / 1024.0;
+        let bp_a =
+            quant::act_footprint_bits(&meta, &bp.final_.bits_a, 1) / 8.0 / 1024.0;
+        t.row(vec![
+            model.clone(), "bitpruning (no budget)".into(),
+            pct(bp.final_.accuracy), fmt(bp_w, 1), fmt(bp_a, 2),
+        ]);
+
+        // MPDNN-style: fp32-proxy training + budgeted assignment at the
+        // budget BitPruning discovered (the "expertly chosen" budget) and
+        // at 2x that (the unconstrained accuracy-first setting).
+        let fp = baselines::fp32_proxy_config(&cfg, &format!("mpdnn-{model}-fp"));
+        let trainer = Trainer::new(rt, &fp)?;
+        let fp_out = trainer.run()?;
+        let session = trainer.session(&fp_out.final_params);
+        let weight_elems: Vec<usize> =
+            meta.layers.iter().map(|l| l.weight_elems).collect();
+        for (label, factor) in [("mpdnn (expert budget)", 1.0), ("mpdnn (2x budget)", 2.0)] {
+            let budget_bits =
+                quant::weight_footprint_bits(&meta, &bp.final_.bits_w) * factor;
+            let mut probe = |bw: &[f32], ba: &[f32]| {
+                session.accuracy(bw, ba, PROBE_BATCHES)
+            };
+            let r = baselines::mpdnn_assign(&weight_elems, 8.0, budget_bits, &mut probe)?;
+            let acc = session.accuracy(&r.bits_w, &r.bits_a, usize::MAX)?;
+            let w_kib =
+                quant::weight_footprint_bits(&meta, &r.bits_w) / 8.0 / 1024.0;
+            let a_kib = quant::act_footprint_bits(&meta, &r.bits_a, 1) / 8.0 / 1024.0;
+            t.row(vec![
+                model.clone(), label.into(), pct(acc), fmt(w_kib, 1), fmt(a_kib, 2),
+            ]);
+        }
+    }
+    save(&base.out_dir, "mpdnn.csv", &t)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table VIII — accelerator benefits, trained vs profiled
+// ---------------------------------------------------------------------------
+
+pub fn table8(
+    rt: &Runtime,
+    out_dir: &str,
+    assignments: &[(String, (Vec<f32>, Vec<f32>), (Vec<f32>, Vec<f32>))],
+) -> Result<Table> {
+    let mut t = Table::new(&[
+        "network", "accelerator",
+        "perf(trained)", "mem(trained)", "perf(profiled)", "mem(profiled)",
+    ]);
+    for (model, trained, profiled) in assignments {
+        let meta = ModelMeta::load(
+            rt.artifact_dir().join(format!("{model}_meta.json")),
+        )?;
+        let tr = accel::evaluate_all(&meta, &trained.0, &trained.1);
+        let pr = accel::evaluate_all(&meta, &profiled.0, &profiled.1);
+        for (rt_, rp) in tr.iter().zip(&pr) {
+            let f = |s: Option<f64>| s.map_or("-".to_string(), |v| format!("{v:.2}x"));
+            t.row(vec![
+                model.clone(),
+                rt_.accel.into(),
+                f(rt_.speedup),
+                format!("{:.2}x", rt_.mem_ratio),
+                f(rp.speedup),
+                format!("{:.2}x", rp.mem_ratio),
+            ]);
+        }
+    }
+    save(out_dir, "table8.csv", &t)?;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// §III-B4 early selection + §III-B5 warm-start ablations
+// ---------------------------------------------------------------------------
+
+pub fn ablation_early_and_warmstart(
+    rt: &Runtime,
+    base: &RunConfig,
+    model: &str,
+) -> Result<Table> {
+    let mut t = Table::new(&[
+        "variant", "accuracy", "W bits(int)", "A bits(int)", "wall secs",
+    ]);
+    // Standard.
+    let mut std_cfg = base.clone();
+    std_cfg.model = model.to_string();
+    std_cfg.name = format!("abl-{model}-standard");
+    let std_out = run_and_dump(rt, &std_cfg)?;
+    t.row(vec![
+        "standard".into(), pct(std_out.final_.accuracy),
+        fmt(std_out.final_.mean_bits_w(), 2), fmt(std_out.final_.mean_bits_a(), 2),
+        fmt(std_out.wall_secs, 1),
+    ]);
+
+    // Early selection: learn bits for only ~1/5 of the learn budget.
+    let mut early = std_cfg.clone();
+    early.plan = PlanKind::EarlySelect;
+    early.name = format!("abl-{model}-early");
+    early.finetune_steps = std_cfg.learn_steps - std_cfg.learn_steps / 5
+        + std_cfg.finetune_steps;
+    early.learn_steps = std_cfg.learn_steps / 5;
+    let early_out = run_and_dump(rt, &early)?;
+    t.row(vec![
+        "early-select".into(), pct(early_out.final_.accuracy),
+        fmt(early_out.final_.mean_bits_w(), 2),
+        fmt(early_out.final_.mean_bits_a(), 2),
+        fmt(early_out.wall_secs, 1),
+    ]);
+
+    // Warm start: pretrain an 8-bit network, then BitPrune from it.
+    let pre = baselines::uniform_qat_config(
+        &std_cfg, 8.0, &format!("abl-{model}-pretrain"),
+    );
+    let ckpt_path = format!("{}/abl-{model}-pretrain.bpck", base.out_dir);
+    std::fs::create_dir_all(&base.out_dir)?;
+    let trainer = Trainer::new(rt, &pre)?;
+    let _ = trainer.run_and_checkpoint(Some(&ckpt_path))?;
+    let mut warm = std_cfg.clone();
+    warm.plan = PlanKind::Warmstart;
+    warm.warmstart_ckpt = Some(ckpt_path);
+    warm.name = format!("abl-{model}-warmstart");
+    let warm_out = run_and_dump(rt, &warm)?;
+    t.row(vec![
+        "warmstart (from 8b)".into(), pct(warm_out.final_.accuracy),
+        fmt(warm_out.final_.mean_bits_w(), 2),
+        fmt(warm_out.final_.mean_bits_a(), 2),
+        fmt(warm_out.wall_secs, 1),
+    ]);
+
+    save(&base.out_dir, "ablations.csv", &t)?;
+    Ok(t)
+}

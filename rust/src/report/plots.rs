@@ -1,0 +1,149 @@
+//! Terminal (ASCII) figure rendering: the paper's figures as quick
+//! visual checks directly in the sweep output.
+//!
+//! * [`line_chart`] — Fig 1/2 style: one or more series over steps.
+//! * [`bar_chart`] — Fig 3 style: per-layer bitlengths.
+
+use std::fmt::Write as _;
+
+/// A named series for the line chart.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>, // (x, y)
+}
+
+impl Series {
+    pub fn new(name: &str, points: Vec<(f64, f64)>) -> Self {
+        Self { name: name.to_string(), points }
+    }
+}
+
+const GLYPHS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+/// Render series into a `width`x`height` ASCII grid with axis labels.
+pub fn line_chart(series: &[Series], width: usize, height: usize) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return "(no data)\n".to_string();
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &pts {
+        x0 = x0.min(*x);
+        x1 = x1.max(*x);
+        y0 = y0.min(*y);
+        y1 = y1.max(*y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for (x, y) in &s.points {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let cx = (((x - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{y1:>8.2}")
+        } else if i == height - 1 {
+            format!("{y0:>8.2}")
+        } else {
+            "        ".to_string()
+        };
+        let _ = writeln!(out, "{label} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "         +{}", "-".repeat(width));
+    let _ = writeln!(out, "          {:<10} ... {:>10}", format!("{x0:.0}"), format!("{x1:.0}"));
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "          {} {}", GLYPHS[si % GLYPHS.len()], s.name);
+    }
+    out
+}
+
+/// Horizontal bar chart: one bar per (label, value) up to `max_width`.
+pub fn bar_chart(items: &[(String, f64)], max_width: usize) -> String {
+    let max = items
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(f64::NEG_INFINITY, f64::max)
+        .max(1e-12);
+    let label_w = items.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, v) in items {
+        let bar_len = ((v / max) * max_width as f64).round().max(0.0) as usize;
+        let _ = writeln!(
+            out,
+            "{label:>label_w$} | {:<max_width$} {v:.2}",
+            "█".repeat(bar_len)
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_chart_renders_bounds() {
+        let s = Series::new("acc", (0..50).map(|i| (i as f64, (i as f64).sqrt())).collect());
+        let chart = line_chart(&[s], 40, 10);
+        assert!(chart.contains('*'));
+        assert!(chart.contains("acc"));
+        assert!(chart.contains("0.00")); // min label
+        assert_eq!(chart.lines().count(), 10 + 3);
+    }
+
+    #[test]
+    fn line_chart_multi_series_glyphs() {
+        let a = Series::new("a", vec![(0.0, 0.0), (1.0, 1.0)]);
+        let b = Series::new("b", vec![(0.0, 1.0), (1.0, 0.0)]);
+        let chart = line_chart(&[a, b], 20, 6);
+        assert!(chart.contains('*') && chart.contains('o'));
+    }
+
+    #[test]
+    fn line_chart_empty_and_degenerate() {
+        assert_eq!(line_chart(&[], 10, 4), "(no data)\n");
+        let flat = Series::new("flat", vec![(0.0, 5.0), (1.0, 5.0)]);
+        let chart = line_chart(&[flat], 10, 4);
+        assert!(chart.contains('*'));
+        let nan = Series::new("nan", vec![(f64::NAN, 1.0)]);
+        assert_eq!(line_chart(&[nan], 10, 4), "(no data)\n");
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let items = vec![
+            ("conv0".to_string(), 4.0),
+            ("conv1".to_string(), 2.0),
+            ("fc".to_string(), 8.0),
+        ];
+        let chart = bar_chart(&items, 16);
+        let lines: Vec<&str> = chart.lines().collect();
+        assert_eq!(lines.len(), 3);
+        // fc (max) has the longest bar
+        let count = |l: &str| l.matches('█').count();
+        assert!(count(lines[2]) > count(lines[0]));
+        assert!(count(lines[0]) > count(lines[1]));
+        assert!(chart.contains("8.00"));
+    }
+}

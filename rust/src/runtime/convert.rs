@@ -1,0 +1,71 @@
+//! HostTensor ⇄ xla::Literal conversions.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::{HostTensor, TensorData};
+
+/// Convert a host tensor into an XLA literal (host staging buffer).
+pub fn tensor_to_literal(t: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims().iter().map(|&d| d as i64).collect();
+    let lit = match t.data() {
+        TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+        TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        TensorData::U32(v) => xla::Literal::vec1(v.as_slice()),
+    };
+    // vec1 produces a rank-1 literal; reshape restores the true dims.
+    // Rank-0 scalars reshape to [].
+    lit.reshape(&dims)
+        .map_err(|e| anyhow!("reshaping literal to {:?}: {e}", t.dims()))
+}
+
+/// Convert an XLA literal back into a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow!("literal has non-array shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.element_type() {
+        xla::ElementType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+            HostTensor::f32(&dims, v)
+        }
+        xla::ElementType::S32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+            HostTensor::i32(&dims, v)
+        }
+        xla::ElementType::U32 => {
+            let v = lit.to_vec::<u32>().map_err(|e| anyhow!("{e}"))?;
+            HostTensor::u32(&dims, v)
+        }
+        other => bail!("unsupported literal element type {:?}", other),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = HostTensor::f32(&[2, 3], (0..6).map(|i| i as f32).collect()).unwrap();
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let t = HostTensor::scalar_f32(3.25);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back.scalar().unwrap(), 3.25);
+        assert_eq!(back.rank(), 0);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = HostTensor::i32(&[4], vec![1, -2, 3, -4]).unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,360 @@
+//! Training schedules: the one-cycle LR policy and the BitPruning phase
+//! state machine.
+//!
+//! The paper trains with fast.ai's one-cycle policy, learns bitlengths
+//! jointly with weights, then (a) ceils bitlengths to integers and
+//! (b) fine-tunes with bitlengths frozen at 1/10th the learning rate
+//! (§II-C, §III-B2).  The coordinator drives each run through the
+//! [`PhasePlan`] produced here; `bits_mask` gates the bitlength update
+//! inside the exported train step.
+
+use anyhow::{bail, Result};
+
+/// One-cycle learning-rate policy (warmup + cosine annealing).
+#[derive(Debug, Clone)]
+pub struct OneCycle {
+    pub lr_max: f64,
+    pub total_steps: usize,
+    /// Fraction of steps spent warming up.
+    pub pct_start: f64,
+    /// lr starts at lr_max / div_start.
+    pub div_start: f64,
+    /// lr ends at lr_max / div_end.
+    pub div_end: f64,
+}
+
+impl OneCycle {
+    pub fn new(lr_max: f64, total_steps: usize) -> Self {
+        // fast.ai defaults: pct_start 0.25, div 25, final_div 1e4.
+        Self { lr_max, total_steps, pct_start: 0.25, div_start: 25.0, div_end: 1e4 }
+    }
+
+    /// LR at a step in [0, total_steps).
+    pub fn lr(&self, step: usize) -> f64 {
+        if self.total_steps <= 1 {
+            return self.lr_max;
+        }
+        let warm = ((self.total_steps as f64) * self.pct_start).max(1.0);
+        let s = step.min(self.total_steps - 1) as f64;
+        let cos_interp = |from: f64, to: f64, t: f64| {
+            to + (from - to) * (1.0 + (std::f64::consts::PI * t).cos()) / 2.0
+        };
+        if s < warm {
+            // cosine ramp up from lr_max/div_start
+            cos_interp(self.lr_max / self.div_start, self.lr_max, s / warm)
+        } else {
+            let t = (s - warm) / ((self.total_steps as f64 - warm).max(1.0));
+            cos_interp(self.lr_max, self.lr_max / self.div_end, t)
+        }
+    }
+}
+
+/// Constant-LR schedule (fine-tune phases use lr_max/10 flat, per paper).
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    OneCycle(OneCycle),
+    Constant(f64),
+}
+
+impl LrSchedule {
+    pub fn lr(&self, step: usize) -> f64 {
+        match self {
+            LrSchedule::OneCycle(c) => c.lr(step),
+            LrSchedule::Constant(v) => *v,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// phase machine
+// ---------------------------------------------------------------------------
+
+/// What happens to bitlengths within a phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BitsMode {
+    /// Bitlengths receive gradients (bits_mask = 1).
+    Learn,
+    /// Bitlengths frozen (bits_mask = 0).
+    Frozen,
+}
+
+/// One phase of a run.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    pub steps: usize,
+    pub bits: BitsMode,
+    pub lr: LrSchedule,
+    /// Ceil bitlengths to integers when *entering* this phase (§II-C).
+    pub select_integer_on_entry: bool,
+}
+
+/// A full training plan: ordered phases.
+#[derive(Debug, Clone)]
+pub struct PhasePlan {
+    pub phases: Vec<Phase>,
+}
+
+impl PhasePlan {
+    /// The paper's standard recipe: learn bits with one-cycle LR, then
+    /// ceil + fine-tune at lr_max/10 with bits frozen.
+    pub fn standard(lr_max: f64, learn_steps: usize, finetune_steps: usize) -> Self {
+        PhasePlan {
+            phases: vec![
+                Phase {
+                    name: "learn",
+                    steps: learn_steps,
+                    bits: BitsMode::Learn,
+                    lr: LrSchedule::OneCycle(OneCycle::new(lr_max, learn_steps)),
+                    select_integer_on_entry: false,
+                },
+                Phase {
+                    name: "finetune",
+                    steps: finetune_steps,
+                    bits: BitsMode::Frozen,
+                    lr: LrSchedule::Constant(lr_max / 10.0),
+                    select_integer_on_entry: true,
+                },
+            ],
+        }
+    }
+
+    /// Early-selection ablation (§III-B4): learn bits only for a short
+    /// prefix, then fix integer bits and train the rest of the budget.
+    pub fn early_select(lr_max: f64, learn_steps: usize, rest_steps: usize) -> Self {
+        let total = learn_steps + rest_steps;
+        PhasePlan {
+            phases: vec![
+                Phase {
+                    name: "learn",
+                    steps: learn_steps,
+                    bits: BitsMode::Learn,
+                    lr: LrSchedule::OneCycle(OneCycle::new(lr_max, total)),
+                    select_integer_on_entry: false,
+                },
+                Phase {
+                    name: "fixed-bits",
+                    steps: rest_steps,
+                    bits: BitsMode::Frozen,
+                    lr: LrSchedule::Constant(lr_max / 10.0),
+                    select_integer_on_entry: true,
+                },
+            ],
+        }
+    }
+
+    /// Fixed-uniform-bitlength QAT (PACT-role baseline, Table VII): bits
+    /// never learn, no selection needed.
+    pub fn fixed_bits(lr_max: f64, steps: usize) -> Self {
+        PhasePlan {
+            phases: vec![Phase {
+                name: "qat",
+                steps,
+                bits: BitsMode::Frozen,
+                lr: LrSchedule::OneCycle(OneCycle::new(lr_max, steps)),
+                select_integer_on_entry: false,
+            }],
+        }
+    }
+
+    /// Fine-tuning a pretrained network with BitPruning (§III-B5):
+    /// bits learn from the warm start, then standard select + finetune.
+    pub fn warmstart(lr_max: f64, learn_steps: usize, finetune_steps: usize) -> Self {
+        // Same structure as standard; the coordinator supplies pretrained
+        // params instead of fresh init.
+        Self::standard(lr_max, learn_steps, finetune_steps)
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.phases.iter().map(|p| p.steps).sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.phases.is_empty() {
+            bail!("phase plan has no phases");
+        }
+        if self.phases.iter().all(|p| p.steps == 0) {
+            bail!("phase plan has zero total steps");
+        }
+        Ok(())
+    }
+}
+
+/// Tracks progress through a plan. The coordinator asks it, per global
+/// step, for the phase index, within-phase LR, bits mask, and whether an
+/// integer-selection boundary was crossed.
+#[derive(Debug)]
+pub struct PhaseCursor<'a> {
+    plan: &'a PhasePlan,
+    phase_idx: usize,
+    step_in_phase: usize,
+    entered_current: bool,
+}
+
+/// Per-step directive for the training loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepDirective {
+    pub phase_idx: usize,
+    pub phase_name: &'static str,
+    pub lr: f64,
+    pub bits_mask: f32,
+    /// True exactly once, on the first step after a phase boundary that
+    /// requires integer selection.
+    pub select_integer_bits: bool,
+}
+
+impl<'a> PhaseCursor<'a> {
+    pub fn new(plan: &'a PhasePlan) -> Self {
+        Self { plan, phase_idx: 0, step_in_phase: 0, entered_current: false }
+    }
+
+    /// Directive for the next step, or None when the plan is exhausted.
+    pub fn next(&mut self) -> Option<StepDirective> {
+        // Skip empty phases (but still honor their selection marker).
+        let mut pending_select = false;
+        loop {
+            let phase = self.plan.phases.get(self.phase_idx)?;
+            if !self.entered_current {
+                pending_select |= phase.select_integer_on_entry;
+                self.entered_current = true;
+            }
+            if self.step_in_phase >= phase.steps {
+                self.phase_idx += 1;
+                self.step_in_phase = 0;
+                self.entered_current = false;
+                continue;
+            }
+            let d = StepDirective {
+                phase_idx: self.phase_idx,
+                phase_name: phase.name,
+                lr: phase.lr.lr(self.step_in_phase),
+                bits_mask: match phase.bits {
+                    BitsMode::Learn => 1.0,
+                    BitsMode::Frozen => 0.0,
+                },
+                select_integer_bits: pending_select,
+            };
+            self.step_in_phase += 1;
+            return Some(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn one_cycle_shape() {
+        let c = OneCycle::new(0.1, 100);
+        // starts low, peaks at warmup end, decays to ~0
+        assert!(c.lr(0) < 0.02);
+        let peak_step = 25;
+        assert!((c.lr(peak_step) - 0.1).abs() < 1e-3);
+        assert!(c.lr(99) < 1e-4);
+        // never exceeds lr_max
+        for s in 0..100 {
+            assert!(c.lr(s) <= 0.1 + 1e-9, "step {s}");
+        }
+    }
+
+    #[test]
+    fn one_cycle_monotone_segments() {
+        check(
+            "one-cycle-monotone",
+            64,
+            |rng: &mut Rng| {
+                (rng.range_f64(1e-4, 1.0), 20 + rng.below_usize(400))
+            },
+            |&(lr_max, steps)| {
+                let c = OneCycle::new(lr_max, steps);
+                let warm_f = (steps as f64) * c.pct_start;
+                let warm_lo = warm_f.floor().max(1.0) as usize;
+                let warm_hi = warm_f.ceil() as usize + 1; // skip boundary step
+                for s in 1..warm_lo {
+                    if c.lr(s) + 1e-12 < c.lr(s - 1) {
+                        return Err(format!("warmup not increasing at {s}"));
+                    }
+                }
+                for s in (warm_hi + 1)..steps {
+                    if c.lr(s) > c.lr(s - 1) + 1e-12 {
+                        return Err(format!("decay not decreasing at {s}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn standard_plan_structure() {
+        let plan = PhasePlan::standard(0.1, 10, 5);
+        plan.validate().unwrap();
+        assert_eq!(plan.total_steps(), 15);
+        let mut cursor = PhaseCursor::new(&plan);
+        let mut directives = Vec::new();
+        while let Some(d) = cursor.next() {
+            directives.push(d);
+        }
+        assert_eq!(directives.len(), 15);
+        // learn phase: bits train, no selection
+        assert!(directives[..10]
+            .iter()
+            .all(|d| d.bits_mask == 1.0 && !d.select_integer_bits));
+        // finetune: first step selects, all frozen, constant lr
+        assert!(directives[10].select_integer_bits);
+        assert!(directives[11..].iter().all(|d| !d.select_integer_bits));
+        assert!(directives[10..].iter().all(|d| d.bits_mask == 0.0));
+        assert!(directives[10..].iter().all(|d| (d.lr - 0.01).abs() < 1e-12));
+    }
+
+    #[test]
+    fn cursor_never_regresses() {
+        check(
+            "phase-cursor-monotone",
+            64,
+            |rng: &mut Rng| (1 + rng.below_usize(50), rng.below_usize(50)),
+            |&(learn, ft)| {
+                let plan = PhasePlan::standard(0.1, learn, ft);
+                let mut cursor = PhaseCursor::new(&plan);
+                let mut last_phase = 0;
+                let mut count = 0;
+                let mut selections = 0;
+                while let Some(d) = cursor.next() {
+                    if d.phase_idx < last_phase {
+                        return Err("phase regressed".into());
+                    }
+                    last_phase = d.phase_idx;
+                    count += 1;
+                    selections += d.select_integer_bits as usize;
+                }
+                if count != plan.total_steps() {
+                    return Err(format!("{count} != {}", plan.total_steps()));
+                }
+                // selection boundary crossed at most once
+                if ft > 0 && selections != 1 {
+                    return Err(format!("{selections} selections"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fixed_bits_plan_has_no_selection() {
+        let plan = PhasePlan::fixed_bits(0.1, 8);
+        let mut cursor = PhaseCursor::new(&plan);
+        while let Some(d) = cursor.next() {
+            assert_eq!(d.bits_mask, 0.0);
+            assert!(!d.select_integer_bits);
+        }
+    }
+
+    #[test]
+    fn empty_plan_rejected() {
+        assert!(PhasePlan { phases: vec![] }.validate().is_err());
+        assert!(PhasePlan::standard(0.1, 0, 0).validate().is_err());
+    }
+}

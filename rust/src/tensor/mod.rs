@@ -1,0 +1,209 @@
+//! Minimal host-side tensor type used across the coordinator.
+//!
+//! This is deliberately small: the heavy math runs inside the compiled
+//! XLA artifacts; the coordinator only needs to stage inputs, unpack
+//! outputs, checkpoint state and run the rust quantizer mirror.
+
+use anyhow::{bail, Result};
+
+/// Element type of a [`HostTensor`]. Mirrors the subset of XLA primitive
+/// types the exported artifacts use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        }
+    }
+}
+
+/// Typed storage for a host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+/// A dense row-major host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    dims: Vec<usize>,
+    data: TensorData,
+}
+
+impl HostTensor {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Result<Self> {
+        Self::check_len(dims, data.len())?;
+        Ok(Self { dims: dims.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Result<Self> {
+        Self::check_len(dims, data.len())?;
+        Ok(Self { dims: dims.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn u32(dims: &[usize], data: Vec<u32>) -> Result<Self> {
+        Self::check_len(dims, data.len())?;
+        Ok(Self { dims: dims.to_vec(), data: TensorData::U32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { dims: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        Self { dims: vec![], data: TensorData::U32(vec![v]) }
+    }
+
+    pub fn zeros_f32(dims: &[usize]) -> Self {
+        let n = dims.iter().product();
+        Self { dims: dims.to_vec(), data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn full_f32(dims: &[usize], v: f32) -> Self {
+        let n = dims.iter().product();
+        Self { dims: dims.to_vec(), data: TensorData::F32(vec![v; n]) }
+    }
+
+    fn check_len(dims: &[usize], len: usize) -> Result<()> {
+        let n: usize = dims.iter().product();
+        if n != len {
+            bail!("dims {:?} expect {} elements, got {}", dims, n, len);
+        }
+        Ok(())
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn data(&self) -> &TensorData {
+        &self.data
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", DTypeOf(other)),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {:?}", DTypeOf(other)),
+        }
+    }
+
+    pub fn as_u32(&self) -> Result<&[u32]> {
+        match &self.data {
+            TensorData::U32(v) => Ok(v),
+            other => bail!("expected u32 tensor, got {:?}", DTypeOf(other)),
+        }
+    }
+
+    /// Scalar extraction (rank-0 or single-element tensors).
+    pub fn scalar(&self) -> Result<f32> {
+        if self.element_count() != 1 {
+            bail!("scalar() on tensor with {} elements", self.element_count());
+        }
+        match &self.data {
+            TensorData::F32(v) => Ok(v[0]),
+            TensorData::I32(v) => Ok(v[0] as f32),
+            TensorData::U32(v) => Ok(v[0] as f32),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * self.dtype().size_bytes()
+    }
+}
+
+struct DTypeOf<'a>(&'a TensorData);
+
+impl std::fmt::Debug for DTypeOf<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self.0 {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+            TensorData::U32(_) => "u32",
+        };
+        f.write_str(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]).unwrap();
+        assert_eq!(t.dims(), &[2, 3]);
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.size_bytes(), 24);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        assert!(HostTensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
+        assert_eq!(HostTensor::scalar_u32(7).scalar().unwrap(), 7.0);
+        assert!(HostTensor::zeros_f32(&[2]).scalar().is_err());
+    }
+
+    #[test]
+    fn zeros_and_full() {
+        let z = HostTensor::zeros_f32(&[4]);
+        assert!(z.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        let f = HostTensor::full_f32(&[3], 8.0);
+        assert!(f.as_f32().unwrap().iter().all(|&v| v == 8.0));
+    }
+}

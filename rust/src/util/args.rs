@@ -1,0 +1,182 @@
+//! Tiny CLI argument parser (no clap in the offline environment).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Option names that are known to take values (needed to
+    /// disambiguate `--key value` from `--flag positional`).
+    value_opts: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `value_opts` lists options that consume a
+    /// following value when written in the space-separated form.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, value_opts: &[&str]) -> Result<Self> {
+        let mut out = Args {
+            value_opts: value_opts.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if out.value_opts.iter().any(|o| o == name) {
+                    let v = iter
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{name} expects a value"))?;
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(value_opts: &[&str]) -> Result<Self> {
+        Self::parse(std::env::args().skip(1), value_opts)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positional.get(idx).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects a number, got '{v}': {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{name} expects an integer, got '{v}': {e}")),
+        }
+    }
+
+    /// Comma-separated list of floats (e.g. `--gammas 0.5,1,2.5`).
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|e| anyhow!("--{name} element '{p}': {e}"))
+                })
+                .collect(),
+        }
+    }
+
+    pub fn get_str_list(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v.split(',').map(|p| p.trim().to_string()).collect(),
+        }
+    }
+
+    /// Error on unknown flags to catch typos.
+    pub fn check_known(&self, known_flags: &[&str]) -> Result<()> {
+        for f in &self.flags {
+            if !known_flags.contains(&f.as_str()) && !self.value_opts.iter().any(|o| o == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str], value_opts: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), value_opts).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["train", "--verbose", "x"], &[]);
+        assert_eq!(a.pos(0), Some("train"));
+        assert_eq!(a.pos(1), Some("x"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn value_options_both_forms() {
+        let a = parse(&["--steps", "100", "--lr=0.1"], &["steps", "lr"]);
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.1);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["--gammas=0.5,1,2.5"], &["gammas"]);
+        assert_eq!(a.get_f64_list("gammas", &[]).unwrap(), vec![0.5, 1.0, 2.5]);
+        let b = parse(&[], &["gammas"]);
+        assert_eq!(b.get_f64_list("gammas", &[9.0]).unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--steps".to_string()], &["steps"]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["--steps=abc"], &["steps"]);
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["--vrebose"], &[]);
+        assert!(a.check_known(&["verbose"]).is_err());
+        let b = parse(&["--verbose"], &[]);
+        assert!(b.check_known(&["verbose"]).is_ok());
+    }
+}

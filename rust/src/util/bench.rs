@@ -1,0 +1,215 @@
+//! Micro-benchmark harness (the offline environment has no criterion).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that builds a
+//! [`Bench`] and registers closures.  The harness warms up, samples until
+//! a time budget or sample cap is reached, and prints mean/median/p95
+//! plus optional throughput, in a stable machine-greppable format:
+//!
+//! ```text
+//! bench <name> ... mean 12.34us median 12.10us p95 13.99us (n=42) [8.1 Melem/s]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+/// Configuration for one benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub max_samples: usize,
+    pub time_budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            max_samples: 50,
+            time_budget: Duration::from_secs(3),
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elems_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elems_per_iter.map(|e| e / self.mean)
+    }
+
+    pub fn report(&self) -> String {
+        let t = |s: f64| {
+            if s >= 1.0 {
+                format!("{:.3}s", s)
+            } else if s >= 1e-3 {
+                format!("{:.2}ms", s * 1e3)
+            } else {
+                format!("{:.2}us", s * 1e6)
+            }
+        };
+        let mut line = format!(
+            "bench {:<40} mean {:>9} median {:>9} p95 {:>9} (n={})",
+            self.name,
+            t(self.mean),
+            t(self.median),
+            t(self.p95),
+            self.samples.len()
+        );
+        if let Some(tp) = self.throughput() {
+            let (v, unit) = if tp >= 1e9 {
+                (tp / 1e9, "Gelem/s")
+            } else if tp >= 1e6 {
+                (tp / 1e6, "Melem/s")
+            } else if tp >= 1e3 {
+                (tp / 1e3, "Kelem/s")
+            } else {
+                (tp, "elem/s")
+            };
+            line.push_str(&format!(" [{v:.2} {unit}]"));
+        }
+        line
+    }
+}
+
+pub struct Bench {
+    cfg: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // `cargo bench -- --quick` halves budgets.
+        let quick = std::env::args().any(|a| a == "--quick");
+        let mut cfg = BenchConfig::default();
+        if quick {
+            cfg.max_samples = 10;
+            cfg.time_budget = Duration::from_secs(1);
+        }
+        Self { cfg, results: Vec::new() }
+    }
+
+    pub fn with_config(cfg: BenchConfig) -> Self {
+        Self { cfg, results: Vec::new() }
+    }
+
+    /// Run one benchmark. `f` is a single iteration; its return value is
+    /// black-boxed to prevent dead-code elimination.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        self.run_with_elems(name, None, move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    /// Like `run`, with an elements-per-iteration count for throughput.
+    pub fn run_elems<T>(
+        &mut self,
+        name: &str,
+        elems: f64,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        self.run_with_elems(name, Some(elems), move || {
+            std::hint::black_box(f());
+        })
+    }
+
+    fn run_with_elems(
+        &mut self,
+        name: &str,
+        elems: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.cfg.max_samples
+            && (samples.len() < 5 || start.elapsed() < self.cfg.time_budget)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            mean,
+            median: percentile(&samples, 50.0),
+            p95: percentile(&samples, 95.0),
+            samples,
+            elems_per_iter: elems,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 1,
+            max_samples: 8,
+            time_budget: Duration::from_millis(200),
+        }
+    }
+
+    #[test]
+    fn collects_samples_and_stats() {
+        let mut b = Bench::with_config(fast_cfg());
+        let r = b.run("busy-loop", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.samples.len() >= 5);
+        assert!(r.mean > 0.0);
+        assert!(r.median <= r.p95 + 1e-12);
+        assert!(r.report().contains("busy-loop"));
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bench::with_config(fast_cfg());
+        let r = b.run_elems("tp", 1000.0, || {
+            std::hint::black_box((0..1000).sum::<u64>())
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+        assert!(r.report().contains("elem/s"));
+    }
+
+    #[test]
+    fn results_accumulate() {
+        let mut b = Bench::with_config(fast_cfg());
+        b.run("a", || 1);
+        b.run("b", || 2);
+        assert_eq!(b.results().len(), 2);
+    }
+}

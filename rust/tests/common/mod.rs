@@ -1,0 +1,30 @@
+//! Shared helpers for the integration tests.
+//!
+//! Integration tests need the AOT artifacts; when they are absent (bare
+//! `cargo test` before `make artifacts`) the tests SKIP with a notice
+//! instead of failing, so the pure-rust test suite stays runnable.
+
+use std::path::PathBuf;
+
+pub fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("fake_quant.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIP: artifacts not built (run `make artifacts`) — looked in {}",
+            dir.display()
+        );
+        None
+    }
+}
+
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        match common::artifact_dir() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}

@@ -1,0 +1,126 @@
+//! Failure-injection tests: the runtime and coordinator must fail
+//! loudly and informatively, never silently mis-train.
+
+mod common;
+
+use bitprune::config::RunConfig;
+use bitprune::coordinator::Trainer;
+use bitprune::runtime::Runtime;
+use bitprune::tensor::HostTensor;
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("bitprune-failures").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_artifact_dir_is_an_error() {
+    match Runtime::cpu("/nonexistent/bitprune-artifacts") {
+        Ok(_) => panic!("expected error for missing artifact dir"),
+        Err(err) => assert!(err.to_string().contains("make artifacts"), "{err}"),
+    }
+}
+
+#[test]
+fn garbage_hlo_text_is_rejected() {
+    let dir = temp_dir("garbage");
+    std::fs::write(dir.join("bad.hlo.txt"), "this is not HLO").unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    match rt.load("bad") {
+        Ok(_) => panic!("garbage HLO must not compile"),
+        Err(err) => assert!(err.to_string().contains("bad"), "{err}"),
+    }
+}
+
+#[test]
+fn truncated_hlo_text_is_rejected() {
+    let Some(src) = common::artifact_dir() else { return };
+    let text = std::fs::read_to_string(src.join("fake_quant.hlo.txt")).unwrap();
+    let dir = temp_dir("truncated");
+    std::fs::write(dir.join("trunc.hlo.txt"), &text[..text.len() / 2]).unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    assert!(rt.load("trunc").is_err());
+}
+
+#[test]
+fn wrong_argument_count_fails() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("fake_quant").unwrap();
+    // fake_quant wants (x[4096], n); give it just x.
+    let x = HostTensor::f32(&[4096], vec![0.0; 4096]).unwrap();
+    assert!(exe.run(&[x]).is_err());
+}
+
+#[test]
+fn wrong_argument_shape_fails() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let exe = rt.load("fake_quant").unwrap();
+    let x = HostTensor::f32(&[16], vec![0.0; 16]).unwrap();
+    let n = HostTensor::scalar_f32(4.0);
+    assert!(exe.run(&[x, n]).is_err());
+}
+
+#[test]
+fn corrupt_meta_json_is_rejected() {
+    let Some(src) = common::artifact_dir() else { return };
+    let dir = temp_dir("badmeta");
+    // Valid HLO artifacts, corrupted meta.
+    for f in ["mlp_init.hlo.txt", "mlp_train.hlo.txt", "mlp_eval.hlo.txt"] {
+        std::fs::copy(src.join(f), dir.join(f)).unwrap();
+    }
+    std::fs::write(dir.join("mlp_meta.json"), "{ not json").unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let cfg = RunConfig {
+        model: "mlp".into(),
+        dataset: "blobs".into(),
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    assert!(Trainer::new(&rt, &cfg).is_err());
+}
+
+#[test]
+fn meta_param_mismatch_detected() {
+    let Some(src) = common::artifact_dir() else { return };
+    let dir = temp_dir("mismatch-meta");
+    for f in ["mlp_init.hlo.txt", "mlp_train.hlo.txt", "mlp_eval.hlo.txt"] {
+        std::fs::copy(src.join(f), dir.join(f)).unwrap();
+    }
+    // Claim fewer params than the init artifact produces.
+    let meta = std::fs::read_to_string(src.join("mlp_meta.json")).unwrap();
+    let doctored = meta
+        .replace("\"num_params\": 6", "\"num_params\": 4")
+        .replace(
+            "\"0/b\", \"0/w\", \"1/b\", \"1/w\", \"2/b\", \"2/w\"",
+            "\"0/b\", \"0/w\", \"1/b\", \"1/w\"",
+        );
+    std::fs::write(dir.join("mlp_meta.json"), doctored).unwrap();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let cfg = RunConfig {
+        model: "mlp".into(),
+        dataset: "blobs".into(),
+        learn_steps: 2,
+        finetune_steps: 1,
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    // Either meta validation or the init-output arity check must fire.
+    let result = Trainer::new(&rt, &cfg).and_then(|t| t.run());
+    assert!(result.is_err());
+}
+
+#[test]
+fn unknown_dataset_rejected_before_any_compile() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let cfg = RunConfig {
+        model: "mlp".into(),
+        dataset: "imagenet".into(),
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        ..Default::default()
+    };
+    assert!(Trainer::new(&rt, &cfg).is_err());
+}

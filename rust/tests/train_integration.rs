@@ -1,0 +1,268 @@
+//! End-to-end coordinator integration: short real training runs through
+//! the compiled artifacts, exercising every phase-machine path, the
+//! checkpoint warm start, and the post-training eval session.
+
+mod common;
+
+use bitprune::config::{PlanKind, RunConfig};
+use bitprune::coordinator::{run_experiment, Trainer};
+use bitprune::quant;
+use bitprune::runtime::Runtime;
+
+fn quick_cfg(dir: &std::path::Path, name: &str) -> RunConfig {
+    RunConfig {
+        name: name.into(),
+        model: "mlp".into(),
+        dataset: "blobs".into(),
+        seed: 11,
+        gamma: 1.0,
+        learn_steps: 40,
+        finetune_steps: 15,
+        eval_every: 10,
+        artifact_dir: dir.to_string_lossy().into_owned(),
+        out_dir: std::env::temp_dir()
+            .join("bitprune-it")
+            .to_string_lossy()
+            .into_owned(),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn standard_run_learns_and_selects_integer_bits() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let cfg = quick_cfg(&dir, "it-standard");
+    let out = run_experiment(&rt, &cfg).unwrap();
+
+    // Phase structure: non-integer snapshot exists, final bits integral.
+    let ni = out.noninteger.as_ref().expect("non-integer stage");
+    assert!(out.final_.bits_w.iter().all(|b| b.fract() == 0.0));
+    assert!(out.final_.bits_a.iter().all(|b| b.fract() == 0.0));
+    // Ceil relation: final int bits within [learned, learned+1].
+    for (f, l) in out.final_.bits_w.iter().zip(&ni.bits_w) {
+        assert!(*f >= *l - 1e-6 && *f < *l + 1.0 + 1e-6, "ceil relation: {f} vs {l}");
+    }
+    // Regularizer pulled bits below the 8-bit start.
+    assert!(ni.mean_bits_w() < 8.0, "bits did not move: {}", ni.mean_bits_w());
+    // Loss decreased over training.
+    let first = &out.recorder.steps[0];
+    let last = out.recorder.steps.last().unwrap();
+    assert!(
+        last.task_loss < first.task_loss,
+        "task loss did not improve: {} -> {}",
+        first.task_loss,
+        last.task_loss
+    );
+    // The blobs task is easy: the quantized model must actually learn.
+    assert!(out.final_.accuracy > 0.5, "accuracy {}", out.final_.accuracy);
+    // Activation ranges were collected for every layer.
+    assert_eq!(out.act_min.len(), out.final_.bits_w.len());
+    assert!(out
+        .act_min
+        .iter()
+        .zip(&out.act_max)
+        .all(|(mn, mx)| mn <= mx));
+}
+
+#[test]
+fn fixed_bits_plan_never_moves_bits() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut cfg = quick_cfg(&dir, "it-fixed");
+    cfg.plan = PlanKind::FixedBits;
+    cfg.init_bits = 4.0;
+    let out = run_experiment(&rt, &cfg).unwrap();
+    assert!(out.noninteger.is_none());
+    assert!(out.final_.bits_w.iter().all(|&b| b == 4.0));
+    assert!(out.final_.bits_a.iter().all(|&b| b == 4.0));
+}
+
+#[test]
+fn gamma_zero_keeps_bits_high() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut cfg = quick_cfg(&dir, "it-g0");
+    cfg.gamma = 0.0;
+    let out = run_experiment(&rt, &cfg).unwrap();
+    // Without the regularizer the only bit pressure is the task loss,
+    // which prefers MORE bits; average bits must stay near the start.
+    let ni = out.noninteger.unwrap();
+    assert!(
+        ni.mean_bits_w() > 6.5,
+        "bits collapsed without regularizer: {}",
+        ni.mean_bits_w()
+    );
+}
+
+#[test]
+fn stronger_gamma_fewer_bits() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut weak = quick_cfg(&dir, "it-weak");
+    weak.gamma = 0.25;
+    let mut strong = quick_cfg(&dir, "it-strong");
+    strong.gamma = 4.0;
+    let w = run_experiment(&rt, &weak).unwrap();
+    let s = run_experiment(&rt, &strong).unwrap();
+    let wb = w.noninteger.unwrap();
+    let sb = s.noninteger.unwrap();
+    assert!(
+        sb.mean_bits_w() + sb.mean_bits_a() < wb.mean_bits_w() + wb.mean_bits_a(),
+        "stronger regularizer must reach fewer bits: strong {:.2}/{:.2} vs weak {:.2}/{:.2}",
+        sb.mean_bits_w(), sb.mean_bits_a(), wb.mean_bits_w(), wb.mean_bits_a()
+    );
+}
+
+#[test]
+fn early_select_plan_runs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut cfg = quick_cfg(&dir, "it-early");
+    cfg.plan = PlanKind::EarlySelect;
+    cfg.learn_steps = 10;
+    cfg.finetune_steps = 30;
+    let out = run_experiment(&rt, &cfg).unwrap();
+    assert!(out.noninteger.is_some());
+    assert!(out.final_.bits_w.iter().all(|b| b.fract() == 0.0));
+}
+
+#[test]
+fn checkpoint_warmstart_roundtrip() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let pre_cfg = quick_cfg(&dir, "it-pretrain");
+    let ckpt = std::env::temp_dir().join("bitprune-it-warm.bpck");
+    let trainer = Trainer::new(&rt, &pre_cfg).unwrap();
+    let pre = trainer
+        .run_and_checkpoint(Some(ckpt.to_str().unwrap()))
+        .unwrap();
+    assert!(ckpt.exists());
+
+    let mut warm_cfg = quick_cfg(&dir, "it-warm");
+    warm_cfg.plan = PlanKind::Warmstart;
+    warm_cfg.warmstart_ckpt = Some(ckpt.to_string_lossy().into_owned());
+    warm_cfg.learn_steps = 10;
+    warm_cfg.finetune_steps = 5;
+    let warm = run_experiment(&rt, &warm_cfg).unwrap();
+    // Warm start must not be worse than random-init at step ~0: compare
+    // its first periodic eval to the pretrain's first.
+    let w0 = warm.recorder.evals.first().unwrap().accuracy;
+    let p0 = pre.recorder.evals.first().unwrap().accuracy;
+    assert!(
+        w0 >= p0 - 0.05,
+        "warm start lost pretrained accuracy: {w0} vs {p0}"
+    );
+}
+
+#[test]
+fn eval_session_probes_bitlengths() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let cfg = quick_cfg(&dir, "it-session");
+    let trainer = Trainer::new(&rt, &cfg).unwrap();
+    let out = trainer.run().unwrap();
+    let session = trainer.session(&out.final_params);
+    let nl = session.num_layers();
+    let hi = session.accuracy(&vec![8.0; nl], &vec![8.0; nl], 4).unwrap();
+    let lo = session.accuracy(&vec![1.0; nl], &vec![1.0; nl], 4).unwrap();
+    // 1-bit everywhere must hurt vs 8-bit on a trained net.
+    assert!(hi >= lo, "8-bit {hi} should be >= 1-bit {lo}");
+    assert!((0.0..=1.0).contains(&hi) && (0.0..=1.0).contains(&lo));
+}
+
+#[test]
+fn profiled_baseline_on_real_network() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut cfg = quick_cfg(&dir, "it-prof");
+    cfg.plan = PlanKind::FixedBits;
+    cfg.init_bits = 16.0;
+    let trainer = Trainer::new(&rt, &cfg).unwrap();
+    let out = trainer.run().unwrap();
+    let session = trainer.session(&out.final_params);
+    let mut probe =
+        |bw: &[f32], ba: &[f32]| session.accuracy(bw, ba, 2);
+    let r = bitprune::baselines::profiled_search(
+        session.num_layers(),
+        8.0,
+        0.05,
+        &mut probe,
+    )
+    .unwrap();
+    // Found an assignment at or below the start, never below 1 bit.
+    assert!(quant::mean_bits(&r.bits_w) <= 8.0);
+    assert!(r.bits_w.iter().chain(&r.bits_a).all(|&b| b >= 1.0));
+    assert!(r.probes > 0);
+}
+
+#[test]
+fn integer_inference_matches_xla_eval() {
+    // Deployability: the pure-integer rust engine must agree with the
+    // compiled fake-quant eval artifact on a trained network.
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let cfg = quick_cfg(&dir, "it-int-infer");
+    let trainer = Trainer::new(&rt, &cfg).unwrap();
+    let out = trainer.run().unwrap();
+    let net = bitprune::infer::IntNet::from_trained(
+        trainer.meta(),
+        &out.final_params,
+        &out.final_.bits_w,
+        &out.final_.bits_a,
+    )
+    .unwrap();
+
+    let ds = bitprune::data::build(&cfg.dataset, cfg.seed).unwrap();
+    let mut loader = bitprune::data::Loader::new(
+        ds.as_ref(),
+        bitprune::data::Split::Test,
+        trainer.meta().batch_size,
+        false,
+        cfg.seed,
+    );
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..loader.batches_per_epoch() {
+        let b = loader.next_batch().unwrap();
+        let preds = net.predict(b.x.as_f32().unwrap(), trainer.meta().batch_size);
+        for (p, y) in preds.iter().zip(b.y.as_i32().unwrap()) {
+            correct += (*p as i32 == *y) as usize;
+            total += 1;
+        }
+    }
+    let int_acc = correct as f64 / total as f64;
+    assert!(
+        (int_acc - out.final_.accuracy).abs() < 0.02,
+        "integer path {:.4} vs xla path {:.4}",
+        int_acc,
+        out.final_.accuracy
+    );
+    // Packed model smaller than f32 and than uniform 8-bit.
+    assert!(net.packed_bytes() * 4 < net.f32_bytes());
+}
+
+#[test]
+fn parallel_scheduler_runs_experiments() {
+    let dir = require_artifacts!();
+    let mut a = quick_cfg(&dir, "it-par-a");
+    a.learn_steps = 10;
+    a.finetune_steps = 5;
+    let mut b = a.clone();
+    b.name = "it-par-b".into();
+    b.gamma = 2.0;
+    let outcomes =
+        bitprune::coordinator::run_all_parallel(&[a, b], 2).unwrap();
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(outcomes[0].name, "it-par-a");
+    assert_eq!(outcomes[1].name, "it-par-b");
+}
+
+#[test]
+fn config_artifact_mismatch_rejected() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu(&dir).unwrap();
+    let mut cfg = quick_cfg(&dir, "it-mismatch");
+    cfg.dataset = "synthcifar".into(); // image data into the MLP artifact
+    assert!(Trainer::new(&rt, &cfg).is_err());
+}
