@@ -63,4 +63,6 @@ fn main() {
             r.mem_ratio
         );
     }
+
+    b.flush_jsonl();
 }

@@ -37,4 +37,6 @@ fn main() {
             loader.next_batch().unwrap();
         }
     });
+
+    b.flush_jsonl();
 }

@@ -75,5 +75,8 @@ fn main() {
             "  -> {:.2} steps/s end-to-end (resnet_s, batch 32)",
             r.throughput().unwrap_or(0.0)
         );
+        bb.flush_jsonl();
     }
+
+    b.flush_jsonl();
 }

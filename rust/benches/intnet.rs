@@ -1,0 +1,77 @@
+//! Integer-inference fast-path benchmarks: blocked i64 GEMM vs the
+//! retained scalar reference, and word-level bitpack vs the
+//! byte-at-a-time reference.  The acceptance numbers for the fast-path
+//! subsystem live here (forward >= 3x at batch 64 / 256x256 / 4-bit;
+//! pack+unpack >= 2x at 4 bits); each pair prints its measured speedup.
+
+use bitprune::bitpack;
+use bitprune::infer::IntDense;
+use bitprune::util::bench::Bench;
+use bitprune::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn speedup(b: &Bench, fast: &str, slow: &str) {
+    if let (Some(f), Some(s)) = (b.result(fast), b.result(slow)) {
+        println!("  -> {fast}: {:.2}x vs ref", s.mean / f.mean);
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0x1147);
+
+    // Headline: IntDense::forward, batch 64, 256x256 layer, 4-bit.
+    for &(n, din, dout, bits) in &[(64usize, 256usize, 256usize, 4u32), (64, 256, 256, 8)] {
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let bias = rand_vec(&mut rng, dout);
+        let layer =
+            IntDense::new("bench", &w, din, dout, &bias, bits, bits, true).unwrap();
+        let macs = (n * din * dout) as f64;
+        let tag = format!("{n}x{din}x{dout}/{bits}b");
+        b.run_elems(&format!("intnet/forward/{tag}"), macs, || {
+            layer.forward(&x, n)
+        });
+        b.run_elems(&format!("intnet/forward_ref/{tag}"), macs, || {
+            layer.forward_ref(&x, n)
+        });
+        speedup(&b, &format!("intnet/forward/{tag}"), &format!("intnet/forward_ref/{tag}"));
+    }
+
+    // Word-level pack/unpack vs scalar reference at 4 bits (and 8 for
+    // the byte-aligned best case of the old path).
+    let size = 1usize << 16;
+    let xs = rand_vec(&mut rng, size);
+    for &bits in &[4u32, 8] {
+        let packed = bitpack::pack(&xs, bits).unwrap();
+        b.run_elems(&format!("bitpack/pack/{size}/{bits}b"), size as f64, || {
+            bitpack::pack(&xs, bits).unwrap()
+        });
+        b.run_elems(&format!("bitpack/pack_ref/{size}/{bits}b"), size as f64, || {
+            bitpack::pack_ref(&xs, bits).unwrap()
+        });
+        speedup(
+            &b,
+            &format!("bitpack/pack/{size}/{bits}b"),
+            &format!("bitpack/pack_ref/{size}/{bits}b"),
+        );
+        b.run_elems(&format!("bitpack/unpack_codes/{size}/{bits}b"), size as f64, || {
+            bitpack::unpack_codes(&packed)
+        });
+        b.run_elems(
+            &format!("bitpack/unpack_codes_ref/{size}/{bits}b"),
+            size as f64,
+            || bitpack::unpack_codes_ref(&packed),
+        );
+        speedup(
+            &b,
+            &format!("bitpack/unpack_codes/{size}/{bits}b"),
+            &format!("bitpack/unpack_codes_ref/{size}/{bits}b"),
+        );
+    }
+
+    b.flush_jsonl();
+}

@@ -13,7 +13,8 @@ fn main() {
     let mut b = Bench::new();
     let mut rng = Rng::new(1);
 
-    // Rust mirror across sizes.
+    // Rust mirror across sizes: QuantPlan fast path vs the retained
+    // scalar reference (before/after for the fast-path subsystem).
     for &size in &[1usize << 10, 1 << 14, 1 << 18] {
         let xs: Vec<f32> = (0..size).map(|_| rng.normal_f32(0.0, 1.0)).collect();
         b.run_elems(&format!("rust/fake_quant/{size}"), size as f64, || {
@@ -21,10 +22,15 @@ fn main() {
             quant::fake_quant_slice(&mut v, 4.3);
             v
         });
+        b.run_elems(&format!("rust/fake_quant_ref/{size}"), size as f64, || {
+            let mut v = xs.clone();
+            quant::fake_quant_slice_ref(&mut v, 4.3);
+            v
+        });
     }
 
-    // Integer vs interpolated bitlengths (the interpolation costs one
-    // extra round+fma pair per element).
+    // Integer vs interpolated bitlengths: the alpha == 0 specialization
+    // skips the second grid entirely, so integer n is ~2x lighter.
     let xs: Vec<f32> = (0..1 << 14).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     for &n in &[4.0f32, 4.5] {
         b.run_elems(&format!("rust/fake_quant/n={n}"), (1 << 14) as f64, || {
@@ -33,6 +39,23 @@ fn main() {
             v
         });
     }
+
+    // Plan reuse: amortize minmax + scale across repeated applications
+    // over a fixed range (the deployment-side calibrated case).
+    let plan = quant::QuantPlan::from_slice(&xs, 4.0);
+    b.run_elems("rust/quantplan_apply/16384", (1 << 14) as f64, || {
+        let mut v = xs.clone();
+        plan.apply(&mut v);
+        v
+    });
+
+    // Fused quantize+pack (word-level) vs the scalar reference packer.
+    b.run_elems("rust/pack_fused/16384/4b", (1 << 14) as f64, || {
+        bitprune::bitpack::pack(&xs, 4).unwrap()
+    });
+    b.run_elems("rust/pack_fused_ref/16384/4b", (1 << 14) as f64, || {
+        bitprune::bitpack::pack_ref(&xs, 4).unwrap()
+    });
 
     // Selection + cost accounting (coordinator hot helpers).
     let bits: Vec<f32> = (0..64).map(|_| rng.range_f32(1.0, 8.0)).collect();
@@ -70,4 +93,6 @@ fn main() {
     } else {
         eprintln!("SKIP pjrt benches: run `make artifacts` first");
     }
+
+    b.flush_jsonl();
 }

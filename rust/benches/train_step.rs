@@ -99,4 +99,6 @@ fn main() {
             (100 * s.total_transfer_nanos / (s.total_exec_nanos + s.total_transfer_nanos).max(1))
         );
     }
+
+    b.flush_jsonl();
 }

@@ -4,7 +4,10 @@
 //! All three are implemented as *pure search logic* over an accuracy
 //! probe `Fn(&bits_w, &bits_a) -> accuracy`, so they are unit-testable
 //! against synthetic accuracy surfaces and run, in production, against a
-//! trained network through [`coordinator::EvalSession`].
+//! trained network through [`coordinator::EvalSession`] — either the
+//! XLA fake-quant probe (`accuracy`) or, for dense models, the much
+//! cheaper pure-integer fast path (`int_accuracy`, backed by the
+//! blocked i64 GEMM in [`crate::infer`]).
 //!
 //! * **Uniform fixed-bitlength QAT** (PACT's role): not a search — a
 //!   `PlanKind::FixedBits` run at n bits; helper below builds configs.
@@ -311,6 +314,55 @@ mod tests {
         let mut probe = |_: &[f32], _: &[f32]| Ok(0.5);
         let r = mpdnn_assign(&elems, 4.0, 1.0, &mut probe).unwrap();
         assert!(r.bits_w.iter().all(|&b| b == 1.0));
+    }
+
+    #[test]
+    fn profiled_search_with_integer_probe() {
+        // End-to-end over a *real* accuracy surface: the probe rebuilds
+        // the pure-integer net (blocked i64 GEMM) at each candidate
+        // assignment and scores agreement with the 8-bit reference
+        // predictions. Runs entirely in rust — no artifacts needed.
+        use crate::infer::{IntDense, IntNet};
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(0xBA5E);
+        let (din, hidden, classes, n) = (16usize, 24usize, 4usize, 64usize);
+        let rv = |rng: &mut Rng, len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+        };
+        let w0 = rv(&mut rng, din * hidden);
+        let b0 = rv(&mut rng, hidden);
+        let w1 = rv(&mut rng, hidden * classes);
+        let b1 = rv(&mut rng, classes);
+        let x = rv(&mut rng, n * din);
+
+        let make = |bw0: u32, ba0: u32, bw1: u32, ba1: u32| -> Result<IntNet> {
+            Ok(IntNet {
+                layers: vec![
+                    IntDense::new("l0", &w0, din, hidden, &b0, bw0, ba0, true)?,
+                    IntDense::new("l1", &w1, hidden, classes, &b1, bw1, ba1, false)?,
+                ],
+                num_classes: classes,
+            })
+        };
+        let labels = make(8, 8, 8, 8).unwrap().predict(&x, n);
+        let mut probe = |bw: &[f32], ba: &[f32]| -> Result<f64> {
+            let net = make(
+                bw[0].ceil() as u32,
+                ba[0].ceil() as u32,
+                bw[1].ceil() as u32,
+                ba[1].ceil() as u32,
+            )?;
+            let preds = net.predict(&x, n);
+            let agree = preds.iter().zip(&labels).filter(|(a, b)| a == b).count();
+            Ok(agree as f64 / n as f64)
+        };
+
+        let r = profiled_search(2, 8.0, 0.05, &mut probe).unwrap();
+        assert!(r.bits_w.iter().chain(&r.bits_a).all(|&b| (1.0..=8.0).contains(&b)));
+        assert!(r.probes > 4);
+        // Every accepted lowering kept agreement within the budget.
+        assert!(r.accuracy >= 1.0 - 0.05 - 1e-9, "accuracy {}", r.accuracy);
     }
 
     #[test]

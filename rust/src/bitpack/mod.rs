@@ -14,6 +14,14 @@
 //! verified ≤ 1 ulp-scale epsilon in tests).  This is what lets the
 //! coordinator checkpoint quantized networks at their true footprint,
 //! and what the Proteus row of Table VIII measures.
+//!
+//! Fast path: [`pack`] fuses quantization and packing in one pass over
+//! a word-level (u64 accumulator) bit stream, and [`unpack`] /
+//! [`unpack_codes`] extract each value from a single 64-bit load
+//! (`bits <= 16` always fits).  The original byte-at-a-time scalar
+//! implementations are retained as [`pack_ref`] / [`unpack_ref`] /
+//! [`unpack_codes_ref`]; the parity tests pin the fast path to them
+//! bit-for-bit.
 
 use anyhow::{bail, Result};
 
@@ -45,12 +53,105 @@ impl PackedTensor {
     }
 }
 
-/// Quantize (min/max uniform, integer bitlength) and pack in one pass.
+/// Quantize (min/max uniform, integer bitlength) and pack in one
+/// **fused single pass**: the code math (plan-hoisted scale, one
+/// division + round per element) streams straight into a 64-bit
+/// accumulator that is flushed as whole little-endian words, so no
+/// intermediate code buffer and no per-value byte read-modify-write.
+///
+/// Byte-stream layout is identical to [`pack_ref`] (LSB-first,
+/// contiguous, no padding between values) — checked bit-for-bit by the
+/// `fastpath_parity` tests.
 ///
 /// Returns the packed tensor; `xs` is not modified.  `bits` must be an
 /// integer in [1, 16] — packing interpolated non-integer bitlengths is
 /// meaningless (inference hardware stores integer codes; §II-C).
 pub fn pack(xs: &[f32], bits: u32) -> Result<PackedTensor> {
+    if !(1..=16).contains(&bits) {
+        bail!("pack: bits must be in [1,16], got {bits}");
+    }
+    if xs.is_empty() {
+        return Ok(PackedTensor { bits, len: 0, lmin: 0.0, scale: 1.0, data: vec![] });
+    }
+    let (lmin, lmax) = quant::group_minmax(xs);
+    let plan = quant::QuantPlan::new(lmin, lmax, bits as f32);
+    let levels = ((1u32 << bits) - 1) as i64;
+
+    let total_bits = xs.len() * bits as usize;
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
+    let mut acc = 0u64;
+    let mut fill = 0u32;
+    let mut out = 0usize; // next byte to write
+    for &x in xs {
+        let code = plan.code(x, levels) as u64;
+        acc |= code << fill;
+        fill += bits;
+        if fill >= 64 {
+            data[out..out + 8].copy_from_slice(&acc.to_le_bytes());
+            out += 8;
+            fill -= 64;
+            acc = if fill > 0 { code >> (bits - fill) } else { 0 };
+        }
+    }
+    if fill > 0 {
+        let nbytes = fill.div_ceil(8) as usize;
+        data[out..out + nbytes].copy_from_slice(&acc.to_le_bytes()[..nbytes]);
+    }
+    Ok(PackedTensor { bits, len: xs.len(), lmin: plan.lmin, scale: plan.s_lo, data })
+}
+
+/// Load up to 8 bytes at `byte` as a little-endian u64, zero-padding
+/// past the end of the buffer.
+#[inline]
+fn load_word(data: &[u8], byte: usize) -> u64 {
+    if byte + 8 <= data.len() {
+        u64::from_le_bytes(data[byte..byte + 8].try_into().unwrap())
+    } else {
+        let mut buf = [0u8; 8];
+        let n = data.len() - byte;
+        buf[..n].copy_from_slice(&data[byte..]);
+        u64::from_le_bytes(buf)
+    }
+}
+
+/// Unpack to dequantized f32 values (word-level, branchless extract:
+/// with `bits <= 16` every value sits inside one 64-bit load).
+pub fn unpack(p: &PackedTensor) -> Vec<f32> {
+    debug_assert!((1..=16).contains(&p.bits) || p.len == 0);
+    let bits = p.bits as usize;
+    let mask = (1u64 << p.bits) - 1;
+    let mut out = Vec::with_capacity(p.len);
+    for i in 0..p.len {
+        let bitpos = i * bits;
+        let word = load_word(&p.data, bitpos >> 3);
+        let code = (word >> (bitpos & 7)) & mask;
+        out.push(p.lmin + code as f32 * p.scale);
+    }
+    out
+}
+
+/// Unpack the raw integer codes (what integer inference consumes).
+pub fn unpack_codes(p: &PackedTensor) -> Vec<u32> {
+    debug_assert!((1..=16).contains(&p.bits) || p.len == 0);
+    let bits = p.bits as usize;
+    let mask = (1u64 << p.bits) - 1;
+    let mut out = Vec::with_capacity(p.len);
+    for i in 0..p.len {
+        let bitpos = i * bits;
+        let word = load_word(&p.data, bitpos >> 3);
+        out.push(((word >> (bitpos & 7)) & mask) as u32);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// retained scalar reference paths (parity tests + before/after benches)
+// ---------------------------------------------------------------------------
+
+/// Scalar reference for [`pack`]: per-value code math + byte-at-a-time
+/// bit writes. Kept as the semantic baseline the word-level packer must
+/// match bit-for-bit.
+pub fn pack_ref(xs: &[f32], bits: u32) -> Result<PackedTensor> {
     if !(1..=16).contains(&bits) {
         bail!("pack: bits must be in [1,16], got {bits}");
     }
@@ -67,36 +168,36 @@ pub fn pack(xs: &[f32], bits: u32) -> Result<PackedTensor> {
     for &x in xs {
         let code = (((x - lmin) / scale).round_ties_even() as i64)
             .clamp(0, levels as i64) as u32;
-        write_bits(&mut data, bitpos, bits, code);
+        write_bits_ref(&mut data, bitpos, bits, code);
         bitpos += bits as usize;
     }
     Ok(PackedTensor { bits, len: xs.len(), lmin, scale, data })
 }
 
-/// Unpack to dequantized f32 values.
-pub fn unpack(p: &PackedTensor) -> Vec<f32> {
+/// Scalar reference for [`unpack`].
+pub fn unpack_ref(p: &PackedTensor) -> Vec<f32> {
     let mut out = Vec::with_capacity(p.len);
     let mut bitpos = 0usize;
     for _ in 0..p.len {
-        let code = read_bits(&p.data, bitpos, p.bits);
+        let code = read_bits_ref(&p.data, bitpos, p.bits);
         out.push(p.lmin + code as f32 * p.scale);
         bitpos += p.bits as usize;
     }
     out
 }
 
-/// Unpack the raw integer codes (what integer inference consumes).
-pub fn unpack_codes(p: &PackedTensor) -> Vec<u32> {
+/// Scalar reference for [`unpack_codes`].
+pub fn unpack_codes_ref(p: &PackedTensor) -> Vec<u32> {
     let mut out = Vec::with_capacity(p.len);
     let mut bitpos = 0usize;
     for _ in 0..p.len {
-        out.push(read_bits(&p.data, bitpos, p.bits));
+        out.push(read_bits_ref(&p.data, bitpos, p.bits));
         bitpos += p.bits as usize;
     }
     out
 }
 
-fn write_bits(data: &mut [u8], bitpos: usize, bits: u32, value: u32) {
+fn write_bits_ref(data: &mut [u8], bitpos: usize, bits: u32, value: u32) {
     let mut v = value as u64;
     let mut pos = bitpos;
     let mut remaining = bits;
@@ -112,7 +213,7 @@ fn write_bits(data: &mut [u8], bitpos: usize, bits: u32, value: u32) {
     }
 }
 
-fn read_bits(data: &[u8], bitpos: usize, bits: u32) -> u32 {
+fn read_bits_ref(data: &[u8], bitpos: usize, bits: u32) -> u32 {
     let mut out = 0u64;
     let mut got = 0u32;
     let mut pos = bitpos;
@@ -210,6 +311,60 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn word_packer_matches_ref_bitstream() {
+        // The fused word-level packer and both unpackers must agree
+        // bit-for-bit with the retained scalar reference at every
+        // bitlength and unaligned length.
+        check(
+            "bitpack-word-parity",
+            256,
+            |rng: &mut Rng| {
+                let bits = 1 + rng.below(16) as u32;
+                let len = 1 + rng.below_usize(130);
+                let xs: Vec<f32> =
+                    (0..len).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                (xs, bits)
+            },
+            |(xs, bits)| {
+                let fast = pack(xs, *bits).map_err(|e| e.to_string())?;
+                let slow = pack_ref(xs, *bits).map_err(|e| e.to_string())?;
+                if fast != slow {
+                    return Err(format!("packed tensors differ at {bits} bits"));
+                }
+                if unpack_codes(&fast) != unpack_codes_ref(&fast) {
+                    return Err("code unpack differs".into());
+                }
+                let (f, r) = (unpack(&fast), unpack_ref(&fast));
+                if f.iter().zip(&r).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err("value unpack differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn word_packer_every_bitlength_edge_lengths() {
+        // Deterministic sweep over the bit widths x awkward lengths that
+        // stress word boundaries (1, 7, 8, 9, 63, 64, 65, ...).
+        let mut rng = Rng::new(0xB175);
+        for bits in 1..=16u32 {
+            for &len in &[1usize, 3, 7, 8, 9, 31, 63, 64, 65, 127, 200] {
+                let xs: Vec<f32> =
+                    (0..len).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+                let fast = pack(&xs, bits).unwrap();
+                let slow = pack_ref(&xs, bits).unwrap();
+                assert_eq!(fast, slow, "bits={bits} len={len}");
+                assert_eq!(
+                    unpack_codes(&fast),
+                    unpack_codes_ref(&slow),
+                    "bits={bits} len={len}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -449,6 +449,58 @@ impl EvalSession<'_> {
         };
         Ok(self.trainer.eval(&state, max_batches)?.accuracy)
     }
+
+    /// Build the pure-integer deployment net ([`crate::infer::IntNet`])
+    /// for this session's trained parameters at the given (ceiled)
+    /// bitlengths. Dense models only.
+    pub fn int_net(&self, bits_w: &[f32], bits_a: &[f32]) -> Result<crate::infer::IntNet> {
+        crate::infer::IntNet::from_trained(&self.trainer.meta, self.params, bits_w, bits_a)
+    }
+
+    /// Accuracy of the **pure-integer deployment path** at the given
+    /// bitlengths over `max_batches` test batches — no PJRT round trip,
+    /// so post-training probes (profiled / MPDNN baselines) can run at
+    /// deployment speed on dense models.
+    pub fn int_accuracy(
+        &self,
+        bits_w: &[f32],
+        bits_a: &[f32],
+        max_batches: usize,
+    ) -> Result<f64> {
+        let net = self.int_net(bits_w, bits_a)?;
+        self.int_net_accuracy(&net, max_batches)
+    }
+
+    /// Like [`Self::int_accuracy`], but over a prebuilt net (avoids
+    /// re-packing and re-tiling every layer when the caller already
+    /// constructed one, e.g. for footprint reporting).
+    pub fn int_net_accuracy(
+        &self,
+        net: &crate::infer::IntNet,
+        max_batches: usize,
+    ) -> Result<f64> {
+        let bs = self.trainer.meta.batch_size;
+        let mut loader = Loader::new(
+            self.trainer.dataset.as_ref(),
+            Split::Test,
+            bs,
+            false,
+            self.trainer.cfg.seed,
+        );
+        let batches = loader.batches_per_epoch().min(max_batches).max(1);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for _ in 0..batches {
+            let b = loader.next_batch()?;
+            let y = b.y;
+            let preds = net.predict(&b.x.into_f32()?, bs);
+            for (p, label) in preds.iter().zip(y.as_i32()?) {
+                correct += (*p as i32 == *label) as usize;
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
 }
 
 /// Run one experiment end to end.

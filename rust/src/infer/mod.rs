@@ -20,6 +20,19 @@
 //! the affine-decomposed integer path and the float fake-quant path are
 //! the same computation.
 //!
+//! Fast path: at construction the weight codes are **tiled** into a
+//! transposed `[dout, din]` layout so the GEMM inner loop streams both
+//! operands contiguously (the packed row-major `[din, dout]` layout
+//! walks column-wise with a `dout`-stride — cache-hostile).  `forward`
+//! register-blocks four output columns per pass over an activation row,
+//! hoists the affine-reconstruction terms out of the inner loop into
+//! per-row / per-column f64 tables, and splits large batches across
+//! `std::thread::scope` workers.  The original `(r, j, c)` triple loop
+//! is retained as [`IntDense::forward_ref`]; because the i64 core is
+//! exact under reassociation and the reconstruction expression is
+//! shared, the two paths are bit-identical (pinned by the
+//! `fastpath_parity` tests).
+//!
 //! Scope: dense (MLP-style) networks — the artifact family whose
 //! deployment story is pure GEMM.  Conv models deploy the same way via
 //! im2col; see DESIGN.md §future-work.
@@ -31,6 +44,10 @@ use crate::model::ModelMeta;
 use crate::quant;
 use crate::tensor::HostTensor;
 
+/// Below this many MACs per call the GEMM stays single-threaded (the
+/// spawn cost would dominate).
+const PAR_MIN_MACS: usize = 1 << 20;
+
 /// One integer-quantized dense layer.
 pub struct IntDense {
     pub name: String,
@@ -38,8 +55,11 @@ pub struct IntDense {
     pub dout: usize,
     /// Packed weight codes, row-major [din, dout].
     pub packed: PackedTensor,
-    /// Unpacked codes cache (u16 is enough for <=16 bits).
-    codes: Vec<u16>,
+    /// Tiled (transposed) codes, [dout, din]: row `j` holds output
+    /// column j's weights contiguously — what the blocked GEMM streams
+    /// (u16 is enough for <=16 bits). The row-major layout is not
+    /// cached; [`Self::forward_ref`] re-unpacks it on demand.
+    codes_t: Vec<u16>,
     pub w_min: f32,
     pub w_scale: f32,
     /// Σ over din of w_code for each output column (i64 per dout).
@@ -68,11 +88,14 @@ impl IntDense {
             bail!("{name}: bias len {} != {dout}", bias.len());
         }
         let packed = pack(w, w_bits)?;
-        let codes: Vec<u16> = unpack_codes(&packed).iter().map(|&c| c as u16).collect();
+        let codes = unpack_codes(&packed);
+        let mut codes_t = vec![0u16; din * dout];
         let mut col_code_sum = vec![0i64; dout];
         for i in 0..din {
             for j in 0..dout {
-                col_code_sum[j] += codes[i * dout + j] as i64;
+                let c = codes[i * dout + j] as u16;
+                codes_t[j * din + i] = c;
+                col_code_sum[j] += c as i64;
             }
         }
         Ok(Self {
@@ -82,7 +105,7 @@ impl IntDense {
             w_min: packed.lmin,
             w_scale: packed.scale,
             packed,
-            codes,
+            codes_t,
             col_code_sum,
             bias: bias.to_vec(),
             a_bits,
@@ -90,49 +113,190 @@ impl IntDense {
         })
     }
 
-    /// Forward one batch [n, din] -> [n, dout].
-    ///
-    /// Activations are quantized to `a_bits` codes using the batch
-    /// min/max (the training-time convention, paper §II-A), then the
-    /// GEMM runs entirely in i64 over the codes.
-    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
-        assert_eq!(x.len(), n * self.din, "{}: bad input", self.name);
+    /// Quantize a batch of activations to integer codes using the batch
+    /// min/max (the training-time convention, paper §II-A). Returns
+    /// `(codes, per-row code sums, a_scale, a_min)`. Shared by the fast
+    /// and reference paths so both see identical codes.
+    fn quantize_acts(&self, x: &[f32], n: usize) -> (Vec<u16>, Vec<i64>, f32, f32) {
         let (a_min, a_max) = quant::group_minmax(x);
-        let a_scale = quant::scale(a_min, a_max, self.a_bits as f32);
+        let plan = quant::QuantPlan::new(a_min, a_max, self.a_bits as f32);
         let levels = ((1u32 << self.a_bits) - 1) as i64;
-
-        // Quantize activations to integer codes.
         let mut a_codes = vec![0u16; n * self.din];
         let mut row_code_sum = vec![0i64; n];
-        for r in 0..n {
+        for (rs, (row_x, row_c)) in row_code_sum
+            .iter_mut()
+            .zip(x.chunks_exact(self.din).zip(a_codes.chunks_exact_mut(self.din)))
+        {
             let mut sum = 0i64;
-            for c in 0..self.din {
-                let v = x[r * self.din + c];
-                let code = (((v - a_min) / a_scale).round_ties_even() as i64)
-                    .clamp(0, levels);
-                a_codes[r * self.din + c] = code as u16;
-                sum += code;
+            for (v, c) in row_x.iter().zip(row_c.iter_mut()) {
+                let code = plan.code(*v, levels);
+                *c = code as u16;
+                sum += code as i64;
             }
-            row_code_sum[r] = sum;
+            *rs = sum;
         }
+        (a_codes, row_code_sum, plan.s_lo, a_min)
+    }
 
-        // Integer GEMM over codes.
-        let mut out = vec![0.0f32; n * self.dout];
+    /// Hoisted affine-reconstruction terms: `out = s·acc + t[r] + u[j]`
+    /// where `s = w_s·a_s`, `t[r]` folds the row code sum and the
+    /// constant `K·a_min·w_min`, and `u[j]` folds the column code sum
+    /// and the bias. Shared by both paths (bit-identical by design).
+    fn affine_terms(
+        &self,
+        a_scale: f32,
+        a_min: f32,
+        row_code_sum: &[i64],
+    ) -> (f64, Vec<f64>, Vec<f64>) {
+        let ws = self.w_scale as f64;
+        let asc = a_scale as f64;
+        let wmin = self.w_min as f64;
+        let amin = a_min as f64;
         let k = self.din as f64;
+        let t: Vec<f64> = row_code_sum
+            .iter()
+            .map(|&rs| asc * wmin * rs as f64 + k * amin * wmin)
+            .collect();
+        let u: Vec<f64> = self
+            .col_code_sum
+            .iter()
+            .zip(&self.bias)
+            .map(|(&cs, &b)| ws * amin * cs as f64 + b as f64)
+            .collect();
+        (ws * asc, t, u)
+    }
+
+    /// How many worker threads the GEMM should use for an `n`-row batch.
+    fn gemm_threads(&self, n: usize) -> usize {
+        if n * self.din * self.dout < PAR_MIN_MACS {
+            return 1;
+        }
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(n)
+    }
+
+    /// Blocked i64 GEMM over one block of batch rows. `a` holds
+    /// `t.len()` rows of activation codes; `out` the matching rows of
+    /// output. Four output columns are register-blocked per pass over
+    /// an activation row; both operands stream contiguously thanks to
+    /// the tiled `codes_t` layout.
+    fn gemm_block(&self, a: &[u16], t: &[f64], u: &[f64], s: f64, out: &mut [f32]) {
+        let din = self.din;
+        let dout = self.dout;
+        let relu = self.relu;
+        let codes_t = &self.codes_t;
+        for ((a_row, tr), out_row) in a
+            .chunks_exact(din)
+            .zip(t)
+            .zip(out.chunks_exact_mut(dout))
+        {
+            let mut j = 0usize;
+            while j + 4 <= dout {
+                let w0 = &codes_t[j * din..][..din];
+                let w1 = &codes_t[(j + 1) * din..][..din];
+                let w2 = &codes_t[(j + 2) * din..][..din];
+                let w3 = &codes_t[(j + 3) * din..][..din];
+                let (mut s0, mut s1, mut s2, mut s3) = (0i64, 0i64, 0i64, 0i64);
+                for (c, &av) in a_row.iter().enumerate() {
+                    let av = av as i64;
+                    s0 += av * w0[c] as i64;
+                    s1 += av * w1[c] as i64;
+                    s2 += av * w2[c] as i64;
+                    s3 += av * w3[c] as i64;
+                }
+                for (jj, acc) in [s0, s1, s2, s3].into_iter().enumerate() {
+                    let v = (s * acc as f64 + *tr + u[j + jj]) as f32;
+                    out_row[j + jj] = if relu { v.max(0.0) } else { v };
+                }
+                j += 4;
+            }
+            while j < dout {
+                let wj = &codes_t[j * din..][..din];
+                let mut acc = 0i64;
+                for (&av, &wv) in a_row.iter().zip(wj) {
+                    acc += av as i64 * wv as i64;
+                }
+                let v = (s * acc as f64 + *tr + u[j]) as f32;
+                out_row[j] = if relu { v.max(0.0) } else { v };
+                j += 1;
+            }
+        }
+    }
+
+    /// Forward one batch [n, din] -> [n, dout].
+    ///
+    /// Activations are quantized to `a_bits` codes, then the GEMM runs
+    /// entirely in i64 over the codes: blocked over output columns,
+    /// streaming the tiled weight layout, parallel over batch rows for
+    /// large batches. Bit-identical to [`forward_ref`].
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(x.len(), n * self.din, "{}: bad input", self.name);
+        if n == 0 || self.din == 0 || self.dout == 0 {
+            return vec![0.0f32; n * self.dout];
+        }
+        let (a_codes, row_code_sum, a_scale, a_min) = self.quantize_acts(x, n);
+        let (s, t, u) = self.affine_terms(a_scale, a_min, &row_code_sum);
+        let mut out = vec![0.0f32; n * self.dout];
+        let threads = self.gemm_threads(n);
+        if threads <= 1 {
+            self.gemm_block(&a_codes, &t, &u, s, &mut out);
+        } else {
+            let rows_per = n.div_ceil(threads);
+            let u = &u;
+            let t = &t;
+            let a_codes = &a_codes;
+            std::thread::scope(|scope| {
+                for (idx, out_chunk) in
+                    out.chunks_mut(rows_per * self.dout).enumerate()
+                {
+                    let r0 = idx * rows_per;
+                    let rows = out_chunk.len() / self.dout;
+                    let a = &a_codes[r0 * self.din..(r0 + rows) * self.din];
+                    let tb = &t[r0..r0 + rows];
+                    scope.spawn(move || self.gemm_block(a, tb, u, s, out_chunk));
+                }
+            });
+        }
+        out
+    }
+
+    /// Retained scalar reference: the original cache-hostile `(r, j, c)`
+    /// triple loop over the row-major codes (the inner stride walks the
+    /// weight matrix column-wise). The i64 core is exact under
+    /// reassociation and the affine reconstruction helper is shared, so
+    /// this is bit-identical to [`forward`] — pinned by the parity tests
+    /// and measured against it in `benches/intnet.rs`.
+    ///
+    /// Note: both paths use the *hoisted* reconstruction
+    /// `s·acc + t[r] + u[j]`; the pre-refactor code summed the five f64
+    /// terms left-to-right, so absolute outputs may differ from that
+    /// binary by last-ulp f32 amounts (well inside the tolerances every
+    /// consumer of this module uses). What is pinned bit-for-bit is
+    /// fast vs reference *within* this version.
+    ///
+    /// The row-major code cache the original kept is reconstructed here
+    /// per call (it is no longer stored); the unpack is O(din·dout)
+    /// against the O(n·din·dout) loop it feeds.
+    pub fn forward_ref(&self, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(x.len(), n * self.din, "{}: bad input", self.name);
+        if n == 0 || self.din == 0 || self.dout == 0 {
+            return vec![0.0f32; n * self.dout];
+        }
+        let codes: Vec<u16> =
+            unpack_codes(&self.packed).iter().map(|&c| c as u16).collect();
+        let (a_codes, row_code_sum, a_scale, a_min) = self.quantize_acts(x, n);
+        let (s, t, u) = self.affine_terms(a_scale, a_min, &row_code_sum);
+        let mut out = vec![0.0f32; n * self.dout];
         for r in 0..n {
             let a_row = &a_codes[r * self.din..(r + 1) * self.din];
             for j in 0..self.dout {
                 let mut acc = 0i64;
                 for c in 0..self.din {
-                    acc += a_row[c] as i64 * self.codes[c * self.dout + j] as i64;
+                    acc += a_row[c] as i64 * codes[c * self.dout + j] as i64;
                 }
-                // Affine reconstruction (f64 for the scalar terms).
-                let v = (self.w_scale as f64) * (a_scale as f64) * acc as f64
-                    + (a_scale as f64) * (self.w_min as f64) * row_code_sum[r] as f64
-                    + (self.w_scale as f64) * (a_min as f64) * self.col_code_sum[j] as f64
-                    + k * (a_min as f64) * (self.w_min as f64)
-                    + self.bias[j] as f64;
-                let v = v as f32;
+                let v = (s * acc as f64 + t[r] + u[j]) as f32;
                 out[r * self.dout + j] = if self.relu { v.max(0.0) } else { v };
             }
         }
@@ -289,6 +453,52 @@ mod tests {
                     "bits ({wb},{ab}) elem {i}: int {g} vs float {w_}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn blocked_gemm_matches_ref_bitwise() {
+        // Odd shapes: remainder columns (dout % 4 != 0), tiny dims.
+        let mut rng = Rng::new(0x6E44);
+        for &(n, din, dout, wb, ab, relu) in &[
+            (1usize, 1usize, 1usize, 4u32, 4u32, true),
+            (3, 5, 7, 2, 3, false),
+            (8, 17, 13, 8, 6, true),
+            (5, 33, 9, 16, 16, false),
+            (16, 64, 10, 1, 1, true),
+        ] {
+            let x = rand_vec(&mut rng, n * din);
+            let w = rand_vec(&mut rng, din * dout);
+            let b = rand_vec(&mut rng, dout);
+            let layer = IntDense::new("p", &w, din, dout, &b, wb, ab, relu).unwrap();
+            let fast = layer.forward(&x, n);
+            let slow = layer.forward_ref(&x, n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(
+                    f.to_bits(),
+                    s.to_bits(),
+                    "({n},{din},{dout}) bits ({wb},{ab}) elem {i}: {f} vs {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_gemm_matches_ref_bitwise() {
+        // Large enough to cross PAR_MIN_MACS and engage the scoped
+        // threads, with n chosen so row chunks split unevenly.
+        let mut rng = Rng::new(0x7EAD);
+        let (n, din, dout) = (67, 128, 128); // 1.1M MACs > 2^20
+        assert!(n * din * dout >= super::PAR_MIN_MACS);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let layer = IntDense::new("t", &w, din, dout, &b, 4, 4, true).unwrap();
+        let fast = layer.forward(&x, n);
+        let slow = layer.forward_ref(&x, n);
+        assert_eq!(fast.len(), slow.len());
+        for (f, s) in fast.iter().zip(&slow) {
+            assert_eq!(f.to_bits(), s.to_bits());
         }
     }
 

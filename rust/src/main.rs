@@ -372,33 +372,13 @@ fn cmd_infer(args: &Args) -> Result<()> {
     eprintln!("training {} to learn bitlengths...", cfg.model);
     let trainer = bitprune::coordinator::Trainer::new(&rt, &cfg)?;
     let out = trainer.run()?;
-    let net = bitprune::infer::IntNet::from_trained(
-        trainer.meta(),
-        &out.final_params,
-        &out.final_.bits_w,
-        &out.final_.bits_a,
-    )?;
+    // Build the integer net once (packing + tiling every layer), then
+    // reuse it for both footprint reporting and the accuracy pass.
+    let session = trainer.session(&out.final_params);
+    let net = session.int_net(&out.final_.bits_w, &out.final_.bits_a)?;
 
-    // Integer path over the full test split.
-    let ds = bitprune::data::build(&cfg.dataset, cfg.seed)?;
-    let mut loader = bitprune::data::Loader::new(
-        ds.as_ref(),
-        bitprune::data::Split::Test,
-        trainer.meta().batch_size,
-        false,
-        cfg.seed,
-    );
-    let mut correct = 0usize;
-    let mut total = 0usize;
-    for _ in 0..loader.batches_per_epoch() {
-        let b = loader.next_batch()?;
-        let preds = net.predict(b.x.as_f32()?, trainer.meta().batch_size);
-        for (p, y) in preds.iter().zip(b.y.as_i32()?) {
-            correct += (*p as i32 == *y) as usize;
-            total += 1;
-        }
-    }
-    let int_acc = correct as f64 / total as f64;
+    // Integer path over the full test split (blocked i64 GEMM, no PJRT).
+    let int_acc = session.int_net_accuracy(&net, usize::MAX)?;
     println!(
         "integer-arithmetic accuracy: {:.2}% | XLA fake-quant accuracy: {:.2}%",
         int_acc * 100.0,

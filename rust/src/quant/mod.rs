@@ -35,31 +35,136 @@ pub fn quantize_int(v: f32, lmin: f32, lmax: f32, n: f32) -> f32 {
 
 /// Q_r: interpolated non-integer-bitlength quantization (paper eq. 4).
 pub fn quantize_interp(v: f32, lmin: f32, lmax: f32, n: f32) -> f32 {
-    let n = clip_bits(n);
-    let b = n.floor();
-    let a = n - b;
-    let qb = quantize_int(v, lmin, lmax, b);
-    let qb1 = quantize_int(v, lmin, lmax, b + 1.0);
-    (1.0 - a) * qb + a * qb1
+    QuantPlan::new(lmin, lmax, n).quantize(v)
 }
 
-/// Group min/max of a slice.
+/// Group min/max of a slice. Four-lane accumulation for ILP; min/max
+/// reassociation is exact, so the result matches the sequential fold.
 pub fn group_minmax(xs: &[f32]) -> (f32, f32) {
-    let mut lmin = f32::INFINITY;
-    let mut lmax = f32::NEG_INFINITY;
-    for &x in xs {
+    let mut mins = [f32::INFINITY; 4];
+    let mut maxs = [f32::NEG_INFINITY; 4];
+    let mut chunks = xs.chunks_exact(4);
+    for ch in &mut chunks {
+        for i in 0..4 {
+            mins[i] = mins[i].min(ch[i]);
+            maxs[i] = maxs[i].max(ch[i]);
+        }
+    }
+    let mut lmin = mins[0].min(mins[1]).min(mins[2].min(mins[3]));
+    let mut lmax = maxs[0].max(maxs[1]).max(maxs[2].max(maxs[3]));
+    for &x in chunks.remainder() {
         lmin = lmin.min(x);
         lmax = lmax.max(x);
     }
     (lmin, lmax)
 }
 
+/// Precomputed per-group quantization parameters: everything `Q_r`
+/// needs that does not depend on the element value. Build once per
+/// group (amortizing the clip/floor/scale math), then apply to any
+/// number of elements or slices over the same range.
+///
+/// Bit-exact with the scalar reference [`fake_quant_slice_ref`] /
+/// `python/compile/kernels/ref.py`: same clipping, same epsilon guard,
+/// same round-half-to-even, same operation order. The integer-bitlength
+/// case (`alpha == 0`) skips the second grid entirely — `(1-0)·q_b +
+/// 0·q_{b+1}` is exactly `q_b` in f32, so the shortcut preserves
+/// bit-exactness while halving the work on the deployment path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantPlan {
+    /// Group minimum (the grid origin).
+    pub lmin: f32,
+    /// Step of the floor(n)-bit grid.
+    pub s_lo: f32,
+    /// Step of the (floor(n)+1)-bit grid.
+    pub s_hi: f32,
+    /// Interpolation weight `n - floor(n)` in [0, 1).
+    pub alpha: f32,
+}
+
+impl QuantPlan {
+    pub fn new(lmin: f32, lmax: f32, n: f32) -> Self {
+        let n = clip_bits(n);
+        let b = n.floor();
+        Self {
+            lmin,
+            s_lo: scale(lmin, lmax, b),
+            s_hi: scale(lmin, lmax, b + 1.0),
+            alpha: n - b,
+        }
+    }
+
+    /// Plan over a slice's own min/max (the per-group convention).
+    pub fn from_slice(xs: &[f32], n: f32) -> Self {
+        let (lmin, lmax) = group_minmax(xs);
+        Self::new(lmin, lmax, n)
+    }
+
+    /// Quantize one value.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        let c = x - self.lmin;
+        let qb = self.lmin + (c / self.s_lo).round_ties_even() * self.s_lo;
+        if self.alpha == 0.0 {
+            return qb;
+        }
+        let qb1 = self.lmin + (c / self.s_hi).round_ties_even() * self.s_hi;
+        (1.0 - self.alpha) * qb + self.alpha * qb1
+    }
+
+    /// Integer code of `x` on the floor-bitlength grid, clamped to
+    /// `[0, levels]` — the packing / integer-inference path.
+    #[inline]
+    pub fn code(&self, x: f32, levels: i64) -> u32 {
+        (((x - self.lmin) / self.s_lo).round_ties_even() as i64).clamp(0, levels) as u32
+    }
+
+    /// Apply the plan to a whole slice in place, branch-free in the
+    /// element loop (the alpha test is hoisted out).
+    pub fn apply(&self, xs: &mut [f32]) {
+        let lmin = self.lmin;
+        let s_lo = self.s_lo;
+        if self.alpha == 0.0 {
+            for x in xs.iter_mut() {
+                *x = lmin + ((*x - lmin) / s_lo).round_ties_even() * s_lo;
+            }
+        } else {
+            let a = self.alpha;
+            let om = 1.0 - a;
+            let s_hi = self.s_hi;
+            for x in xs.iter_mut() {
+                let c = *x - lmin;
+                let qb = lmin + (c / s_lo).round_ties_even() * s_lo;
+                let qb1 = lmin + (c / s_hi).round_ties_even() * s_hi;
+                *x = om * qb + a * qb1;
+            }
+        }
+    }
+}
+
 /// Full fake-quantization of a slice as one group (in place).
+/// Fast path: a [`QuantPlan`] built once, applied branch-free.
 pub fn fake_quant_slice(xs: &mut [f32], n: f32) {
     if xs.is_empty() {
         return;
     }
-    let (lmin, lmax) = group_minmax(xs);
+    QuantPlan::from_slice(xs, n).apply(xs);
+}
+
+/// Retained scalar reference for [`fake_quant_slice`]: recomputes the
+/// interpolated blend per element exactly as `kernels/ref.py` writes
+/// it. The fast path must stay bit-identical to this (see the
+/// `fastpath_parity` tests and `benches/quantizer.rs`).
+pub fn fake_quant_slice_ref(xs: &mut [f32], n: f32) {
+    if xs.is_empty() {
+        return;
+    }
+    let mut lmin = f32::INFINITY;
+    let mut lmax = f32::NEG_INFINITY;
+    for &x in xs.iter() {
+        lmin = lmin.min(x);
+        lmax = lmax.max(x);
+    }
     let n = clip_bits(n);
     let b = n.floor();
     let a = n - b;
@@ -416,6 +521,104 @@ mod tests {
                     Ok(())
                 } else {
                     Err(format!("select {s} not in [{n}, {n}+1]"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn fast_slice_matches_ref_bitwise() {
+        // The QuantPlan kernel must be bit-identical to the retained
+        // scalar reference at every bitlength, fractional or integer.
+        check(
+            "quantplan-parity",
+            256,
+            |rng| {
+                let len = 1 + rng.below_usize(200);
+                let n = if rng.below(2) == 0 {
+                    (1 + rng.below(16)) as f32 // integer (alpha == 0 shortcut)
+                } else {
+                    rng.range_f32(1.0, 16.0)
+                };
+                (rand_vec(rng, len), n)
+            },
+            |(xs, n)| {
+                let mut fast = xs.clone();
+                fake_quant_slice(&mut fast, *n);
+                let mut slow = xs.clone();
+                fake_quant_slice_ref(&mut slow, *n);
+                for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                    if f.to_bits() != s.to_bits() {
+                        return Err(format!(
+                            "elem {i}: fast {f} ({:#x}) vs ref {s} ({:#x}) at n={n}",
+                            f.to_bits(),
+                            s.to_bits()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn plan_reuse_matches_per_call() {
+        // One plan applied to many slices over the same range must equal
+        // per-value quantize_interp with that range.
+        let mut rng = Rng::new(99);
+        let xs = rand_vec(&mut rng, 256);
+        let (lmin, lmax) = group_minmax(&xs);
+        for n in [1.0f32, 3.0, 4.7, 8.0, 15.5] {
+            let plan = QuantPlan::new(lmin, lmax, n);
+            for &x in &xs {
+                assert_eq!(
+                    plan.quantize(x).to_bits(),
+                    quantize_interp(x, lmin, lmax, n).to_bits(),
+                    "x={x} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_codes_match_grid() {
+        // code() lands each value on the same grid point quantize() maps
+        // it to (integer bits, in-range values).
+        let mut rng = Rng::new(7);
+        let xs = rand_vec(&mut rng, 128);
+        for bits in [1u32, 2, 4, 8, 12, 16] {
+            let plan = QuantPlan::from_slice(&xs, bits as f32);
+            let levels = ((1u64 << bits) - 1) as i64;
+            for &x in &xs {
+                let code = plan.code(x, levels);
+                assert!(code as i64 <= levels);
+                let recon = plan.lmin + code as f32 * plan.s_lo;
+                let q = plan.quantize(x);
+                assert!(
+                    (recon - q).abs() <= 1e-5 * (1.0 + q.abs()),
+                    "bits={bits} x={x}: recon {recon} vs quantize {q}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_minmax_matches_fold() {
+        check(
+            "minmax-parity",
+            128,
+            |rng| rand_vec(rng, rng.below_usize(70)),
+            |xs| {
+                let got = group_minmax(xs);
+                let mut want = (f32::INFINITY, f32::NEG_INFINITY);
+                for &x in xs {
+                    want.0 = want.0.min(x);
+                    want.1 = want.1.max(x);
+                }
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("{got:?} vs {want:?}"))
                 }
             },
         );

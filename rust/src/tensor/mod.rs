@@ -142,6 +142,23 @@ impl HostTensor {
         }
     }
 
+    /// Consume the tensor, returning its f32 storage without copying —
+    /// the staging path into the integer inference engine, which wants
+    /// plain slices, not tensors.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {:?}", DTypeOf(&other)),
+        }
+    }
+
+    /// Fake-quantize an f32 tensor in place as one group at bitlength
+    /// `bits` (fast [`crate::quant::QuantPlan`] kernel).
+    pub fn fake_quant(&mut self, bits: f32) -> Result<()> {
+        crate::quant::fake_quant_slice(self.as_f32_mut()?, bits);
+        Ok(())
+    }
+
     /// Scalar extraction (rank-0 or single-element tensors).
     pub fn scalar(&self) -> Result<f32> {
         if self.element_count() != 1 {
@@ -197,6 +214,23 @@ mod tests {
         assert_eq!(HostTensor::scalar_f32(2.5).scalar().unwrap(), 2.5);
         assert_eq!(HostTensor::scalar_u32(7).scalar().unwrap(), 7.0);
         assert!(HostTensor::zeros_f32(&[2]).scalar().is_err());
+    }
+
+    #[test]
+    fn into_f32_moves_storage() {
+        let t = HostTensor::f32(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(t.into_f32().unwrap(), vec![1.0, 2.0, 3.0]);
+        let i = HostTensor::i32(&[1], vec![4]).unwrap();
+        assert!(i.into_f32().is_err());
+    }
+
+    #[test]
+    fn fake_quant_in_place() {
+        let mut t = HostTensor::f32(&[4], vec![-1.0, -0.3, 0.4, 1.0]).unwrap();
+        t.fake_quant(1.0).unwrap();
+        assert!(t.as_f32().unwrap().iter().all(|&v| v == -1.0 || v == 1.0));
+        let mut i = HostTensor::i32(&[1], vec![4]).unwrap();
+        assert!(i.fake_quant(4.0).is_err());
     }
 
     #[test]

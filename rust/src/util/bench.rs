@@ -80,6 +80,36 @@ impl BenchResult {
         }
         line
     }
+
+    /// One-line JSON record (machine-readable; consumed by
+    /// `scripts/bench.sh` to build the repo-root perf trajectory).
+    pub fn to_json(&self) -> String {
+        let esc: String = self
+            .name
+            .chars()
+            .flat_map(|c| match c {
+                '"' => vec!['\\', '"'],
+                '\\' => vec!['\\', '\\'],
+                c => vec![c],
+            })
+            .collect();
+        let elems = self
+            .elems_per_iter
+            .map_or("null".to_string(), |e| format!("{e}"));
+        let tp = self
+            .throughput()
+            .map_or("null".to_string(), |t| format!("{t:.3}"));
+        let mut j = String::from("{");
+        j.push_str(&format!("\"name\":\"{esc}\","));
+        j.push_str(&format!("\"mean_s\":{:.9},", self.mean));
+        j.push_str(&format!("\"median_s\":{:.9},", self.median));
+        j.push_str(&format!("\"p95_s\":{:.9},", self.p95));
+        j.push_str(&format!("\"samples\":{},", self.samples.len()));
+        j.push_str(&format!("\"elems_per_iter\":{elems},"));
+        j.push_str(&format!("\"throughput_elems_per_s\":{tp}"));
+        j.push('}');
+        j
+    }
 }
 
 pub struct Bench {
@@ -165,6 +195,31 @@ impl Bench {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Look up a finished result by exact name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// If `$BENCH_OUT` is set, append one JSON line per result to that
+    /// file (JSONL — every bench target contributes to the same
+    /// trajectory file; `scripts/bench.sh` merges it into
+    /// `BENCH_infer.json`).
+    pub fn flush_jsonl(&self) {
+        let Ok(path) = std::env::var("BENCH_OUT") else { return };
+        if path.is_empty() {
+            return;
+        }
+        use std::io::Write;
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(mut f) => {
+                for r in &self.results {
+                    let _ = writeln!(f, "{}", r.to_json());
+                }
+            }
+            Err(e) => eprintln!("bench: cannot open BENCH_OUT '{path}': {e}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -211,5 +266,29 @@ mod tests {
         b.run("a", || 1);
         b.run("b", || 2);
         assert_eq!(b.results().len(), 2);
+        assert!(b.result("a").is_some());
+        assert!(b.result("zzz").is_none());
+    }
+
+    #[test]
+    fn json_record_shape() {
+        let r = BenchResult {
+            name: "quant/\"odd\"".into(),
+            samples: vec![0.5, 1.5],
+            mean: 1.0,
+            median: 1.0,
+            p95: 1.5,
+            elems_per_iter: Some(1000.0),
+        };
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"mean_s\":1.000000000"), "{j}");
+        assert!(j.contains("\"samples\":2"), "{j}");
+        assert!(j.contains("\"elems_per_iter\":1000"), "{j}");
+        assert!(j.contains("\"throughput_elems_per_s\":1000.000"), "{j}");
+        assert!(j.contains("quant/\\\"odd\\\""), "{j}");
+        // No-throughput records serialize nulls.
+        let r2 = BenchResult { elems_per_iter: None, ..r };
+        assert!(r2.to_json().contains("\"throughput_elems_per_s\":null"));
     }
 }

@@ -1,0 +1,143 @@
+//! Fast-path parity suite: the blocked i64 GEMM, the word-level
+//! bitpacker and the QuantPlan kernel must be **bit-identical** to the
+//! retained `*_ref` scalar implementations, across every bitlength and
+//! at unaligned lengths.  Pure rust — runs without artifacts.
+
+use bitprune::bitpack;
+use bitprune::infer::IntDense;
+use bitprune::quant;
+use bitprune::util::proptest::check;
+use bitprune::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.5)).collect()
+}
+
+#[test]
+fn pack_roundtrip_all_bitlengths_unaligned() {
+    // pack -> unpack_codes -> repack reproduces the byte stream, for
+    // every bitlength 1..=16 at lengths that straddle word boundaries.
+    check(
+        "fastpath-pack-roundtrip",
+        256,
+        |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            let len = 1 + rng.below_usize(300);
+            (rand_vec(rng, len), bits)
+        },
+        |(xs, bits)| {
+            let p = bitpack::pack(xs, *bits).map_err(|e| e.to_string())?;
+            let codes = bitpack::unpack_codes(&p);
+            if codes.len() != xs.len() {
+                return Err("length mismatch".into());
+            }
+            let max_code = (1u32 << bits) - 1;
+            if codes.iter().any(|&c| c > max_code) {
+                return Err(format!("code exceeds {max_code}"));
+            }
+            // Dequantized values survive a second quantize+pack exactly.
+            let vals = bitpack::unpack(&p);
+            let p2 = bitpack::pack(&vals, *bits).map_err(|e| e.to_string())?;
+            if bitpack::unpack_codes(&p2).len() != codes.len() {
+                return Err("repack length mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn word_packer_bitstream_matches_scalar_ref() {
+    check(
+        "fastpath-pack-parity",
+        256,
+        |rng| {
+            let bits = 1 + rng.below(16) as u32;
+            let len = 1 + rng.below_usize(300);
+            (rand_vec(rng, len), bits)
+        },
+        |(xs, bits)| {
+            let fast = bitpack::pack(xs, *bits).map_err(|e| e.to_string())?;
+            let slow = bitpack::pack_ref(xs, *bits).map_err(|e| e.to_string())?;
+            if fast != slow {
+                return Err(format!("byte stream differs at {bits} bits"));
+            }
+            if bitpack::unpack_codes(&fast) != bitpack::unpack_codes_ref(&fast) {
+                return Err("unpack_codes differs".into());
+            }
+            let (f, r) = (bitpack::unpack(&fast), bitpack::unpack_ref(&fast));
+            if f.iter().zip(&r).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err("unpack differs".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantplan_kernel_matches_scalar_ref() {
+    check(
+        "fastpath-quant-parity",
+        256,
+        |rng| {
+            let len = 1 + rng.below_usize(300);
+            // Half the cases integer bitlengths (alpha == 0 shortcut),
+            // half fractional; scale varies over orders of magnitude.
+            let n = if rng.below(2) == 0 {
+                (1 + rng.below(16)) as f32
+            } else {
+                rng.range_f32(1.0, 16.0)
+            };
+            let scale = 10f32.powi(rng.below(5) as i32 - 2);
+            let xs: Vec<f32> =
+                (0..len).map(|_| rng.normal_f32(0.0, scale)).collect();
+            (xs, n)
+        },
+        |(xs, n)| {
+            let mut fast = xs.clone();
+            quant::fake_quant_slice(&mut fast, *n);
+            let mut slow = xs.clone();
+            quant::fake_quant_slice_ref(&mut slow, *n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                if f.to_bits() != s.to_bits() {
+                    return Err(format!("elem {i}: {f} vs {s} (n={n})"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn blocked_gemm_matches_scalar_ref() {
+    check(
+        "fastpath-gemm-parity",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(12);
+            let din = 1 + rng.below_usize(48);
+            let dout = 1 + rng.below_usize(40);
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let relu = rng.below(2) == 0;
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            (n, din, dout, wb, ab, relu, x, w, b)
+        },
+        |(n, din, dout, wb, ab, relu, x, w, b)| {
+            let layer = IntDense::new("p", w, *din, *dout, b, *wb, *ab, *relu)
+                .map_err(|e| e.to_string())?;
+            let fast = layer.forward(x, *n);
+            let slow = layer.forward_ref(x, *n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                if f.to_bits() != s.to_bits() {
+                    return Err(format!(
+                        "({n},{din},{dout}) bits ({wb},{ab}) elem {i}: {f} vs {s}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

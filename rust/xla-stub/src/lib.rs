@@ -1,0 +1,298 @@
+//! Offline stand-in for the `xla` PJRT bindings crate.
+//!
+//! The coordinator's `runtime` module programs against a small slice of
+//! the real crate's API (`PjRtClient::cpu` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`).  This stub keeps the whole workspace
+//! building and testable in environments without the XLA C library:
+//!
+//! * [`Literal`] is **fully functional** as a host staging buffer
+//!   (`vec1`, `reshape`, `array_shape`, `to_vec`) — the
+//!   `runtime::convert` round-trip tests run against it for real.
+//! * [`HloModuleProto::from_text_file`] performs a cheap structural
+//!   check (the file must start with `HloModule`), so malformed
+//!   artifacts are still rejected loudly.
+//! * [`PjRtLoadedExecutable::execute`] returns an error: compiled
+//!   artifacts cannot run without the real backend.  Everything gated on
+//!   `rust/artifacts/*.hlo.txt` skips before reaching this point.
+//!
+//! Swap the `xla` path dependency in `rust/Cargo.toml` for the real
+//! bindings to run the AOT artifacts; no call-site changes needed.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type; mirrors the real crate's opaque error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+/// XLA primitive element types (the subset the artifacts use, plus a
+/// few extras so downstream `match` arms keep a reachable wildcard).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    U32,
+    F32,
+    F64,
+}
+
+/// Array shape of a [`Literal`]: dims + element type.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Storage {
+    fn element_type(&self) -> ElementType {
+        match self {
+            Storage::F32(_) => ElementType::F32,
+            Storage::I32(_) => ElementType::S32,
+            Storage::U32(_) => ElementType::U32,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::U32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types [`Literal`] can stage. Implemented for `f32`, `i32`,
+/// `u32` — the dtypes the exported artifacts use.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn vec1_literal(v: &[Self]) -> Literal
+    where
+        Self: Sized;
+    #[doc(hidden)]
+    fn extract(lit: &Literal) -> Result<Vec<Self>>
+    where
+        Self: Sized;
+}
+
+macro_rules! native_type {
+    ($t:ty, $variant:ident, $name:literal) => {
+        impl NativeType for $t {
+            fn vec1_literal(v: &[Self]) -> Literal {
+                Literal {
+                    dims: vec![v.len() as i64],
+                    storage: Storage::$variant(v.to_vec()),
+                }
+            }
+
+            fn extract(lit: &Literal) -> Result<Vec<Self>> {
+                match &lit.storage {
+                    Storage::$variant(v) => Ok(v.clone()),
+                    other => err(format!(
+                        "literal holds {:?}, not {}",
+                        other.element_type(),
+                        $name
+                    )),
+                }
+            }
+        }
+    };
+}
+
+native_type!(f32, F32, "f32");
+native_type!(i32, I32, "i32");
+native_type!(u32, U32, "u32");
+
+/// Host-side literal: a dense row-major array. Fully functional in the
+/// stub (it is pure host memory).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::vec1_literal(v)
+    }
+
+    /// Same data viewed at different dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.storage.len() {
+            return err(format!(
+                "cannot reshape {} elements to {:?}",
+                self.storage.len(),
+                dims
+            ));
+        }
+        Ok(Literal { dims: dims.to_vec(), storage: self.storage.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.storage.element_type() })
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal. Stub literals are always arrays, so
+    /// this only errors — tuples come from executing real artifacts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        err("stub literal is not a tuple (PJRT execution is unavailable offline)")
+    }
+}
+
+/// Parsed HLO module. The stub retains the text and only validates the
+/// leading `HloModule` header, which is enough to reject non-HLO input.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading '{}': {e}", path.display())))?;
+        if !text.trim_start().starts_with("HloModule") {
+            return err(format!(
+                "'{}' is not HLO text (missing HloModule header)",
+                path.display()
+            ));
+        }
+        Ok(Self { text })
+    }
+}
+
+/// Computation handle built from a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Output buffer handle. In the stub nothing ever produces one, but the
+/// type keeps `execute`'s signature identical to the real crate.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err("PJRT execution is unavailable in the offline xla stub")
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Always errors: running compiled artifacts needs the real PJRT
+    /// backend. (Reached only when artifacts exist but the stub is in
+    /// use — the gated tests skip long before this.)
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(
+            "PJRT execution is unavailable: built against the offline xla stub — \
+             point rust/Cargo.toml's `xla` dependency at the real bindings to run artifacts",
+        )
+    }
+}
+
+/// PJRT client handle. Construction succeeds (so artifact-directory
+/// validation and HLO parsing still run); only execution is unavailable.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (no PJRT backend)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(shape.element_type(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[7]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(r.to_tuple().is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let lit = Literal::vec1(&[42u32]).reshape(&[]).unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(lit.to_vec::<u32>().unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn hlo_header_validated() {
+        let dir = std::env::temp_dir().join("xla-stub-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("good.hlo.txt");
+        std::fs::write(&good, "HloModule m\nENTRY e { ROOT c = f32[] constant(0) }").unwrap();
+        assert!(HloModuleProto::from_text_file(&good).is_ok());
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "this is not HLO").unwrap();
+        assert!(HloModuleProto::from_text_file(&bad).is_err());
+    }
+
+    #[test]
+    fn execution_is_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let exe = client.compile(&XlaComputation).unwrap();
+        assert!(exe.execute::<Literal>(&[]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}

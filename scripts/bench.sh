@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Run the inference fast-path benches and record the perf trajectory at
+# the repo root as BENCH_infer.json.
+#
+# Usage:
+#   scripts/bench.sh            # full budgets
+#   QUICK=1 scripts/bench.sh    # halved budgets (--quick)
+#
+# Each bench target appends JSONL records via $BENCH_OUT (see
+# util::bench::Bench::flush_jsonl); this script merges them and derives
+# fast-vs-ref speedups for every */foo vs */foo_ref pair.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+tmp="$(mktemp)"
+trap 'rm -f "$tmp"' EXIT
+export BENCH_OUT="$tmp"
+
+quick="${QUICK:+--quick}"
+
+(cd rust && cargo bench --bench quantizer -- $quick)
+(cd rust && cargo bench --bench intnet -- $quick)
+# end_to_end needs AOT artifacts; it self-skips (and records nothing)
+# when they are absent.
+(cd rust && cargo bench --bench end_to_end -- $quick)
+
+python3 - "$tmp" BENCH_infer.json <<'PY'
+import json
+import sys
+
+recs = [json.loads(line) for line in open(sys.argv[1]) if line.strip()]
+by_name = {r["name"]: r for r in recs}
+
+speedups = {}
+for name, ref in by_name.items():
+    # pair "<stage>_ref<suffix>" with "<stage><suffix>"
+    if "_ref" not in name:
+        continue
+    fast = by_name.get(name.replace("_ref", "", 1))
+    if fast and ref.get("mean_s") and fast.get("mean_s"):
+        speedups[fast["name"]] = round(ref["mean_s"] / fast["mean_s"], 2)
+
+doc = {"suite": "infer-fastpath", "benches": recs, "speedup_vs_ref": speedups}
+with open(sys.argv[2], "w") as f:
+    json.dump(doc, f, indent=2)
+    f.write("\n")
+print(f"wrote {sys.argv[2]}: {len(recs)} records, {len(speedups)} speedup pairs")
+PY
