@@ -1,0 +1,90 @@
+//! Serving-engine benchmarks on the mlp artifact shapes
+//! (32→256→128→10, python/compile/models.py): the pooled,
+//! buffer-reusing `ServeEngine` against per-call `IntNet::forward`
+//! (fresh Vec per layer, scoped thread spawn per large GEMM), plus the
+//! full micro-batching server round trip under closed-loop client
+//! load.  `scripts/bench.sh` merges the JSONL records into
+//! `BENCH_serve.json` with `speedup_vs_ref` pairs — the acceptance
+//! number for the serve subsystem is `serve/forward/*` beating
+//! `serve/forward_ref/*`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitprune::serve::{synthetic_mlp, ServeConfig, ServeEngine, Server};
+use bitprune::util::bench::Bench;
+use bitprune::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Rng::new(0x5E4E);
+
+    let net = Arc::new(synthetic_mlp(0x5E4E, 4, 8));
+    // MACs per sample across 32x256 + 256x128 + 128x10.
+    let macs_per_sample: f64 = (32 * 256 + 256 * 128 + 128 * 10) as f64;
+    let mut engine = ServeEngine::new(Arc::clone(&net), 0);
+
+    // Engine (persistent pool + ping-pong scratch) vs per-call forward
+    // (the `_ref` baseline) at serving-typical batch sizes.
+    for &n in &[1usize, 8, 64] {
+        let x: Vec<f32> =
+            (0..n * 32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let tag = format!("mlp/bs{n}");
+        let elems = macs_per_sample * n as f64;
+        b.run_elems(&format!("serve/forward/{tag}"), elems, || {
+            engine.forward(&x, n).len()
+        });
+        b.run_elems(&format!("serve/forward_ref/{tag}"), elems, || {
+            net.forward(&x, n)
+        });
+        if let (Some(f), Some(s)) = (
+            b.result(&format!("serve/forward/{tag}")),
+            b.result(&format!("serve/forward_ref/{tag}")),
+        ) {
+            println!("  -> serve/forward/{tag}: {:.2}x vs per-call", s.mean / f.mean);
+        }
+    }
+
+    // Full server round trip: 8 closed-loop clients x 32 requests per
+    // iteration through the micro-batching queue.
+    let (clients, per_client) = (8usize, 32usize);
+    let server = Server::start(
+        Arc::clone(&net),
+        ServeConfig {
+            threads: 0,
+            max_batch: clients,
+            batch_window: Duration::from_micros(100),
+            ..ServeConfig::default()
+        },
+    )
+    .expect("server starts");
+    let pools: Vec<Vec<Vec<f32>>> = (0..clients)
+        .map(|_| {
+            (0..per_client)
+                .map(|_| (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect()
+        })
+        .collect();
+    let total = (clients * per_client) as f64;
+    b.run_elems("serve/server/8clients_x32req", total, || {
+        std::thread::scope(|scope| {
+            for pool in &pools {
+                let handle = server.handle();
+                scope.spawn(move || {
+                    for x in pool {
+                        handle.infer(x.clone()).expect("request served");
+                    }
+                });
+            }
+        });
+    });
+    let stats = server.shutdown();
+    println!(
+        "  -> server saw {} requests in {} batches (mean batch {:.1})",
+        stats.requests,
+        stats.batches,
+        stats.mean_batch()
+    );
+
+    b.flush_jsonl();
+}

@@ -41,15 +41,28 @@ pub struct PackedTensor {
     pub data: Vec<u8>,
 }
 
+/// Serialized header of one packed tensor: bits, len, lmin, scale
+/// (4 × 4 bytes).  Every footprint number in the crate uses the same
+/// convention: payload **plus** this header ([`PackedTensor::stored_bytes`]).
+pub const HEADER_BYTES: usize = 16;
+
 impl PackedTensor {
     /// Packed payload size in bytes (excluding the fixed header).
     pub fn payload_bytes(&self) -> usize {
         self.data.len()
     }
 
-    /// Compression ratio vs f32 storage.
+    /// Stored size in bytes: payload plus the [`HEADER_BYTES`] header —
+    /// the single footprint convention shared with
+    /// [`pack_network`] and `infer::IntDense::packed_bytes`.
+    pub fn stored_bytes(&self) -> usize {
+        self.data.len() + HEADER_BYTES
+    }
+
+    /// Compression ratio vs f32 storage, header included (same
+    /// convention as [`Self::stored_bytes`]).
     pub fn ratio_vs_f32(&self) -> f64 {
-        (self.len * 4) as f64 / self.payload_bytes().max(1) as f64
+        (self.len * 4) as f64 / self.stored_bytes() as f64
     }
 }
 
@@ -264,8 +277,7 @@ pub fn pack_network(
         let ib = quant::clip_bits(b).ceil() as u32;
         let p = pack(xs, ib)?;
         let f32_bytes = xs.len() * 4;
-        // 16-byte header per tensor (bits, len, lmin, scale).
-        let packed_bytes = p.payload_bytes() + 16;
+        let packed_bytes = p.stored_bytes();
         per_layer.push((name.clone(), f32_bytes, packed_bytes));
         total_f32 += f32_bytes;
         total_packed += packed_bytes;
@@ -412,7 +424,102 @@ mod tests {
     fn compression_ratio() {
         let xs = vec![1.0f32; 1000];
         let p = pack(&xs, 4).unwrap();
-        assert!((p.ratio_vs_f32() - 8.0).abs() < 0.1); // 32/4
+        // 4000 f32 bytes vs 500 payload + 16 header: one convention,
+        // header included, everywhere.
+        let want = 4000.0 / (500.0 + HEADER_BYTES as f64);
+        assert!((p.ratio_vs_f32() - want).abs() < 1e-12);
+        assert!(p.ratio_vs_f32() > 7.5); // ~32/4 once the header amortizes
+    }
+
+    #[test]
+    fn footprint_convention_is_consistent() {
+        // stored_bytes == payload + header, and pack_network's totals
+        // are exactly the sum of stored_bytes — no second convention.
+        let xs = vec![0.25f32; 300];
+        let p = pack(&xs, 3).unwrap();
+        assert_eq!(p.stored_bytes(), p.payload_bytes() + HEADER_BYTES);
+        let tensors = vec![("a".to_string(), xs.as_slice()), ("b".to_string(), xs.as_slice())];
+        let (packed, report) = pack_network(&tensors, &[3.0, 5.0]).unwrap();
+        let sum: usize = packed.iter().map(|p| p.stored_bytes()).sum();
+        assert_eq!(report.total_packed_bytes, sum);
+        for (p, (_, _, stored)) in packed.iter().zip(&report.per_layer) {
+            assert_eq!(p.stored_bytes(), *stored);
+        }
+        // Empty tensors still carry their header.
+        assert_eq!(pack(&[], 4).unwrap().stored_bytes(), HEADER_BYTES);
+    }
+
+    #[test]
+    fn word_accumulator_exact_fill_boundaries() {
+        // Lengths where the u64 accumulator lands on exactly 64 filled
+        // bits (the `fill == 64` flush with no carry) — for every
+        // bitlength that divides 64 — plus the surrounding lengths.
+        let mut rng = Rng::new(0xF111);
+        for &bits in &[1u32, 2, 4, 8, 16] {
+            let per_word = (64 / bits) as usize;
+            for words in [1usize, 2, 3] {
+                for delta in [-1isize, 0, 1] {
+                    let len = (per_word * words) as isize + delta;
+                    if len < 1 {
+                        continue;
+                    }
+                    let xs: Vec<f32> =
+                        (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let fast = pack(&xs, bits).unwrap();
+                    let slow = pack_ref(&xs, bits).unwrap();
+                    assert_eq!(fast, slow, "bits={bits} len={len}");
+                    assert_eq!(
+                        unpack_codes(&fast),
+                        unpack_codes_ref(&slow),
+                        "bits={bits} len={len}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sixteen_bit_odd_lengths() {
+        // bits=16 is the widest code: words straddle at every odd
+        // length, and the tail flush writes 2, 4 or 6 bytes.
+        let mut rng = Rng::new(0x16B1);
+        for len in [1usize, 3, 5, 7, 9, 11, 13, 15, 17] {
+            let xs: Vec<f32> =
+                (0..len).map(|_| rng.normal_f32(0.0, 3.0)).collect();
+            let fast = pack(&xs, 16).unwrap();
+            let slow = pack_ref(&xs, 16).unwrap();
+            assert_eq!(fast, slow, "len={len}");
+            assert_eq!(fast.payload_bytes(), len * 2);
+            assert_eq!(unpack_codes(&fast).len(), len);
+        }
+    }
+
+    #[test]
+    fn pack_unpack_code_roundtrip_property() {
+        // pack -> unpack_codes reproduces exactly the codes the
+        // quantization plan assigns, for random bitlengths and lengths.
+        check(
+            "bitpack-code-roundtrip",
+            256,
+            |rng: &mut Rng| {
+                let bits = 1 + rng.below(16) as u32;
+                let len = 1 + rng.below_usize(200);
+                let xs: Vec<f32> =
+                    (0..len).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                (xs, bits)
+            },
+            |(xs, bits)| {
+                let plan = quant::QuantPlan::from_slice(xs, *bits as f32);
+                let levels = ((1u64 << bits) - 1) as i64;
+                let want: Vec<u32> =
+                    xs.iter().map(|&x| plan.code(x, levels)).collect();
+                let got = unpack_codes(&pack(xs, *bits).map_err(|e| e.to_string())?);
+                if got != want {
+                    return Err(format!("codes diverge at {bits} bits"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -14,7 +14,9 @@ use crate::runtime::{Executable, Runtime};
 use crate::schedule::{PhaseCursor, PhasePlan};
 use crate::tensor::HostTensor;
 
-/// Eval batches used for *periodic* evals (full test set at stage ends).
+/// Cap on eval batches for the cheap *periodic* mid-phase evals.
+/// Stage-boundary and final evals are uncapped (`usize::MAX`) and run
+/// the full test set.
 const PERIODIC_EVAL_BATCHES: usize = 8;
 
 /// Accuracy/bits snapshot at a stage boundary (one Table II column set).
@@ -414,7 +416,7 @@ impl<'a> Trainer<'a> {
     /// Post-training evaluation session over fixed parameters: probes
     /// arbitrary bitlength assignments (profiled / MPDNN baselines).
     pub fn session<'s>(&'s self, params: &'s [HostTensor]) -> EvalSession<'s> {
-        EvalSession { trainer: self, params }
+        EvalSession { trainer: self, params, act_min: None, act_max: None }
     }
 }
 
@@ -422,6 +424,11 @@ impl<'a> Trainer<'a> {
 pub struct EvalSession<'s> {
     trainer: &'s Trainer<'s>,
     params: &'s [HostTensor],
+    /// Calibrated per-layer activation ranges (see
+    /// [`Self::with_calibration`]); `None` keeps the dynamic per-batch
+    /// convention.
+    act_min: Option<Vec<f32>>,
+    act_max: Option<Vec<f32>>,
 }
 
 impl EvalSession<'_> {
@@ -450,11 +457,34 @@ impl EvalSession<'_> {
         Ok(self.trainer.eval(&state, max_batches)?.accuracy)
     }
 
+    /// Attach calibrated per-layer activation ranges — typically the
+    /// trainer's full-test-set aggregates
+    /// (`RunOutcome::{act_min, act_max}` /
+    /// `EvalOutcome::{act_min, act_max}`).  [`Self::int_net`] then
+    /// builds batch-invariant deployment nets (static ranges, the
+    /// serving convention) instead of dynamic per-batch ones.
+    pub fn with_calibration(mut self, act_min: Vec<f32>, act_max: Vec<f32>) -> Self {
+        self.act_min = Some(act_min);
+        self.act_max = Some(act_max);
+        self
+    }
+
     /// Build the pure-integer deployment net ([`crate::infer::IntNet`])
     /// for this session's trained parameters at the given (ceiled)
-    /// bitlengths. Dense models only.
+    /// bitlengths. Dense models only.  Carries the calibrated ranges
+    /// when [`Self::with_calibration`] supplied them.
     pub fn int_net(&self, bits_w: &[f32], bits_a: &[f32]) -> Result<crate::infer::IntNet> {
-        crate::infer::IntNet::from_trained(&self.trainer.meta, self.params, bits_w, bits_a)
+        let ranges = match (&self.act_min, &self.act_max) {
+            (Some(lo), Some(hi)) => Some((lo.as_slice(), hi.as_slice())),
+            _ => None,
+        };
+        crate::infer::IntNet::from_trained(
+            &self.trainer.meta,
+            self.params,
+            bits_w,
+            bits_a,
+            ranges,
+        )
     }
 
     /// Accuracy of the **pure-integer deployment path** at the given

@@ -7,7 +7,7 @@
 //! trained dense network that way:
 //!
 //! ```text
-//! a = a_min + a_code·a_s          (activation codes from batch min/max)
+//! a = a_min + a_code·a_s          (activation codes; calibrated or batch min/max)
 //! w = w_min + w_code·w_s          (weight codes packed at n_w bits)
 //! Σ a·w = a_s·w_s·Σ a_code·w_code            <- i64 integer core
 //!       + a_s·w_min·Σ a_code                 <- i64 row sum
@@ -33,6 +33,18 @@
 //! shared, the two paths are bit-identical (pinned by the
 //! `fastpath_parity` tests).
 //!
+//! Activation ranges: by default each batch quantizes against its own
+//! min/max (the training-time convention, paper §II-A) — which makes a
+//! sample's logits depend on what else shares its batch.  Deployment
+//! instead uses **static calibrated ranges** (one `(lo, hi)` per layer,
+//! e.g. aggregated over the test set by the trainer's eval pass):
+//! attach them via [`IntNet::from_trained`] / [`IntNet::set_act_ranges`]
+//! / [`IntNet::calibrate`] and per-sample logits become **bit-identical
+//! for every batch composition** — the batch-invariance guarantee the
+//! `serve` subsystem builds on.  The dynamic per-batch fallback stays
+//! available (and applies to both `forward` and `forward_ref`, which
+//! share `quantize_acts`, so fast/ref parity holds either way).
+//!
 //! Scope: dense (MLP-style) networks — the artifact family whose
 //! deployment story is pure GEMM.  Conv models deploy the same way via
 //! im2col; see DESIGN.md §future-work.
@@ -43,6 +55,7 @@ use crate::bitpack::{pack, unpack_codes, PackedTensor};
 use crate::model::ModelMeta;
 use crate::quant;
 use crate::tensor::HostTensor;
+use crate::util::pool::WorkerPool;
 
 /// Below this many MACs per call the GEMM stays single-threaded (the
 /// spawn cost would dominate).
@@ -68,6 +81,33 @@ pub struct IntDense {
     /// Activation bitlength for this layer's input.
     pub a_bits: u32,
     pub relu: bool,
+    /// Calibrated activation range for this layer's input.  `None`
+    /// falls back to each batch's own min/max (batch-dependent logits).
+    act_range: Option<(f32, f32)>,
+}
+
+/// Reusable per-layer scratch for [`IntDense::forward_scratch`]: the
+/// activation codes, row code sums and hoisted affine tables that
+/// `forward` otherwise allocates fresh on every call.
+#[derive(Debug, Default)]
+pub struct LayerScratch {
+    codes: Vec<u16>,
+    row_sum: Vec<i64>,
+    t: Vec<f64>,
+    u: Vec<f64>,
+}
+
+/// Reusable whole-network buffers for [`IntNet::forward_into`]:
+/// ping-pong activation planes plus one [`LayerScratch`].  After the
+/// first call at a given batch size the activation/code/affine buffers
+/// are all reused; the only remaining per-call allocations are the
+/// O(threads) job boxes when a layer is large enough to dispatch onto
+/// the worker pool.
+#[derive(Debug, Default)]
+pub struct NetScratch {
+    ping: Vec<f32>,
+    pong: Vec<f32>,
+    layer: LayerScratch,
 }
 
 impl IntDense {
@@ -110,22 +150,56 @@ impl IntDense {
             bias: bias.to_vec(),
             a_bits,
             relu,
+            act_range: None,
         })
     }
 
-    /// Quantize a batch of activations to integer codes using the batch
+    /// Pin this layer's input quantization to a calibrated `[lo, hi]`
+    /// range (static/offline calibration — the deployment convention).
+    /// Degenerate ranges (`lo == hi`) are safe: the quantizer's epsilon
+    /// guard keeps the scale finite.
+    pub fn set_act_range(&mut self, lo: f32, hi: f32) {
+        self.act_range = Some((lo, hi));
+    }
+
+    /// The calibrated input range, if one is set.
+    pub fn act_range(&self) -> Option<(f32, f32)> {
+        self.act_range
+    }
+
+    /// Quantize a batch of activations to integer codes — against the
+    /// calibrated range when one is set, else against the batch's own
     /// min/max (the training-time convention, paper §II-A). Returns
     /// `(codes, per-row code sums, a_scale, a_min)`. Shared by the fast
     /// and reference paths so both see identical codes.
     fn quantize_acts(&self, x: &[f32], n: usize) -> (Vec<u16>, Vec<i64>, f32, f32) {
-        let (a_min, a_max) = quant::group_minmax(x);
+        let mut codes = Vec::new();
+        let mut row_sum = Vec::new();
+        let (a_scale, a_min) = self.quantize_acts_into(x, n, &mut codes, &mut row_sum);
+        (codes, row_sum, a_scale, a_min)
+    }
+
+    /// Buffer-reusing core of [`Self::quantize_acts`].
+    fn quantize_acts_into(
+        &self,
+        x: &[f32],
+        n: usize,
+        codes: &mut Vec<u16>,
+        row_sum: &mut Vec<i64>,
+    ) -> (f32, f32) {
+        let (a_min, a_max) = match self.act_range {
+            Some(r) => r,
+            None => quant::group_minmax(x),
+        };
         let plan = quant::QuantPlan::new(a_min, a_max, self.a_bits as f32);
         let levels = ((1u32 << self.a_bits) - 1) as i64;
-        let mut a_codes = vec![0u16; n * self.din];
-        let mut row_code_sum = vec![0i64; n];
-        for (rs, (row_x, row_c)) in row_code_sum
+        codes.clear();
+        codes.resize(n * self.din, 0);
+        row_sum.clear();
+        row_sum.resize(n, 0);
+        for (rs, (row_x, row_c)) in row_sum
             .iter_mut()
-            .zip(x.chunks_exact(self.din).zip(a_codes.chunks_exact_mut(self.din)))
+            .zip(x.chunks_exact(self.din).zip(codes.chunks_exact_mut(self.din)))
         {
             let mut sum = 0i64;
             for (v, c) in row_x.iter().zip(row_c.iter_mut()) {
@@ -135,7 +209,7 @@ impl IntDense {
             }
             *rs = sum;
         }
-        (a_codes, row_code_sum, plan.s_lo, a_min)
+        (plan.s_lo, a_min)
     }
 
     /// Hoisted affine-reconstruction terms: `out = s·acc + t[r] + u[j]`
@@ -148,22 +222,66 @@ impl IntDense {
         a_min: f32,
         row_code_sum: &[i64],
     ) -> (f64, Vec<f64>, Vec<f64>) {
+        let mut t = Vec::new();
+        let mut u = Vec::new();
+        let s = self.affine_terms_into(a_scale, a_min, row_code_sum, &mut t, &mut u);
+        (s, t, u)
+    }
+
+    /// Buffer-reusing core of [`Self::affine_terms`].
+    fn affine_terms_into(
+        &self,
+        a_scale: f32,
+        a_min: f32,
+        row_code_sum: &[i64],
+        t: &mut Vec<f64>,
+        u: &mut Vec<f64>,
+    ) -> f64 {
         let ws = self.w_scale as f64;
         let asc = a_scale as f64;
         let wmin = self.w_min as f64;
         let amin = a_min as f64;
         let k = self.din as f64;
-        let t: Vec<f64> = row_code_sum
-            .iter()
-            .map(|&rs| asc * wmin * rs as f64 + k * amin * wmin)
-            .collect();
-        let u: Vec<f64> = self
-            .col_code_sum
-            .iter()
-            .zip(&self.bias)
-            .map(|(&cs, &b)| ws * amin * cs as f64 + b as f64)
-            .collect();
-        (ws * asc, t, u)
+        t.clear();
+        t.extend(
+            row_code_sum
+                .iter()
+                .map(|&rs| asc * wmin * rs as f64 + k * amin * wmin),
+        );
+        u.clear();
+        u.extend(
+            self.col_code_sum
+                .iter()
+                .zip(&self.bias)
+                .map(|(&cs, &b)| ws * amin * cs as f64 + b as f64),
+        );
+        ws * asc
+    }
+
+    /// Split matching rows of (activation codes, per-row affine terms,
+    /// output) into per-worker blocks.  Both parallel dispatchers
+    /// (`forward`'s scoped threads, `forward_scratch`'s pool) consume
+    /// this, so the boundary invariant — each output chunk lines up
+    /// with its codes/t rows — lives in exactly one place.
+    fn row_blocks<'a>(
+        &self,
+        a: &'a [u16],
+        t: &'a [f64],
+        out: &'a mut [f32],
+        threads: usize,
+    ) -> Vec<(&'a [u16], &'a [f64], &'a mut [f32])> {
+        let rows_per = t.len().div_ceil(threads);
+        let mut blocks = Vec::with_capacity(threads);
+        for (idx, out_chunk) in out.chunks_mut(rows_per * self.dout).enumerate() {
+            let r0 = idx * rows_per;
+            let rows = out_chunk.len() / self.dout;
+            blocks.push((
+                &a[r0 * self.din..(r0 + rows) * self.din],
+                &t[r0..r0 + rows],
+                out_chunk,
+            ));
+        }
+        blocks
     }
 
     /// How many worker threads the GEMM should use for an `n`-row batch.
@@ -243,23 +361,58 @@ impl IntDense {
         if threads <= 1 {
             self.gemm_block(&a_codes, &t, &u, s, &mut out);
         } else {
-            let rows_per = n.div_ceil(threads);
             let u = &u;
-            let t = &t;
-            let a_codes = &a_codes;
             std::thread::scope(|scope| {
-                for (idx, out_chunk) in
-                    out.chunks_mut(rows_per * self.dout).enumerate()
+                for (a, tb, out_chunk) in
+                    self.row_blocks(&a_codes, &t, &mut out, threads)
                 {
-                    let r0 = idx * rows_per;
-                    let rows = out_chunk.len() / self.dout;
-                    let a = &a_codes[r0 * self.din..(r0 + rows) * self.din];
-                    let tb = &t[r0..r0 + rows];
                     scope.spawn(move || self.gemm_block(a, tb, u, s, out_chunk));
                 }
             });
         }
         out
+    }
+
+    /// Serving-path forward: same computation as [`Self::forward`]
+    /// (bit-identical — the GEMM kernel, quantizer and affine terms are
+    /// shared), but writes into a caller-provided `out` slice, reuses
+    /// `sc`'s buffers instead of allocating, and dispatches row blocks
+    /// onto a persistent [`WorkerPool`] instead of spawning scoped
+    /// threads.  With `pool: None` (or below the MAC threshold) the
+    /// GEMM runs inline.
+    pub fn forward_scratch(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &mut LayerScratch,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) {
+        assert_eq!(x.len(), n * self.din, "{}: bad input", self.name);
+        assert_eq!(out.len(), n * self.dout, "{}: bad output", self.name);
+        if n == 0 || self.din == 0 || self.dout == 0 {
+            out.fill(0.0);
+            return;
+        }
+        let (a_scale, a_min) =
+            self.quantize_acts_into(x, n, &mut sc.codes, &mut sc.row_sum);
+        let s = self.affine_terms_into(a_scale, a_min, &sc.row_sum, &mut sc.t, &mut sc.u);
+        let threads = match pool {
+            Some(p) if n * self.din * self.dout >= PAR_MIN_MACS => p.workers().min(n),
+            _ => 1,
+        };
+        if threads <= 1 {
+            self.gemm_block(&sc.codes, &sc.t, &sc.u, s, out);
+        } else {
+            let pool = pool.unwrap();
+            let u = &sc.u;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(threads);
+            for (a, tb, out_chunk) in self.row_blocks(&sc.codes, &sc.t, out, threads) {
+                jobs.push(Box::new(move || self.gemm_block(a, tb, u, s, out_chunk)));
+            }
+            pool.run_scoped(jobs);
+        }
     }
 
     /// Retained scalar reference: the original cache-hostile `(r, j, c)`
@@ -303,9 +456,11 @@ impl IntDense {
         out
     }
 
-    /// Storage of this layer in packed form (bytes).
+    /// Storage of this layer in packed form (bytes): the packed weight
+    /// tensor at the shared convention ([`PackedTensor::stored_bytes`],
+    /// header included) plus the f32 bias.
     pub fn packed_bytes(&self) -> usize {
-        self.packed.payload_bytes() + 16 + self.bias.len() * 4
+        self.packed.stored_bytes() + self.bias.len() * 4
     }
 }
 
@@ -322,11 +477,19 @@ impl IntNet {
     /// `params` are in the artifact's flattened order (`meta.param_names`
     /// e.g. `["0/b", "0/w", "1/b", ...]`); only dense-kind models are
     /// supported.
+    ///
+    /// `act_ranges` carries calibrated per-layer activation ranges
+    /// (`(act_min, act_max)`, one entry per layer — e.g. the trainer's
+    /// `EvalOutcome::{act_min, act_max}` aggregated over the test set).
+    /// With ranges attached, per-sample logits are **bit-identical for
+    /// every batch composition**; `None` keeps the dynamic per-batch
+    /// min/max fallback (batch-dependent logits).
     pub fn from_trained(
         meta: &ModelMeta,
         params: &[HostTensor],
         bits_w: &[f32],
         bits_a: &[f32],
+        act_ranges: Option<(&[f32], &[f32])>,
     ) -> Result<Self> {
         if meta.layers.iter().any(|l| l.kind != "dense") {
             bail!(
@@ -336,6 +499,25 @@ impl IntNet {
         }
         if params.len() != meta.num_params {
             bail!("params len {} != meta {}", params.len(), meta.num_params);
+        }
+        let nl = meta.layers.len();
+        if bits_w.len() != nl || bits_a.len() != nl {
+            bail!(
+                "bitlength vectors ({} weight, {} activation entries) do not match {} layers",
+                bits_w.len(),
+                bits_a.len(),
+                nl
+            );
+        }
+        if let Some((lo, hi)) = act_ranges {
+            if lo.len() != nl || hi.len() != nl {
+                bail!(
+                    "act_ranges ({} min, {} max entries) do not match {} layers",
+                    lo.len(),
+                    hi.len(),
+                    nl
+                );
+            }
         }
         let find = |name: &str| -> Result<&HostTensor> {
             meta.param_names
@@ -350,7 +532,7 @@ impl IntNet {
             let w = find(&format!("{i}/w"))?;
             let b = find(&format!("{i}/b"))?;
             let (din, dout) = (geom.cin, geom.cout);
-            layers.push(IntDense::new(
+            let mut layer = IntDense::new(
                 &geom.name,
                 w.as_f32()?,
                 din,
@@ -359,9 +541,61 @@ impl IntNet {
                 quant::clip_bits(bits_w[i]).ceil() as u32,
                 quant::clip_bits(bits_a[i]).ceil() as u32,
                 i != last,
-            )?);
+            )?;
+            if let Some((lo, hi)) = act_ranges {
+                layer.set_act_range(lo[i], hi[i]);
+            }
+            layers.push(layer);
         }
         Ok(Self { layers, num_classes: meta.num_classes })
+    }
+
+    /// Attach calibrated per-layer activation ranges to an existing net
+    /// (one `(lo, hi)` per layer, layer order).
+    pub fn set_act_ranges(&mut self, act_min: &[f32], act_max: &[f32]) -> Result<()> {
+        if act_min.len() != self.layers.len() || act_max.len() != self.layers.len() {
+            bail!(
+                "act ranges ({} min, {} max entries) do not match {} layers",
+                act_min.len(),
+                act_max.len(),
+                self.layers.len()
+            );
+        }
+        for ((layer, &lo), &hi) in self.layers.iter_mut().zip(act_min).zip(act_max) {
+            layer.set_act_range(lo, hi);
+        }
+        Ok(())
+    }
+
+    /// Whether every layer has a calibrated activation range (the
+    /// precondition for batch-invariant logits).
+    pub fn is_calibrated(&self) -> bool {
+        self.layers.iter().all(|l| l.act_range().is_some())
+    }
+
+    /// Self-calibrate on a representative batch: run it through the net
+    /// layer by layer, pinning each layer's input range to the batch's
+    /// min/max before forwarding through it (standard offline
+    /// post-training calibration).  After this, forwards are
+    /// batch-invariant.
+    pub fn calibrate(&mut self, x: &[f32], n: usize) -> Result<()> {
+        if self.layers.is_empty() {
+            return Ok(());
+        }
+        if n == 0 || x.len() != n * self.layers[0].din {
+            bail!(
+                "calibrate: {} values is not a [{n}, {}] batch",
+                x.len(),
+                self.layers[0].din
+            );
+        }
+        let mut h = x.to_vec();
+        for layer in &mut self.layers {
+            let (lo, hi) = quant::group_minmax(&h);
+            layer.set_act_range(lo, hi);
+            h = layer.forward(&h, n);
+        }
+        Ok(())
     }
 
     /// Forward a batch, returning logits [n, num_classes].
@@ -373,19 +607,32 @@ impl IntNet {
         h
     }
 
+    /// Serving-path forward: bit-identical to [`Self::forward`], but
+    /// reuses `sc`'s ping-pong activation buffers (no per-layer `Vec`
+    /// allocation after the first call) and runs each layer's GEMM on
+    /// the given persistent [`WorkerPool`] instead of spawning scoped
+    /// threads.  Returns the logits slice `[n, num_classes]`, borrowed
+    /// from the scratch.
+    pub fn forward_into<'s>(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &'s mut NetScratch,
+        pool: Option<&WorkerPool>,
+    ) -> &'s [f32] {
+        sc.ping.clear();
+        sc.ping.extend_from_slice(x);
+        for layer in &self.layers {
+            sc.pong.resize(n * layer.dout, 0.0);
+            layer.forward_scratch(&sc.ping, n, &mut sc.layer, &mut sc.pong, pool);
+            std::mem::swap(&mut sc.ping, &mut sc.pong);
+        }
+        &sc.ping
+    }
+
     /// Classify a batch.
     pub fn predict(&self, x: &[f32], n: usize) -> Vec<usize> {
-        let logits = self.forward(x, n);
-        (0..n)
-            .map(|r| {
-                let row = &logits[r * self.num_classes..(r + 1) * self.num_classes];
-                row.iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.total_cmp(b.1))
-                    .map(|(i, _)| i)
-                    .unwrap()
-            })
-            .collect()
+        argmax_rows(&self.forward(x, n), self.num_classes)
     }
 
     /// Total packed model size in bytes.
@@ -400,6 +647,23 @@ impl IntNet {
             .map(|l| (l.din * l.dout + l.dout) * 4)
             .sum()
     }
+}
+
+/// Per-row argmax over `[n, nc]` logits — the one classification rule
+/// every prediction surface shares ([`IntNet::predict`], the serve
+/// engine).  Ties resolve to the highest index, NaN-safe via
+/// `total_cmp`.
+pub fn argmax_rows(logits: &[f32], nc: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(nc)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -519,6 +783,143 @@ mod tests {
         let w = vec![0.0f32; 10];
         assert!(IntDense::new("x", &w, 3, 4, &[0.0; 4], 4, 4, true).is_err());
         assert!(IntDense::new("x", &w, 5, 2, &[0.0; 3], 4, 4, true).is_err());
+    }
+
+    #[test]
+    fn forward_scratch_matches_forward_bitwise() {
+        // The buffer-reusing serving path must be bit-identical to the
+        // allocating path — dynamic and calibrated, pooled and inline,
+        // across odd shapes, with the scratch reused between calls.
+        let mut rng = Rng::new(0x5E41);
+        let pool = crate::util::pool::WorkerPool::new(3);
+        let mut sc = LayerScratch::default();
+        for &(n, din, dout, calibrated) in &[
+            (1usize, 1usize, 1usize, false),
+            (3, 5, 7, true),
+            (8, 17, 13, false),
+            (67, 128, 128, true), // crosses PAR_MIN_MACS -> pooled GEMM
+        ] {
+            let x = rand_vec(&mut rng, n * din);
+            let w = rand_vec(&mut rng, din * dout);
+            let b = rand_vec(&mut rng, dout);
+            let mut layer =
+                IntDense::new("sc", &w, din, dout, &b, 4, 4, true).unwrap();
+            if calibrated {
+                layer.set_act_range(-2.5, 2.5);
+            }
+            let want = layer.forward(&x, n);
+            let mut got = vec![0.0f32; n * dout];
+            layer.forward_scratch(&x, n, &mut sc, &mut got, Some(&pool));
+            for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w_.to_bits(),
+                    "({n},{din},{dout}) calibrated={calibrated} elem {i}"
+                );
+            }
+            // Inline (pool-less) dispatch too.
+            let mut inline = vec![0.0f32; n * dout];
+            layer.forward_scratch(&x, n, &mut sc, &mut inline, None);
+            assert!(inline.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn calibrated_layer_is_batch_invariant() {
+        // With a pinned range, a sample's output must not depend on its
+        // batch neighbours; dynamically the same setup does differ.
+        let mut rng = Rng::new(0xCAFE);
+        let (din, dout) = (9, 6);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let sample = rand_vec(&mut rng, din);
+        // An outlier neighbour that stretches the dynamic batch range.
+        let mut outlier = rand_vec(&mut rng, din);
+        outlier[0] = 40.0;
+        let mut batch = sample.clone();
+        batch.extend_from_slice(&outlier);
+
+        let mut layer = IntDense::new("inv", &w, din, dout, &b, 3, 3, false).unwrap();
+        let dyn_solo = layer.forward(&sample, 1);
+        let dyn_pair = layer.forward(&batch, 2);
+        assert!(
+            dyn_solo
+                .iter()
+                .zip(&dyn_pair[..dout])
+                .any(|(a, b)| a.to_bits() != b.to_bits()),
+            "dynamic ranges should make logits batch-dependent here"
+        );
+
+        layer.set_act_range(-3.0, 3.0);
+        let cal_solo = layer.forward(&sample, 1);
+        let cal_pair = layer.forward(&batch, 2);
+        for (a, b) in cal_solo.iter().zip(&cal_pair[..dout]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "calibrated logits must be invariant");
+        }
+    }
+
+    #[test]
+    fn net_calibrate_pins_every_layer() {
+        let mut rng = Rng::new(11);
+        let l0 = IntDense::new(
+            "fc0", &rand_vec(&mut rng, 6 * 10), 6, 10, &vec![0.0; 10], 4, 4, true,
+        )
+        .unwrap();
+        let l1 = IntDense::new(
+            "fc1", &rand_vec(&mut rng, 10 * 4), 10, 4, &vec![0.0; 4], 4, 4, false,
+        )
+        .unwrap();
+        let mut net = IntNet { layers: vec![l0, l1], num_classes: 4 };
+        assert!(!net.is_calibrated());
+        let calib = rand_vec(&mut rng, 32 * 6);
+        net.calibrate(&calib, 32).unwrap();
+        assert!(net.is_calibrated());
+        // Layer 1's input is post-ReLU: its calibrated range starts >= 0.
+        let (lo, _) = net.layers[1].act_range().unwrap();
+        assert!(lo >= 0.0);
+        // Bad calibration shapes are rejected.
+        assert!(net.calibrate(&calib, 5).is_err());
+        assert!(net.set_act_ranges(&[0.0], &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn from_trained_validates_lengths() {
+        let j = crate::util::json::parse(&crate::model::tiny_meta_json()).unwrap();
+        let meta = ModelMeta::from_json(&j).unwrap();
+        let mut rng = Rng::new(3);
+        let params = vec![
+            HostTensor::f32(&[8, 16], rand_vec(&mut rng, 128)).unwrap(),
+            HostTensor::f32(&[16], rand_vec(&mut rng, 16)).unwrap(),
+            HostTensor::f32(&[16, 3], rand_vec(&mut rng, 48)).unwrap(),
+            HostTensor::f32(&[3], rand_vec(&mut rng, 3)).unwrap(),
+        ];
+        let bits = vec![4.0f32; 2];
+        // Short bitlength vector: error, not a panic or silent truncation.
+        assert!(IntNet::from_trained(&meta, &params, &[4.0], &bits, None).is_err());
+        // Mismatched calibration vectors: error.
+        let short_lo = [0.0f32];
+        let hi = [1.0f32, 1.0];
+        assert!(IntNet::from_trained(
+            &meta,
+            &params,
+            &bits,
+            &bits,
+            Some((&short_lo[..], &hi[..]))
+        )
+        .is_err());
+        // Well-formed calibrated build pins every layer.
+        let lo = [-1.0f32, 0.0];
+        let hi = [1.0f32, 5.0];
+        let net = IntNet::from_trained(
+            &meta,
+            &params,
+            &bits,
+            &bits,
+            Some((&lo[..], &hi[..])),
+        )
+        .unwrap();
+        assert!(net.is_calibrated());
+        assert_eq!(net.layers[1].act_range(), Some((0.0, 5.0)));
     }
 
     #[test]

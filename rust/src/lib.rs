@@ -30,5 +30,6 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -57,6 +57,7 @@ fn run() -> Result<()> {
         "hlo" => cmd_hlo(&args),
         "pack" => cmd_pack(&args),
         "infer" => cmd_infer(&args),
+        "serve" => cmd_serve(&args),
         "fig" => cmd_fig(&args),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -82,6 +83,9 @@ COMMANDS:
   hlo         static cost analysis of the compiled artifacts
   pack        train + bit-pack weights; report real storage footprint
   infer       pure-integer inference vs the compiled eval artifact
+  serve       batched integer serving engine: throughput + latency
+                percentiles (--requests N --batch-window USEC
+                --max-batch N --clients N --threads N --synthetic)
   fig         render figure 1/3 ASCII charts from a reports/<run>.json
 
 OPTIONS (common):
@@ -372,10 +376,16 @@ fn cmd_infer(args: &Args) -> Result<()> {
     eprintln!("training {} to learn bitlengths...", cfg.model);
     let trainer = bitprune::coordinator::Trainer::new(&rt, &cfg)?;
     let out = trainer.run()?;
-    // Build the integer net once (packing + tiling every layer), then
-    // reuse it for both footprint reporting and the accuracy pass.
-    let session = trainer.session(&out.final_params);
+    // Build the integer net once (packing + tiling every layer), with
+    // the trainer's full-test-set activation ranges as calibration —
+    // the deployment convention: logits no longer depend on batch
+    // composition.  Reused for footprint reporting and the accuracy
+    // pass.
+    let session = trainer
+        .session(&out.final_params)
+        .with_calibration(out.act_min.clone(), out.act_max.clone());
     let net = session.int_net(&out.final_.bits_w, &out.final_.bits_a)?;
+    eprintln!("integer net calibrated: batch-invariant logits");
 
     // Integer path over the full test split (blocked i64 GEMM, no PJRT).
     let int_acc = session.int_net_accuracy(&net, usize::MAX)?;
@@ -395,6 +405,140 @@ fn cmd_infer(args: &Args) -> Result<()> {
         bail!("integer inference deviates {:.2}pp from the XLA path", gap * 100.0);
     }
     println!("INTEGER INFERENCE OK (gap {:.2}pp)", gap * 100.0);
+    Ok(())
+}
+
+/// Train (when artifacts permit) and return a calibrated integer net.
+fn trained_calibrated_net(cfg: &RunConfig) -> Result<bitprune::infer::IntNet> {
+    let rt = Runtime::cpu(&cfg.artifact_dir)?;
+    eprintln!("training {} to learn bitlengths...", cfg.model);
+    let trainer = bitprune::coordinator::Trainer::new(&rt, cfg)?;
+    let out = trainer.run()?;
+    let session = trainer
+        .session(&out.final_params)
+        .with_calibration(out.act_min.clone(), out.act_max.clone());
+    session.int_net(&out.final_.bits_w, &out.final_.bits_a)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // The batched integer-serving engine under synthetic closed-loop
+    // load: N client threads fire single-sample requests, the server
+    // micro-batches them (latency-deadline + max-batch flush), and we
+    // report throughput plus latency percentiles.  Because the net is
+    // calibrated, every answer is bit-identical to the sample's solo
+    // forward regardless of how it was batched.
+    use bitprune::serve::{ServeConfig, Server};
+    use bitprune::util::bench::{append_jsonl, BenchResult};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let mut cfg = base_config(args)?;
+    if args.get("model").is_none() {
+        cfg.model = "mlp".into();
+        cfg.dataset = "blobs".into();
+    }
+    let requests = args.get_usize("requests", 1024)?;
+    if requests == 0 {
+        bail!("serve: --requests must be >= 1");
+    }
+    let window_us = args.get_u64("batch-window", 500)?;
+    let max_batch = args.get_usize("max-batch", 64)?;
+    let max_queue = args.get_usize("max-queue", 4096)?;
+    let clients = args.get_usize("clients", 4)?.max(1);
+    let threads = args.get_usize("threads", 0)?;
+    // Same convention as from_trained/pack: clip, then ceil.
+    let bits = quant::clip_bits(args.get_f64("bits", 4.0)? as f32).ceil() as u32;
+
+    let net = if args.flag("synthetic") {
+        eprintln!("serving the synthetic calibrated mlp fixture ({bits}-bit)");
+        bitprune::serve::synthetic_mlp(cfg.seed, bits, bits)
+    } else {
+        match trained_calibrated_net(&cfg) {
+            Ok(net) => net,
+            Err(e) => {
+                eprintln!(
+                    "training unavailable ({e:#}); \
+                     serving the synthetic calibrated mlp fixture instead"
+                );
+                bitprune::serve::synthetic_mlp(cfg.seed, bits, bits)
+            }
+        }
+    };
+    let net = Arc::new(net);
+    let din = net.layers.first().map(|l| l.din).unwrap_or(0);
+
+    let server = Server::start(
+        Arc::clone(&net),
+        ServeConfig {
+            threads,
+            max_batch,
+            max_queue,
+            batch_window: Duration::from_micros(window_us),
+        },
+    )?;
+    eprintln!(
+        "serving {requests} requests from {clients} clients \
+         (max_batch {max_batch}, window {window_us}us)..."
+    );
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(requests);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let handle = server.handle();
+            let n_req = requests / clients + usize::from(c < requests % clients);
+            joins.push(scope.spawn(move || -> Result<Vec<f64>> {
+                let mut rng = Rng::new(0xC11E47 + c as u64);
+                let mut lats = Vec::with_capacity(n_req);
+                for _ in 0..n_req {
+                    let x: Vec<f32> =
+                        (0..din).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let t = Instant::now();
+                    handle.infer(x)?;
+                    lats.push(t.elapsed().as_secs_f64());
+                }
+                Ok(lats)
+            }));
+        }
+        for j in joins {
+            latencies.extend(j.join().expect("client thread panicked")?);
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+
+    let lat = BenchResult::from_samples("serve/request_latency", latencies, None);
+    println!("{}", lat.report());
+    println!(
+        "served {} requests in {:.3}s -> {:.0} req/s | \
+         p50 {:.0}us p95 {:.0}us p99 {:.0}us | \
+         {} batches, mean batch {:.1}",
+        stats.requests,
+        wall,
+        stats.requests as f64 / wall,
+        lat.median * 1e6,
+        lat.p95 * 1e6,
+        lat.percentile(99.0) * 1e6,
+        stats.batches,
+        stats.mean_batch(),
+    );
+
+    // Unbatched per-call baseline (allocating IntNet::forward, batch 1)
+    // over a subset, for context in the same report format.
+    let probe = requests.min(256);
+    let mut rng = Rng::new(0xBA5E);
+    let mut base_lats = Vec::with_capacity(probe);
+    for _ in 0..probe {
+        let x: Vec<f32> = (0..din).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let t = Instant::now();
+        std::hint::black_box(net.forward(&x, 1));
+        base_lats.push(t.elapsed().as_secs_f64());
+    }
+    let base = BenchResult::from_samples("serve/percall_forward_bs1", base_lats, None);
+    println!("{}", base.report());
+    append_jsonl(&[lat, base]);
     Ok(())
 }
 
@@ -450,7 +594,17 @@ trait CliOpts {
 impl CliOpts for RunConfig {
     fn cli_value_opts_extended() -> Vec<&'static str> {
         let mut v = RunConfig::cli_value_opts();
-        v.extend_from_slice(&["gammas", "models", "bits"]);
+        v.extend_from_slice(&[
+            "gammas",
+            "models",
+            "bits",
+            "requests",
+            "batch-window",
+            "max-batch",
+            "max-queue",
+            "clients",
+            "threads",
+        ]);
         v
     }
 }

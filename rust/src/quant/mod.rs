@@ -214,8 +214,22 @@ pub fn mean_bits(bits: &[f32]) -> f64 {
 // Cost accounting (footprint / MAC criteria — paper §III-A5, Table IV)
 // ---------------------------------------------------------------------------
 
+/// All cost-accounting functions take one bitlength entry per layer.
+/// Enforced uniformly: a short vector used to panic in [`mac_cost`]
+/// (raw indexing) but silently truncate in the footprint functions
+/// (`zip` stops early — wrong totals, no error).
+fn assert_per_layer(what: &str, got: usize, meta: &ModelMeta) {
+    assert_eq!(
+        got,
+        meta.layers.len(),
+        "{what}: {got} bitlength entries for a {}-layer model",
+        meta.layers.len()
+    );
+}
+
 /// Weight-memory footprint in bits for given per-layer weight bitlengths.
 pub fn weight_footprint_bits(meta: &ModelMeta, bits_w: &[f32]) -> f64 {
+    assert_per_layer("weight_footprint_bits", bits_w.len(), meta);
     meta.layers
         .iter()
         .zip(bits_w)
@@ -227,6 +241,7 @@ pub fn weight_footprint_bits(meta: &ModelMeta, bits_w: &[f32]) -> f64 {
 /// convention, weights count fully while activations count as the
 /// *largest* single layer (what must be resident at once).
 pub fn act_footprint_bits(meta: &ModelMeta, bits_a: &[f32], batch: usize) -> f64 {
+    assert_per_layer("act_footprint_bits", bits_a.len(), meta);
     meta.layers
         .iter()
         .zip(bits_a)
@@ -249,10 +264,12 @@ pub fn total_footprint_bits(
 /// paper's MAC-weighted regularizer minimizes (bit-serial hardware cost
 /// scales with operand bitlength).
 pub fn mac_cost(meta: &ModelMeta, bits_w: &[f32], bits_a: &[f32]) -> f64 {
+    assert_per_layer("mac_cost (weights)", bits_w.len(), meta);
+    assert_per_layer("mac_cost (activations)", bits_a.len(), meta);
     meta.layers
         .iter()
-        .enumerate()
-        .map(|(i, l)| l.macs as f64 * (clip_bits(bits_w[i]) + clip_bits(bits_a[i])) as f64)
+        .zip(bits_w.iter().zip(bits_a))
+        .map(|(l, (&bw, &ba))| l.macs as f64 * (clip_bits(bw) + clip_bits(ba)) as f64)
         .sum()
 }
 
@@ -677,6 +694,24 @@ mod tests {
             total_footprint_bits(&meta, &b8, &b8, 2),
             weight_footprint_bits(&meta, &b8) + af
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "weight_footprint_bits: 1 bitlength entries")]
+    fn weight_footprint_rejects_short_bits() {
+        weight_footprint_bits(&tiny_meta(), &[4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "act_footprint_bits: 3 bitlength entries")]
+    fn act_footprint_rejects_long_bits() {
+        act_footprint_bits(&tiny_meta(), &[4.0, 4.0, 4.0], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "mac_cost (activations): 1 bitlength entries")]
+    fn mac_cost_rejects_short_bits() {
+        mac_cost(&tiny_meta(), &[4.0, 4.0], &[4.0]);
     }
 
     #[test]

@@ -1,0 +1,87 @@
+//! The serving forward executor: persistent threads + reusable buffers.
+
+use std::sync::Arc;
+
+use crate::infer::{IntNet, NetScratch};
+use crate::util::pool::WorkerPool;
+
+/// Owns everything repeated forwards need so the hot loop spawns no
+/// threads and reuses its activation/code buffers: a persistent
+/// [`WorkerPool`] for the GEMM row blocks and a [`NetScratch`] of
+/// ping-pong activation planes (pooled dispatch still boxes O(threads)
+/// jobs per large layer).
+/// One engine serves one thread of control (forwards take `&mut self`);
+/// the batcher in [`super::Server`] owns exactly one.
+pub struct ServeEngine {
+    net: Arc<IntNet>,
+    pool: WorkerPool,
+    scratch: NetScratch,
+}
+
+impl ServeEngine {
+    /// `threads == 0` sizes the pool to the machine.
+    pub fn new(net: Arc<IntNet>, threads: usize) -> Self {
+        let pool = if threads == 0 {
+            WorkerPool::with_default_size()
+        } else {
+            WorkerPool::new(threads)
+        };
+        Self { net, pool, scratch: NetScratch::default() }
+    }
+
+    pub fn net(&self) -> &IntNet {
+        &self.net
+    }
+
+    /// Forward a `[n, din]` batch; returns logits `[n, num_classes]`
+    /// borrowed from the engine's scratch.  Bit-identical to
+    /// `IntNet::forward` on the same net.
+    pub fn forward(&mut self, x: &[f32], n: usize) -> &[f32] {
+        let Self { net, pool, scratch } = self;
+        net.forward_into(x, n, scratch, Some(&*pool))
+    }
+
+    /// Classify a batch (same argmax rule as [`IntNet::predict`]).
+    pub fn predict(&mut self, x: &[f32], n: usize) -> Vec<usize> {
+        let nc = self.net.num_classes;
+        let logits = self.forward(x, n);
+        crate::infer::argmax_rows(logits, nc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::synthetic_net;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn engine_matches_percall_forward_bitwise() {
+        let net = Arc::new(synthetic_net(&[12, 31, 5], 0xE6, 4, 6));
+        let mut engine = ServeEngine::new(Arc::clone(&net), 2);
+        let mut rng = Rng::new(9);
+        for &n in &[1usize, 3, 17] {
+            let x: Vec<f32> =
+                (0..n * 12).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let want = net.forward(&x, n);
+            let got = engine.forward(&x, n);
+            assert_eq!(got.len(), want.len());
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "engine forward diverged at batch {n}"
+            );
+        }
+        assert_eq!(engine.predict(&[0.1; 12], 1), net.predict(&[0.1; 12], 1));
+    }
+
+    #[test]
+    fn engine_reuses_buffers_across_batch_sizes() {
+        // Growing then shrinking batch sizes must keep shapes right.
+        let net = Arc::new(synthetic_net(&[8, 16, 4], 1, 4, 4));
+        let mut engine = ServeEngine::new(Arc::clone(&net), 1);
+        for &n in &[1usize, 64, 7, 64, 1] {
+            let x = vec![0.25f32; n * 8];
+            assert_eq!(engine.forward(&x, n).len(), n * 4);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The integer serving subsystem: batch-invariant deployment of the
+//! learned bitlengths at production request rates.
+//!
+//! Built on the calibrated quantization semantics in [`crate::infer`]
+//! (static per-layer activation ranges ⇒ per-sample logits do not
+//! depend on batch composition), this module adds the three pieces a
+//! serving loop needs that one-off batch eval does not:
+//!
+//! * [`ServeEngine`] — a forward executor that owns a persistent
+//!   [`crate::util::pool::WorkerPool`] (no per-call thread spawn/join)
+//!   and a [`crate::infer::NetScratch`] of ping-pong activation
+//!   buffers (no per-layer activation/code-buffer allocation after
+//!   warm-up; pooled dispatch still costs O(threads) small job
+//!   allocations per large layer).
+//! * [`Server`] / [`ServerHandle`] — a dynamic micro-batching request
+//!   queue: single-sample requests coalesce until `max_batch` are
+//!   waiting or the oldest has waited `batch_window`, whichever comes
+//!   first; the flushed batch runs once through the engine and each
+//!   caller gets its own logits row back.  Batch-invariance is what
+//!   makes this sound: a request's answer is bit-identical whether it
+//!   was served alone or coalesced with 63 strangers.
+//! * Synthetic fixtures ([`synthetic_net`] / [`synthetic_mlp`]) — a
+//!   calibrated random network on the mlp artifact shapes
+//!   (32→256→128→10, python/compile/models.py), so `bitprune serve`,
+//!   `benches/serve.rs` and the tests run without AOT artifacts.
+//!
+//! Entry points: `bitprune serve` (CLI, throughput + latency
+//! percentiles) and `benches/serve.rs` (engine vs per-call
+//! `IntNet::forward`, recorded in `BENCH_serve.json`).
+
+mod engine;
+mod server;
+
+pub use engine::ServeEngine;
+pub use server::{ServeConfig, ServeStats, Server, ServerHandle};
+
+use crate::infer::{IntDense, IntNet};
+use crate::util::rng::Rng;
+
+/// Build a random dense network over `dims` (e.g. `[32, 256, 128, 10]`:
+/// three layers, ReLU between, logits out), quantized at
+/// `w_bits`/`a_bits`, **calibrated** on a synthetic batch so forwards
+/// are batch-invariant.  Fixture for the serve bench/CLI/tests when no
+/// trained artifact is available.
+pub fn synthetic_net(dims: &[usize], seed: u64, w_bits: u32, a_bits: u32) -> IntNet {
+    assert!(dims.len() >= 2, "synthetic_net needs at least one layer");
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for (i, pair) in dims.windows(2).enumerate() {
+        let (din, dout) = (pair[0], pair[1]);
+        let std = (1.0 / din as f32).sqrt();
+        let w: Vec<f32> = (0..din * dout).map(|_| rng.normal_f32(0.0, std)).collect();
+        let b: Vec<f32> = (0..dout).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+        let relu = i + 2 < dims.len();
+        layers.push(
+            IntDense::new(&format!("fc{i}"), &w, din, dout, &b, w_bits, a_bits, relu)
+                .expect("synthetic layer shapes are consistent"),
+        );
+    }
+    let num_classes = *dims.last().unwrap();
+    let mut net = IntNet { layers, num_classes };
+    let calib_n = 256;
+    let calib: Vec<f32> =
+        (0..calib_n * dims[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    net.calibrate(&calib, calib_n).expect("calibration batch is well-formed");
+    net
+}
+
+/// [`synthetic_net`] on the mlp artifact shapes (32→256→128→10).
+pub fn synthetic_mlp(seed: u64, w_bits: u32, a_bits: u32) -> IntNet {
+    synthetic_net(&[32, 256, 128, 10], seed, w_bits, a_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_mlp_is_calibrated_and_shaped() {
+        let net = synthetic_mlp(7, 4, 8);
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.layers[0].din, 32);
+        assert_eq!(net.layers[2].dout, 10);
+        assert_eq!(net.num_classes, 10);
+        assert!(net.is_calibrated());
+        assert!(net.layers[0].relu && !net.layers[2].relu);
+    }
+}

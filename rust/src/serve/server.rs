@@ -1,0 +1,443 @@
+//! Dynamic micro-batching request queue.
+//!
+//! Requests are single samples; a dedicated batcher thread coalesces
+//! them into batches (flushing when `max_batch` are waiting or the
+//! oldest request has waited `batch_window`, whichever comes first),
+//! runs each batch once through a [`ServeEngine`], and answers every
+//! caller with its own logits row.  Because the engine's net carries
+//! calibrated activation ranges, the answer is bit-identical however
+//! the request was batched.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::engine::ServeEngine;
+use crate::infer::IntNet;
+
+/// Knobs for the micro-batching serving loop.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// GEMM pool workers; `0` sizes to the machine.
+    pub threads: usize,
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush once the oldest queued request has waited this long since
+    /// it was enqueued (the latency deadline).
+    pub batch_window: Duration,
+    /// Backpressure bound: submissions are rejected while this many
+    /// requests are already queued (otherwise sustained overload grows
+    /// the queue — and memory, and tail latency — without limit).
+    pub max_queue: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            threads: 0,
+            max_batch: 64,
+            batch_window: Duration::from_micros(500),
+            max_queue: 4096,
+        }
+    }
+}
+
+/// Counters the batcher maintains while serving.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeStats {
+    pub batches: u64,
+    pub requests: u64,
+}
+
+impl ServeStats {
+    /// Mean coalesced batch size (0 if nothing served yet).
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    resp: Sender<Vec<f32>>,
+    /// When the request entered the queue — the batch-window deadline
+    /// counts from here, not from when the batcher gets around to it.
+    enqueued: Instant,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Request>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    /// Backpressure bound (ServeConfig::max_queue), fixed at start.
+    max_queue: usize,
+    batches: AtomicU64,
+    requests: AtomicU64,
+}
+
+/// The serving endpoint: owns the batcher thread.  Dropping (or
+/// calling [`Server::shutdown`]) drains the queue and joins the
+/// batcher; requests still queued at shutdown are served, requests
+/// submitted after it are rejected.
+pub struct Server {
+    shared: Arc<Shared>,
+    din: usize,
+    out_dim: usize,
+    batcher: Option<JoinHandle<()>>,
+}
+
+/// Cheap cloneable submission handle (safe to share across client
+/// threads).
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    din: usize,
+}
+
+impl Server {
+    /// Spin up the batcher around `net`.  The net should carry
+    /// calibrated activation ranges ([`IntNet::is_calibrated`]);
+    /// serving an uncalibrated net works but answers then depend on
+    /// batch composition, which micro-batching makes nondeterministic.
+    pub fn start(net: Arc<IntNet>, cfg: ServeConfig) -> Result<Self> {
+        let Some(first) = net.layers.first() else {
+            bail!("serve: refusing to serve an empty network");
+        };
+        if cfg.max_batch == 0 || cfg.max_queue == 0 {
+            bail!("serve: max_batch and max_queue must be at least 1");
+        }
+        let din = first.din;
+        let out_dim = net.layers.last().unwrap().dout;
+        if din == 0 || out_dim == 0 {
+            bail!("serve: degenerate network shape ({din} in, {out_dim} out)");
+        }
+        let engine = ServeEngine::new(Arc::clone(&net), cfg.threads);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            max_queue: cfg.max_queue,
+            batches: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+        });
+        let shared2 = Arc::clone(&shared);
+        let batcher = std::thread::Builder::new()
+            .name("bitprune-batcher".into())
+            .spawn(move || batcher_loop(shared2, engine, cfg, out_dim))
+            .map_err(|e| anyhow!("serve: spawning batcher thread: {e}"))?;
+        Ok(Self { shared, din, out_dim, batcher: Some(batcher) })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared), din: self.din }
+    }
+
+    /// Input dimensionality one request must carry.
+    pub fn input_dim(&self) -> usize {
+        self.din
+    }
+
+    /// Logits dimensionality one response carries.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            requests: self.shared.requests.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting work, serve what is queued, join the batcher.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop();
+        self.stats()
+    }
+
+    fn stop(&mut self) {
+        // Flip the flag while holding the queue lock so the batcher
+        // cannot check-then-sleep between our store and the notify.
+        {
+            let guard = self.shared.queue.lock();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+            drop(guard);
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl ServerHandle {
+    /// Enqueue one sample; returns the channel the logits row arrives
+    /// on.  Fails fast on wrong input length, a shut-down server, or a
+    /// full queue (backpressure — see [`ServeConfig::max_queue`]).
+    pub fn submit(&self, x: Vec<f32>) -> Result<Receiver<Vec<f32>>> {
+        if x.len() != self.din {
+            bail!("serve: request has {} values, model wants {}", x.len(), self.din);
+        }
+        let (tx, rx) = channel();
+        {
+            let mut q = self
+                .shared
+                .queue
+                .lock()
+                .map_err(|_| anyhow!("serve: request queue poisoned"))?;
+            // Check shutdown *under the queue lock*: stop() flips the
+            // flag under this lock, so a request enqueued here is
+            // guaranteed to be seen by the batcher's drain pass — no
+            // window where a request slips in after the batcher exited
+            // and blocks its caller forever.
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                bail!("serve: server is shut down");
+            }
+            if q.len() >= self.shared.max_queue {
+                bail!(
+                    "serve: queue full ({} requests) — backpressure, retry later",
+                    q.len()
+                );
+            }
+            q.push_back(Request { x, resp: tx, enqueued: Instant::now() });
+        }
+        self.shared.cv.notify_all();
+        Ok(rx)
+    }
+
+    /// Submit and block for the answer.
+    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+        self.submit(x)?
+            .recv()
+            .map_err(|_| anyhow!("serve: server dropped the request"))
+    }
+}
+
+/// Marks the server dead when the batcher exits for *any* reason —
+/// including a panic unwinding out of the forward (e.g. a worker-pool
+/// job panicked).  Sets the shutdown flag, drops every queued request
+/// (their response Senders drop, so blocked `infer` callers get a
+/// clean error instead of hanging) and wakes everyone.
+struct BatcherGuard(Arc<Shared>);
+
+impl Drop for BatcherGuard {
+    fn drop(&mut self) {
+        self.0.shutdown.store(true, Ordering::SeqCst);
+        match self.0.queue.lock() {
+            Ok(mut q) => q.clear(),
+            Err(poisoned) => poisoned.into_inner().clear(),
+        }
+        self.0.cv.notify_all();
+    }
+}
+
+fn batcher_loop(
+    shared: Arc<Shared>,
+    mut engine: ServeEngine,
+    cfg: ServeConfig,
+    out_dim: usize,
+) {
+    let _guard = BatcherGuard(Arc::clone(&shared));
+    let mut gather: Vec<f32> = Vec::new();
+    let mut batch: Vec<Request> = Vec::new();
+    loop {
+        batch.clear();
+        {
+            let mut q = match shared.queue.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            // Wait for the first request; exit only when shut down AND
+            // drained (late-queued requests still get served).
+            while q.is_empty() {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = match shared.cv.wait(q) {
+                    Ok(g) => g,
+                    Err(_) => return,
+                };
+            }
+            // Dynamic micro-batching: flush at max_batch or when the
+            // *oldest* request's latency deadline (its enqueue time
+            // plus batch_window) expires — requests that queued while a
+            // previous batch was computing have already burned part of
+            // their window.
+            let deadline = q
+                .front()
+                .map(|r| r.enqueued + cfg.batch_window)
+                .expect("queue is non-empty here");
+            while q.len() < cfg.max_batch && !shared.shutdown.load(Ordering::SeqCst) {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                q = match shared.cv.wait_timeout(q, deadline - now) {
+                    Ok((g, _)) => g,
+                    Err(_) => return,
+                };
+            }
+            let take = q.len().min(cfg.max_batch);
+            batch.extend(q.drain(..take));
+        } // queue unlocked before the forward: submitters never block on compute
+        let n = batch.len();
+        gather.clear();
+        for r in &batch {
+            gather.extend_from_slice(&r.x);
+        }
+        let logits = engine.forward(&gather, n);
+        for (row, r) in logits.chunks_exact(out_dim).zip(&batch) {
+            // A client that gave up (dropped its Receiver) is not an
+            // error for the batch.
+            let _ = r.resp.send(row.to_vec());
+        }
+        shared.batches.fetch_add(1, Ordering::Relaxed);
+        shared.requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::synthetic_net;
+    use crate::util::rng::Rng;
+
+    fn small_net() -> Arc<IntNet> {
+        Arc::new(synthetic_net(&[6, 14, 3], 0x5EED, 4, 6))
+    }
+
+    #[test]
+    fn served_answers_match_solo_forward_bitwise() {
+        // The heart of the batch-invariance guarantee at the server
+        // level: whatever coalescing happens inside, each answer equals
+        // the sample's solo forward, bit for bit.
+        let net = small_net();
+        let server = Server::start(
+            Arc::clone(&net),
+            ServeConfig {
+                threads: 2,
+                max_batch: 8,
+                batch_window: Duration::from_millis(5),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        let mut rng = Rng::new(42);
+        let samples: Vec<Vec<f32>> = (0..40)
+            .map(|_| (0..6).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let pending: Vec<_> = samples
+            .iter()
+            .map(|s| handle.submit(s.clone()).unwrap())
+            .collect();
+        for (s, rx) in samples.iter().zip(pending) {
+            let got = rx.recv().unwrap();
+            let want = net.forward(s, 1);
+            assert_eq!(got.len(), want.len());
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "served answer differs from solo forward"
+            );
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 40);
+        assert!(stats.batches >= 5, "max_batch 8 over 40 requests => >= 5 batches");
+        assert!(stats.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn window_flush_serves_partial_batches() {
+        // Fewer requests than max_batch must still be answered once the
+        // latency deadline passes.
+        let server = Server::start(
+            small_net(),
+            ServeConfig {
+                threads: 1,
+                max_batch: 64,
+                batch_window: Duration::from_millis(2),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        let out = handle.infer(vec![0.5; 6]).unwrap();
+        assert_eq!(out.len(), 3);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.batches, 1);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_served() {
+        // Constant batches and all-zero (post-ReLU-like) inputs must
+        // not divide by zero or poison the batcher.
+        let server = Server::start(small_net(), ServeConfig::default()).unwrap();
+        let handle = server.handle();
+        for x in [vec![0.0f32; 6], vec![1.0f32; 6], vec![-7.5f32; 6]] {
+            let out = handle.infer(x).unwrap();
+            assert_eq!(out.len(), 3);
+            assert!(out.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn submit_validates_and_shutdown_rejects() {
+        let server = Server::start(small_net(), ServeConfig::default()).unwrap();
+        let handle = server.handle();
+        assert!(handle.submit(vec![0.0; 5]).is_err(), "wrong input length");
+        server.shutdown();
+        assert!(handle.infer(vec![0.0; 6]).is_err(), "server is gone");
+    }
+
+    #[test]
+    fn start_rejects_bad_configs() {
+        let empty = Arc::new(IntNet { layers: vec![], num_classes: 0 });
+        assert!(Server::start(empty, ServeConfig::default()).is_err());
+        let cfg = ServeConfig { max_batch: 0, ..ServeConfig::default() };
+        assert!(Server::start(small_net(), cfg).is_err());
+        let cfg = ServeConfig { max_queue: 0, ..ServeConfig::default() };
+        assert!(Server::start(small_net(), cfg).is_err());
+    }
+
+    #[test]
+    fn queue_backpressure_rejects_overflow() {
+        // max_batch and window both out of reach: nothing drains until
+        // shutdown, so the 9th submission must hit the max_queue bound
+        // deterministically instead of growing the queue without limit.
+        let server = Server::start(
+            small_net(),
+            ServeConfig {
+                threads: 1,
+                max_batch: 64,
+                batch_window: Duration::from_secs(30),
+                max_queue: 8,
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        let _pending: Vec<_> = (0..8)
+            .map(|_| handle.submit(vec![0.1; 6]).unwrap())
+            .collect();
+        let err = handle.submit(vec![0.1; 6]).unwrap_err();
+        assert!(err.to_string().contains("queue full"), "{err}");
+        // Shutdown still drains and answers the queued 8 without
+        // waiting out the 30s window.
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 8);
+    }
+}

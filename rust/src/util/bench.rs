@@ -44,6 +44,28 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Build a result from externally collected duration samples in
+    /// seconds (e.g. per-request serving latencies) so ad-hoc harnesses
+    /// share the same reporting/JSONL pipeline as [`Bench`].
+    pub fn from_samples(name: &str, mut samples: Vec<f64>, elems_per_iter: Option<f64>) -> Self {
+        assert!(!samples.is_empty(), "from_samples: no samples for '{name}'");
+        samples.sort_by(|a, b| a.total_cmp(b));
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        Self {
+            name: name.to_string(),
+            mean,
+            median: percentile(&samples, 50.0),
+            p95: percentile(&samples, 95.0),
+            samples,
+            elems_per_iter,
+        }
+    }
+
+    /// Arbitrary percentile over the recorded (sorted) samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile(&self.samples, p)
+    }
+
     pub fn throughput(&self) -> Option<f64> {
         self.elems_per_iter.map(|e| e / self.mean)
     }
@@ -203,22 +225,29 @@ impl Bench {
 
     /// If `$BENCH_OUT` is set, append one JSON line per result to that
     /// file (JSONL — every bench target contributes to the same
-    /// trajectory file; `scripts/bench.sh` merges it into
-    /// `BENCH_infer.json`).
+    /// trajectory file; `scripts/bench.sh` merges it into the
+    /// `BENCH_*.json` suite files).
     pub fn flush_jsonl(&self) {
-        let Ok(path) = std::env::var("BENCH_OUT") else { return };
-        if path.is_empty() {
-            return;
-        }
-        use std::io::Write;
-        match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
-            Ok(mut f) => {
-                for r in &self.results {
-                    let _ = writeln!(f, "{}", r.to_json());
-                }
+        append_jsonl(&self.results);
+    }
+}
+
+/// Append results to `$BENCH_OUT` as JSONL (no-op when unset).  Shared
+/// by [`Bench::flush_jsonl`] and harnesses that build [`BenchResult`]s
+/// directly (e.g. `bitprune serve`).
+pub fn append_jsonl(results: &[BenchResult]) {
+    let Ok(path) = std::env::var("BENCH_OUT") else { return };
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write;
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            for r in results {
+                let _ = writeln!(f, "{}", r.to_json());
             }
-            Err(e) => eprintln!("bench: cannot open BENCH_OUT '{path}': {e}"),
         }
+        Err(e) => eprintln!("bench: cannot open BENCH_OUT '{path}': {e}"),
     }
 }
 
@@ -268,6 +297,17 @@ mod tests {
         assert_eq!(b.results().len(), 2);
         assert!(b.result("a").is_some());
         assert!(b.result("zzz").is_none());
+    }
+
+    #[test]
+    fn from_samples_sorts_and_summarizes() {
+        let r = BenchResult::from_samples("lat", vec![3.0, 1.0, 2.0, 4.0], Some(1.0));
+        assert_eq!(r.samples, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((r.mean - 2.5).abs() < 1e-12);
+        assert!((r.median - 2.5).abs() < 1e-12);
+        assert!((r.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((r.percentile(100.0) - 4.0).abs() < 1e-12);
+        assert!(r.report().contains("lat"));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,198 @@
+//! A persistent worker pool for the serving-path GEMM.
+//!
+//! `IntDense::forward` parallelizes with `std::thread::scope`, which
+//! spawns (and joins) fresh OS threads on every call — fine for one-off
+//! batch evals, hostile to a serving loop that forwards thousands of
+//! micro-batches per second.  [`WorkerPool`] spawns its threads once;
+//! [`WorkerPool::run_scoped`] hands them a set of jobs that may borrow
+//! from the caller's stack and blocks until every job has finished, so
+//! the borrowed data provably outlives the work (the same contract
+//! `std::thread::scope` provides, without the per-call spawn/join).
+//!
+//! Jobs must not call back into `run_scoped` on the same pool: a job
+//! waiting on jobs can deadlock once every worker is occupied.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A queued job plus the completion channel it must signal (`true` if
+/// the job ran to completion, `false` if it panicked).
+type Job = (Box<dyn FnOnce() + Send + 'static>, Sender<bool>);
+
+pub struct WorkerPool {
+    /// `None` only during drop (taking it closes the channel, which
+    /// terminates the worker loops).
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads (at least one).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("bitprune-pool-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawning worker-pool thread")
+            })
+            .collect();
+        Self { tx: Some(tx), handles, workers }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `jobs` on the pool and block until all of them have
+    /// completed.  Jobs may borrow data from the caller's stack: because
+    /// this method does not return until every job has signalled
+    /// completion, those borrows cannot be outlived (the
+    /// `std::thread::scope` guarantee).  Panics if any job panicked.
+    pub fn run_scoped<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let njobs = jobs.len();
+        if njobs == 0 {
+            return;
+        }
+        let (done_tx, done_rx) = channel::<bool>();
+        let tx = self.tx.as_ref().expect("worker pool is shut down");
+        for job in jobs {
+            // SAFETY: the loop below blocks until every job has sent its
+            // completion signal (workers signal even on panic, via
+            // catch_unwind), so no job — and no borrow it captured —
+            // survives past this call.  Extending the lifetime to
+            // 'static is therefore unobservable.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'a>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(job)
+            };
+            tx.send((job, done_tx.clone()))
+                .expect("worker pool channel closed");
+        }
+        let mut ok = true;
+        for _ in 0..njobs {
+            // recv cannot Err while we hold `done_tx`; workers always
+            // send exactly once per job.
+            ok &= done_rx.recv().expect("worker pool completion channel broken");
+        }
+        assert!(ok, "a worker-pool job panicked");
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // Hold the lock only while waiting for one message; the guard
+        // drops at the end of the statement, before the job runs.
+        let msg = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            guard.recv()
+        };
+        let (job, done) = match msg {
+            Ok(j) => j,
+            Err(_) => return, // pool dropped
+        };
+        let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+        let _ = done.send(ok);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the channel; workers exit their loops
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_over_borrowed_chunks() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u64; 1024];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(100)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 100 + j) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_rounds() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|_| {
+                    Box::new(|| {
+                        counter.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn empty_job_list_is_a_noop() {
+        let pool = WorkerPool::new(1);
+        pool.run_scoped(Vec::new());
+    }
+
+    #[test]
+    fn at_least_one_worker() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let boom: Vec<Box<dyn FnOnce() + Send + '_>> =
+            vec![Box::new(|| panic!("job boom"))];
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_scoped(boom);
+        }));
+        assert!(caught.is_err(), "panic should propagate to the caller");
+        // The worker that caught the panic keeps serving.
+        let flag = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            flag.store(7, Ordering::Relaxed);
+        })];
+        pool.run_scoped(jobs);
+        assert_eq!(flag.load(Ordering::Relaxed), 7);
+    }
+}

@@ -1,0 +1,185 @@
+//! Batch-invariance suite: with calibrated activation ranges, a
+//! sample's logits are **bit-identical** no matter which batch it is
+//! served in — the bugfix this PR pins (dynamic per-batch min/max made
+//! logits depend on batch composition) and the property the serve
+//! subsystem's micro-batching relies on.  Pure rust — runs without
+//! artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitprune::infer::NetScratch;
+use bitprune::serve::{synthetic_mlp, synthetic_net, ServeConfig, Server};
+use bitprune::util::rng::Rng;
+
+fn rand_batch(rng: &mut Rng, n: usize, din: usize) -> Vec<f32> {
+    (0..n * din).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+/// Forward `samples` through `net` at batch size `bs` and return the
+/// per-sample logits rows in order.
+fn logits_at_batch_size(
+    net: &bitprune::infer::IntNet,
+    samples: &[f32],
+    total: usize,
+    din: usize,
+    out_dim: usize,
+    bs: usize,
+) -> Vec<Vec<f32>> {
+    let mut rows = Vec::with_capacity(total);
+    let mut start = 0usize;
+    while start < total {
+        let n = bs.min(total - start);
+        let x = &samples[start * din..(start + n) * din];
+        let out = net.forward(x, n);
+        for r in 0..n {
+            rows.push(out[r * out_dim..(r + 1) * out_dim].to_vec());
+        }
+        start += n;
+    }
+    rows
+}
+
+#[test]
+fn calibrated_logits_bit_identical_across_batch_sizes_1_7_64() {
+    // The pinned acceptance criterion: identical per-sample logits for
+    // batch sizes {1, 7, 64} over the same 64 inputs.
+    let net = synthetic_mlp(0xB11, 4, 6);
+    assert!(net.is_calibrated());
+    let (din, out_dim) = (32, 10);
+    let total = 64;
+    let mut rng = Rng::new(0xD474);
+    let samples = rand_batch(&mut rng, total, din);
+
+    let r1 = logits_at_batch_size(&net, &samples, total, din, out_dim, 1);
+    let r7 = logits_at_batch_size(&net, &samples, total, din, out_dim, 7);
+    let r64 = logits_at_batch_size(&net, &samples, total, din, out_dim, 64);
+    for (i, ((a, b), c)) in r1.iter().zip(&r7).zip(&r64).enumerate() {
+        for (j, ((va, vb), vc)) in a.iter().zip(b).zip(c).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "sample {i} logit {j}: bs1 {va} vs bs7 {vb}"
+            );
+            assert_eq!(
+                va.to_bits(),
+                vc.to_bits(),
+                "sample {i} logit {j}: bs1 {va} vs bs64 {vc}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dynamic_ranges_are_batch_dependent_calibration_fixes_it() {
+    // Regression shape of the original bug: under per-batch ranges an
+    // outlier neighbour stretches the quantization grid and moves the
+    // other sample's logits; calibrated ranges remove the dependence.
+    let mut rng = Rng::new(0x0DD);
+    let mut net = synthetic_net(&[16, 24, 4], 0x0DD, 3, 3);
+    let nl = net.layers.len();
+
+    let sample: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut outlier: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    outlier[3] = 55.0;
+    let mut pair = sample.clone();
+    pair.extend_from_slice(&outlier);
+
+    // Calibrated (synthetic_net ships calibrated): solo == paired.
+    let solo = net.forward(&sample, 1);
+    let paired = net.forward(&pair, 2);
+    assert!(solo
+        .iter()
+        .zip(&paired[..4])
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+    // Re-pin the ranges to what the dynamic path would have derived
+    // from the outlier batch: the same sample's logits move.
+    let (lo, hi) = pair.iter().fold(
+        (f32::INFINITY, f32::NEG_INFINITY),
+        |(lo, hi), &v| (lo.min(v), hi.max(v)),
+    );
+    net.set_act_ranges(&vec![lo; nl], &vec![hi; nl]).unwrap();
+    let shifted = net.forward(&sample, 1);
+    assert!(
+        solo.iter().zip(&shifted).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "stretching the quantization range must move 3-bit logits"
+    );
+}
+
+#[test]
+fn invariance_survives_the_scratch_and_pooled_paths() {
+    // forward / forward_into(pool) / forward_ref all agree, calibrated,
+    // at every batch size — the serving engine cannot reintroduce batch
+    // dependence through its buffers or its worker pool.
+    let net = synthetic_net(&[12, 40, 5], 7, 4, 4);
+    let pool = bitprune::util::pool::WorkerPool::new(3);
+    let mut sc = NetScratch::default();
+    let mut rng = Rng::new(21);
+    let samples = rand_batch(&mut rng, 13, 12);
+    let alloc = net.forward(&samples, 13);
+    let scratch = net.forward_into(&samples, 13, &mut sc, Some(&pool));
+    assert_eq!(alloc.len(), scratch.len());
+    assert!(alloc.iter().zip(scratch).all(|(a, b)| a.to_bits() == b.to_bits()));
+    // Layer-level reference path agrees too.
+    let mut h = samples.clone();
+    for layer in &net.layers {
+        h = layer.forward_ref(&h, 13);
+    }
+    assert!(alloc.iter().zip(&h).all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+#[test]
+fn degenerate_serving_inputs() {
+    // Constant batches (zero dynamic range) and all-zero post-ReLU
+    // activations must stay finite and batch-invariant.
+    let net = synthetic_mlp(5, 4, 4);
+    for v in [0.0f32, 1.0, -3.0] {
+        let solo = net.forward(&[v; 32], 1);
+        let batch = net.forward(&[v; 4 * 32], 4);
+        assert!(solo.iter().all(|x| x.is_finite()));
+        for r in 0..4 {
+            assert!(solo
+                .iter()
+                .zip(&batch[r * 10..(r + 1) * 10])
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+}
+
+#[test]
+fn server_roundtrip_is_invariant_under_micro_batching() {
+    // End to end through the queue: interleave two client patterns so
+    // requests coalesce into mixed batches; every answer must equal the
+    // solo forward.
+    let net = Arc::new(synthetic_net(&[8, 20, 3], 99, 4, 5));
+    let server = Server::start(
+        Arc::clone(&net),
+        ServeConfig {
+            threads: 2,
+            max_batch: 16,
+            batch_window: Duration::from_millis(3),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(0x77);
+    let samples: Vec<Vec<f32>> = (0..48)
+        .map(|_| (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let pending: Vec<_> = samples
+        .iter()
+        .map(|s| handle.submit(s.clone()).unwrap())
+        .collect();
+    for (s, rx) in samples.iter().zip(pending) {
+        let got = rx.recv().unwrap();
+        let want = net.forward(s, 1);
+        assert!(
+            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "micro-batched answer differs from solo forward"
+        );
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 48);
+}

@@ -205,11 +205,16 @@ fn integer_inference_matches_xla_eval() {
     let cfg = quick_cfg(&dir, "it-int-infer");
     let trainer = Trainer::new(&rt, &cfg).unwrap();
     let out = trainer.run().unwrap();
+    // Dynamic (per-batch) ranges on purpose: that is the convention the
+    // XLA fake-quant eval uses, so the parity claim stays apples to
+    // apples.  Calibrated serving invariance is pinned separately in
+    // tests/serve_invariance.rs.
     let net = bitprune::infer::IntNet::from_trained(
         trainer.meta(),
         &out.final_params,
         &out.final_.bits_w,
         &out.final_.bits_a,
+        None,
     )
     .unwrap();
 

@@ -152,7 +152,9 @@ impl Literal {
     /// Same data viewed at different dims (element count must match).
     pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
         let n: i64 = dims.iter().product();
-        if n < 0 || n as usize != self.storage.len() {
+        // Check each dim, not just the product: [-2, -3] multiplies out
+        // positive but is not a valid shape.
+        if dims.iter().any(|&d| d < 0) || n as usize != self.storage.len() {
             return err(format!(
                 "cannot reshape {} elements to {:?}",
                 self.storage.len(),
@@ -265,6 +267,9 @@ mod tests {
         assert_eq!(shape.element_type(), ElementType::F32);
         assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         assert!(lit.reshape(&[7]).is_err());
+        // Negative dims whose product matches the element count are
+        // still invalid shapes.
+        assert!(lit.reshape(&[-2, -3]).is_err());
         assert!(r.to_vec::<i32>().is_err());
         assert!(r.to_tuple().is_err());
     }

@@ -1,35 +1,31 @@
 #!/usr/bin/env bash
-# Run the inference fast-path benches and record the perf trajectory at
-# the repo root as BENCH_infer.json.
+# Run the perf-tracked bench suites and record the trajectory at the
+# repo root:
+#   BENCH_infer.json — inference fast-path suite (quantizer, intnet,
+#                      end_to_end)
+#   BENCH_serve.json — serving-engine suite (pooled+buffer-reusing
+#                      engine vs per-call forward, server round trip)
 #
 # Usage:
 #   scripts/bench.sh            # full budgets
 #   QUICK=1 scripts/bench.sh    # halved budgets (--quick)
 #
 # Each bench target appends JSONL records via $BENCH_OUT (see
-# util::bench::Bench::flush_jsonl); this script merges them and derives
-# fast-vs-ref speedups for every */foo vs */foo_ref pair.
+# util::bench); merge_suite derives fast-vs-ref speedups for every
+# */foo vs */foo_ref pair.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-tmp="$(mktemp)"
-trap 'rm -f "$tmp"' EXIT
-export BENCH_OUT="$tmp"
-
 quick="${QUICK:+--quick}"
 
-(cd rust && cargo bench --bench quantizer -- $quick)
-(cd rust && cargo bench --bench intnet -- $quick)
-# end_to_end needs AOT artifacts; it self-skips (and records nothing)
-# when they are absent.
-(cd rust && cargo bench --bench end_to_end -- $quick)
-
-python3 - "$tmp" BENCH_infer.json <<'PY'
+merge_suite() { # <suite-name> <jsonl-file> <out-json>
+    python3 - "$1" "$2" "$3" <<'PY'
 import json
 import sys
 
-recs = [json.loads(line) for line in open(sys.argv[1]) if line.strip()]
+suite, src, dst = sys.argv[1:4]
+recs = [json.loads(line) for line in open(src) if line.strip()]
 by_name = {r["name"]: r for r in recs}
 
 speedups = {}
@@ -41,9 +37,28 @@ for name, ref in by_name.items():
     if fast and ref.get("mean_s") and fast.get("mean_s"):
         speedups[fast["name"]] = round(ref["mean_s"] / fast["mean_s"], 2)
 
-doc = {"suite": "infer-fastpath", "benches": recs, "speedup_vs_ref": speedups}
-with open(sys.argv[2], "w") as f:
+doc = {"suite": suite, "benches": recs, "speedup_vs_ref": speedups}
+with open(dst, "w") as f:
     json.dump(doc, f, indent=2)
     f.write("\n")
-print(f"wrote {sys.argv[2]}: {len(recs)} records, {len(speedups)} speedup pairs")
+print(f"wrote {dst}: {len(recs)} records, {len(speedups)} speedup pairs")
 PY
+}
+
+tmp="$(mktemp)"
+trap 'rm -f "$tmp"' EXIT
+
+# --- inference fast-path suite -> BENCH_infer.json -------------------
+: > "$tmp"
+export BENCH_OUT="$tmp"
+(cd rust && cargo bench --bench quantizer -- $quick)
+(cd rust && cargo bench --bench intnet -- $quick)
+# end_to_end needs AOT artifacts; it self-skips (and records nothing)
+# when they are absent.
+(cd rust && cargo bench --bench end_to_end -- $quick)
+merge_suite "infer-fastpath" "$tmp" BENCH_infer.json
+
+# --- serving suite -> BENCH_serve.json -------------------------------
+: > "$tmp"
+(cd rust && cargo bench --bench serve -- $quick)
+merge_suite "serve" "$tmp" BENCH_serve.json
