@@ -1,0 +1,152 @@
+//! Deploy-subsystem benchmarks: what it costs to ship and swap a
+//! model.
+//!
+//! * `deploy/freeze`, `deploy/serialize`, `deploy/parse`,
+//!   `deploy/instantiate` — the artifact pipeline on the mlp shapes
+//!   (32→256→128→10), elems = parameter count.
+//! * `deploy/artifact_load_file` — `Artifact::load` from disk (parse +
+//!   validate + checksum).
+//! * `deploy/swap_under_load_latency` — request latencies from a
+//!   micro-batching server while the registry hot-swaps versions every
+//!   few hundred responses; its p99 is the **swap-stall** number the
+//!   acceptance criterion tracks (JSONL records carry `p99_s`).
+//! * `deploy/steady_state_latency` — the same load with no swaps, for
+//!   the stall comparison.
+//!
+//! `scripts/bench.sh` merges the records into `BENCH_deploy.json`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitprune::deploy::{freeze, Artifact, ModelRegistry};
+use bitprune::serve::{synthetic_mlp, ServeConfig, Server};
+use bitprune::util::bench::{append_jsonl, Bench, BenchResult};
+use bitprune::util::rng::Rng;
+
+/// Closed-loop client load; returns per-request latency seconds.
+/// When `swap_every > 0`, the main thread republishes (alternating two
+/// versions) each time that many more responses have landed.
+fn run_load(
+    registry: &Arc<ModelRegistry>,
+    nets: &[Arc<bitprune::infer::IntNet>],
+    requests: usize,
+    swap_every: usize,
+) -> Vec<f64> {
+    let server = Server::start_registry(
+        Arc::clone(registry),
+        ServeConfig {
+            threads: 2,
+            max_batch: 16,
+            batch_window: Duration::from_micros(200),
+            max_queue: 8192,
+        },
+    )
+    .expect("server starts");
+    let clients = 4usize;
+    let din = registry.input_dim();
+    let served = AtomicUsize::new(0);
+    let mut lats: Vec<f64> = Vec::with_capacity(requests);
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let handle = server.handle();
+            let served = &served;
+            let n_req = requests / clients + usize::from(c < requests % clients);
+            joins.push(scope.spawn(move || {
+                let mut rng = Rng::new(0xDE9 + c as u64);
+                let mut out = Vec::with_capacity(n_req);
+                for _ in 0..n_req {
+                    let x: Vec<f32> =
+                        (0..din).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let t = Instant::now();
+                    handle.infer(x).expect("request served");
+                    out.push(t.elapsed().as_secs_f64());
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+                out
+            }));
+        }
+        if swap_every > 0 {
+            let mut next = swap_every;
+            let mut flip = 0usize;
+            'swaps: while next < requests {
+                while served.load(Ordering::Relaxed) < next {
+                    if joins.iter().all(|j| j.is_finished()) {
+                        break 'swaps; // clients died; don't spin forever
+                    }
+                    std::thread::yield_now();
+                }
+                flip += 1;
+                let net = &nets[flip % nets.len()];
+                registry
+                    .publish(Arc::clone(net), &format!("swap-{flip}"))
+                    .expect("swap publish");
+                next += swap_every;
+            }
+        }
+        for j in joins {
+            lats.extend(j.join().expect("client panicked"));
+        }
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.requests as usize, requests);
+    lats
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = Bench::new();
+
+    let net = Arc::new(synthetic_mlp(0xDE9107, 4, 8));
+    let params: f64 =
+        (32 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10) as f64;
+
+    // --- artifact pipeline ------------------------------------------------
+    let art = freeze(&net, "bench-mlp");
+    let bytes = art.to_bytes();
+    b.run_elems("deploy/freeze", params, || freeze(&net, "bench-mlp"));
+    b.run_elems("deploy/serialize", params, || art.to_bytes());
+    b.run_elems("deploy/parse", params, || {
+        Artifact::from_bytes(&bytes).expect("valid artifact parses")
+    });
+    b.run_elems("deploy/instantiate", params, || {
+        art.instantiate().expect("artifact instantiates")
+    });
+
+    let dir = std::env::temp_dir().join("bitprune-deploy-bench");
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let path = dir.join("bench.bpma");
+    art.save(&path).expect("artifact saves");
+    b.run_elems("deploy/artifact_load_file", params, || {
+        Artifact::load(&path).expect("artifact loads")
+    });
+
+    // --- swap under load --------------------------------------------------
+    // Same request budget with and without mid-traffic swaps; the p99
+    // delta is the stall a version swap costs a live client.
+    let requests = if quick { 512 } else { 2048 };
+    let alt = Arc::new(synthetic_mlp(0x517E, 4, 8));
+    let nets = vec![Arc::clone(&net), alt];
+
+    let steady_reg = Arc::new(ModelRegistry::new(Arc::clone(&net), "v1").unwrap());
+    let steady = run_load(&steady_reg, &nets, requests, 0);
+    let steady = BenchResult::from_samples("deploy/steady_state_latency", steady, None);
+    println!("{}", steady.report());
+
+    let swap_reg = Arc::new(ModelRegistry::new(Arc::clone(&net), "v1").unwrap());
+    let swap_every = requests / 8;
+    let swapped = run_load(&swap_reg, &nets, requests, swap_every);
+    let swapped =
+        BenchResult::from_samples("deploy/swap_under_load_latency", swapped, None);
+    println!("{}", swapped.report());
+    println!(
+        "  -> swap-stall p99: {:.0}us swapped vs {:.0}us steady ({} swaps over {requests} requests)",
+        swapped.percentile(99.0) * 1e6,
+        steady.percentile(99.0) * 1e6,
+        swap_reg.active_version() - 1,
+    );
+
+    b.flush_jsonl();
+    append_jsonl(&[steady, swapped]);
+}

@@ -22,7 +22,7 @@ fn main() {
     let net = Arc::new(synthetic_mlp(0x5E4E, 4, 8));
     // MACs per sample across 32x256 + 256x128 + 128x10.
     let macs_per_sample: f64 = (32 * 256 + 256 * 128 + 128 * 10) as f64;
-    let mut engine = ServeEngine::new(Arc::clone(&net), 0);
+    let mut engine = ServeEngine::new(0);
 
     // Engine (persistent pool + ping-pong scratch) vs per-call forward
     // (the `_ref` baseline) at serving-typical batch sizes.
@@ -32,7 +32,7 @@ fn main() {
         let tag = format!("mlp/bs{n}");
         let elems = macs_per_sample * n as f64;
         b.run_elems(&format!("serve/forward/{tag}"), elems, || {
-            engine.forward(&x, n).len()
+            engine.forward(&net, &x, n).len()
         });
         b.run_elems(&format!("serve/forward_ref/{tag}"), elems, || {
             net.forward(&x, n)

@@ -47,6 +47,47 @@ pub struct PackedTensor {
 pub const HEADER_BYTES: usize = 16;
 
 impl PackedTensor {
+    /// Reassemble a packed tensor from **untrusted** stored parts (the
+    /// BPMA artifact loader): validates the bitlength range, that
+    /// `len * bits` does not overflow, that the payload is exactly the
+    /// implied size (the unpackers zero-pad short buffers rather than
+    /// panic, which would silently decode truncated codes as zeros),
+    /// and that the dequantization header is finite with positive step.
+    pub fn from_raw(
+        bits: u32,
+        len: usize,
+        lmin: f32,
+        scale: f32,
+        data: Vec<u8>,
+    ) -> Result<Self> {
+        // Validate the header fields for empty tensors too — an
+        // out-of-range `bits` or NaN plan must never enter the crate,
+        // whatever the length says.
+        if !(1..=16).contains(&bits) {
+            bail!("packed tensor: bits must be in [1,16], got {bits}");
+        }
+        if !lmin.is_finite() || !scale.is_finite() || scale <= 0.0 {
+            bail!("packed tensor: bad dequant header (lmin {lmin}, scale {scale})");
+        }
+        if len == 0 {
+            if !data.is_empty() {
+                bail!("packed tensor: empty tensor with {} payload bytes", data.len());
+            }
+            return Ok(Self { bits, len, lmin, scale, data });
+        }
+        let total_bits = len
+            .checked_mul(bits as usize)
+            .ok_or_else(|| anyhow::anyhow!("packed tensor: {len} x {bits} bits overflows"))?;
+        let want = total_bits.div_ceil(8);
+        if data.len() != want {
+            bail!(
+                "packed tensor: payload is {} bytes, {len} x {bits}-bit codes need {want}",
+                data.len()
+            );
+        }
+        Ok(Self { bits, len, lmin, scale, data })
+    }
+
     /// Packed payload size in bytes (excluding the fixed header).
     pub fn payload_bytes(&self) -> usize {
         self.data.len()
@@ -274,7 +315,7 @@ pub fn pack_network(
     let mut total_f32 = 0;
     let mut total_packed = 0;
     for ((name, xs), &b) in tensors.iter().zip(bits) {
-        let ib = quant::clip_bits(b).ceil() as u32;
+        let ib = quant::int_bits(b);
         let p = pack(xs, ib)?;
         let f32_bytes = xs.len() * 4;
         let packed_bytes = p.stored_bytes();
@@ -527,6 +568,47 @@ mod tests {
         assert_eq!(pack(&[], 4).unwrap().len, 0);
         assert!(pack(&[1.0], 0).is_err());
         assert!(pack(&[1.0], 17).is_err());
+    }
+
+    #[test]
+    fn from_raw_validates_untrusted_parts() {
+        let mut rng = Rng::new(0xF40);
+        let xs: Vec<f32> = (0..37).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let p = pack(&xs, 5).unwrap();
+        // Faithful parts reassemble to an identical tensor.
+        let re = PackedTensor::from_raw(p.bits, p.len, p.lmin, p.scale, p.data.clone())
+            .unwrap();
+        assert_eq!(re, p);
+        // Wrong payload size (both directions), bad bits, hostile
+        // len*bits overflow, non-finite / non-positive headers.
+        let short = p.data[..p.data.len() - 1].to_vec();
+        assert!(PackedTensor::from_raw(p.bits, p.len, p.lmin, p.scale, short).is_err());
+        let mut long = p.data.clone();
+        long.push(0);
+        assert!(PackedTensor::from_raw(p.bits, p.len, p.lmin, p.scale, long).is_err());
+        assert!(PackedTensor::from_raw(0, p.len, p.lmin, p.scale, p.data.clone()).is_err());
+        assert!(PackedTensor::from_raw(17, p.len, p.lmin, p.scale, p.data.clone()).is_err());
+        assert!(
+            PackedTensor::from_raw(16, usize::MAX / 2, p.lmin, p.scale, p.data.clone())
+                .is_err()
+        );
+        assert!(
+            PackedTensor::from_raw(p.bits, p.len, f32::NAN, p.scale, p.data.clone())
+                .is_err()
+        );
+        assert!(
+            PackedTensor::from_raw(p.bits, p.len, p.lmin, 0.0, p.data.clone()).is_err()
+        );
+        assert!(
+            PackedTensor::from_raw(p.bits, p.len, p.lmin, f32::INFINITY, p.data.clone())
+                .is_err()
+        );
+        // Empty tensors: no payload allowed, and they reassemble — but
+        // the header fields are still validated.
+        assert!(PackedTensor::from_raw(4, 0, 0.0, 1.0, vec![0]).is_err());
+        assert_eq!(PackedTensor::from_raw(4, 0, 0.0, 1.0, vec![]).unwrap().len, 0);
+        assert!(PackedTensor::from_raw(99, 0, 0.0, 1.0, vec![]).is_err());
+        assert!(PackedTensor::from_raw(4, 0, f32::NAN, -1.0, vec![]).is_err());
     }
 
     #[test]

@@ -9,16 +9,28 @@
 //! ```
 //!
 //! Tensors are stored by name so checkpoints survive reordering; the
-//! coordinator stores params as `p/<name>`, momenta as `m/<name>`, and
-//! bitlengths as `bits_w` / `bits_a`.
+//! coordinator stores params as `p/<name>`, momenta as `m/<name>`,
+//! bitlengths as `bits_w` / `bits_a`, and (when available) calibrated
+//! activation ranges as `cal/act_min` / `cal/act_max` — which is what
+//! lets `bitprune export` turn a checkpoint into a batch-invariant
+//! BPMA artifact without re-touching the dataset.
+//!
+//! The loader treats the file as untrusted and goes through the
+//! bounded [`crate::util::binio::Reader`] (shared with the BPMA
+//! artifact loader): every length/rank/count is validated against the
+//! bytes actually present before anything is allocated, and the
+//! element product uses `checked_mul` — a truncated or hostile file
+//! fails cleanly instead of triggering an OOM-scale `with_capacity`
+//! or a wrapped product.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::{HostTensor, TensorData};
+use crate::util::binio::{self, Reader};
 
 const MAGIC: &[u8; 4] = b"BPCK";
 const VERSION: u32 = 1;
@@ -98,14 +110,20 @@ impl Checkpoint {
 
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
-        let mut bytes = Vec::new();
-        std::fs::File::open(path)
-            .with_context(|| format!("opening checkpoint '{}'", path.display()))?
-            .read_to_end(&mut bytes)?;
-        let mut r = Reader { bytes: &bytes, pos: 0 };
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("opening checkpoint '{}'", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parsing checkpoint '{}'", path.display()))
+    }
 
+    /// Parse the BPCK byte format.  `name_len`, `rank`, every dim and
+    /// the tensor count are untrusted: reads are bounded by the bytes
+    /// present (nothing is pre-allocated from a claimed count) and the
+    /// element product is overflow-checked.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Reader::new(bytes);
         if r.take(4)? != MAGIC {
-            bail!("'{}' is not a bitprune checkpoint", path.display());
+            bail!("not a bitprune checkpoint (bad magic)");
         }
         let version = r.u32()?;
         if version != VERSION {
@@ -113,64 +131,44 @@ impl Checkpoint {
         }
         let count = r.u32()? as usize;
         let mut tensors = BTreeMap::new();
-        for _ in 0..count {
-            let name_len = r.u32()? as usize;
-            let name = String::from_utf8(r.take(name_len)?.to_vec())
-                .context("checkpoint tensor name is not UTF-8")?;
+        for i in 0..count {
+            let name = r
+                .str_u32()
+                .with_context(|| format!("tensor {i} of {count}: name"))?;
             let rank = r.u32()? as usize;
-            let mut dims = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                dims.push(r.u32()? as usize);
-            }
-            let n: usize = dims.iter().product();
-            let dtype = r.take(1)?[0];
+            let dims: Vec<usize> = r
+                .u32_vec(rank)
+                .with_context(|| format!("tensor '{name}': {rank} dims"))?
+                .into_iter()
+                .map(|d| d as usize)
+                .collect();
+            let n = binio::checked_product(&dims)
+                .with_context(|| format!("tensor '{name}': element count"))?;
+            let dtype = r.u8()?;
             let t = match dtype {
-                0 => {
-                    let mut v = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        v.push(f32::from_le_bytes(r.take(4)?.try_into().unwrap()));
-                    }
-                    HostTensor::f32(&dims, v)?
-                }
-                1 => {
-                    let mut v = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        v.push(i32::from_le_bytes(r.take(4)?.try_into().unwrap()));
-                    }
-                    HostTensor::i32(&dims, v)?
-                }
-                2 => {
-                    let mut v = Vec::with_capacity(n);
-                    for _ in 0..n {
-                        v.push(u32::from_le_bytes(r.take(4)?.try_into().unwrap()));
-                    }
-                    HostTensor::u32(&dims, v)?
-                }
-                d => bail!("unknown dtype tag {d}"),
+                0 => HostTensor::f32(
+                    &dims,
+                    r.f32_vec(n)
+                        .with_context(|| format!("tensor '{name}': f32 payload"))?,
+                )?,
+                1 => HostTensor::i32(
+                    &dims,
+                    r.i32_vec(n)
+                        .with_context(|| format!("tensor '{name}': i32 payload"))?,
+                )?,
+                2 => HostTensor::u32(
+                    &dims,
+                    r.u32_vec(n)
+                        .with_context(|| format!("tensor '{name}': u32 payload"))?,
+                )?,
+                d => bail!("tensor '{name}': unknown dtype tag {d}"),
             };
             tensors.insert(name, t);
         }
-        Ok(Self { tensors })
-    }
-}
-
-struct Reader<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.bytes.len() {
-            bail!("truncated checkpoint (at byte {})", self.pos);
+        if !r.is_empty() {
+            bail!("{} trailing bytes after the last tensor", r.remaining());
         }
-        let s = &self.bytes[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(Self { tensors })
     }
 }
 
@@ -230,5 +228,79 @@ mod tests {
     fn missing_tensor_error() {
         let c = Checkpoint::new();
         assert!(c.get("nope").is_err());
+    }
+
+    /// A minimal valid header claiming `count` tensors.
+    fn header(count: u32) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"BPCK");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&count.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn hostile_name_len_rejected_without_allocation() {
+        // name_len = u32::MAX with 4 bytes of file left: must fail on
+        // the bounds check, not allocate 4 GiB.
+        let mut b = header(1);
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(b"abcd");
+        let err = Checkpoint::from_bytes(&b).unwrap_err();
+        assert!(format!("{err:#}").contains("name"), "{err:#}");
+    }
+
+    #[test]
+    fn hostile_rank_rejected_without_allocation() {
+        // rank = u32::MAX: the dims read is bounded by remaining bytes.
+        let mut b = header(1);
+        b.extend_from_slice(&1u32.to_le_bytes()); // name_len 1
+        b.push(b'x');
+        b.extend_from_slice(&u32::MAX.to_le_bytes()); // rank
+        assert!(Checkpoint::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn dims_product_overflow_rejected() {
+        // Three dims of 2^32-1 each: the usize product would wrap; the
+        // loader must error instead of allocating a tiny wrapped size
+        // and mis-slicing the payload.
+        let mut b = header(1);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'x');
+        b.extend_from_slice(&3u32.to_le_bytes()); // rank 3
+        for _ in 0..3 {
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        b.push(0); // dtype f32
+        let err = Checkpoint::from_bytes(&b).unwrap_err();
+        assert!(format!("{err:#}").contains("element count"), "{err:#}");
+    }
+
+    #[test]
+    fn huge_claimed_payload_fails_before_allocating() {
+        // Plausible rank/dims claiming 10^9 elements against a 4-byte
+        // payload: the typed read validates the span first.
+        let mut b = header(1);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.push(b'x');
+        b.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        b.extend_from_slice(&100_000u32.to_le_bytes());
+        b.extend_from_slice(&10_000u32.to_le_bytes());
+        b.push(0); // dtype f32
+        b.extend_from_slice(&[0u8; 4]); // only one element present
+        assert!(Checkpoint::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut c = Checkpoint::new();
+        c.insert("x", HostTensor::scalar_f32(1.0));
+        let path = tmpfile("trailing.bpck");
+        c.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        assert!(Checkpoint::from_bytes(&bytes).is_ok());
+        bytes.push(7);
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
     }
 }

@@ -389,6 +389,12 @@ impl<'a> Trainer<'a> {
             }
             ckpt.insert("bits_w", state.bits_w.clone());
             ckpt.insert("bits_a", state.bits_a.clone());
+            // Final-eval calibrated activation ranges ride along so the
+            // checkpoint alone can become a batch-invariant deployment
+            // artifact (`bitprune export --ckpt ...`) with no dataset.
+            let nl = self.meta.num_quant_layers;
+            ckpt.insert("cal/act_min", HostTensor::f32(&[nl], ev.act_min.clone())?);
+            ckpt.insert("cal/act_max", HostTensor::f32(&[nl], ev.act_max.clone())?);
             ckpt.save(path)?;
         }
 

@@ -1,0 +1,661 @@
+//! BPMA — the **B**it**P**runing **M**odel **A**rtifact: a single-file
+//! frozen representation of a quantized network, the thing `bitprune
+//! export` ships and `bitprune serve` loads.
+//!
+//! Everything inference needs travels inside: per-layer geometry, the
+//! learned weight/activation bitlengths, the `QuantPlan` dequantization
+//! parameters `(lmin, scale)` per weight group, the bit-packed weight
+//! codes themselves, f32 biases, and the calibrated activation ranges.
+//! [`Artifact::instantiate`] rebuilds an [`IntNet`] from those parts
+//! **bit-identically** to the net [`freeze`] captured — no dataset, no
+//! trainer, no PJRT runtime (see `IntDense::from_packed`).
+//!
+//! ## Wire format (little-endian)
+//!
+//! ```text
+//! magic "BPMA" | version u32 | flags u32 | section_count u32
+//! per section:  tag [u8;4] | payload_len u64 | payload | crc32 u32
+//! ```
+//!
+//! Sections are a length-prefixed table: readers **skip sections whose
+//! tag they do not know** (after verifying the checksum), so old
+//! binaries load artifacts written by newer ones that append sections.
+//! Version-1 sections:
+//!
+//! | tag    | payload |
+//! |--------|---------|
+//! | `MET0` | model name (u32-prefixed str), `num_classes` u32, `n_layers` u32 |
+//! | `LAY0` | per layer: name, din u64, dout u64, w_bits u32, a_bits u32, flags u8 (b0 relu, b1 has act range), w_lmin f32, w_scale f32, \[act_lo f32, act_hi f32\] |
+//! | `WCT0` | per layer: payload_len u64, bit-packed weight codes |
+//! | `BIA0` | per layer: dout f32 biases |
+//!
+//! The loader treats every byte as hostile: all reads go through the
+//! bounded [`crate::util::binio::Reader`] (shared with the checkpoint
+//! loader), counts never pre-allocate, element products use
+//! `checked_mul`, payload sizes must match the geometry exactly, and a
+//! flipped bit anywhere in a payload fails its section CRC.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bitpack::PackedTensor;
+use crate::infer::{IntDense, IntNet};
+use crate::util::binio::{self, Reader};
+
+pub const MAGIC: &[u8; 4] = b"BPMA";
+pub const VERSION: u32 = 1;
+
+const TAG_META: &[u8; 4] = b"MET0";
+const TAG_LAYERS: &[u8; 4] = b"LAY0";
+const TAG_WCODES: &[u8; 4] = b"WCT0";
+const TAG_BIASES: &[u8; 4] = b"BIA0";
+
+const LAYER_FLAG_RELU: u8 = 1 << 0;
+const LAYER_FLAG_ACT_RANGE: u8 = 1 << 1;
+
+/// One frozen layer: geometry, learned bitlengths, quantization
+/// parameters, packed codes, bias, calibrated input range.
+#[derive(Debug, Clone)]
+pub struct LayerRecord {
+    pub name: String,
+    pub din: usize,
+    pub dout: usize,
+    /// Activation (input) bitlength.
+    pub a_bits: u32,
+    pub relu: bool,
+    /// Calibrated input activation range; `None` means the layer will
+    /// quantize against each batch's own min/max (batch-dependent).
+    pub act_range: Option<(f32, f32)>,
+    /// Packed weight codes + the `(lmin, scale)` dequantization header
+    /// (`w_bits` lives here as `packed.bits`).
+    pub packed: PackedTensor,
+    pub bias: Vec<f32>,
+}
+
+impl LayerRecord {
+    /// Weight bitlength this layer is stored at.
+    pub fn w_bits(&self) -> u32 {
+        self.packed.bits
+    }
+
+    /// Stored footprint (packed payload + header + f32 bias) — same
+    /// convention as `IntDense::packed_bytes`.
+    pub fn stored_bytes(&self) -> usize {
+        self.packed.stored_bytes() + self.bias.len() * 4
+    }
+}
+
+/// A frozen model: the in-memory form of one `.bpma` file.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub model: String,
+    pub num_classes: usize,
+    pub layers: Vec<LayerRecord>,
+}
+
+/// Freeze a live [`IntNet`] into its shippable artifact form.  Pure
+/// copy — the packed codes, dequantization parameters, biases and
+/// calibrated ranges are taken verbatim, which is what makes
+/// [`Artifact::instantiate`] bit-identical.
+pub fn freeze(net: &IntNet, model: &str) -> Artifact {
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| LayerRecord {
+            name: l.name.clone(),
+            din: l.din,
+            dout: l.dout,
+            a_bits: l.a_bits,
+            relu: l.relu,
+            act_range: l.act_range(),
+            packed: l.packed.clone(),
+            bias: l.bias.clone(),
+        })
+        .collect();
+    Artifact { model: model.to_string(), num_classes: net.num_classes, layers }
+}
+
+impl Artifact {
+    /// Rebuild the integer network this artifact froze.  Bit-identical
+    /// to the source net: the packed codes and every affine parameter
+    /// are restored verbatim (`IntDense::from_packed`), so logits match
+    /// to the last bit — pinned by `tests/deploy_artifact.rs`.
+    pub fn instantiate(&self) -> Result<IntNet> {
+        let mut layers = Vec::with_capacity(self.layers.len());
+        for rec in &self.layers {
+            layers.push(IntDense::from_packed(
+                &rec.name,
+                rec.packed.clone(),
+                rec.din,
+                rec.dout,
+                rec.bias.clone(),
+                rec.a_bits,
+                rec.relu,
+                rec.act_range,
+            )?);
+        }
+        Ok(IntNet { layers, num_classes: self.num_classes })
+    }
+
+    /// Whether every layer carries a calibrated activation range (the
+    /// batch-invariant-serving precondition).
+    pub fn is_calibrated(&self) -> bool {
+        self.layers.iter().all(|l| l.act_range.is_some())
+    }
+
+    /// Total stored model footprint in bytes (packed convention).
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.stored_bytes()).sum()
+    }
+
+    /// The f32 footprint of the same parameters, for the ratio.
+    pub fn f32_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| (l.din * l.dout + l.dout) * 4)
+            .sum()
+    }
+
+    /// Mean learned weight bitlength across layers.
+    pub fn mean_w_bits(&self) -> f64 {
+        mean(self.layers.iter().map(|l| l.w_bits() as f64))
+    }
+
+    /// Mean learned activation bitlength across layers.
+    pub fn mean_a_bits(&self) -> f64 {
+        mean(self.layers.iter().map(|l| l.a_bits as f64))
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    /// Serialize to the BPMA wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut meta = Vec::new();
+        binio::put_str_u32(&mut meta, &self.model);
+        binio::put_u32(&mut meta, self.num_classes as u32);
+        binio::put_u32(&mut meta, self.layers.len() as u32);
+
+        let mut lay = Vec::new();
+        for l in &self.layers {
+            binio::put_str_u32(&mut lay, &l.name);
+            binio::put_u64(&mut lay, l.din as u64);
+            binio::put_u64(&mut lay, l.dout as u64);
+            binio::put_u32(&mut lay, l.packed.bits);
+            binio::put_u32(&mut lay, l.a_bits);
+            let mut flags = 0u8;
+            if l.relu {
+                flags |= LAYER_FLAG_RELU;
+            }
+            if l.act_range.is_some() {
+                flags |= LAYER_FLAG_ACT_RANGE;
+            }
+            binio::put_u8(&mut lay, flags);
+            binio::put_f32(&mut lay, l.packed.lmin);
+            binio::put_f32(&mut lay, l.packed.scale);
+            if let Some((lo, hi)) = l.act_range {
+                binio::put_f32(&mut lay, lo);
+                binio::put_f32(&mut lay, hi);
+            }
+        }
+
+        let mut wct = Vec::new();
+        for l in &self.layers {
+            binio::put_u64(&mut wct, l.packed.data.len() as u64);
+            wct.extend_from_slice(&l.packed.data);
+        }
+
+        let mut bia = Vec::new();
+        for l in &self.layers {
+            binio::put_f32_slice(&mut bia, &l.bias);
+        }
+
+        let sections: [(&[u8; 4], Vec<u8>); 4] = [
+            (TAG_META, meta),
+            (TAG_LAYERS, lay),
+            (TAG_WCODES, wct),
+            (TAG_BIASES, bia),
+        ];
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        binio::put_u32(&mut out, VERSION);
+        binio::put_u32(&mut out, 0); // flags (reserved)
+        binio::put_u32(&mut out, sections.len() as u32);
+        for (tag, payload) in &sections {
+            write_section(&mut out, tag, payload);
+        }
+        out
+    }
+
+    /// Parse a BPMA byte stream (validated, checksummed,
+    /// allocation-bounded — see the module docs).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        // Pass 1: walk the section table, verify checksums, collect the
+        // payload slice of each known section.  Unknown tags are
+        // skipped — that is the forward-compatibility contract.
+        let mut meta_pl: Option<&[u8]> = None;
+        let mut lay_pl: Option<&[u8]> = None;
+        let mut wct_pl: Option<&[u8]> = None;
+        let mut bia_pl: Option<&[u8]> = None;
+        let mut r = parse_header(bytes)?;
+        let n_sections = r.u32()? as usize;
+        for _ in 0..n_sections {
+            let (tag, payload) = read_section(&mut r)?;
+            let slot = match &tag {
+                t if t == TAG_META => Some(&mut meta_pl),
+                t if t == TAG_LAYERS => Some(&mut lay_pl),
+                t if t == TAG_WCODES => Some(&mut wct_pl),
+                t if t == TAG_BIASES => Some(&mut bia_pl),
+                _ => None, // unknown section: checksummed, then skipped
+            };
+            if let Some(slot) = slot {
+                if slot.is_some() {
+                    bail!("duplicate '{}' section", tag_str(&tag));
+                }
+                *slot = Some(payload);
+            }
+        }
+        if !r.is_empty() {
+            bail!("{} trailing bytes after the last section", r.remaining());
+        }
+        let missing = |t: &[u8; 4]| anyhow::anyhow!("missing '{}' section", tag_str(t));
+        let meta_pl = meta_pl.ok_or_else(|| missing(TAG_META))?;
+        let lay_pl = lay_pl.ok_or_else(|| missing(TAG_LAYERS))?;
+        let wct_pl = wct_pl.ok_or_else(|| missing(TAG_WCODES))?;
+        let bia_pl = bia_pl.ok_or_else(|| missing(TAG_BIASES))?;
+
+        // Pass 2: decode in logical order (file order of the known
+        // sections does not matter).
+        let mut mr = Reader::new(meta_pl);
+        let model = mr.str_u32().context("model name")?;
+        let num_classes = mr.u32()? as usize;
+        let n_layers = mr.u32()? as usize;
+        if !mr.is_empty() {
+            bail!("trailing bytes in '{}' section", tag_str(TAG_META));
+        }
+        if n_layers == 0 {
+            bail!("artifact declares zero layers");
+        }
+        if num_classes == 0 {
+            bail!("artifact declares zero classes");
+        }
+
+        // LAY0 — geometry/quant headers.  No pre-allocation from the
+        // untrusted count: each iteration consumes bytes, so a hostile
+        // n_layers fails on the first missing record.
+        struct LayerHeader {
+            name: String,
+            din: usize,
+            dout: usize,
+            w_bits: u32,
+            a_bits: u32,
+            relu: bool,
+            w_lmin: f32,
+            w_scale: f32,
+            act_range: Option<(f32, f32)>,
+        }
+        let mut lr = Reader::new(lay_pl);
+        let mut headers: Vec<LayerHeader> = Vec::new();
+        for i in 0..n_layers {
+            let name = lr.str_u32().with_context(|| format!("layer {i} name"))?;
+            let din = usize::try_from(lr.u64()?)
+                .map_err(|_| anyhow::anyhow!("layer {i}: din does not fit in usize"))?;
+            let dout = usize::try_from(lr.u64()?)
+                .map_err(|_| anyhow::anyhow!("layer {i}: dout does not fit in usize"))?;
+            let w_bits = lr.u32()?;
+            let a_bits = lr.u32()?;
+            let flags = lr.u8()?;
+            let w_lmin = lr.f32()?;
+            let w_scale = lr.f32()?;
+            let act_range = if flags & LAYER_FLAG_ACT_RANGE != 0 {
+                Some((lr.f32()?, lr.f32()?))
+            } else {
+                None
+            };
+            if din == 0 || dout == 0 {
+                bail!("layer {i} ('{name}'): degenerate shape {din}x{dout}");
+            }
+            if let Some((lo, hi)) = act_range {
+                // The one per-layer field PackedTensor::from_raw does
+                // not cover: a NaN/inf or inverted range would load
+                // fine and then silently quantize every activation to
+                // code 0 at serve time.
+                if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                    bail!("layer {i} ('{name}'): bad activation range [{lo}, {hi}]");
+                }
+            }
+            headers.push(LayerHeader {
+                name,
+                din,
+                dout,
+                w_bits,
+                a_bits,
+                relu: flags & LAYER_FLAG_RELU != 0,
+                w_lmin,
+                w_scale,
+                act_range,
+            });
+        }
+        if !lr.is_empty() {
+            bail!("trailing bytes in '{}' section", tag_str(TAG_LAYERS));
+        }
+
+        // WCT0 + BIA0 — payloads, validated against the geometry.
+        let mut wr = Reader::new(wct_pl);
+        let mut br = Reader::new(bia_pl);
+        let mut layers = Vec::new();
+        for (i, h) in headers.into_iter().enumerate() {
+            let code_len = wr
+                .len_u64()
+                .with_context(|| format!("layer {i} ('{}') code length", h.name))?;
+            let data = wr.take(code_len)?.to_vec();
+            let elems = binio::checked_product(&[h.din, h.dout])?;
+            let packed = PackedTensor::from_raw(h.w_bits, elems, h.w_lmin, h.w_scale, data)
+                .with_context(|| format!("layer {i} ('{}') weight codes", h.name))?;
+            let bias = br.f32_vec(h.dout)
+                .with_context(|| format!("layer {i} ('{}') bias", h.name))?;
+            if let Some(bad) = bias.iter().find(|b| !b.is_finite()) {
+                bail!("layer {i} ('{}'): non-finite bias value {bad}", h.name);
+            }
+            layers.push(LayerRecord {
+                name: h.name,
+                din: h.din,
+                dout: h.dout,
+                a_bits: h.a_bits,
+                relu: h.relu,
+                act_range: h.act_range,
+                packed,
+                bias,
+            });
+        }
+        if !wr.is_empty() {
+            bail!("trailing bytes in '{}' section", tag_str(TAG_WCODES));
+        }
+        if !br.is_empty() {
+            bail!("trailing bytes in '{}' section", tag_str(TAG_BIASES));
+        }
+
+        // Cross-layer consistency: a dense classifier chain.
+        for w in layers.windows(2) {
+            if w[0].dout != w[1].din {
+                bail!(
+                    "layer chain broken: '{}' emits {} features, '{}' expects {}",
+                    w[0].name,
+                    w[0].dout,
+                    w[1].name,
+                    w[1].din
+                );
+            }
+        }
+        let last_dout = layers.last().unwrap().dout;
+        if last_dout != num_classes {
+            bail!("final layer emits {last_dout} features but artifact declares {num_classes} classes");
+        }
+
+        Ok(Self { model, num_classes, layers })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing artifact '{}'", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading artifact '{}'", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("parsing artifact '{}'", path.display()))
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0, 0usize);
+    for v in it {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+fn tag_str(tag: &[u8; 4]) -> String {
+    tag.iter()
+        .map(|&b| if b.is_ascii_graphic() { b as char } else { '?' })
+        .collect()
+}
+
+fn write_section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
+    out.extend_from_slice(tag);
+    binio::put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    binio::put_u32(out, binio::crc32(payload));
+}
+
+/// Validate magic + version, consume the flags word, and leave the
+/// reader positioned at the section count.
+fn parse_header(bytes: &[u8]) -> Result<Reader<'_>> {
+    let mut r = Reader::new(bytes);
+    if r.take(4)? != MAGIC {
+        bail!("not a BPMA artifact (bad magic)");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported BPMA version {version} (this reader speaks {VERSION})");
+    }
+    let _flags = r.u32()?; // reserved; unknown bits are ignored
+    Ok(r)
+}
+
+/// Walk one `tag | len | payload | crc` frame without judging the
+/// checksum — the single place the section framing is parsed, shared
+/// by the loader ([`read_section`]) and [`section_table`].
+fn read_raw_section<'a>(r: &mut Reader<'a>) -> Result<([u8; 4], &'a [u8], u32)> {
+    let tag: [u8; 4] = r.take(4)?.try_into().unwrap();
+    let len = r
+        .len_u64()
+        .with_context(|| format!("'{}' section length", tag_str(&tag)))?;
+    let payload = r.take(len)?;
+    let stored = r.u32()?;
+    Ok((tag, payload, stored))
+}
+
+/// Read one section, verifying the CRC.
+fn read_section<'a>(r: &mut Reader<'a>) -> Result<([u8; 4], &'a [u8])> {
+    let (tag, payload, stored) = read_raw_section(r)?;
+    let actual = binio::crc32(payload);
+    if stored != actual {
+        bail!(
+            "'{}' section checksum mismatch (stored {stored:#010x}, computed {actual:#010x})",
+            tag_str(&tag)
+        );
+    }
+    Ok((tag, payload))
+}
+
+// ---------------------------------------------------------------------------
+// inspection (the `bitprune inspect` surface)
+// ---------------------------------------------------------------------------
+
+/// One row of the section table, as `bitprune inspect` prints it.
+#[derive(Debug, Clone)]
+pub struct SectionInfo {
+    /// Four-char tag (non-printable bytes shown as `?`).
+    pub tag: String,
+    /// Byte offset of the payload within the file.
+    pub payload_offset: usize,
+    pub payload_len: usize,
+    pub crc_stored: u32,
+    pub crc_ok: bool,
+    /// Whether this reader knows the tag (unknown = skipped on load).
+    pub known: bool,
+}
+
+/// Walk the section table of a BPMA byte stream without decoding the
+/// payloads — reports every section's tag, span and checksum status,
+/// including sections this version does not understand.
+pub fn section_table(bytes: &[u8]) -> Result<Vec<SectionInfo>> {
+    let mut r = parse_header(bytes)?;
+    let n_sections = r.u32()? as usize;
+    let mut out = Vec::new();
+    for _ in 0..n_sections {
+        let (tag, payload, crc_stored) = read_raw_section(&mut r)?;
+        // The cursor now sits just past the 4-byte CRC that follows
+        // the payload.
+        let payload_offset = r.pos() - 4 - payload.len();
+        out.push(SectionInfo {
+            tag: tag_str(&tag),
+            payload_offset,
+            payload_len: payload.len(),
+            crc_stored,
+            crc_ok: binio::crc32(payload) == crc_stored,
+            known: [TAG_META, TAG_LAYERS, TAG_WCODES, TAG_BIASES]
+                .iter()
+                .any(|t| **t == tag),
+        });
+    }
+    if !r.is_empty() {
+        bail!("{} trailing bytes after the last section", r.remaining());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::synthetic_net;
+    use crate::util::binio::{crc32, put_u32, put_u64};
+    use crate::util::rng::Rng;
+
+    fn demo_artifact() -> Artifact {
+        freeze(&synthetic_net(&[6, 10, 4], 0xA47, 3, 5), "demo")
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let a = demo_artifact();
+        let b = Artifact::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(a.model, b.model);
+        assert_eq!(a.num_classes, b.num_classes);
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.name, y.name);
+            assert_eq!((x.din, x.dout), (y.din, y.dout));
+            assert_eq!(x.a_bits, y.a_bits);
+            assert_eq!(x.relu, y.relu);
+            assert_eq!(x.act_range, y.act_range);
+            assert_eq!(x.packed, y.packed);
+            assert_eq!(x.bias, y.bias);
+        }
+        assert!(b.is_calibrated());
+        assert!(b.packed_bytes() < b.f32_bytes());
+        assert!(b.mean_w_bits() > 0.0 && b.mean_a_bits() > 0.0);
+    }
+
+    #[test]
+    fn instantiate_matches_source_net_bitwise() {
+        let net = synthetic_net(&[8, 14, 3], 0xFE1, 4, 6);
+        let art = freeze(&net, "m");
+        let rebuilt = Artifact::from_bytes(&art.to_bytes())
+            .unwrap()
+            .instantiate()
+            .unwrap();
+        let mut rng = Rng::new(0x1057);
+        for &n in &[1usize, 5, 16] {
+            let x: Vec<f32> = (0..n * 8).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let want = net.forward(&x, n);
+            let got = rebuilt.forward(&x, n);
+            assert_eq!(want.len(), got.len());
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "instantiated net diverged at batch {n}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_sections_are_skipped() {
+        // Forward compatibility: a newer writer appends a section this
+        // reader does not know — it must load anyway (checksum still
+        // verified), and the section table must list it as unknown.
+        let a = demo_artifact();
+        let mut bytes = a.to_bytes();
+        // Bump section_count (offset 12) and append an unknown section.
+        let count_off = 12;
+        let old = u32::from_le_bytes(bytes[count_off..count_off + 4].try_into().unwrap());
+        bytes[count_off..count_off + 4].copy_from_slice(&(old + 1).to_le_bytes());
+        let payload = b"future-extension";
+        bytes.extend_from_slice(b"XTN9");
+        put_u64(&mut bytes, payload.len() as u64);
+        bytes.extend_from_slice(payload);
+        put_u32(&mut bytes, crc32(payload));
+
+        let b = Artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(b.layers.len(), a.layers.len());
+        let table = section_table(&bytes).unwrap();
+        assert_eq!(table.len(), old as usize + 1);
+        let last = table.last().unwrap();
+        assert_eq!(last.tag, "XTN9");
+        assert!(!last.known);
+        assert!(last.crc_ok);
+        // A corrupted unknown section still fails the load.
+        let n = bytes.len();
+        bytes[n - 6] ^= 0x40; // inside the unknown payload
+        assert!(Artifact::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn header_and_structure_validation() {
+        let good = demo_artifact().to_bytes();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(Artifact::from_bytes(&bad).is_err());
+        // Bad version.
+        let mut bad = good.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(Artifact::from_bytes(&bad).is_err());
+        // Trailing garbage.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(Artifact::from_bytes(&bad).is_err());
+        // Empty input.
+        assert!(Artifact::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn uncalibrated_and_empty_edge_cases() {
+        // A net without calibrated ranges freezes and roundtrips with
+        // act_range = None.
+        let mut net = synthetic_net(&[4, 6, 2], 3, 4, 4);
+        for l in &mut net.layers {
+            // synthetic_net calibrates; strip it via a fresh layer.
+            let stripped = IntDense::from_packed(
+                &l.name,
+                l.packed.clone(),
+                l.din,
+                l.dout,
+                l.bias.clone(),
+                l.a_bits,
+                l.relu,
+                None,
+            )
+            .unwrap();
+            *l = stripped;
+        }
+        let art = freeze(&net, "uncal");
+        assert!(!art.is_calibrated());
+        let rt = Artifact::from_bytes(&art.to_bytes()).unwrap();
+        assert!(!rt.is_calibrated());
+        assert!(rt.layers.iter().all(|l| l.act_range.is_none()));
+    }
+}

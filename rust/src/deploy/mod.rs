@@ -1,0 +1,29 @@
+//! The deployment subsystem: frozen model artifacts + a versioned
+//! registry with zero-downtime hot-swap.
+//!
+//! Training produces an in-process [`crate::infer::IntNet`]; this
+//! module makes that net an *operable asset*:
+//!
+//! * [`artifact`] — the **BPMA** single-file format.  [`freeze`]
+//!   captures a net's packed weight codes, learned bitlengths,
+//!   quantization parameters, biases and calibrated activation ranges;
+//!   [`Artifact::save`]/[`Artifact::load`] move it through a validated,
+//!   checksummed, allocation-bounded byte format; and
+//!   [`Artifact::instantiate`] rebuilds the net **bit-identically**
+//!   with no dataset, trainer or PJRT runtime in memory.
+//! * [`registry`] — [`ModelRegistry`], a versioned store with atomic
+//!   publish, drain semantics (in-flight batches finish on the version
+//!   they resolved) and rollback to any retained version.  The serving
+//!   loop (`serve::Server`) resolves its net through a registry once
+//!   per batch, which is what makes a live swap invisible to clients.
+//!
+//! CLI surface: `bitprune export` (train/checkpoint → `.bpma`),
+//! `bitprune inspect` (section table, bitlengths, footprint),
+//! `bitprune serve --model a.bpma [--swap-to b.bpma --swap-after N]`
+//! (serve an artifact; demonstrate a mid-traffic swap).
+
+pub mod artifact;
+pub mod registry;
+
+pub use artifact::{freeze, section_table, Artifact, LayerRecord, SectionInfo};
+pub use registry::{ModelRegistry, ModelVersion, DEFAULT_RETAIN};

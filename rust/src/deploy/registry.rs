@@ -1,0 +1,293 @@
+//! Versioned model registry: the control plane for zero-downtime
+//! serving.
+//!
+//! A [`ModelRegistry`] maps a serving endpoint onto a sequence of
+//! published model versions.  Publishing is **atomic** — a single
+//! pointer swap under a write lock — and readers ([`current`]) take a
+//! cheap `Arc` clone, so:
+//!
+//! * a batch that resolved version *N* keeps executing on *N* even if
+//!   *N+1* is published mid-forward (the `Arc` keeps the old net alive
+//!   until the last in-flight batch drops it — that is the **drain**
+//!   semantics: no request is interrupted, dropped or served by a
+//!   half-swapped model);
+//! * new batch resolutions after the swap see *N+1* immediately;
+//! * any retained version can be made current again ([`rollback`]).
+//!
+//! Shape compatibility is enforced at publish time (same input/output
+//! dimensionality as the registry was created with), which is what lets
+//! `serve::Server` keep handing out stable request/response dims across
+//! swaps.
+//!
+//! [`current`]: ModelRegistry::current
+//! [`rollback`]: ModelRegistry::rollback
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Result};
+
+use crate::infer::IntNet;
+
+/// How many published versions a registry keeps around for rollback
+/// when no explicit limit is given.
+pub const DEFAULT_RETAIN: usize = 4;
+
+/// One published model version (immutable once published).
+pub struct ModelVersion {
+    /// Monotonically increasing, starting at 1; never reused, even
+    /// after rollback (rolling back re-activates the old version id).
+    pub version: u64,
+    /// Operator-facing label (e.g. the artifact path it came from).
+    pub label: String,
+    pub net: Arc<IntNet>,
+}
+
+struct Inner {
+    active: Arc<ModelVersion>,
+    /// Every retained version, oldest first (always contains `active`).
+    retained: Vec<Arc<ModelVersion>>,
+    next_version: u64,
+}
+
+/// Thread-safe name→versioned-model store with atomic hot-swap.
+pub struct ModelRegistry {
+    /// Input dimensionality every version must accept.
+    din: usize,
+    /// Output dimensionality every version must emit.
+    out_dim: usize,
+    retain: usize,
+    inner: RwLock<Inner>,
+}
+
+impl ModelRegistry {
+    /// Create a registry with `net` as version 1.  The net fixes the
+    /// endpoint's input/output shape; later publishes must match it.
+    pub fn new(net: Arc<IntNet>, label: &str) -> Result<Self> {
+        Self::with_retain(net, label, DEFAULT_RETAIN)
+    }
+
+    /// [`Self::new`] with an explicit rollback-retention depth
+    /// (`retain >= 1`; the active version is always retained).
+    pub fn with_retain(net: Arc<IntNet>, label: &str, retain: usize) -> Result<Self> {
+        if retain == 0 {
+            bail!("registry: retain must be at least 1");
+        }
+        let (din, out_dim) = endpoint_shape(&net)?;
+        let v1 = Arc::new(ModelVersion { version: 1, label: label.to_string(), net });
+        Ok(Self {
+            din,
+            out_dim,
+            retain,
+            inner: RwLock::new(Inner {
+                active: Arc::clone(&v1),
+                retained: vec![v1],
+                next_version: 2,
+            }),
+        })
+    }
+
+    /// Input dimensionality every served request must carry.
+    pub fn input_dim(&self) -> usize {
+        self.din
+    }
+
+    /// Logits dimensionality every response carries.
+    pub fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    /// The active version — an `Arc` clone, so the caller's view is
+    /// stable for as long as it holds it regardless of later swaps.
+    pub fn current(&self) -> Arc<ModelVersion> {
+        Arc::clone(&self.read().active)
+    }
+
+    /// Atomically publish `net` as the new active version; returns the
+    /// assigned version id.  In-flight work on the previous version
+    /// drains on its own `Arc`; submissions that resolve after this
+    /// call see the new version.
+    pub fn publish(&self, net: Arc<IntNet>, label: &str) -> Result<u64> {
+        let (din, out_dim) = endpoint_shape(&net)?;
+        if din != self.din || out_dim != self.out_dim {
+            bail!(
+                "registry: published model is {din}->{out_dim} but this endpoint serves {}->{}",
+                self.din,
+                self.out_dim
+            );
+        }
+        let mut g = self.write();
+        let version = g.next_version;
+        g.next_version += 1;
+        let mv = Arc::new(ModelVersion { version, label: label.to_string(), net });
+        g.retained.push(Arc::clone(&mv));
+        g.active = mv;
+        self.trim(&mut g);
+        Ok(version)
+    }
+
+    /// Re-activate a retained version (atomic, like [`Self::publish`]).
+    /// Fails if the version was never published or has been trimmed
+    /// out of the retention window.
+    pub fn rollback(&self, version: u64) -> Result<()> {
+        let mut g = self.write();
+        let Some(mv) = g.retained.iter().find(|m| m.version == version) else {
+            let have: Vec<u64> = g.retained.iter().map(|m| m.version).collect();
+            bail!("registry: version {version} is not retained (have {have:?})");
+        };
+        g.active = Arc::clone(mv);
+        Ok(())
+    }
+
+    /// The active version id.
+    pub fn active_version(&self) -> u64 {
+        self.read().active.version
+    }
+
+    /// Retained `(version, label)` pairs, oldest first.
+    pub fn versions(&self) -> Vec<(u64, String)> {
+        self.read()
+            .retained
+            .iter()
+            .map(|m| (m.version, m.label.clone()))
+            .collect()
+    }
+
+    /// Drop the oldest retained versions beyond the retention depth —
+    /// never the active one.
+    fn trim(&self, g: &mut Inner) {
+        while g.retained.len() > self.retain {
+            let Some(idx) = g
+                .retained
+                .iter()
+                .position(|m| m.version != g.active.version)
+            else {
+                return; // only the active version is left
+            };
+            g.retained.remove(idx);
+        }
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, Inner> {
+        self.inner.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, Inner> {
+        self.inner.write().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// Validate a servable net and return its `(din, out_dim)`.
+fn endpoint_shape(net: &IntNet) -> Result<(usize, usize)> {
+    let Some(first) = net.layers.first() else {
+        bail!("registry: refusing an empty network");
+    };
+    let din = first.din;
+    let out_dim = net.layers.last().unwrap().dout;
+    if din == 0 || out_dim == 0 {
+        bail!("registry: degenerate network shape ({din} in, {out_dim} out)");
+    }
+    Ok((din, out_dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::synthetic_net;
+
+    fn net(seed: u64) -> Arc<IntNet> {
+        Arc::new(synthetic_net(&[6, 12, 3], seed, 4, 4))
+    }
+
+    #[test]
+    fn publish_swaps_atomically_and_old_arc_survives() {
+        let reg = ModelRegistry::new(net(1), "v1").unwrap();
+        assert_eq!(reg.active_version(), 1);
+        assert_eq!((reg.input_dim(), reg.out_dim()), (6, 3));
+
+        // An in-flight holder of v1 keeps its view across the swap.
+        let held = reg.current();
+        let v2 = reg.publish(net(2), "v2").unwrap();
+        assert_eq!(v2, 2);
+        assert_eq!(held.version, 1);
+        assert_eq!(reg.current().version, 2);
+        // The held net still forwards fine (drain semantics).
+        assert_eq!(held.net.forward(&[0.1; 6], 1).len(), 3);
+    }
+
+    #[test]
+    fn rollback_to_retained_version() {
+        let reg = ModelRegistry::new(net(1), "v1").unwrap();
+        reg.publish(net(2), "v2").unwrap();
+        reg.publish(net(3), "v3").unwrap();
+        assert_eq!(reg.active_version(), 3);
+        reg.rollback(1).unwrap();
+        assert_eq!(reg.active_version(), 1);
+        assert!(reg.rollback(99).is_err());
+        // Version ids are never reused: the next publish is v4.
+        assert_eq!(reg.publish(net(4), "v4").unwrap(), 4);
+        let versions: Vec<u64> = reg.versions().iter().map(|(v, _)| *v).collect();
+        assert_eq!(versions, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn retention_trims_oldest_but_never_active() {
+        let reg = ModelRegistry::with_retain(net(1), "v1", 2).unwrap();
+        reg.publish(net(2), "v2").unwrap();
+        reg.publish(net(3), "v3").unwrap();
+        let versions: Vec<u64> = reg.versions().iter().map(|(v, _)| *v).collect();
+        assert_eq!(versions, vec![2, 3]);
+        assert!(reg.rollback(1).is_err(), "v1 was trimmed");
+        // Roll back to v2, then publish twice more: v2 stays (active)
+        // until it is no longer active.
+        reg.rollback(2).unwrap();
+        reg.publish(net(4), "v4").unwrap();
+        let versions: Vec<u64> = reg.versions().iter().map(|(v, _)| *v).collect();
+        assert!(versions.contains(&4));
+        assert_eq!(reg.active_version(), 4);
+        assert_eq!(versions.len(), 2);
+    }
+
+    #[test]
+    fn shape_mismatch_and_bad_nets_rejected() {
+        let reg = ModelRegistry::new(net(1), "v1").unwrap();
+        let wrong = Arc::new(synthetic_net(&[7, 12, 3], 9, 4, 4));
+        assert!(reg.publish(wrong, "bad-in").is_err());
+        let wrong_out = Arc::new(synthetic_net(&[6, 12, 4], 9, 4, 4));
+        assert!(reg.publish(wrong_out, "bad-out").is_err());
+        assert_eq!(reg.active_version(), 1, "failed publish must not swap");
+
+        let empty = Arc::new(IntNet { layers: vec![], num_classes: 0 });
+        assert!(ModelRegistry::new(empty, "e").is_err());
+        assert!(ModelRegistry::with_retain(net(1), "r", 0).is_err());
+    }
+
+    #[test]
+    fn concurrent_readers_see_a_consistent_version() {
+        // Hammer current() from reader threads while publishing; every
+        // observed version must be a value that was actually published,
+        // and the sequence each reader sees is monotone non-decreasing
+        // (no tearing, no going backwards without a rollback).
+        let reg = std::sync::Arc::new(ModelRegistry::new(net(1), "v1").unwrap());
+        std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for _ in 0..4 {
+                let reg = std::sync::Arc::clone(&reg);
+                joins.push(scope.spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..500 {
+                        let v = reg.current().version;
+                        assert!(v >= last, "version went backwards: {last} -> {v}");
+                        last = v;
+                    }
+                }));
+            }
+            for v in 2..=5u64 {
+                assert_eq!(reg.publish(net(v), &format!("v{v}")).unwrap(), v);
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        });
+        assert_eq!(reg.active_version(), 5);
+    }
+}

@@ -124,12 +124,53 @@ impl IntDense {
         if w.len() != din * dout {
             bail!("{name}: weight len {} != {din}x{dout}", w.len());
         }
+        let packed = pack(w, w_bits)?;
+        Self::from_packed(name, packed, din, dout, bias.to_vec(), a_bits, relu, None)
+    }
+
+    /// Reconstruct a layer from its **stored** packed codes and
+    /// dequantization parameters, without touching f32 weights or the
+    /// quantizer — the deployment path (`deploy::artifact`).  Because
+    /// every forward-path table (`codes_t`, `col_code_sum`) is derived
+    /// from the codes alone and the affine terms use only
+    /// `(w_min, w_scale, bias, act_range)`, a layer rebuilt from the
+    /// exact packed bytes is **bit-identical** to the layer they were
+    /// frozen from.  All inputs are treated as untrusted (artifact
+    /// files): shapes, bitlengths and the code/geometry agreement are
+    /// validated, with `checked_mul` on the element count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_packed(
+        name: &str,
+        packed: PackedTensor,
+        din: usize,
+        dout: usize,
+        bias: Vec<f32>,
+        a_bits: u32,
+        relu: bool,
+        act_range: Option<(f32, f32)>,
+    ) -> Result<Self> {
+        let elems = din
+            .checked_mul(dout)
+            .ok_or_else(|| anyhow::anyhow!("{name}: {din}x{dout} overflows"))?;
+        if packed.len != elems {
+            bail!("{name}: {} packed codes != {din}x{dout}", packed.len);
+        }
         if bias.len() != dout {
             bail!("{name}: bias len {} != {dout}", bias.len());
         }
-        let packed = pack(w, w_bits)?;
+        if !(1..=16).contains(&packed.bits) {
+            bail!("{name}: weight bits {} outside [1,16]", packed.bits);
+        }
+        if !(1..=16).contains(&a_bits) {
+            bail!("{name}: activation bits {a_bits} outside [1,16]");
+        }
+        if let Some((lo, hi)) = act_range {
+            if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                bail!("{name}: bad activation range [{lo}, {hi}]");
+            }
+        }
         let codes = unpack_codes(&packed);
-        let mut codes_t = vec![0u16; din * dout];
+        let mut codes_t = vec![0u16; elems];
         let mut col_code_sum = vec![0i64; dout];
         for i in 0..din {
             for j in 0..dout {
@@ -147,10 +188,10 @@ impl IntDense {
             packed,
             codes_t,
             col_code_sum,
-            bias: bias.to_vec(),
+            bias,
             a_bits,
             relu,
-            act_range: None,
+            act_range,
         })
     }
 
@@ -538,8 +579,8 @@ impl IntNet {
                 din,
                 dout,
                 b.as_f32()?,
-                quant::clip_bits(bits_w[i]).ceil() as u32,
-                quant::clip_bits(bits_a[i]).ceil() as u32,
+                quant::int_bits(bits_w[i]),
+                quant::int_bits(bits_a[i]),
                 i != last,
             )?;
             if let Some((lo, hi)) = act_ranges {
@@ -764,6 +805,46 @@ mod tests {
         for (f, s) in fast.iter().zip(&slow) {
             assert_eq!(f.to_bits(), s.to_bits());
         }
+    }
+
+    #[test]
+    fn from_packed_rebuild_is_bit_identical() {
+        // The deploy path: a layer rebuilt from its stored packed codes
+        // (no f32 weights, no re-quantization) must forward identically.
+        let mut rng = Rng::new(0xF40E);
+        let (n, din, dout) = (5usize, 11usize, 9usize);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let mut src = IntDense::new("fz", &w, din, dout, &b, 3, 5, true).unwrap();
+        src.set_act_range(-2.0, 2.0);
+        let rebuilt = IntDense::from_packed(
+            "fz",
+            src.packed.clone(),
+            din,
+            dout,
+            src.bias.clone(),
+            src.a_bits,
+            src.relu,
+            src.act_range(),
+        )
+        .unwrap();
+        let want = src.forward(&x, n);
+        let got = rebuilt.forward(&x, n);
+        assert!(want.iter().zip(&got).all(|(p, q)| p.to_bits() == q.to_bits()));
+        // Untrusted-input validation: geometry/codes disagreement, bad
+        // bias length, out-of-range activation bits.
+        let p = src.packed.clone();
+        let bias = src.bias.clone();
+        assert!(
+            IntDense::from_packed("z", p.clone(), din, dout + 1, bias.clone(), 4, true, None)
+                .is_err()
+        );
+        assert!(
+            IntDense::from_packed("z", p.clone(), din, dout, vec![0.0; 3], 4, true, None)
+                .is_err()
+        );
+        assert!(IntDense::from_packed("z", p, din, dout, bias, 0, true, None).is_err());
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub mod accel;
 pub mod baselines;
 pub mod bitpack;
 pub mod checkpoint;
+pub mod deploy;
 pub mod hlo;
 pub mod infer;
 pub mod config;

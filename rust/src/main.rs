@@ -9,6 +9,10 @@
 //! bitprune accel   [--model M]            Table VIII accelerator models
 //! bitprune parity                         rust quantizer vs fake_quant.hlo
 //! bitprune artifacts                      list compiled artifacts
+//! bitprune export  --out m.bpma           freeze a model into a BPMA artifact
+//! bitprune inspect m.bpma                 section table / bitlengths / footprint
+//! bitprune serve   --model m.bpma         serve an artifact (no trainer/dataset);
+//!                  [--swap-to b.bpma --swap-after N]  live hot-swap demo
 //! ```
 //!
 //! Common options: --config FILE, --model, --dataset, --gamma, --seed,
@@ -57,6 +61,8 @@ fn run() -> Result<()> {
         "hlo" => cmd_hlo(&args),
         "pack" => cmd_pack(&args),
         "infer" => cmd_infer(&args),
+        "export" => cmd_export(&args),
+        "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "fig" => cmd_fig(&args),
         "help" | "--help" => {
@@ -83,9 +89,16 @@ COMMANDS:
   hlo         static cost analysis of the compiled artifacts
   pack        train + bit-pack weights; report real storage footprint
   infer       pure-integer inference vs the compiled eval artifact
+  export      freeze a model into a single-file BPMA deployment artifact
+                (--out FILE, --synthetic | --ckpt FILE | train)
+  inspect     print a BPMA artifact's section table, per-layer
+                bitlengths, footprint and checksums
   serve       batched integer serving engine: throughput + latency
                 percentiles (--requests N --batch-window USEC
-                --max-batch N --clients N --threads N --synthetic)
+                --max-batch N --clients N --threads N --synthetic);
+                --model FILE.bpma serves a frozen artifact with no
+                trainer or dataset in memory; --swap-to B.bpma
+                --swap-after N hot-swaps mid-traffic via the registry
   fig         render figure 1/3 ASCII charts from a reports/<run>.json
 
 OPTIONS (common):
@@ -94,6 +107,11 @@ OPTIONS (common):
   --init-bits B --eval-every N --criterion equal|bs1|bs128|mac
   --plan standard|early|fixed|warmstart --warmstart-ckpt FILE
   --artifacts DIR --out DIR --gammas A,B,C --models a,b,c --no-augment
+
+OPTIONS (deploy):
+  export:  --out FILE.bpma  --synthetic | --ckpt FILE.bpck  --bits B
+  inspect: <FILE.bpma>
+  serve:   --model FILE.bpma  --swap-to B.bpma  --swap-after N
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -420,6 +438,171 @@ fn trained_calibrated_net(cfg: &RunConfig) -> Result<bitprune::infer::IntNet> {
     session.int_net(&out.final_.bits_w, &out.final_.bits_a)
 }
 
+/// Rebuild a calibrated integer net from a saved checkpoint + the
+/// model meta — no training, no dataset.  Calibrated activation
+/// ranges are taken from the checkpoint's `cal/act_min`/`cal/act_max`
+/// tensors when present (the trainer saves them).
+fn net_from_checkpoint(cfg: &RunConfig, ckpt_path: &str) -> Result<bitprune::infer::IntNet> {
+    use bitprune::checkpoint::Checkpoint;
+    let ckpt = Checkpoint::load(ckpt_path)?;
+    let meta = bitprune::model::ModelMeta::load(
+        std::path::Path::new(&cfg.artifact_dir).join(format!("{}_meta.json", cfg.model)),
+    )?;
+    let mut params = Vec::with_capacity(meta.param_names.len());
+    for name in &meta.param_names {
+        params.push(ckpt.get(&format!("p/{name}"))?.clone());
+    }
+    let bits_w = ckpt.get("bits_w")?.as_f32()?.to_vec();
+    let bits_a = ckpt.get("bits_a")?.as_f32()?.to_vec();
+    let ranges = match (ckpt.tensors.get("cal/act_min"), ckpt.tensors.get("cal/act_max")) {
+        (Some(lo), Some(hi)) => Some((lo.as_f32()?.to_vec(), hi.as_f32()?.to_vec())),
+        _ => {
+            eprintln!(
+                "warning: checkpoint '{ckpt_path}' carries no calibrated activation \
+                 ranges (cal/act_min, cal/act_max) — the exported artifact will serve \
+                 batch-dependent logits"
+            );
+            None
+        }
+    };
+    bitprune::infer::IntNet::from_trained(
+        &meta,
+        &params,
+        &bits_w,
+        &bits_a,
+        ranges.as_ref().map(|(lo, hi)| (lo.as_slice(), hi.as_slice())),
+    )
+}
+
+/// Human-readable per-layer summary of a frozen artifact.
+fn artifact_summary(art: &bitprune::deploy::Artifact) -> String {
+    let mut t = Table::new(&["layer", "shape", "W bits", "A bits", "act range", "packed KiB"]);
+    for l in &art.layers {
+        t.row(vec![
+            l.name.clone(),
+            format!("{}x{}", l.din, l.dout),
+            format!("{}", l.w_bits()),
+            format!("{}", l.a_bits),
+            match l.act_range {
+                Some((lo, hi)) => format!("[{lo:.3}, {hi:.3}]"),
+                None => "dynamic".into(),
+            },
+            format!("{:.2}", l.stored_bytes() as f64 / 1024.0),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "\nmodel '{}': {} classes, mean bits W {:.2} / A {:.2}, \
+         {:.2} KiB packed vs {:.1} KiB f32 ({:.1}x), calibrated: {}",
+        art.model,
+        art.num_classes,
+        art.mean_w_bits(),
+        art.mean_a_bits(),
+        art.packed_bytes() as f64 / 1024.0,
+        art.f32_bytes() as f64 / 1024.0,
+        art.f32_bytes() as f64 / art.packed_bytes().max(1) as f64,
+        art.is_calibrated(),
+    ));
+    out
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    // Freeze a model into the single-file BPMA deployment artifact.
+    // Sources, in priority order: --synthetic (the calibrated mlp
+    // fixture), --ckpt FILE (a saved checkpoint + model meta, no
+    // training), or a fresh training run.
+    use bitprune::deploy::freeze;
+
+    let mut cfg = base_config(args)?;
+    if args.get("model").is_none() {
+        cfg.model = "mlp".into();
+        cfg.dataset = "blobs".into();
+    }
+    let out_path = args.get_or("out", "model.bpma").to_string();
+    let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
+
+    let (net, model_name) = if args.flag("synthetic") {
+        eprintln!("freezing the synthetic calibrated mlp fixture ({bits}-bit)");
+        (
+            bitprune::serve::synthetic_mlp(cfg.seed, bits, bits),
+            "synthetic-mlp".to_string(),
+        )
+    } else if let Some(ckpt) = args.get("ckpt") {
+        eprintln!("freezing checkpoint '{ckpt}' ({})", cfg.model);
+        (net_from_checkpoint(&cfg, ckpt)?, cfg.model.clone())
+    } else {
+        match trained_calibrated_net(&cfg) {
+            Ok(net) => (net, cfg.model.clone()),
+            Err(e) => bail!(
+                "export: cannot train here ({e:#})\n  \
+                 hint: `bitprune export --synthetic --out {out_path}` freezes the \
+                 synthetic fixture with no artifacts required, and \
+                 `bitprune export --ckpt run.bpck` freezes a saved checkpoint"
+            ),
+        }
+    };
+
+    let art = freeze(&net, &model_name);
+    art.save(&out_path)?;
+    let file_bytes = std::fs::metadata(&out_path).map(|m| m.len()).unwrap_or(0);
+    println!("{}", artifact_summary(&art));
+    println!(
+        "wrote {out_path} ({:.2} KiB on disk)\nserve it with: bitprune serve --model {out_path}",
+        file_bytes as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    // Validate + describe a BPMA artifact: section table with
+    // checksums, then the decoded per-layer bitlengths and footprint.
+    use bitprune::deploy::{section_table, Artifact};
+
+    let path = match args.get("model").or_else(|| args.pos(1)) {
+        Some(p) => p.to_string(),
+        None => bail!("usage: bitprune inspect <artifact.bpma>"),
+    };
+    let bytes = std::fs::read(&path)
+        .map_err(|e| anyhow::anyhow!("reading '{path}': {e}"))?;
+
+    let sections = section_table(&bytes)?;
+    let mut t = Table::new(&["section", "offset", "bytes", "crc32", "status"]);
+    for s in &sections {
+        t.row(vec![
+            s.tag.clone(),
+            format!("{}", s.payload_offset),
+            format!("{}", s.payload_len),
+            format!("{:08x}", s.crc_stored),
+            match (s.crc_ok, s.known) {
+                (false, _) => "CORRUPT".into(),
+                (true, false) => "ok (unknown, skipped)".into(),
+                (true, true) => "ok".into(),
+            },
+        ]);
+    }
+    println!("{path}: BPMA v{}, {} sections", bitprune::deploy::artifact::VERSION, sections.len());
+    println!("{}", t.render());
+
+    let art = Artifact::from_bytes(&bytes)?;
+    println!("{}", artifact_summary(&art));
+    Ok(())
+}
+
+/// Does `--model` name a BPMA artifact file rather than a model tag?
+fn looks_like_artifact(m: &str) -> bool {
+    if m.ends_with(".bpma") {
+        return true;
+    }
+    std::fs::File::open(m)
+        .and_then(|mut f| {
+            use std::io::Read;
+            let mut magic = [0u8; 4];
+            f.read_exact(&mut magic)?;
+            Ok(&magic == bitprune::deploy::artifact::MAGIC)
+        })
+        .unwrap_or(false)
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     // The batched integer-serving engine under synthetic closed-loop
     // load: N client threads fire single-sample requests, the server
@@ -427,13 +610,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // report throughput plus latency percentiles.  Because the net is
     // calibrated, every answer is bit-identical to the sample's solo
     // forward regardless of how it was batched.
+    //
+    // With `--model FILE.bpma` the model comes from a frozen artifact:
+    // no trainer, no dataset, no PJRT runtime in memory.  With
+    // `--swap-to B.bpma [--swap-after N]` a second artifact is
+    // published to the registry mid-traffic — the hot-swap demo: zero
+    // rejected requests, per-version accounting, and the swap visible
+    // only as a version-tag change in the responses.
+    use bitprune::deploy::{Artifact, ModelRegistry};
     use bitprune::serve::{ServeConfig, Server};
     use bitprune::util::bench::{append_jsonl, BenchResult};
+    use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
     use std::time::{Duration, Instant};
 
     let mut cfg = base_config(args)?;
-    if args.get("model").is_none() {
+    let model_arg = args.get("model").map(str::to_string);
+    let artifact_model = model_arg.as_deref().filter(|m| looks_like_artifact(m));
+    if model_arg.is_none() || artifact_model.is_some() {
         cfg.model = "mlp".into();
         cfg.dataset = "blobs".into();
     }
@@ -446,29 +640,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_queue = args.get_usize("max-queue", 4096)?;
     let clients = args.get_usize("clients", 4)?.max(1);
     let threads = args.get_usize("threads", 0)?;
-    // Same convention as from_trained/pack: clip, then ceil.
-    let bits = quant::clip_bits(args.get_f64("bits", 4.0)? as f32).ceil() as u32;
+    let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
 
-    let net = if args.flag("synthetic") {
+    let (net, label) = if let Some(path) = artifact_model {
+        let art = Artifact::load(path)?;
+        eprintln!(
+            "loaded artifact '{path}': model '{}', {} layers, {:.2} KiB packed, calibrated: {}",
+            art.model,
+            art.layers.len(),
+            art.packed_bytes() as f64 / 1024.0,
+            art.is_calibrated(),
+        );
+        if !art.is_calibrated() {
+            eprintln!(
+                "warning: artifact has no calibrated activation ranges — logits \
+                 will depend on micro-batch composition"
+            );
+        }
+        (art.instantiate()?, path.to_string())
+    } else if args.flag("synthetic") {
         eprintln!("serving the synthetic calibrated mlp fixture ({bits}-bit)");
-        bitprune::serve::synthetic_mlp(cfg.seed, bits, bits)
+        (bitprune::serve::synthetic_mlp(cfg.seed, bits, bits), "synthetic-mlp".into())
     } else {
         match trained_calibrated_net(&cfg) {
-            Ok(net) => net,
+            Ok(net) => (net, cfg.model.clone()),
             Err(e) => {
                 eprintln!(
-                    "training unavailable ({e:#}); \
-                     serving the synthetic calibrated mlp fixture instead"
+                    "no servable model: training is unavailable here ({e:#})\n  \
+                     hint: freeze a deployable artifact once and serve it with no \
+                     trainer or dataset:\n    \
+                     bitprune export --synthetic --out model.bpma\n    \
+                     bitprune serve --model model.bpma\n  \
+                     falling back to the synthetic calibrated mlp fixture"
                 );
-                bitprune::serve::synthetic_mlp(cfg.seed, bits, bits)
+                (bitprune::serve::synthetic_mlp(cfg.seed, bits, bits), "synthetic-mlp".into())
             }
         }
     };
     let net = Arc::new(net);
     let din = net.layers.first().map(|l| l.din).unwrap_or(0);
 
-    let server = Server::start(
-        Arc::clone(&net),
+    // Load the swap target up front so a bad file fails before traffic.
+    let swap_to: Option<(Arc<bitprune::infer::IntNet>, String)> =
+        match args.get("swap-to") {
+            Some(path) => {
+                let art = Artifact::load(path)?;
+                Some((Arc::new(art.instantiate()?), path.to_string()))
+            }
+            None => None,
+        };
+    let swap_after = args.get_usize("swap-after", requests / 2)?;
+
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), &label)?);
+    let server = Server::start_registry(
+        Arc::clone(&registry),
         ServeConfig {
             threads,
             max_batch,
@@ -480,41 +705,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serving {requests} requests from {clients} clients \
          (max_batch {max_batch}, window {window_us}us)..."
     );
+    if swap_to.is_some() {
+        eprintln!("will hot-swap to the --swap-to artifact after ~{swap_after} responses");
+    }
 
+    let served = AtomicUsize::new(0);
     let t0 = Instant::now();
-    let mut latencies: Vec<f64> = Vec::with_capacity(requests);
+    let mut samples: Vec<(u64, f64)> = Vec::with_capacity(requests);
+    let mut swap_version: Option<u64> = None;
     std::thread::scope(|scope| -> Result<()> {
         let mut joins = Vec::new();
         for c in 0..clients {
             let handle = server.handle();
+            let served = &served;
             let n_req = requests / clients + usize::from(c < requests % clients);
-            joins.push(scope.spawn(move || -> Result<Vec<f64>> {
+            joins.push(scope.spawn(move || -> Result<Vec<(u64, f64)>> {
                 let mut rng = Rng::new(0xC11E47 + c as u64);
                 let mut lats = Vec::with_capacity(n_req);
                 for _ in 0..n_req {
                     let x: Vec<f32> =
                         (0..din).map(|_| rng.normal_f32(0.0, 1.0)).collect();
                     let t = Instant::now();
-                    handle.infer(x)?;
-                    lats.push(t.elapsed().as_secs_f64());
+                    let (version, _) = handle.infer_versioned(x)?;
+                    lats.push((version, t.elapsed().as_secs_f64()));
+                    served.fetch_add(1, Ordering::Relaxed);
                 }
                 Ok(lats)
             }));
         }
+        // The swapper: wait for the trigger count, then publish —
+        // atomically, while the clients keep hammering the server.
+        if let Some((swap_net, swap_label)) = &swap_to {
+            while served.load(Ordering::Relaxed) < swap_after.min(requests) {
+                if joins.iter().all(|j| j.is_finished()) {
+                    break; // clients bailed early; don't spin forever
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            let t = Instant::now();
+            let v = registry.publish(Arc::clone(swap_net), swap_label)?;
+            eprintln!(
+                "published '{swap_label}' as v{v} after {} responses ({:.1}us publish)",
+                served.load(Ordering::Relaxed),
+                t.elapsed().as_secs_f64() * 1e6
+            );
+            swap_version = Some(v);
+        }
         for j in joins {
-            latencies.extend(j.join().expect("client thread panicked")?);
+            samples.extend(j.join().expect("client thread panicked")?);
         }
         Ok(())
     })?;
     let wall = t0.elapsed().as_secs_f64();
+
+    // Post-drain check: once the swap landed, a fresh request must be
+    // served by the new version only.
+    if let Some(v) = swap_version {
+        let handle = server.handle();
+        let x: Vec<f32> = vec![0.0; din];
+        let (got, _) = handle.infer_versioned(x)?;
+        if got != v {
+            bail!("post-swap request served by v{got}, expected v{v}");
+        }
+        println!("post-drain request served by v{v} (the swapped-in model)");
+    }
     let stats = server.shutdown();
 
+    let latencies: Vec<f64> = samples.iter().map(|(_, l)| *l).collect();
     let lat = BenchResult::from_samples("serve/request_latency", latencies, None);
     println!("{}", lat.report());
     println!(
         "served {} requests in {:.3}s -> {:.0} req/s | \
          p50 {:.0}us p95 {:.0}us p99 {:.0}us | \
-         {} batches, mean batch {:.1}",
+         {} batches, mean batch {:.1}, {} swap(s)",
         stats.requests,
         wall,
         stats.requests as f64 / wall,
@@ -523,7 +786,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         lat.percentile(99.0) * 1e6,
         stats.batches,
         stats.mean_batch(),
+        stats.swaps,
     );
+    if swap_version.is_some() {
+        let mut by_version: Vec<(u64, usize)> = Vec::new();
+        for &(v, _) in &samples {
+            match by_version.iter_mut().find(|(bv, _)| *bv == v) {
+                Some((_, n)) => *n += 1,
+                None => by_version.push((v, 1)),
+            }
+        }
+        by_version.sort_unstable();
+        let counts: Vec<String> =
+            by_version.iter().map(|(v, n)| format!("v{v}: {n}")).collect();
+        println!(
+            "zero rejected requests across the swap | responses by version: {}",
+            counts.join(", ")
+        );
+    }
 
     // Unbatched per-call baseline (allocating IntNet::forward, batch 1)
     // over a subset, for context in the same report format.
@@ -604,6 +884,10 @@ impl CliOpts for RunConfig {
             "max-queue",
             "clients",
             "threads",
+            // deploy subsystem (export / inspect / serve --model X.bpma)
+            "ckpt",
+            "swap-to",
+            "swap-after",
         ]);
         v
     }

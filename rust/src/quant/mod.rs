@@ -21,6 +21,13 @@ pub fn clip_bits(n: f32) -> f32 {
     n.clamp(N_MIN, N_MAX)
 }
 
+/// The integer bitlength a learned (possibly fractional) bitlength
+/// deploys at: clip into `[N_MIN, N_MAX]`, then ceil (paper §II-C).
+/// The one convention shared by packing, integer inference and the CLI.
+pub fn int_bits(n: f32) -> u32 {
+    clip_bits(n).ceil() as u32
+}
+
 /// Smallest representable step of an n-bit group over [lmin, lmax].
 pub fn scale(lmin: f32, lmax: f32, n: f32) -> f32 {
     let rng = (lmax - lmin).max(RANGE_EPS);
@@ -352,6 +359,16 @@ mod tests {
 
     fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
         (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn int_bits_clips_then_ceils() {
+        assert_eq!(int_bits(3.2), 4);
+        assert_eq!(int_bits(4.0), 4);
+        assert_eq!(int_bits(0.1), 1); // clipped to N_MIN first
+        assert_eq!(int_bits(-5.0), 1);
+        assert_eq!(int_bits(99.0), 16); // clipped to N_MAX
+        assert_eq!(int_bits(15.01), 16);
     }
 
     #[test]

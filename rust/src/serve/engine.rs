@@ -1,7 +1,5 @@
 //! The serving forward executor: persistent threads + reusable buffers.
 
-use std::sync::Arc;
-
 use crate::infer::{IntNet, NetScratch};
 use crate::util::pool::WorkerPool;
 
@@ -10,41 +8,40 @@ use crate::util::pool::WorkerPool;
 /// [`WorkerPool`] for the GEMM row blocks and a [`NetScratch`] of
 /// ping-pong activation planes (pooled dispatch still boxes O(threads)
 /// jobs per large layer).
-/// One engine serves one thread of control (forwards take `&mut self`);
-/// the batcher in [`super::Server`] owns exactly one.
+///
+/// The engine is **model-agnostic**: the net to execute is passed per
+/// call, which is what lets the batcher in [`super::Server`] resolve a
+/// different registry version for each batch while keeping one warm
+/// set of buffers across swaps.  One engine serves one thread of
+/// control (forwards take `&mut self`); the batcher owns exactly one.
 pub struct ServeEngine {
-    net: Arc<IntNet>,
     pool: WorkerPool,
     scratch: NetScratch,
 }
 
 impl ServeEngine {
     /// `threads == 0` sizes the pool to the machine.
-    pub fn new(net: Arc<IntNet>, threads: usize) -> Self {
+    pub fn new(threads: usize) -> Self {
         let pool = if threads == 0 {
             WorkerPool::with_default_size()
         } else {
             WorkerPool::new(threads)
         };
-        Self { net, pool, scratch: NetScratch::default() }
+        Self { pool, scratch: NetScratch::default() }
     }
 
-    pub fn net(&self) -> &IntNet {
-        &self.net
-    }
-
-    /// Forward a `[n, din]` batch; returns logits `[n, num_classes]`
-    /// borrowed from the engine's scratch.  Bit-identical to
-    /// `IntNet::forward` on the same net.
-    pub fn forward(&mut self, x: &[f32], n: usize) -> &[f32] {
-        let Self { net, pool, scratch } = self;
+    /// Forward a `[n, din]` batch through `net`; returns logits
+    /// `[n, net.num_classes]` borrowed from the engine's scratch.
+    /// Bit-identical to `IntNet::forward` on the same net.
+    pub fn forward(&mut self, net: &IntNet, x: &[f32], n: usize) -> &[f32] {
+        let Self { pool, scratch } = self;
         net.forward_into(x, n, scratch, Some(&*pool))
     }
 
     /// Classify a batch (same argmax rule as [`IntNet::predict`]).
-    pub fn predict(&mut self, x: &[f32], n: usize) -> Vec<usize> {
-        let nc = self.net.num_classes;
-        let logits = self.forward(x, n);
+    pub fn predict(&mut self, net: &IntNet, x: &[f32], n: usize) -> Vec<usize> {
+        let nc = net.num_classes;
+        let logits = self.forward(net, x, n);
         crate::infer::argmax_rows(logits, nc)
     }
 }
@@ -57,31 +54,44 @@ mod tests {
 
     #[test]
     fn engine_matches_percall_forward_bitwise() {
-        let net = Arc::new(synthetic_net(&[12, 31, 5], 0xE6, 4, 6));
-        let mut engine = ServeEngine::new(Arc::clone(&net), 2);
+        let net = synthetic_net(&[12, 31, 5], 0xE6, 4, 6);
+        let mut engine = ServeEngine::new(2);
         let mut rng = Rng::new(9);
         for &n in &[1usize, 3, 17] {
             let x: Vec<f32> =
                 (0..n * 12).map(|_| rng.normal_f32(0.0, 1.0)).collect();
             let want = net.forward(&x, n);
-            let got = engine.forward(&x, n);
+            let got = engine.forward(&net, &x, n);
             assert_eq!(got.len(), want.len());
             assert!(
                 got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "engine forward diverged at batch {n}"
             );
         }
-        assert_eq!(engine.predict(&[0.1; 12], 1), net.predict(&[0.1; 12], 1));
+        assert_eq!(
+            engine.predict(&net, &[0.1; 12], 1),
+            net.predict(&[0.1; 12], 1)
+        );
     }
 
     #[test]
-    fn engine_reuses_buffers_across_batch_sizes() {
-        // Growing then shrinking batch sizes must keep shapes right.
-        let net = Arc::new(synthetic_net(&[8, 16, 4], 1, 4, 4));
-        let mut engine = ServeEngine::new(Arc::clone(&net), 1);
+    fn engine_reuses_buffers_across_batch_sizes_and_nets() {
+        // Growing then shrinking batch sizes must keep shapes right,
+        // and the same warm buffers must serve a *different* net (the
+        // hot-swap path) without contaminating results.
+        let a = synthetic_net(&[8, 16, 4], 1, 4, 4);
+        let b = synthetic_net(&[8, 16, 4], 2, 4, 4);
+        let mut engine = ServeEngine::new(1);
         for &n in &[1usize, 64, 7, 64, 1] {
             let x = vec![0.25f32; n * 8];
-            assert_eq!(engine.forward(&x, n).len(), n * 4);
+            assert_eq!(engine.forward(&a, &x, n).len(), n * 4);
         }
+        let x = vec![0.5f32; 3 * 8];
+        let from_engine = engine.forward(&b, &x, 3).to_vec();
+        let solo = b.forward(&x, 3);
+        assert!(
+            from_engine.iter().zip(&solo).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "swapped-in net must forward exactly as it does standalone"
+        );
     }
 }

@@ -19,20 +19,30 @@
 //!   caller gets its own logits row back.  Batch-invariance is what
 //!   makes this sound: a request's answer is bit-identical whether it
 //!   was served alone or coalesced with 63 strangers.
+//! * **Registry-resolved models** — the batcher does not own a fixed
+//!   `Arc<IntNet>`; it resolves the current version from a
+//!   [`crate::deploy::ModelRegistry`] once per batch.  Publishing (or
+//!   rolling back) a version on a live server hot-swaps the model
+//!   between batches with zero downtime: in-flight batches drain on
+//!   the version they resolved, every [`Response`] carries the version
+//!   that computed it, and [`ServeStats::swaps`] counts the
+//!   transitions.  Frozen `.bpma` artifacts (`crate::deploy::artifact`)
+//!   are the shipping form models enter the registry in.
 //! * Synthetic fixtures ([`synthetic_net`] / [`synthetic_mlp`]) — a
 //!   calibrated random network on the mlp artifact shapes
 //!   (32→256→128→10, python/compile/models.py), so `bitprune serve`,
 //!   `benches/serve.rs` and the tests run without AOT artifacts.
 //!
 //! Entry points: `bitprune serve` (CLI, throughput + latency
-//! percentiles) and `benches/serve.rs` (engine vs per-call
-//! `IntNet::forward`, recorded in `BENCH_serve.json`).
+//! percentiles, `--model a.bpma --swap-to b.bpma` live-swap demo),
+//! `benches/serve.rs` and `benches/deploy.rs` (`BENCH_serve.json` /
+//! `BENCH_deploy.json`).
 
 mod engine;
 mod server;
 
 pub use engine::ServeEngine;
-pub use server::{ServeConfig, ServeStats, Server, ServerHandle};
+pub use server::{Response, ServeConfig, ServeStats, Server, ServerHandle};
 
 use crate::infer::{IntDense, IntNet};
 use crate::util::rng::Rng;

@@ -1,12 +1,20 @@
-//! Dynamic micro-batching request queue.
+//! Dynamic micro-batching request queue over a versioned model
+//! registry.
 //!
 //! Requests are single samples; a dedicated batcher thread coalesces
 //! them into batches (flushing when `max_batch` are waiting or the
 //! oldest request has waited `batch_window`, whichever comes first),
-//! runs each batch once through a [`ServeEngine`], and answers every
-//! caller with its own logits row.  Because the engine's net carries
-//! calibrated activation ranges, the answer is bit-identical however
-//! the request was batched.
+//! resolves the **current registry version once per batch**, runs the
+//! batch through a [`ServeEngine`], and answers every caller with its
+//! own logits row tagged with the version that produced it.
+//!
+//! Hot-swap semantics follow directly: a `ModelRegistry::publish`
+//! between batches retargets the *next* batch while the in-flight one
+//! completes on the `Arc` it already resolved (drain — no request is
+//! dropped, mixed across versions, or served by a half-swapped model).
+//! Because every published net carries calibrated activation ranges,
+//! each answer is bit-identical to the sample's solo forward on that
+//! version, however it was batched.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -18,6 +26,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use super::engine::ServeEngine;
+use crate::deploy::ModelRegistry;
 use crate::infer::IntNet;
 
 /// Knobs for the micro-batching serving loop.
@@ -52,6 +61,9 @@ impl Default for ServeConfig {
 pub struct ServeStats {
     pub batches: u64,
     pub requests: u64,
+    /// Times the batcher observed a different registry version than
+    /// the previous batch (publishes *and* rollbacks land here).
+    pub swaps: u64,
 }
 
 impl ServeStats {
@@ -65,9 +77,17 @@ impl ServeStats {
     }
 }
 
+/// One answered request: the logits row plus the registry version of
+/// the model that computed it (the hot-swap observability hook).
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub version: u64,
+    pub logits: Vec<f32>,
+}
+
 struct Request {
     x: Vec<f32>,
-    resp: Sender<Vec<f32>>,
+    resp: Sender<Response>,
     /// When the request entered the queue — the batch-window deadline
     /// counts from here, not from when the batcher gets around to it.
     enqueued: Instant,
@@ -81,14 +101,17 @@ struct Shared {
     max_queue: usize,
     batches: AtomicU64,
     requests: AtomicU64,
+    swaps: AtomicU64,
 }
 
-/// The serving endpoint: owns the batcher thread.  Dropping (or
+/// The serving endpoint: owns the batcher thread and resolves its
+/// model through a [`ModelRegistry`] once per batch.  Dropping (or
 /// calling [`Server::shutdown`]) drains the queue and joins the
 /// batcher; requests still queued at shutdown are served, requests
 /// submitted after it are rejected.
 pub struct Server {
     shared: Arc<Shared>,
+    registry: Arc<ModelRegistry>,
     din: usize,
     out_dim: usize,
     batcher: Option<JoinHandle<()>>,
@@ -103,23 +126,26 @@ pub struct ServerHandle {
 }
 
 impl Server {
-    /// Spin up the batcher around `net`.  The net should carry
+    /// Convenience for single-model serving: wrap `net` in a fresh
+    /// one-version registry and start.  The net should carry
     /// calibrated activation ranges ([`IntNet::is_calibrated`]);
     /// serving an uncalibrated net works but answers then depend on
     /// batch composition, which micro-batching makes nondeterministic.
     pub fn start(net: Arc<IntNet>, cfg: ServeConfig) -> Result<Self> {
-        let Some(first) = net.layers.first() else {
-            bail!("serve: refusing to serve an empty network");
-        };
+        let registry = Arc::new(ModelRegistry::new(net, "initial")?);
+        Self::start_registry(registry, cfg)
+    }
+
+    /// Spin up the batcher over an existing registry.  The registry
+    /// stays shared: publishing to it while this server runs hot-swaps
+    /// the model between batches with zero downtime.
+    pub fn start_registry(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Result<Self> {
         if cfg.max_batch == 0 || cfg.max_queue == 0 {
             bail!("serve: max_batch and max_queue must be at least 1");
         }
-        let din = first.din;
-        let out_dim = net.layers.last().unwrap().dout;
-        if din == 0 || out_dim == 0 {
-            bail!("serve: degenerate network shape ({din} in, {out_dim} out)");
-        }
-        let engine = ServeEngine::new(Arc::clone(&net), cfg.threads);
+        let din = registry.input_dim();
+        let out_dim = registry.out_dim();
+        let engine = ServeEngine::new(cfg.threads);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -127,17 +153,25 @@ impl Server {
             max_queue: cfg.max_queue,
             batches: AtomicU64::new(0),
             requests: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
         });
         let shared2 = Arc::clone(&shared);
+        let registry2 = Arc::clone(&registry);
         let batcher = std::thread::Builder::new()
             .name("bitprune-batcher".into())
-            .spawn(move || batcher_loop(shared2, engine, cfg, out_dim))
+            .spawn(move || batcher_loop(shared2, registry2, engine, cfg, out_dim))
             .map_err(|e| anyhow!("serve: spawning batcher thread: {e}"))?;
-        Ok(Self { shared, din, out_dim, batcher: Some(batcher) })
+        Ok(Self { shared, registry, din, out_dim, batcher: Some(batcher) })
     }
 
     pub fn handle(&self) -> ServerHandle {
         ServerHandle { shared: Arc::clone(&self.shared), din: self.din }
+    }
+
+    /// The registry this server resolves its model through — publish
+    /// or roll back here to hot-swap what subsequent batches run.
+    pub fn registry(&self) -> Arc<ModelRegistry> {
+        Arc::clone(&self.registry)
     }
 
     /// Input dimensionality one request must carry.
@@ -154,6 +188,7 @@ impl Server {
         ServeStats {
             batches: self.shared.batches.load(Ordering::Relaxed),
             requests: self.shared.requests.load(Ordering::Relaxed),
+            swaps: self.shared.swaps.load(Ordering::Relaxed),
         }
     }
 
@@ -185,10 +220,11 @@ impl Drop for Server {
 }
 
 impl ServerHandle {
-    /// Enqueue one sample; returns the channel the logits row arrives
-    /// on.  Fails fast on wrong input length, a shut-down server, or a
-    /// full queue (backpressure — see [`ServeConfig::max_queue`]).
-    pub fn submit(&self, x: Vec<f32>) -> Result<Receiver<Vec<f32>>> {
+    /// Enqueue one sample; returns the channel the versioned logits
+    /// row arrives on.  Fails fast on wrong input length, a shut-down
+    /// server, or a full queue (backpressure — see
+    /// [`ServeConfig::max_queue`]).
+    pub fn submit(&self, x: Vec<f32>) -> Result<Receiver<Response>> {
         if x.len() != self.din {
             bail!("serve: request has {} values, model wants {}", x.len(), self.din);
         }
@@ -221,9 +257,18 @@ impl ServerHandle {
 
     /// Submit and block for the answer.
     pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
-        self.submit(x)?
+        self.infer_versioned(x).map(|(_, logits)| logits)
+    }
+
+    /// Submit and block for the answer plus the registry version of
+    /// the model that computed it (what the hot-swap tests and the
+    /// `--swap-to` CLI demo key on).
+    pub fn infer_versioned(&self, x: Vec<f32>) -> Result<(u64, Vec<f32>)> {
+        let r = self
+            .submit(x)?
             .recv()
-            .map_err(|_| anyhow!("serve: server dropped the request"))
+            .map_err(|_| anyhow!("serve: server dropped the request"))?;
+        Ok((r.version, r.logits))
     }
 }
 
@@ -247,6 +292,7 @@ impl Drop for BatcherGuard {
 
 fn batcher_loop(
     shared: Arc<Shared>,
+    registry: Arc<ModelRegistry>,
     mut engine: ServeEngine,
     cfg: ServeConfig,
     out_dim: usize,
@@ -254,6 +300,7 @@ fn batcher_loop(
     let _guard = BatcherGuard(Arc::clone(&shared));
     let mut gather: Vec<f32> = Vec::new();
     let mut batch: Vec<Request> = Vec::new();
+    let mut last_version = 0u64;
     loop {
         batch.clear();
         {
@@ -299,11 +346,21 @@ fn batcher_loop(
         for r in &batch {
             gather.extend_from_slice(&r.x);
         }
-        let logits = engine.forward(&gather, n);
+        // Resolve the model once per batch: the whole batch runs on one
+        // version, and holding the Arc is what gives a concurrent
+        // publish its drain semantics.
+        let mv = registry.current();
+        if last_version != 0 && mv.version != last_version {
+            shared.swaps.fetch_add(1, Ordering::Relaxed);
+        }
+        last_version = mv.version;
+        let logits = engine.forward(&mv.net, &gather, n);
         for (row, r) in logits.chunks_exact(out_dim).zip(&batch) {
             // A client that gave up (dropped its Receiver) is not an
             // error for the batch.
-            let _ = r.resp.send(row.to_vec());
+            let _ = r
+                .resp
+                .send(Response { version: mv.version, logits: row.to_vec() });
         }
         shared.batches.fetch_add(1, Ordering::Relaxed);
         shared.requests.fetch_add(n as u64, Ordering::Relaxed);
@@ -347,10 +404,14 @@ mod tests {
             .collect();
         for (s, rx) in samples.iter().zip(pending) {
             let got = rx.recv().unwrap();
+            assert_eq!(got.version, 1, "single-model server serves version 1");
             let want = net.forward(s, 1);
-            assert_eq!(got.len(), want.len());
+            assert_eq!(got.logits.len(), want.len());
             assert!(
-                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                got.logits
+                    .iter()
+                    .zip(&want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
                 "served answer differs from solo forward"
             );
         }
@@ -358,6 +419,7 @@ mod tests {
         assert_eq!(stats.requests, 40);
         assert!(stats.batches >= 5, "max_batch 8 over 40 requests => >= 5 batches");
         assert!(stats.mean_batch() >= 1.0);
+        assert_eq!(stats.swaps, 0);
     }
 
     #[test]
@@ -439,5 +501,51 @@ mod tests {
         // waiting out the 30s window.
         let stats = server.shutdown();
         assert_eq!(stats.requests, 8);
+    }
+
+    #[test]
+    fn registry_publish_retargets_subsequent_requests() {
+        // Sequential requests around a publish: answers before the
+        // swap carry version 1 and match net A; answers after carry
+        // version 2 and match net B (the post-drain property, in its
+        // deterministic single-threaded form — the concurrent version
+        // lives in tests/deploy_hotswap.rs).
+        let a = small_net();
+        let b = Arc::new(synthetic_net(&[6, 14, 3], 0xB0B, 4, 6));
+        let registry =
+            Arc::new(crate::deploy::ModelRegistry::new(Arc::clone(&a), "a").unwrap());
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            ServeConfig {
+                threads: 1,
+                max_batch: 4,
+                batch_window: Duration::from_millis(1),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        let x = vec![0.3f32; 6];
+
+        let (v, logits) = handle.infer_versioned(x.clone()).unwrap();
+        assert_eq!(v, 1);
+        let want_a = a.forward(&x, 1);
+        assert!(logits.iter().zip(&want_a).all(|(p, q)| p.to_bits() == q.to_bits()));
+
+        registry.publish(Arc::clone(&b), "b").unwrap();
+        let (v, logits) = handle.infer_versioned(x.clone()).unwrap();
+        assert_eq!(v, 2, "post-publish requests must run on the new version");
+        let want_b = b.forward(&x, 1);
+        assert!(logits.iter().zip(&want_b).all(|(p, q)| p.to_bits() == q.to_bits()));
+
+        // Rollback retargets again.
+        registry.rollback(1).unwrap();
+        let (v, logits) = handle.infer_versioned(x.clone()).unwrap();
+        assert_eq!(v, 1);
+        assert!(logits.iter().zip(&want_a).all(|(p, q)| p.to_bits() == q.to_bits()));
+
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 3);
+        assert_eq!(stats.swaps, 2, "publish + rollback each count as one swap");
     }
 }

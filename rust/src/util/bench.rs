@@ -126,6 +126,7 @@ impl BenchResult {
         j.push_str(&format!("\"mean_s\":{:.9},", self.mean));
         j.push_str(&format!("\"median_s\":{:.9},", self.median));
         j.push_str(&format!("\"p95_s\":{:.9},", self.p95));
+        j.push_str(&format!("\"p99_s\":{:.9},", self.percentile(99.0)));
         j.push_str(&format!("\"samples\":{},", self.samples.len()));
         j.push_str(&format!("\"elems_per_iter\":{elems},"));
         j.push_str(&format!("\"throughput_elems_per_s\":{tp}"));
@@ -323,6 +324,7 @@ mod tests {
         let j = r.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
         assert!(j.contains("\"mean_s\":1.000000000"), "{j}");
+        assert!(j.contains("\"p99_s\":"), "{j}");
         assert!(j.contains("\"samples\":2"), "{j}");
         assert!(j.contains("\"elems_per_iter\":1000"), "{j}");
         assert!(j.contains("\"throughput_elems_per_s\":1000.000"), "{j}");

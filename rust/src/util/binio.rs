@@ -1,0 +1,318 @@
+//! Bounded little-endian binary I/O shared by every on-disk format in
+//! the crate (`checkpoint` BPCK, `deploy::artifact` BPMA).
+//!
+//! The reading half treats the input as **untrusted**: every length,
+//! count and element product in a file is attacker-controlled, so
+//!
+//! * [`Reader::take`] bounds every read by the bytes actually present
+//!   (no `pos + n` overflow — the check is phrased as a subtraction);
+//! * the typed vector readers ([`Reader::f32_vec`] & co.) compute the
+//!   byte span with `checked_mul` and `take` it **before** allocating,
+//!   so a hostile header cannot trigger an OOM-scale
+//!   `Vec::with_capacity` or a silent product overflow;
+//! * [`Reader::str_u32`] caps name lengths the same way.
+//!
+//! The writing half is a thin set of `Vec<u8>` extenders mirroring the
+//! reader, plus [`crc32`] (IEEE, table-driven, built at compile time)
+//! for the per-section checksums of the BPMA artifact format.
+
+use anyhow::{bail, Result};
+
+/// A bounds-checked cursor over untrusted bytes.
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Current byte offset (for error context).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    /// Whether the cursor consumed every byte.
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take the next `n` bytes. Fails (instead of panicking or
+    /// overflowing) when fewer than `n` remain.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "truncated input: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Skip `n` bytes (bounded like [`Self::take`]).
+    pub fn skip(&mut self, n: usize) -> Result<()> {
+        self.take(n).map(|_| ())
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A `u64` length/count field that must fit in `usize` and is about
+    /// to drive a read: validated against the bytes remaining so a
+    /// hostile value fails here, not in an allocator.
+    pub fn len_u64(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        let n = usize::try_from(v).map_err(|_| {
+            anyhow::anyhow!("length field {v} does not fit in usize")
+        })?;
+        if n > self.remaining() {
+            bail!(
+                "length field {n} at offset {} exceeds the {} bytes remaining",
+                self.pos - 8,
+                self.remaining()
+            );
+        }
+        Ok(n)
+    }
+
+    /// `n` little-endian f32s; the byte span is checked (and consumed)
+    /// before the output vector is allocated.
+    pub fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let span = checked_span(n, 4)?;
+        let s = self.take(span)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// `n` little-endian i32s (allocation-bounded like [`Self::f32_vec`]).
+    pub fn i32_vec(&mut self, n: usize) -> Result<Vec<i32>> {
+        let span = checked_span(n, 4)?;
+        let s = self.take(span)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// `n` little-endian u32s (allocation-bounded like [`Self::f32_vec`]).
+    pub fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let span = checked_span(n, 4)?;
+        let s = self.take(span)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// A `u32` length-prefixed UTF-8 string (the BPCK/BPMA name
+    /// encoding). The length is bounded by the bytes present before
+    /// anything is copied.
+    pub fn str_u32(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let s = self.take(len)?;
+        String::from_utf8(s.to_vec()).map_err(|_| {
+            anyhow::anyhow!("string at offset {} is not UTF-8", self.pos - len)
+        })
+    }
+}
+
+/// `count * elem_size` with overflow reported as a parse error.
+fn checked_span(count: usize, elem_size: usize) -> Result<usize> {
+    count
+        .checked_mul(elem_size)
+        .ok_or_else(|| anyhow::anyhow!("element count {count} overflows a byte span"))
+}
+
+/// Product of untrusted dimensions with overflow reported as an error
+/// (`dims.iter().product()` would wrap silently in release builds).
+pub fn checked_product(dims: &[usize]) -> Result<usize> {
+    dims.iter().try_fold(1usize, |acc, &d| {
+        acc.checked_mul(d)
+            .ok_or_else(|| anyhow::anyhow!("dimension product overflows: {dims:?}"))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// writer half
+// ---------------------------------------------------------------------------
+
+pub fn put_u8(buf: &mut Vec<u8>, v: u8) {
+    buf.push(v);
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32_slice(buf: &mut Vec<u8>, vs: &[f32]) {
+    for &v in vs {
+        put_f32(buf, v);
+    }
+}
+
+/// Mirror of [`Reader::str_u32`].
+pub fn put_str_u32(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, reflected) — the BPMA per-section checksum
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 of `bytes` (IEEE polynomial, the zlib/`cksum -o 3` convention).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_bounded_and_tracks_pos() {
+        let mut r = Reader::new(&[1, 2, 3, 4, 5]);
+        assert_eq!(r.take(2).unwrap(), &[1, 2]);
+        assert_eq!(r.pos(), 2);
+        assert_eq!(r.remaining(), 3);
+        assert!(r.take(4).is_err());
+        // A failed take consumes nothing.
+        assert_eq!(r.take(3).unwrap(), &[3, 4, 5]);
+        assert!(r.is_empty());
+        // usize::MAX must not overflow the bound check.
+        let mut r2 = Reader::new(&[0u8; 8]);
+        assert!(r2.take(usize::MAX).is_err());
+    }
+
+    #[test]
+    fn scalar_readers_roundtrip_writers() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_f32(&mut buf, -1.5);
+        put_str_u32(&mut buf, "fc0/w");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.str_u32().unwrap(), "fc0/w");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn vec_readers_bound_allocation_by_remaining() {
+        // A count field claiming 2^61 elements must fail before any
+        // allocation, as must one merely larger than the payload.
+        let mut buf = Vec::new();
+        put_f32_slice(&mut buf, &[1.0, 2.0, 3.0]);
+        let mut r = Reader::new(&buf);
+        assert!(r.f32_vec(usize::MAX / 2).is_err());
+        assert!(r.f32_vec(4).is_err());
+        assert_eq!(r.f32_vec(3).unwrap(), vec![1.0, 2.0, 3.0]);
+        let mut r2 = Reader::new(&buf);
+        assert!(r2.u32_vec(4).is_err());
+        assert!(r2.i32_vec(usize::MAX).is_err());
+    }
+
+    #[test]
+    fn len_u64_rejects_hostile_lengths() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX);
+        buf.extend_from_slice(&[0u8; 4]);
+        assert!(Reader::new(&buf).len_u64().is_err());
+        let mut buf2 = Vec::new();
+        put_u64(&mut buf2, 4);
+        buf2.extend_from_slice(&[9u8; 4]);
+        assert_eq!(Reader::new(&buf2).len_u64().unwrap(), 4);
+        // Claims more than remains -> error, not a huge allocation later.
+        let mut buf3 = Vec::new();
+        put_u64(&mut buf3, 5);
+        buf3.extend_from_slice(&[9u8; 4]);
+        assert!(Reader::new(&buf3).len_u64().is_err());
+    }
+
+    #[test]
+    fn checked_product_catches_overflow() {
+        assert_eq!(checked_product(&[3, 4, 5]).unwrap(), 60);
+        assert_eq!(checked_product(&[]).unwrap(), 1);
+        assert_eq!(checked_product(&[7, 0, 9]).unwrap(), 0);
+        let big = usize::MAX / 2;
+        assert!(checked_product(&[big, 3]).is_err());
+        assert!(checked_product(&[big, big, big]).is_err());
+    }
+
+    #[test]
+    fn str_u32_rejects_bad_utf8_and_truncation() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 2);
+        buf.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(Reader::new(&buf).str_u32().is_err());
+        let mut buf2 = Vec::new();
+        put_u32(&mut buf2, 100); // claims 100 bytes, has none
+        assert!(Reader::new(&buf2).str_u32().is_err());
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE test vectors.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        // Single-bit sensitivity.
+        assert_ne!(crc32(b"deploy"), crc32(b"dePloy"));
+    }
+}

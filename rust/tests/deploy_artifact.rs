@@ -1,0 +1,265 @@
+//! BPMA artifact robustness suite.
+//!
+//! Two halves:
+//!
+//! 1. **Roundtrip property** — for random geometries, bitlengths and
+//!    seeds: freeze → serialize → parse → instantiate produces a net
+//!    whose logits are **bit-identical** to the source net on random
+//!    batches (the deploy contract: a `.bpma` file on disk *is* the
+//!    model, with no dataset or trainer involved).
+//! 2. **Corrupt-input robustness** — truncation at *every* byte
+//!    boundary (which covers every section boundary), a flipped byte
+//!    in every section payload, bad magic/version, and hostile
+//!    length/count fields must all fail with a clean `Err`: no panic,
+//!    no OOM-scale allocation.  Pure rust — runs without AOT artifacts.
+
+use bitprune::deploy::{freeze, section_table, Artifact};
+use bitprune::serve::synthetic_net;
+use bitprune::util::proptest::check;
+use bitprune::util::rng::Rng;
+
+fn rand_batch(rng: &mut Rng, n: usize, din: usize) -> Vec<f32> {
+    (0..n * din).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+#[test]
+fn roundtrip_instantiate_is_bit_identical_property() {
+    check(
+        "bpma-roundtrip",
+        24,
+        |rng: &mut Rng| {
+            // Random small geometry: 1-3 layers, odd dims, random bits.
+            let n_layers = 1 + rng.below_usize(3);
+            let mut dims = vec![1 + rng.below_usize(24)];
+            for _ in 0..n_layers {
+                dims.push(1 + rng.below_usize(24));
+            }
+            let w_bits = 1 + rng.below(8) as u32;
+            let a_bits = 1 + rng.below(8) as u32;
+            let seed = rng.below(1 << 30);
+            let batch = 1 + rng.below_usize(9);
+            (dims, w_bits, a_bits, seed, batch)
+        },
+        |(dims, w_bits, a_bits, seed, batch)| {
+            let net = synthetic_net(dims, *seed, *w_bits, *a_bits);
+            let art = freeze(&net, "prop");
+            let bytes = art.to_bytes();
+            let rebuilt = Artifact::from_bytes(&bytes)
+                .map_err(|e| format!("parse: {e:#}"))?
+                .instantiate()
+                .map_err(|e| format!("instantiate: {e:#}"))?;
+            let mut rng = Rng::new(seed.wrapping_add(0x9E37));
+            let x = rand_batch(&mut rng, *batch, dims[0]);
+            let want = net.forward(&x, *batch);
+            let got = rebuilt.forward(&x, *batch);
+            if want.len() != got.len() {
+                return Err("logits length mismatch".into());
+            }
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("logit {i}: source {a} vs instantiated {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn save_load_file_roundtrip() {
+    let dir = std::env::temp_dir().join("bitprune-deploy-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.bpma");
+
+    let net = synthetic_net(&[10, 18, 4], 0xD15C, 3, 5);
+    let art = freeze(&net, "disk");
+    art.save(&path).unwrap();
+    let loaded = Artifact::load(&path).unwrap();
+    assert_eq!(loaded.model, "disk");
+    let rebuilt = loaded.instantiate().unwrap();
+    let mut rng = Rng::new(1);
+    let x = rand_batch(&mut rng, 6, 10);
+    let want = net.forward(&x, 6);
+    let got = rebuilt.forward(&x, 6);
+    assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+    // A missing file is a clean error.
+    assert!(Artifact::load(dir.join("nope.bpma")).is_err());
+}
+
+#[test]
+fn truncation_at_every_byte_is_a_clean_error() {
+    // Every strict prefix of a valid artifact must fail to parse —
+    // this sweeps every section boundary, every length field and every
+    // payload interior.  (A tiny net keeps the byte count manageable;
+    // each attempt must fail fast.)
+    let art = freeze(&synthetic_net(&[5, 7, 3], 0x7777, 2, 3), "trunc");
+    let bytes = art.to_bytes();
+    assert!(Artifact::from_bytes(&bytes).is_ok());
+    for cut in 0..bytes.len() {
+        assert!(
+            Artifact::from_bytes(&bytes[..cut]).is_err(),
+            "prefix of {cut}/{} bytes parsed successfully",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn flipped_byte_in_every_section_payload_fails_crc() {
+    let art = freeze(&synthetic_net(&[6, 9, 2], 0xC4C, 4, 4), "crc");
+    let bytes = art.to_bytes();
+    let sections = section_table(&bytes).unwrap();
+    assert_eq!(sections.len(), 4, "v1 writes four sections");
+    for s in &sections {
+        assert!(s.crc_ok && s.known);
+        // Flip one byte at the start, middle and end of the payload.
+        for probe in [0, s.payload_len / 2, s.payload_len.saturating_sub(1)] {
+            let mut corrupt = bytes.clone();
+            corrupt[s.payload_offset + probe] ^= 0x10;
+            let err = Artifact::from_bytes(&corrupt);
+            assert!(
+                err.is_err(),
+                "flipping byte {probe} of section {} went unnoticed",
+                s.tag
+            );
+            // The section table itself reports the damage.
+            let table = section_table(&corrupt).unwrap();
+            assert!(
+                table.iter().any(|t| !t.crc_ok),
+                "section table missed the corrupt {} section",
+                s.tag
+            );
+        }
+    }
+}
+
+#[test]
+fn flipped_crc_byte_itself_is_detected() {
+    // Corrupting the stored checksum (rather than the payload) must
+    // also fail: stored != computed either way.
+    let art = freeze(&synthetic_net(&[4, 6, 2], 1, 3, 3), "crcfield");
+    let bytes = art.to_bytes();
+    let sections = section_table(&bytes).unwrap();
+    for s in &sections {
+        let crc_off = s.payload_offset + s.payload_len; // crc follows payload
+        let mut corrupt = bytes.clone();
+        corrupt[crc_off] ^= 0x01;
+        assert!(
+            Artifact::from_bytes(&corrupt).is_err(),
+            "corrupt stored crc of {} accepted",
+            s.tag
+        );
+    }
+}
+
+#[test]
+fn bad_magic_and_version_rejected() {
+    let art = freeze(&synthetic_net(&[4, 5, 2], 2, 4, 4), "hdr");
+    let good = art.to_bytes();
+
+    let mut bad_magic = good.clone();
+    bad_magic[..4].copy_from_slice(b"BPCK"); // checkpoint magic != artifact
+    let err = Artifact::from_bytes(&bad_magic).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "{err:#}");
+
+    let mut bad_version = good.clone();
+    bad_version[4..8].copy_from_slice(&2u32.to_le_bytes());
+    let err = Artifact::from_bytes(&bad_version).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+}
+
+#[test]
+fn hostile_lengths_fail_without_oom_scale_allocation() {
+    let art = freeze(&synthetic_net(&[4, 5, 2], 3, 4, 4), "hostile");
+    let good = art.to_bytes();
+
+    // Section length field claiming u64::MAX: the first section's
+    // length lives right after the 16-byte header + 4-byte tag.
+    let mut huge_len = good.clone();
+    huge_len[20..28].copy_from_slice(&u64::MAX.to_le_bytes());
+    assert!(Artifact::from_bytes(&huge_len).is_err());
+
+    // Section count claiming u32::MAX (offset 12): parsing must fail
+    // on the first absent section, not pre-allocate anything.
+    let mut huge_count = good.clone();
+    huge_count[12..16].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Artifact::from_bytes(&huge_count).is_err());
+
+    // A hand-built artifact whose MET0 section claims 2^31 layers:
+    // the LAY0 walk must hit end-of-section and error, allocating
+    // nothing proportional to the claim.  Rebuild the MET0 payload
+    // with a hostile layer count but valid checksums.
+    let sections = section_table(&good).unwrap();
+    let met = sections.iter().find(|s| s.tag == "MET0").unwrap();
+    let mut hostile = good.clone();
+    // MET0 payload layout: str_u32 model | num_classes u32 | n_layers u32.
+    let n_layers_off = met.payload_offset + met.payload_len - 4;
+    hostile[n_layers_off..n_layers_off + 4]
+        .copy_from_slice(&0x8000_0000u32.to_le_bytes());
+    // Fix up the checksum so only the count is hostile.
+    let payload =
+        hostile[met.payload_offset..met.payload_offset + met.payload_len].to_vec();
+    let crc = bitprune::util::binio::crc32(&payload);
+    let crc_off = met.payload_offset + met.payload_len;
+    hostile[crc_off..crc_off + 4].copy_from_slice(&crc.to_le_bytes());
+    let err = Artifact::from_bytes(&hostile).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+}
+
+#[test]
+fn hostile_activation_ranges_rejected() {
+    // NaN / infinite / inverted calibrated ranges would load silently
+    // and quantize every activation to code 0 — the loader must refuse
+    // them like it refuses bad weight-plan headers.
+    for (lo, hi) in [
+        (f32::NAN, 1.0f32),
+        (0.0, f32::INFINITY),
+        (2.0, -2.0), // inverted
+    ] {
+        let mut art = freeze(&synthetic_net(&[4, 5, 2], 9, 4, 4), "range");
+        art.layers[0].act_range = Some((lo, hi));
+        let err = Artifact::from_bytes(&art.to_bytes()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("activation range"),
+            "({lo}, {hi}): {err:#}"
+        );
+    }
+    // A degenerate-but-finite range (lo == hi) stays legal: the
+    // quantizer's epsilon guard handles it.
+    let mut art = freeze(&synthetic_net(&[4, 5, 2], 9, 4, 4), "range");
+    art.layers[0].act_range = Some((0.5, 0.5));
+    assert!(Artifact::from_bytes(&art.to_bytes()).is_ok());
+}
+
+#[test]
+fn non_finite_biases_rejected() {
+    // Bias floats are the remaining per-layer payload: NaN/Inf there
+    // would serve NaN logits silently, so the loader refuses them like
+    // it refuses bad quant headers and ranges.
+    for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        let mut art = freeze(&synthetic_net(&[4, 5, 2], 10, 4, 4), "bias");
+        art.layers[1].bias[0] = bad;
+        let err = Artifact::from_bytes(&art.to_bytes()).unwrap_err();
+        assert!(format!("{err:#}").contains("bias"), "{bad}: {err:#}");
+    }
+}
+
+#[test]
+fn cross_section_consistency_is_enforced() {
+    // Declare 3 classes in MET0 while the last layer emits 2: the
+    // sections are individually valid, the combination is not.
+    let art = freeze(&synthetic_net(&[4, 5, 2], 4, 4, 4), "xsec");
+    let good = art.to_bytes();
+    let sections = section_table(&good).unwrap();
+    let met = sections.iter().find(|s| s.tag == "MET0").unwrap();
+    let mut bad = good.clone();
+    // num_classes sits 8 bytes before the end of MET0 (…| classes u32 | layers u32).
+    let classes_off = met.payload_offset + met.payload_len - 8;
+    bad[classes_off..classes_off + 4].copy_from_slice(&3u32.to_le_bytes());
+    let payload = bad[met.payload_offset..met.payload_offset + met.payload_len].to_vec();
+    let crc = bitprune::util::binio::crc32(&payload);
+    let crc_off = met.payload_offset + met.payload_len;
+    bad[crc_off..crc_off + 4].copy_from_slice(&crc.to_le_bytes());
+    let err = Artifact::from_bytes(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("classes"), "{err:#}");
+}

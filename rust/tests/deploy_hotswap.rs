@@ -1,0 +1,217 @@
+//! Hot-swap correctness under concurrent traffic.
+//!
+//! The registry/serving contract this suite pins:
+//!
+//! * a `ModelRegistry::publish` during sustained concurrent
+//!   `ServerHandle::infer` traffic **never drops or rejects** a
+//!   request;
+//! * every response is **exactly** one model version's answer — bit
+//!   for bit, with a version tag that matches the logits (no torn
+//!   batches, no half-swapped model, no mixing);
+//! * after the swap drains, responses come from the new version only;
+//! * rollback restores the old version for subsequent requests.
+//!
+//! Pure rust, synthetic fixtures — runs without AOT artifacts.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bitprune::deploy::ModelRegistry;
+use bitprune::infer::IntNet;
+use bitprune::serve::{synthetic_net, ServeConfig, Server};
+use bitprune::util::rng::Rng;
+
+const DIMS: &[usize] = &[10, 22, 4];
+
+fn fixture(seed: u64) -> Arc<IntNet> {
+    Arc::new(synthetic_net(DIMS, seed, 4, 5))
+}
+
+/// Bitwise row equality.
+fn same(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn swap_under_concurrent_traffic_never_drops_or_mixes() {
+    let net_a = fixture(0xA);
+    let net_b = fixture(0xB);
+
+    // Fixed per-client sample sets, with solo-forward expectations
+    // under both versions computed up front.
+    let clients = 4usize;
+    let per_client = 60usize;
+    let mut rng = Rng::new(0x5AB);
+    let samples: Vec<Vec<Vec<f32>>> = (0..clients)
+        .map(|_| {
+            (0..per_client)
+                .map(|_| (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+                .collect()
+        })
+        .collect();
+    // The two versions must actually disagree somewhere, or "matches
+    // exactly one version" would be vacuous.
+    let probe = &samples[0][0];
+    assert!(
+        !same(&net_a.forward(probe, 1), &net_b.forward(probe, 1)),
+        "fixture nets must produce different logits"
+    );
+
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net_a), "a").unwrap());
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 2,
+            max_batch: 8,
+            batch_window: Duration::from_micros(300),
+            max_queue: 4096,
+        },
+    )
+    .unwrap();
+
+    let total = clients * per_client;
+    // Deterministic mid-traffic swap: every client rendezvous at the
+    // one-third mark, the swapper publishes while they hold, a second
+    // rendezvous releases them — so both versions are guaranteed to
+    // serve real traffic regardless of scheduling, with no flaky
+    // served-count race.
+    let gate_at = per_client / 3;
+    let before_swap = std::sync::Barrier::new(clients + 1);
+    let after_swap = std::sync::Barrier::new(clients + 1);
+    // (client, sample index, version tag, logits) for every response.
+    let mut responses: Vec<(usize, usize, u64, Vec<f32>)> = Vec::with_capacity(total);
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for (c, my_samples) in samples.iter().enumerate() {
+            let handle = server.handle();
+            let (before_swap, after_swap) = (&before_swap, &after_swap);
+            joins.push(scope.spawn(move || {
+                let mut out = Vec::with_capacity(my_samples.len());
+                for (i, x) in my_samples.iter().enumerate() {
+                    if i == gate_at {
+                        before_swap.wait();
+                        after_swap.wait();
+                    }
+                    // Any Err here is a dropped/rejected request — the
+                    // thing the swap must never cause.
+                    let (version, logits) = handle
+                        .infer_versioned(x.clone())
+                        .expect("request rejected during hot-swap");
+                    out.push((c, i, version, logits));
+                }
+                out
+            }));
+        }
+        before_swap.wait();
+        registry.publish(Arc::clone(&net_b), "b").unwrap();
+        after_swap.wait();
+        for j in joins {
+            responses.extend(j.join().expect("client thread panicked"));
+        }
+    });
+    assert_eq!(responses.len(), total, "every request must be answered");
+
+    // Every response matches exactly one version's solo forward, and
+    // its version tag agrees with which one.
+    let mut v1 = 0usize;
+    let mut v2 = 0usize;
+    for (c, i, version, logits) in &responses {
+        let x = &samples[*c][*i];
+        let want_a = net_a.forward(x, 1);
+        let want_b = net_b.forward(x, 1);
+        let is_a = same(logits, &want_a);
+        let is_b = same(logits, &want_b);
+        match version {
+            1 => {
+                assert!(
+                    is_a,
+                    "client {c} sample {i}: tagged v1 but logits are not net A's"
+                );
+                v1 += 1;
+            }
+            2 => {
+                assert!(
+                    is_b,
+                    "client {c} sample {i}: tagged v2 but logits are not net B's"
+                );
+                v2 += 1;
+            }
+            v => panic!("client {c} sample {i}: impossible version {v}"),
+        }
+        assert!(
+            is_a || is_b,
+            "client {c} sample {i}: logits match neither version"
+        );
+    }
+    assert_eq!(v1 + v2, total);
+    // The barrier makes the split exact: everything before the gate is
+    // v1, everything after is v2.
+    assert_eq!(v1, clients * gate_at, "pre-swap responses must all be v1");
+    assert_eq!(v2, total - clients * gate_at, "post-swap responses must all be v2");
+
+    // Post-drain: fresh requests are served by the new version only.
+    let handle = server.handle();
+    for x in samples[0].iter().take(5) {
+        let (version, logits) = handle.infer_versioned(x.clone()).unwrap();
+        assert_eq!(version, 2, "post-drain response served by the old version");
+        assert!(same(&logits, &net_b.forward(x, 1)));
+    }
+
+    // Rollback: subsequent requests revert to version 1 / net A.
+    registry.rollback(1).unwrap();
+    let x = &samples[1][0];
+    let (version, logits) = handle.infer_versioned(x.clone()).unwrap();
+    assert_eq!(version, 1);
+    assert!(same(&logits, &net_a.forward(x, 1)));
+
+    let stats = server.shutdown();
+    assert_eq!(stats.requests as usize, total + 5 + 1);
+    assert!(stats.swaps >= 2, "publish + rollback both crossed the batcher");
+}
+
+#[test]
+fn repeated_swaps_stay_consistent() {
+    // A/B/A/B… every few batches: the version tag must always agree
+    // with the logits, across many transitions.
+    let net_a = fixture(0x11);
+    let net_b = fixture(0x22);
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net_a), "a").unwrap());
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 4,
+            batch_window: Duration::from_micros(200),
+            max_queue: 1024,
+        },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(0xAB);
+    let mut published = vec![(1u64, Arc::clone(&net_a))];
+    for round in 0..6 {
+        let (net, label): (&Arc<IntNet>, &str) = if round % 2 == 0 {
+            (&net_b, "b")
+        } else {
+            (&net_a, "a")
+        };
+        let v = registry.publish(Arc::clone(net), label).unwrap();
+        published.push((v, Arc::clone(net)));
+        for _ in 0..10 {
+            let x: Vec<f32> =
+                (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let (version, logits) = handle.infer_versioned(x.clone()).unwrap();
+            let (_, vnet) = published
+                .iter()
+                .find(|(pv, _)| *pv == version)
+                .expect("response tagged with an unpublished version");
+            assert!(
+                same(&logits, &vnet.forward(&x, 1)),
+                "round {round}: logits disagree with the tagged version"
+            );
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 60);
+    assert!(stats.swaps >= 1);
+}

@@ -176,7 +176,7 @@ fn server_roundtrip_is_invariant_under_micro_batching() {
         let got = rx.recv().unwrap();
         let want = net.forward(s, 1);
         assert!(
-            got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            got.logits.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
             "micro-batched answer differs from solo forward"
         );
     }

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Run the perf-tracked bench suites and record the trajectory at the
 # repo root:
-#   BENCH_infer.json — inference fast-path suite (quantizer, intnet,
-#                      end_to_end)
-#   BENCH_serve.json — serving-engine suite (pooled+buffer-reusing
-#                      engine vs per-call forward, server round trip)
+#   BENCH_infer.json  — inference fast-path suite (quantizer, intnet,
+#                       end_to_end)
+#   BENCH_serve.json  — serving-engine suite (pooled+buffer-reusing
+#                       engine vs per-call forward, server round trip)
+#   BENCH_deploy.json — deploy suite (BPMA freeze/serialize/parse/
+#                       instantiate/load, swap-under-load latency whose
+#                       p99_s is the hot-swap stall number)
 #
 # Usage:
 #   scripts/bench.sh            # full budgets
@@ -62,3 +65,8 @@ merge_suite "infer-fastpath" "$tmp" BENCH_infer.json
 : > "$tmp"
 (cd rust && cargo bench --bench serve -- $quick)
 merge_suite "serve" "$tmp" BENCH_serve.json
+
+# --- deploy suite -> BENCH_deploy.json -------------------------------
+: > "$tmp"
+(cd rust && cargo bench --bench deploy -- $quick)
+merge_suite "deploy" "$tmp" BENCH_deploy.json
