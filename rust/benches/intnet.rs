@@ -41,6 +41,55 @@ fn main() {
         speedup(&b, &format!("intnet/forward/{tag}"), &format!("intnet/forward_ref/{tag}"));
     }
 
+    // Per-output-channel GEMM: row-varying codes (bits cycling 2/4/8)
+    // through the same blocked kernel vs the scalar grouped reference,
+    // plus the per-layer kernel at the same shape for the granularity
+    // overhead.
+    {
+        let (n, din, dout) = (64usize, 256usize, 256usize);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let bias = rand_vec(&mut rng, dout);
+        let ch_bits: Vec<f32> =
+            (0..dout).map(|j| [2.0f32, 4.0, 8.0][j % 3]).collect();
+        let grouped =
+            IntDense::new_grouped("bench-g", &w, din, dout, &bias, &ch_bits, 4, true)
+                .unwrap();
+        let macs = (n * din * dout) as f64;
+        let tag = format!("{n}x{din}x{dout}/ch248");
+        b.run_elems(&format!("intnet/forward_grouped/{tag}"), macs, || {
+            grouped.forward(&x, n)
+        });
+        b.run_elems(&format!("intnet/forward_grouped_ref/{tag}"), macs, || {
+            grouped.forward_ref(&x, n)
+        });
+        speedup(
+            &b,
+            &format!("intnet/forward_grouped/{tag}"),
+            &format!("intnet/forward_grouped_ref/{tag}"),
+        );
+    }
+
+    // Group-boundary-aligned fused pack vs its scalar reference:
+    // 256 channels x 256 weights, bits cycling 2/4/8.
+    {
+        let (groups, size) = (256usize, 256usize);
+        let xs = rand_vec(&mut rng, groups * size);
+        let bits: Vec<u32> = (0..groups).map(|g| [2u32, 4, 8][g % 3]).collect();
+        let total = (groups * size) as f64;
+        b.run_elems("bitpack/pack_groups/256x256/ch248", total, || {
+            bitpack::pack_groups(&xs, size, &bits).unwrap()
+        });
+        b.run_elems("bitpack/pack_groups_ref/256x256/ch248", total, || {
+            bitpack::pack_groups_ref(&xs, size, &bits).unwrap()
+        });
+        speedup(
+            &b,
+            "bitpack/pack_groups/256x256/ch248",
+            "bitpack/pack_groups_ref/256x256/ch248",
+        );
+    }
+
     // Word-level pack/unpack vs scalar reference at 4 bits (and 8 for
     // the byte-aligned best case of the old path).
     let size = 1usize << 16;

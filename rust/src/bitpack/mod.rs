@@ -285,6 +285,354 @@ fn read_bits_ref(data: &[u8], bitpos: usize, bits: u32) -> u32 {
 }
 
 // ---------------------------------------------------------------------------
+// group-boundary-aligned packing (the per-output-channel path)
+// ---------------------------------------------------------------------------
+
+/// Stored header bytes per group in the footprint convention: bits u32
+/// + lmin f32 + scale f32 (the group length is implied by the shared
+/// `group_size`).
+pub const GROUP_HEADER_BYTES: usize = 12;
+
+/// One group's slot in a [`PackedGroups`] buffer: its own bitlength and
+/// `(lmin, scale)` dequantization plan, plus the byte offset of its
+/// first code.  Every group starts on a **byte boundary**, so groups
+/// decode independently and the spans double as the wire-format layout.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupSpan {
+    /// Bitlength of this group's codes (1..=16).
+    pub bits: u32,
+    /// Dequantization: value = lmin + code * scale.
+    pub lmin: f32,
+    pub scale: f32,
+    /// Byte offset of the group's first code in `PackedGroups::data`.
+    pub start: usize,
+}
+
+/// A bit-packed tensor at **group granularity**: `n_groups` rows of
+/// `group_size` values, each row packed LSB-first at its own bitlength
+/// against its own min/max, each starting at a byte-aligned offset of
+/// one shared buffer.  For weight tensors a group is one output
+/// channel of the transposed `[dout, din]` layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedGroups {
+    /// Values per group.
+    pub group_size: usize,
+    /// One span per group, in group order (`start` strictly increasing).
+    pub spans: Vec<GroupSpan>,
+    /// All groups' packed codes, concatenated at byte-aligned starts.
+    pub data: Vec<u8>,
+}
+
+/// Packed payload bytes one group occupies.
+fn group_bytes(group_size: usize, bits: u32) -> usize {
+    (group_size * bits as usize).div_ceil(8)
+}
+
+impl PackedGroups {
+    /// Reassemble from **untrusted** stored parts (the BPMA `GRP0`
+    /// loader): per-group `(bits, lmin, scale)` headers are validated
+    /// like [`PackedTensor::from_raw`], the spans are rebuilt from the
+    /// shared `group_size`, and the payload must be exactly the implied
+    /// total size.
+    pub fn from_raw(
+        group_size: usize,
+        params: &[(u32, f32, f32)],
+        data: Vec<u8>,
+    ) -> Result<Self> {
+        if group_size == 0 {
+            bail!("packed groups: group_size must be positive");
+        }
+        let mut spans = Vec::with_capacity(params.len());
+        let mut start = 0usize;
+        for (g, &(bits, lmin, scale)) in params.iter().enumerate() {
+            if !(1..=16).contains(&bits) {
+                bail!("packed groups: group {g} bits must be in [1,16], got {bits}");
+            }
+            if !lmin.is_finite() || !scale.is_finite() || scale <= 0.0 {
+                bail!(
+                    "packed groups: group {g} bad dequant header (lmin {lmin}, scale {scale})"
+                );
+            }
+            spans.push(GroupSpan { bits, lmin, scale, start });
+            start = start
+                .checked_add(group_bytes(group_size, bits))
+                .ok_or_else(|| anyhow::anyhow!("packed groups: payload size overflows"))?;
+        }
+        if data.len() != start {
+            bail!(
+                "packed groups: payload is {} bytes, {} groups x {group_size} codes need {start}",
+                data.len(),
+                params.len()
+            );
+        }
+        Ok(Self { group_size, spans, data })
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Total encoded values across every group.
+    pub fn len(&self) -> usize {
+        self.group_size * self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Packed payload size in bytes (excluding the per-group headers).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Stored size: payload plus one [`GROUP_HEADER_BYTES`] header per
+    /// group — the grouped arm of the one footprint convention.
+    pub fn stored_bytes(&self) -> usize {
+        self.data.len() + self.spans.len() * GROUP_HEADER_BYTES
+    }
+
+    /// Compression ratio vs f32 storage, headers included.
+    pub fn ratio_vs_f32(&self) -> f64 {
+        (self.len() * 4) as f64 / self.stored_bytes().max(1) as f64
+    }
+
+    /// Largest group bitlength (what accumulator-width sizing cares
+    /// about).
+    pub fn max_bits(&self) -> u32 {
+        self.spans.iter().map(|s| s.bits).max().unwrap_or(0)
+    }
+
+    /// Mean group bitlength — the paper's sub-layer average.
+    pub fn mean_bits(&self) -> f64 {
+        if self.spans.is_empty() {
+            return 0.0;
+        }
+        self.spans.iter().map(|s| s.bits as f64).sum::<f64>() / self.spans.len() as f64
+    }
+
+    /// Unpack one group's raw integer codes (word-level single-load
+    /// extract — the byte-aligned span makes the group independent).
+    pub fn group_codes(&self, g: usize) -> Vec<u32> {
+        let span = self.spans[g];
+        let bits = span.bits as usize;
+        let mask = (1u64 << span.bits) - 1;
+        let mut out = Vec::with_capacity(self.group_size);
+        for i in 0..self.group_size {
+            let bitpos = i * bits;
+            let word = load_word(&self.data, span.start + (bitpos >> 3));
+            out.push(((word >> (bitpos & 7)) & mask) as u32);
+        }
+        out
+    }
+
+    /// Scalar reference for [`Self::group_codes`] (byte-at-a-time).
+    pub fn group_codes_ref(&self, g: usize) -> Vec<u32> {
+        let span = self.spans[g];
+        let mut out = Vec::with_capacity(self.group_size);
+        let mut bitpos = span.start * 8;
+        for _ in 0..self.group_size {
+            out.push(read_bits_ref(&self.data, bitpos, span.bits));
+            bitpos += span.bits as usize;
+        }
+        out
+    }
+
+    /// Dequantize every group back to f32, group-major order.
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        for (g, span) in self.spans.iter().enumerate() {
+            out.extend(
+                self.group_codes(g)
+                    .into_iter()
+                    .map(|c| span.lmin + c as f32 * span.scale),
+            );
+        }
+        out
+    }
+}
+
+/// Quantize and pack `[n_groups x group_size]` row-major data, each
+/// group fused word-level at its own integer bitlength against its own
+/// min/max (the per-output-channel weight path).  Group boundaries are
+/// byte-aligned: each group's stream starts on a fresh byte, so the
+/// per-group word accumulator logic is exactly [`pack`]'s.
+pub fn pack_groups(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<PackedGroups> {
+    if group_size == 0 {
+        bail!("pack_groups: group_size must be positive");
+    }
+    if xs.len() != group_size * bits.len() {
+        bail!(
+            "pack_groups: {} values is not {} groups x {group_size}",
+            xs.len(),
+            bits.len()
+        );
+    }
+    let mut spans = Vec::with_capacity(bits.len());
+    let mut total = 0usize;
+    for (g, &b) in bits.iter().enumerate() {
+        if !(1..=16).contains(&b) {
+            bail!("pack_groups: group {g} bits must be in [1,16], got {b}");
+        }
+        spans.push(GroupSpan { bits: b, lmin: 0.0, scale: 1.0, start: total });
+        total += group_bytes(group_size, b);
+    }
+    let mut data = vec![0u8; total];
+    for ((row, &b), span) in xs.chunks_exact(group_size).zip(bits).zip(&mut spans) {
+        let plan = quant::QuantPlan::from_slice(row, b as f32);
+        let levels = ((1u32 << b) - 1) as i64;
+        let mut acc = 0u64;
+        let mut fill = 0u32;
+        let mut out = span.start;
+        for &x in row {
+            let code = plan.code(x, levels) as u64;
+            acc |= code << fill;
+            fill += b;
+            if fill >= 64 {
+                data[out..out + 8].copy_from_slice(&acc.to_le_bytes());
+                out += 8;
+                fill -= 64;
+                acc = if fill > 0 { code >> (b - fill) } else { 0 };
+            }
+        }
+        if fill > 0 {
+            let nbytes = fill.div_ceil(8) as usize;
+            data[out..out + nbytes].copy_from_slice(&acc.to_le_bytes()[..nbytes]);
+        }
+        span.lmin = plan.lmin;
+        span.scale = plan.s_lo;
+    }
+    Ok(PackedGroups { group_size, spans, data })
+}
+
+/// Scalar reference for [`pack_groups`]: per-group min/max fold and
+/// byte-at-a-time bit writes, the semantic baseline the fused packer
+/// must match bit-for-bit (pinned by the parity tests).
+pub fn pack_groups_ref(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<PackedGroups> {
+    if group_size == 0 {
+        bail!("pack_groups: group_size must be positive");
+    }
+    if xs.len() != group_size * bits.len() {
+        bail!(
+            "pack_groups: {} values is not {} groups x {group_size}",
+            xs.len(),
+            bits.len()
+        );
+    }
+    let mut spans = Vec::with_capacity(bits.len());
+    let mut total = 0usize;
+    for (g, &b) in bits.iter().enumerate() {
+        if !(1..=16).contains(&b) {
+            bail!("pack_groups: group {g} bits must be in [1,16], got {b}");
+        }
+        spans.push(GroupSpan { bits: b, lmin: 0.0, scale: 1.0, start: total });
+        total += group_bytes(group_size, b);
+    }
+    let mut data = vec![0u8; total];
+    for ((row, &b), span) in xs.chunks_exact(group_size).zip(bits).zip(&mut spans) {
+        let mut lmin = f32::INFINITY;
+        let mut lmax = f32::NEG_INFINITY;
+        for &x in row {
+            lmin = lmin.min(x);
+            lmax = lmax.max(x);
+        }
+        let levels = (1u32 << b) - 1;
+        let scale = quant::scale(lmin, lmax, b as f32);
+        let mut bitpos = span.start * 8;
+        for &x in row {
+            let code = (((x - lmin) / scale).round_ties_even() as i64)
+                .clamp(0, levels as i64) as u32;
+            write_bits_ref(&mut data, bitpos, b, code);
+            bitpos += b as usize;
+        }
+        span.lmin = lmin;
+        span.scale = scale;
+    }
+    Ok(PackedGroups { group_size, spans, data })
+}
+
+/// Packed weight codes at either granularity — what `infer::IntDense`
+/// stores and the BPMA artifact ships.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightCodes {
+    /// One bitlength + plan for the whole `[din, dout]` tensor
+    /// (row-major, the original path).
+    PerLayer(PackedTensor),
+    /// One bitlength + plan per output channel over the **transposed**
+    /// `[dout, din]` layout (group = channel, group_size = din).
+    PerChannel(PackedGroups),
+}
+
+impl WeightCodes {
+    pub fn granularity(&self) -> quant::Granularity {
+        match self {
+            WeightCodes::PerLayer(_) => quant::Granularity::PerLayer,
+            WeightCodes::PerChannel(_) => quant::Granularity::PerOutputChannel,
+        }
+    }
+
+    /// Total encoded values.
+    pub fn len(&self) -> usize {
+        match self {
+            WeightCodes::PerLayer(p) => p.len,
+            WeightCodes::PerChannel(g) => g.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Raw packed payload (the BPMA `WCT0` bytes).
+    pub fn payload(&self) -> &[u8] {
+        match self {
+            WeightCodes::PerLayer(p) => &p.data,
+            WeightCodes::PerChannel(g) => &g.data,
+        }
+    }
+
+    /// Stored footprint: payload + headers, one convention either way.
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            WeightCodes::PerLayer(p) => p.stored_bytes(),
+            WeightCodes::PerChannel(g) => g.stored_bytes(),
+        }
+    }
+
+    /// Largest bitlength any code is stored at.
+    pub fn max_bits(&self) -> u32 {
+        match self {
+            WeightCodes::PerLayer(p) => p.bits,
+            WeightCodes::PerChannel(g) => g.max_bits(),
+        }
+    }
+
+    /// Mean bitlength over groups (per-layer = one group).
+    pub fn mean_bits(&self) -> f64 {
+        match self {
+            WeightCodes::PerLayer(p) => p.bits as f64,
+            WeightCodes::PerChannel(g) => g.mean_bits(),
+        }
+    }
+
+    /// Group count at bitlength n, indexed 1..=16 (index 0 unused) —
+    /// the per-channel bit histogram `bitprune inspect` reports.  A
+    /// per-layer tensor is a single group.
+    pub fn bits_histogram(&self) -> [usize; 17] {
+        let mut h = [0usize; 17];
+        match self {
+            WeightCodes::PerLayer(p) => h[p.bits as usize] += 1,
+            WeightCodes::PerChannel(g) => {
+                for s in &g.spans {
+                    h[s.bits as usize] += 1;
+                }
+            }
+        }
+        h
+    }
+}
+
+// ---------------------------------------------------------------------------
 // network-level packing
 // ---------------------------------------------------------------------------
 
@@ -609,6 +957,207 @@ mod tests {
         assert_eq!(PackedTensor::from_raw(4, 0, 0.0, 1.0, vec![]).unwrap().len, 0);
         assert!(PackedTensor::from_raw(99, 0, 0.0, 1.0, vec![]).is_err());
         assert!(PackedTensor::from_raw(4, 0, f32::NAN, -1.0, vec![]).is_err());
+    }
+
+    #[test]
+    fn grouped_packer_matches_ref_bitstream() {
+        // The fused per-group word packer and both group unpackers must
+        // agree bit-for-bit with the scalar reference at random group
+        // shapes and mixed bitlengths.
+        check(
+            "bitpack-group-parity",
+            128,
+            |rng: &mut Rng| {
+                let groups = 1 + rng.below_usize(10);
+                let size = 1 + rng.below_usize(90);
+                let xs: Vec<f32> =
+                    (0..groups * size).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                let bits: Vec<u32> =
+                    (0..groups).map(|_| 1 + rng.below(16) as u32).collect();
+                (xs, size, bits)
+            },
+            |(xs, size, bits)| {
+                let fast = pack_groups(xs, *size, bits).map_err(|e| e.to_string())?;
+                let slow =
+                    pack_groups_ref(xs, *size, bits).map_err(|e| e.to_string())?;
+                if fast != slow {
+                    return Err("grouped byte streams differ".into());
+                }
+                for g in 0..fast.n_groups() {
+                    if fast.group_codes(g) != fast.group_codes_ref(g) {
+                        return Err(format!("group {g} unpack differs"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn grouped_pack_group_size_one_and_single_group() {
+        let mut rng = Rng::new(0x6501);
+        // group_size == 1: every value is its own group (degenerate
+        // ranges — the epsilon guard keeps scales finite).
+        let xs: Vec<f32> = (0..9).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bits: Vec<u32> = (0..9).map(|i| 1 + (i % 16) as u32).collect();
+        let p = pack_groups(&xs, 1, &bits).unwrap();
+        assert_eq!(p.n_groups(), 9);
+        assert_eq!(p.len(), 9);
+        for g in 0..9 {
+            let codes = p.group_codes(g);
+            assert_eq!(codes.len(), 1);
+            assert_eq!(codes, p.group_codes_ref(g));
+        }
+        assert_eq!(p, pack_groups_ref(&xs, 1, &bits).unwrap());
+
+        // One group spanning the whole tensor (group == layer): the
+        // byte stream must equal the per-layer packer's.
+        let xs: Vec<f32> = (0..77).map(|_| rng.normal_f32(0.0, 1.5)).collect();
+        let one = pack_groups(&xs, 77, &[5]).unwrap();
+        let flat = pack(&xs, 5).unwrap();
+        assert_eq!(one.data, flat.data);
+        assert_eq!(one.spans[0].lmin, flat.lmin);
+        assert_eq!(one.spans[0].scale, flat.scale);
+        assert_eq!(one.group_codes(0), unpack_codes(&flat));
+    }
+
+    #[test]
+    fn grouped_pack_odd_sizes_at_word_boundaries() {
+        // Group sizes that land the per-group u64 accumulator exactly
+        // on, just under and just over 64-bit fills, for every
+        // bitlength that divides 64 plus awkward ones.
+        let mut rng = Rng::new(0x6502);
+        for &bits in &[1u32, 3, 4, 7, 8, 13, 16] {
+            let per_word = (64 / bits) as usize;
+            for &size in
+                &[1usize, per_word - 1, per_word, per_word + 1, 2 * per_word + 3]
+            {
+                if size == 0 {
+                    continue;
+                }
+                let groups = 3usize;
+                let xs: Vec<f32> = (0..groups * size)
+                    .map(|_| rng.normal_f32(0.0, 1.0))
+                    .collect();
+                let bv = vec![bits; groups];
+                let fast = pack_groups(&xs, size, &bv).unwrap();
+                let slow = pack_groups_ref(&xs, size, &bv).unwrap();
+                assert_eq!(fast, slow, "bits={bits} size={size}");
+                // Spans are byte-aligned and exactly sized.
+                for (g, s) in fast.spans.iter().enumerate() {
+                    assert_eq!(
+                        s.start,
+                        g * (size * bits as usize).div_ceil(8),
+                        "bits={bits} size={size} group {g}"
+                    );
+                }
+                assert_eq!(
+                    fast.payload_bytes(),
+                    groups * (size * bits as usize).div_ceil(8)
+                );
+                // Group codes match a standalone per-group pack.
+                for (g, row) in xs.chunks(size).enumerate() {
+                    let solo = pack(row, bits).unwrap();
+                    assert_eq!(
+                        fast.group_codes(g),
+                        unpack_codes(&solo),
+                        "bits={bits} size={size} group {g}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_unpack_dequantizes_per_group() {
+        // unpack() must equal per-group fake quantization (each row on
+        // its own grid), not a shared-layer grid.
+        let mut rng = Rng::new(0x6503);
+        let (groups, size) = (5usize, 23usize);
+        let xs: Vec<f32> =
+            (0..groups * size).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let bits = [2u32, 4, 8, 3, 6];
+        let p = pack_groups(&xs, size, &bits).unwrap();
+        let got = p.unpack();
+        let bits_f: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
+        let mut want = xs.clone();
+        quant::fake_quant_groups(&mut want, size, &bits_f);
+        let (lmin, lmax) = quant::group_minmax(&xs);
+        let tol = 1e-5 * (lmax - lmin).abs().max(1e-5);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= tol, "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn grouped_from_raw_validates_untrusted_parts() {
+        let mut rng = Rng::new(0x6504);
+        let xs: Vec<f32> = (0..4 * 19).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bits = [3u32, 5, 1, 16];
+        let p = pack_groups(&xs, 19, &bits).unwrap();
+        let params: Vec<(u32, f32, f32)> =
+            p.spans.iter().map(|s| (s.bits, s.lmin, s.scale)).collect();
+        // Faithful parts reassemble identically.
+        let re = PackedGroups::from_raw(19, &params, p.data.clone()).unwrap();
+        assert_eq!(re, p);
+        // Wrong payload size, zero group size, bad bits, non-finite
+        // headers, non-positive scale: all clean errors.
+        let short = p.data[..p.data.len() - 1].to_vec();
+        assert!(PackedGroups::from_raw(19, &params, short).is_err());
+        let mut long = p.data.clone();
+        long.push(0);
+        assert!(PackedGroups::from_raw(19, &params, long).is_err());
+        assert!(PackedGroups::from_raw(0, &params, p.data.clone()).is_err());
+        let mut bad = params.clone();
+        bad[1].0 = 17;
+        assert!(PackedGroups::from_raw(19, &bad, p.data.clone()).is_err());
+        let mut bad = params.clone();
+        bad[2].1 = f32::NAN;
+        assert!(PackedGroups::from_raw(19, &bad, p.data.clone()).is_err());
+        let mut bad = params.clone();
+        bad[0].2 = 0.0;
+        assert!(PackedGroups::from_raw(19, &bad, p.data.clone()).is_err());
+        // Empty groups: allowed only with an empty payload.
+        assert!(PackedGroups::from_raw(4, &[], vec![0]).is_err());
+        assert_eq!(PackedGroups::from_raw(4, &[], vec![]).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn grouped_footprint_convention() {
+        let xs = vec![0.5f32; 6 * 40];
+        let bits = [4u32, 4, 2, 2, 8, 1];
+        let p = pack_groups(&xs, 40, &bits).unwrap();
+        let payload: usize =
+            bits.iter().map(|&b| (40 * b as usize).div_ceil(8)).sum();
+        assert_eq!(p.payload_bytes(), payload);
+        assert_eq!(p.stored_bytes(), payload + 6 * GROUP_HEADER_BYTES);
+        assert!(p.ratio_vs_f32() > 1.0);
+        assert_eq!(p.max_bits(), 8);
+        assert!((p.mean_bits() - (4 + 4 + 2 + 2 + 8 + 1) as f64 / 6.0).abs() < 1e-12);
+
+        // WeightCodes mirrors the same convention on both arms.
+        let per_layer = WeightCodes::PerLayer(pack(&xs, 4).unwrap());
+        assert_eq!(per_layer.stored_bytes(), (6 * 40 * 4).div_ceil(8) + HEADER_BYTES);
+        assert_eq!(per_layer.granularity(), quant::Granularity::PerLayer);
+        assert_eq!(per_layer.max_bits(), 4);
+        assert_eq!(per_layer.bits_histogram()[4], 1);
+        let grouped = WeightCodes::PerChannel(p.clone());
+        assert_eq!(grouped.stored_bytes(), p.stored_bytes());
+        assert_eq!(grouped.len(), 240);
+        assert_eq!(grouped.granularity(), quant::Granularity::PerOutputChannel);
+        let h = grouped.bits_histogram();
+        assert_eq!((h[1], h[2], h[4], h[8]), (1, 2, 2, 1));
+        assert!((grouped.mean_bits() - p.mean_bits()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grouped_pack_rejects_bad_shapes() {
+        let xs = vec![0.0f32; 12];
+        assert!(pack_groups(&xs, 0, &[4]).is_err());
+        assert!(pack_groups(&xs, 5, &[4, 4]).is_err());
+        assert!(pack_groups(&xs, 6, &[4, 17]).is_err());
+        assert!(pack_groups(&xs, 6, &[0, 4]).is_err());
+        assert!(pack_groups_ref(&xs, 5, &[4, 4]).is_err());
     }
 
     #[test]

@@ -480,16 +480,31 @@ impl EvalSession<'_> {
     /// bitlengths. Dense models only.  Carries the calibrated ranges
     /// when [`Self::with_calibration`] supplied them.
     pub fn int_net(&self, bits_w: &[f32], bits_a: &[f32]) -> Result<crate::infer::IntNet> {
+        self.int_net_with(bits_w, bits_a, quant::Granularity::PerLayer)
+    }
+
+    /// [`Self::int_net`] at an explicit weight granularity:
+    /// `PerOutputChannel` refines each layer's learned bitlength into
+    /// per-channel assignments (`quant::per_channel_bits`) and packs
+    /// every output channel at its own bitlength — the sub-layer
+    /// deployment the paper's granularity claim targets.
+    pub fn int_net_with(
+        &self,
+        bits_w: &[f32],
+        bits_a: &[f32],
+        granularity: quant::Granularity,
+    ) -> Result<crate::infer::IntNet> {
         let ranges = match (&self.act_min, &self.act_max) {
             (Some(lo), Some(hi)) => Some((lo.as_slice(), hi.as_slice())),
             _ => None,
         };
-        crate::infer::IntNet::from_trained(
+        crate::infer::IntNet::from_trained_with(
             &self.trainer.meta,
             self.params,
             bits_w,
             bits_a,
             ranges,
+            granularity,
         )
     }
 

@@ -25,9 +25,17 @@
 //! | tag    | payload |
 //! |--------|---------|
 //! | `MET0` | model name (u32-prefixed str), `num_classes` u32, `n_layers` u32 |
-//! | `LAY0` | per layer: name, din u64, dout u64, w_bits u32, a_bits u32, flags u8 (b0 relu, b1 has act range), w_lmin f32, w_scale f32, \[act_lo f32, act_hi f32\] |
+//! | `LAY0` | per layer: name, din u64, dout u64, w_bits u32 (0 for grouped layers), a_bits u32, flags u8 (b0 relu, b1 has act range, b2 grouped), w_lmin f32, w_scale f32, \[act_lo f32, act_hi f32\] |
 //! | `WCT0` | per layer: payload_len u64, bit-packed weight codes |
 //! | `BIA0` | per layer: dout f32 biases |
+//! | `GRP0` | written only when a layer is grouped: n_layers u32, then per layer a u8 grouped flag and, when set, n_groups u32 + per group (bits u32, lmin f32, scale f32) — the per-output-channel plan table; `WCT0` then carries that layer's group-boundary-aligned per-channel codes |
+//!
+//! Per-layer artifacts never write `GRP0`, so their bytes are identical
+//! to pre-`GRP0` writers; readers that predate the tag skip it by the
+//! unknown-tag rule and reject grouped artifacts at the LAY0 `w_bits`
+//! range check (grouped layers write the field as 0) with a clean
+//! error — the payload size alone can coincide with the per-layer
+//! expectation, so the poisoned field carries the rejection.
 //!
 //! The loader treats every byte as hostile: all reads go through the
 //! bounded [`crate::util::binio::Reader`] (shared with the checkpoint
@@ -39,8 +47,9 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::bitpack::PackedTensor;
+use crate::bitpack::{PackedGroups, PackedTensor, WeightCodes};
 use crate::infer::{IntDense, IntNet};
+use crate::quant::Granularity;
 use crate::util::binio::{self, Reader};
 
 pub const MAGIC: &[u8; 4] = b"BPMA";
@@ -50,9 +59,19 @@ const TAG_META: &[u8; 4] = b"MET0";
 const TAG_LAYERS: &[u8; 4] = b"LAY0";
 const TAG_WCODES: &[u8; 4] = b"WCT0";
 const TAG_BIASES: &[u8; 4] = b"BIA0";
+/// Per-output-channel group table (added after v1 shipped; readers that
+/// predate it skip the tag — see the forward-compat note below).
+const TAG_GROUPS: &[u8; 4] = b"GRP0";
 
 const LAYER_FLAG_RELU: u8 = 1 << 0;
 const LAYER_FLAG_ACT_RANGE: u8 = 1 << 1;
+/// The layer's `WCT0` payload is group-boundary-aligned per-channel
+/// codes; its plans live in the `GRP0` section and its LAY0 `w_bits`
+/// field is written as 0.  Pre-`GRP0` readers ignore unknown flag bits
+/// and unknown sections, so the poisoned bits field is what makes them
+/// reject the artifact at the `[1,16]` range check — a clean error,
+/// never a silent mis-decode of channel-major codes.
+const LAYER_FLAG_GROUPED: u8 = 1 << 2;
 
 /// One frozen layer: geometry, learned bitlengths, quantization
 /// parameters, packed codes, bias, calibrated input range.
@@ -67,22 +86,33 @@ pub struct LayerRecord {
     /// Calibrated input activation range; `None` means the layer will
     /// quantize against each batch's own min/max (batch-dependent).
     pub act_range: Option<(f32, f32)>,
-    /// Packed weight codes + the `(lmin, scale)` dequantization header
-    /// (`w_bits` lives here as `packed.bits`).
-    pub packed: PackedTensor,
+    /// Packed weight codes at their stored granularity — one
+    /// `(bits, lmin, scale)` plan per layer or per output channel.
+    pub weights: WeightCodes,
     pub bias: Vec<f32>,
 }
 
 impl LayerRecord {
-    /// Weight bitlength this layer is stored at.
+    /// Largest weight bitlength this layer stores any code at (for a
+    /// per-layer record, *the* bitlength).
     pub fn w_bits(&self) -> u32 {
-        self.packed.bits
+        self.weights.max_bits()
     }
 
-    /// Stored footprint (packed payload + header + f32 bias) — same
-    /// convention as `IntDense::packed_bytes`.
+    /// Mean stored weight bitlength over this layer's groups.
+    pub fn w_bits_mean(&self) -> f64 {
+        self.weights.mean_bits()
+    }
+
+    /// Weight-quantization granularity of this layer.
+    pub fn granularity(&self) -> Granularity {
+        self.weights.granularity()
+    }
+
+    /// Stored footprint (packed payload + plan headers + f32 bias) —
+    /// same convention as `IntDense::packed_bytes`.
     pub fn stored_bytes(&self) -> usize {
-        self.packed.stored_bytes() + self.bias.len() * 4
+        self.weights.stored_bytes() + self.bias.len() * 4
     }
 }
 
@@ -109,7 +139,7 @@ pub fn freeze(net: &IntNet, model: &str) -> Artifact {
             a_bits: l.a_bits,
             relu: l.relu,
             act_range: l.act_range(),
-            packed: l.packed.clone(),
+            weights: l.weights.clone(),
             bias: l.bias.clone(),
         })
         .collect();
@@ -124,18 +154,49 @@ impl Artifact {
     pub fn instantiate(&self) -> Result<IntNet> {
         let mut layers = Vec::with_capacity(self.layers.len());
         for rec in &self.layers {
-            layers.push(IntDense::from_packed(
-                &rec.name,
-                rec.packed.clone(),
-                rec.din,
-                rec.dout,
-                rec.bias.clone(),
-                rec.a_bits,
-                rec.relu,
-                rec.act_range,
-            )?);
+            layers.push(match &rec.weights {
+                WeightCodes::PerLayer(p) => IntDense::from_packed(
+                    &rec.name,
+                    p.clone(),
+                    rec.din,
+                    rec.dout,
+                    rec.bias.clone(),
+                    rec.a_bits,
+                    rec.relu,
+                    rec.act_range,
+                )?,
+                WeightCodes::PerChannel(g) => IntDense::from_packed_groups(
+                    &rec.name,
+                    g.clone(),
+                    rec.din,
+                    rec.dout,
+                    rec.bias.clone(),
+                    rec.a_bits,
+                    rec.relu,
+                    rec.act_range,
+                )?,
+            });
         }
         Ok(IntNet { layers, num_classes: self.num_classes })
+    }
+
+    /// Whether any layer stores per-output-channel weight codes.
+    pub fn is_grouped(&self) -> bool {
+        self.layers
+            .iter()
+            .any(|l| l.granularity() == Granularity::PerOutputChannel)
+    }
+
+    /// Aggregate per-channel weight-bit histogram (index = bitlength,
+    /// 1..=16; per-layer records count as one group).
+    pub fn w_bits_histogram(&self) -> [usize; 17] {
+        let mut h = [0usize; 17];
+        for l in &self.layers {
+            for (i, c) in l.weights.bits_histogram().iter().enumerate() {
+                h[i] += c;
+            }
+        }
+        h
     }
 
     /// Whether every layer carries a calibrated activation range (the
@@ -157,9 +218,21 @@ impl Artifact {
             .sum()
     }
 
-    /// Mean learned weight bitlength across layers.
+    /// Mean learned weight bitlength over every group of every layer
+    /// (group-count weighted — the paper's sub-layer average, and the
+    /// same weighting as `IntNet::mean_w_bits`, so the CLI reports one
+    /// number for a model whichever form it is in).
     pub fn mean_w_bits(&self) -> f64 {
-        mean(self.layers.iter().map(|l| l.w_bits() as f64))
+        let h = self.w_bits_histogram();
+        let n: usize = h.iter().sum();
+        if n == 0 {
+            return 0.0;
+        }
+        h.iter()
+            .enumerate()
+            .map(|(bits, &count)| (bits * count) as f64)
+            .sum::<f64>()
+            / n as f64
     }
 
     /// Mean learned activation bitlength across layers.
@@ -181,7 +254,27 @@ impl Artifact {
             binio::put_str_u32(&mut lay, &l.name);
             binio::put_u64(&mut lay, l.din as u64);
             binio::put_u64(&mut lay, l.dout as u64);
-            binio::put_u32(&mut lay, l.packed.bits);
+            // Grouped layers store their real plans in GRP0; LAY0's
+            // w_bits is **deliberately 0** for them.  A pre-GRP0
+            // reader ignores the unknown flag bit and the unknown
+            // section, and for uniform channel bitlengths with
+            // byte-aligned groups the WCT0 payload size can coincide
+            // with the per-layer expectation — the poisoned bits field
+            // is what guarantees it fails its [1,16] range check
+            // instead of silently mis-decoding channel-major codes as
+            // row-major ones.
+            let (w_bits, w_lmin, w_scale) = match &l.weights {
+                WeightCodes::PerLayer(p) => (p.bits, p.lmin, p.scale),
+                WeightCodes::PerChannel(g) => match g.spans.first() {
+                    Some(s0) => (0, s0.lmin, s0.scale),
+                    // Zero-channel groups can't come from the grouped
+                    // constructors; keep serialization panic-free for
+                    // hand-built records (every loader rejects the
+                    // degenerate dout anyway).
+                    None => (0, 0.0, 1.0),
+                },
+            };
+            binio::put_u32(&mut lay, w_bits);
             binio::put_u32(&mut lay, l.a_bits);
             let mut flags = 0u8;
             if l.relu {
@@ -190,9 +283,12 @@ impl Artifact {
             if l.act_range.is_some() {
                 flags |= LAYER_FLAG_ACT_RANGE;
             }
+            if l.granularity() == Granularity::PerOutputChannel {
+                flags |= LAYER_FLAG_GROUPED;
+            }
             binio::put_u8(&mut lay, flags);
-            binio::put_f32(&mut lay, l.packed.lmin);
-            binio::put_f32(&mut lay, l.packed.scale);
+            binio::put_f32(&mut lay, w_lmin);
+            binio::put_f32(&mut lay, w_scale);
             if let Some((lo, hi)) = l.act_range {
                 binio::put_f32(&mut lay, lo);
                 binio::put_f32(&mut lay, hi);
@@ -201,8 +297,9 @@ impl Artifact {
 
         let mut wct = Vec::new();
         for l in &self.layers {
-            binio::put_u64(&mut wct, l.packed.data.len() as u64);
-            wct.extend_from_slice(&l.packed.data);
+            let payload = l.weights.payload();
+            binio::put_u64(&mut wct, payload.len() as u64);
+            wct.extend_from_slice(payload);
         }
 
         let mut bia = Vec::new();
@@ -210,12 +307,33 @@ impl Artifact {
             binio::put_f32_slice(&mut bia, &l.bias);
         }
 
-        let sections: [(&[u8; 4], Vec<u8>); 4] = [
+        let mut sections: Vec<(&[u8; 4], Vec<u8>)> = vec![
             (TAG_META, meta),
             (TAG_LAYERS, lay),
             (TAG_WCODES, wct),
             (TAG_BIASES, bia),
         ];
+        // GRP0 rides along only when a layer actually is grouped, so
+        // per-layer artifacts stay byte-identical to pre-GRP0 writers.
+        if self.is_grouped() {
+            let mut grp = Vec::new();
+            binio::put_u32(&mut grp, self.layers.len() as u32);
+            for l in &self.layers {
+                match &l.weights {
+                    WeightCodes::PerLayer(_) => binio::put_u8(&mut grp, 0),
+                    WeightCodes::PerChannel(g) => {
+                        binio::put_u8(&mut grp, 1);
+                        binio::put_u32(&mut grp, g.n_groups() as u32);
+                        for s in &g.spans {
+                            binio::put_u32(&mut grp, s.bits);
+                            binio::put_f32(&mut grp, s.lmin);
+                            binio::put_f32(&mut grp, s.scale);
+                        }
+                    }
+                }
+            }
+            sections.push((TAG_GROUPS, grp));
+        }
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
         binio::put_u32(&mut out, VERSION);
@@ -237,6 +355,7 @@ impl Artifact {
         let mut lay_pl: Option<&[u8]> = None;
         let mut wct_pl: Option<&[u8]> = None;
         let mut bia_pl: Option<&[u8]> = None;
+        let mut grp_pl: Option<&[u8]> = None;
         let mut r = parse_header(bytes)?;
         let n_sections = r.u32()? as usize;
         for _ in 0..n_sections {
@@ -246,6 +365,7 @@ impl Artifact {
                 t if t == TAG_LAYERS => Some(&mut lay_pl),
                 t if t == TAG_WCODES => Some(&mut wct_pl),
                 t if t == TAG_BIASES => Some(&mut bia_pl),
+                t if t == TAG_GROUPS => Some(&mut grp_pl),
                 _ => None, // unknown section: checksummed, then skipped
             };
             if let Some(slot) = slot {
@@ -290,6 +410,7 @@ impl Artifact {
             w_bits: u32,
             a_bits: u32,
             relu: bool,
+            grouped: bool,
             w_lmin: f32,
             w_scale: f32,
             act_range: Option<(f32, f32)>,
@@ -331,6 +452,7 @@ impl Artifact {
                 w_bits,
                 a_bits,
                 relu: flags & LAYER_FLAG_RELU != 0,
+                grouped: flags & LAYER_FLAG_GROUPED != 0,
                 w_lmin,
                 w_scale,
                 act_range,
@@ -340,18 +462,91 @@ impl Artifact {
             bail!("trailing bytes in '{}' section", tag_str(TAG_LAYERS));
         }
 
+        // GRP0 — per-channel plan tables for grouped layers.  A layer
+        // flagged grouped in LAY0 without a GRP0 section (or vice
+        // versa) is unusable — fail loudly rather than mis-decode.
+        let mut group_params: Vec<Option<Vec<(u32, f32, f32)>>> = vec![None; n_layers];
+        if let Some(pl) = grp_pl {
+            let mut gr = Reader::new(pl);
+            let gn = gr.u32()? as usize;
+            if gn != n_layers {
+                bail!(
+                    "'{}' section declares {gn} layers, '{}' declares {n_layers}",
+                    tag_str(TAG_GROUPS),
+                    tag_str(TAG_META)
+                );
+            }
+            for (i, slot) in group_params.iter_mut().enumerate() {
+                let flagged = gr.u8()?;
+                if flagged > 1 {
+                    bail!("layer {i}: bad group flag {flagged}");
+                }
+                if flagged == 0 {
+                    continue;
+                }
+                let n_groups = gr.u32()? as usize;
+                // No pre-allocation from the untrusted count: each
+                // group record consumes 12 bytes, so a hostile count
+                // fails on the first missing record.
+                let mut params = Vec::new();
+                for _ in 0..n_groups {
+                    let bits = gr.u32()?;
+                    let lmin = gr.f32()?;
+                    let scale = gr.f32()?;
+                    params.push((bits, lmin, scale));
+                }
+                *slot = Some(params);
+            }
+            if !gr.is_empty() {
+                bail!("trailing bytes in '{}' section", tag_str(TAG_GROUPS));
+            }
+        }
+        for (i, (h, gp)) in headers.iter().zip(&group_params).enumerate() {
+            if h.grouped != gp.is_some() {
+                bail!(
+                    "layer {i} ('{}'): grouped flag disagrees with the '{}' section \
+                     (grouped artifacts need a reader that speaks GRP0)",
+                    h.name,
+                    tag_str(TAG_GROUPS)
+                );
+            }
+        }
+
         // WCT0 + BIA0 — payloads, validated against the geometry.
         let mut wr = Reader::new(wct_pl);
         let mut br = Reader::new(bia_pl);
         let mut layers = Vec::new();
-        for (i, h) in headers.into_iter().enumerate() {
+        for (i, (h, gp)) in headers.into_iter().zip(group_params).enumerate() {
             let code_len = wr
                 .len_u64()
                 .with_context(|| format!("layer {i} ('{}') code length", h.name))?;
             let data = wr.take(code_len)?.to_vec();
-            let elems = binio::checked_product(&[h.din, h.dout])?;
-            let packed = PackedTensor::from_raw(h.w_bits, elems, h.w_lmin, h.w_scale, data)
-                .with_context(|| format!("layer {i} ('{}') weight codes", h.name))?;
+            let weights = match gp {
+                None => {
+                    let elems = binio::checked_product(&[h.din, h.dout])?;
+                    WeightCodes::PerLayer(
+                        PackedTensor::from_raw(h.w_bits, elems, h.w_lmin, h.w_scale, data)
+                            .with_context(|| {
+                                format!("layer {i} ('{}') weight codes", h.name)
+                            })?,
+                    )
+                }
+                Some(params) => {
+                    if params.len() != h.dout {
+                        bail!(
+                            "layer {i} ('{}'): {} channel plans for {} output channels",
+                            h.name,
+                            params.len(),
+                            h.dout
+                        );
+                    }
+                    let groups = PackedGroups::from_raw(h.din, &params, data)
+                        .with_context(|| {
+                            format!("layer {i} ('{}') grouped weight codes", h.name)
+                        })?;
+                    WeightCodes::PerChannel(groups)
+                }
+            };
             let bias = br.f32_vec(h.dout)
                 .with_context(|| format!("layer {i} ('{}') bias", h.name))?;
             if let Some(bad) = bias.iter().find(|b| !b.is_finite()) {
@@ -364,7 +559,7 @@ impl Artifact {
                 a_bits: h.a_bits,
                 relu: h.relu,
                 act_range: h.act_range,
-                packed,
+                weights,
                 bias,
             });
         }
@@ -518,7 +713,7 @@ pub fn section_table(bytes: &[u8]) -> Result<Vec<SectionInfo>> {
             payload_len: payload.len(),
             crc_stored,
             crc_ok: binio::crc32(payload) == crc_stored,
-            known: [TAG_META, TAG_LAYERS, TAG_WCODES, TAG_BIASES]
+            known: [TAG_META, TAG_LAYERS, TAG_WCODES, TAG_BIASES, TAG_GROUPS]
                 .iter()
                 .any(|t| **t == tag),
         });
@@ -553,7 +748,7 @@ mod tests {
             assert_eq!(x.a_bits, y.a_bits);
             assert_eq!(x.relu, y.relu);
             assert_eq!(x.act_range, y.act_range);
-            assert_eq!(x.packed, y.packed);
+            assert_eq!(x.weights, y.weights);
             assert_eq!(x.bias, y.bias);
         }
         assert!(b.is_calibrated());
@@ -641,7 +836,7 @@ mod tests {
             // synthetic_net calibrates; strip it via a fresh layer.
             let stripped = IntDense::from_packed(
                 &l.name,
-                l.packed.clone(),
+                l.packed_per_layer().unwrap().clone(),
                 l.din,
                 l.dout,
                 l.bias.clone(),

@@ -51,9 +51,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::bitpack::{pack, unpack_codes, PackedTensor};
+use crate::bitpack::{pack, pack_groups, unpack_codes, PackedGroups, PackedTensor, WeightCodes};
 use crate::model::ModelMeta;
-use crate::quant;
+use crate::quant::{self, Granularity};
 use crate::tensor::HostTensor;
 use crate::util::pool::WorkerPool;
 
@@ -62,19 +62,26 @@ use crate::util::pool::WorkerPool;
 const PAR_MIN_MACS: usize = 1 << 20;
 
 /// One integer-quantized dense layer.
+///
+/// Weight codes are stored at either [`Granularity`]:
+/// **PerLayer** (one bitlength + `(lmin, scale)` plan for the whole
+/// tensor, the original path) or **PerOutputChannel** (each output
+/// channel packed at its own learned bitlength against its own range —
+/// the sub-layer granularity the paper's "at any granularity" claim
+/// needs).  Both granularities share the tiled `codes_t` layout, the
+/// activation quantizer and the blocked i64 GEMM structure; only the
+/// affine reconstruction differs (scalar vs per-column tables).
 pub struct IntDense {
     pub name: String,
     pub din: usize,
     pub dout: usize,
-    /// Packed weight codes, row-major [din, dout].
-    pub packed: PackedTensor,
+    /// Packed weight codes at their stored granularity.
+    pub weights: WeightCodes,
     /// Tiled (transposed) codes, [dout, din]: row `j` holds output
     /// column j's weights contiguously — what the blocked GEMM streams
     /// (u16 is enough for <=16 bits). The row-major layout is not
     /// cached; [`Self::forward_ref`] re-unpacks it on demand.
     codes_t: Vec<u16>,
-    pub w_min: f32,
-    pub w_scale: f32,
     /// Σ over din of w_code for each output column (i64 per dout).
     col_code_sum: Vec<i64>,
     pub bias: Vec<f32>,
@@ -86,15 +93,32 @@ pub struct IntDense {
     act_range: Option<(f32, f32)>,
 }
 
+/// Hoisted per-output-channel affine tables for the grouped GEMM, all
+/// len `dout`: `s[j] = w_scale_j·a_scale`, `awmin[j] = a_scale·w_min_j`
+/// (multiplies the per-row code sum), `kwmin[j] = (K·a_min)·w_min_j`,
+/// and `u[j]` folding the column code sum and bias.  The f64
+/// association of every product mirrors the per-layer
+/// [`IntDense::affine_terms`] exactly, which is what makes
+/// uniform-plan grouped layers bit-identical to per-layer ones.
+#[derive(Debug, Default)]
+struct GroupedCols {
+    s: Vec<f64>,
+    awmin: Vec<f64>,
+    kwmin: Vec<f64>,
+    u: Vec<f64>,
+}
+
 /// Reusable per-layer scratch for [`IntDense::forward_scratch`]: the
 /// activation codes, row code sums and hoisted affine tables that
-/// `forward` otherwise allocates fresh on every call.
+/// `forward` otherwise allocates fresh on every call.  The `g*` fields
+/// are the per-output-channel tables of the grouped path.
 #[derive(Debug, Default)]
 pub struct LayerScratch {
     codes: Vec<u16>,
     row_sum: Vec<i64>,
     t: Vec<f64>,
     u: Vec<f64>,
+    gcols: GroupedCols,
 }
 
 /// Reusable whole-network buffers for [`IntNet::forward_into`]:
@@ -111,6 +135,7 @@ pub struct NetScratch {
 }
 
 impl IntDense {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         name: &str,
         w: &[f32],
@@ -183,9 +208,7 @@ impl IntDense {
             name: name.to_string(),
             din,
             dout,
-            w_min: packed.lmin,
-            w_scale: packed.scale,
-            packed,
+            weights: WeightCodes::PerLayer(packed),
             codes_t,
             col_code_sum,
             bias,
@@ -193,6 +216,139 @@ impl IntDense {
             relu,
             act_range,
         })
+    }
+
+    /// Per-output-channel construction: quantize and pack each output
+    /// channel (column `j` of the row-major `[din, dout]` weights) at
+    /// its own learned bitlength `w_bits[j]` against its own min/max —
+    /// the [`Granularity::PerOutputChannel`] path.  Learned fractional
+    /// bitlengths deploy at `ceil` per the shared
+    /// [`quant::int_bits`] convention.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_grouped(
+        name: &str,
+        w: &[f32],
+        din: usize,
+        dout: usize,
+        bias: &[f32],
+        w_bits: &[f32],
+        a_bits: u32,
+        relu: bool,
+    ) -> Result<Self> {
+        if w.len() != din * dout {
+            bail!("{name}: weight len {} != {din}x{dout}", w.len());
+        }
+        if w_bits.len() != dout {
+            bail!(
+                "{name}: {} channel bitlengths for {dout} output channels",
+                w_bits.len()
+            );
+        }
+        // Channel-major (transposed) view: group j = output channel j's
+        // din weights, contiguous.
+        let mut wt = vec![0.0f32; din * dout];
+        for i in 0..din {
+            for j in 0..dout {
+                wt[j * din + i] = w[i * dout + j];
+            }
+        }
+        let bits: Vec<u32> = w_bits.iter().map(|&b| quant::int_bits(b)).collect();
+        let groups = pack_groups(&wt, din, &bits)?;
+        Self::from_packed_groups(name, groups, din, dout, bias.to_vec(), a_bits, relu, None)
+    }
+
+    /// Rebuild a per-output-channel layer from its **stored** grouped
+    /// codes (the `GRP0` deployment path) — the grouped analogue of
+    /// [`Self::from_packed`], with the same bit-identity guarantee and
+    /// the same untrusted-input validation posture.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_packed_groups(
+        name: &str,
+        groups: PackedGroups,
+        din: usize,
+        dout: usize,
+        bias: Vec<f32>,
+        a_bits: u32,
+        relu: bool,
+        act_range: Option<(f32, f32)>,
+    ) -> Result<Self> {
+        if din == 0 || dout == 0 {
+            // A grouped layer needs at least one channel with at least
+            // one weight — unlike the per-layer path there is no
+            // meaningful empty encoding (and LAY0 rejects degenerate
+            // shapes on load anyway).
+            bail!("{name}: degenerate grouped shape {din}x{dout}");
+        }
+        if groups.group_size != din {
+            bail!(
+                "{name}: group size {} != input dim {din}",
+                groups.group_size
+            );
+        }
+        if groups.n_groups() != dout {
+            bail!(
+                "{name}: {} packed channel groups != {dout} output channels",
+                groups.n_groups()
+            );
+        }
+        if bias.len() != dout {
+            bail!("{name}: bias len {} != {dout}", bias.len());
+        }
+        if !(1..=16).contains(&a_bits) {
+            bail!("{name}: activation bits {a_bits} outside [1,16]");
+        }
+        if let Some((lo, hi)) = act_range {
+            if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                bail!("{name}: bad activation range [{lo}, {hi}]");
+            }
+        }
+        let elems = din
+            .checked_mul(dout)
+            .ok_or_else(|| anyhow::anyhow!("{name}: {din}x{dout} overflows"))?;
+        let mut codes_t = vec![0u16; elems];
+        let mut col_code_sum = vec![0i64; dout];
+        for j in 0..dout {
+            let codes = groups.group_codes(j);
+            let mut sum = 0i64;
+            for (dst, c) in codes_t[j * din..(j + 1) * din].iter_mut().zip(codes) {
+                *dst = c as u16;
+                sum += c as i64;
+            }
+            col_code_sum[j] = sum;
+        }
+        Ok(Self {
+            name: name.to_string(),
+            din,
+            dout,
+            weights: WeightCodes::PerChannel(groups),
+            codes_t,
+            col_code_sum,
+            bias,
+            a_bits,
+            relu,
+            act_range,
+        })
+    }
+
+    /// Weight-quantization granularity of this layer.
+    pub fn granularity(&self) -> Granularity {
+        self.weights.granularity()
+    }
+
+    /// The per-layer packed tensor, when this layer is PerLayer.
+    pub fn packed_per_layer(&self) -> Option<&PackedTensor> {
+        match &self.weights {
+            WeightCodes::PerLayer(p) => Some(p),
+            WeightCodes::PerChannel(_) => None,
+        }
+    }
+
+    /// The per-channel packed groups, when this layer is PerOutputChannel.
+    pub fn packed_groups(&self) -> Option<&PackedGroups> {
+        match &self.weights {
+            WeightCodes::PerLayer(_) => None,
+            WeightCodes::PerChannel(g) => Some(g),
+        }
     }
 
     /// Pin this layer's input quantization to a calibrated `[lo, hi]`
@@ -269,6 +425,17 @@ impl IntDense {
         (s, t, u)
     }
 
+    /// The per-layer `(w_min, w_scale)` dequantization plan.  Panics on
+    /// a grouped layer — the grouped paths use [`Self::grouped_terms_into`].
+    fn per_layer_plan(&self) -> (f32, f32) {
+        match &self.weights {
+            WeightCodes::PerLayer(p) => (p.lmin, p.scale),
+            WeightCodes::PerChannel(_) => {
+                unreachable!("{}: per-layer affine terms on a grouped layer", self.name)
+            }
+        }
+    }
+
     /// Buffer-reusing core of [`Self::affine_terms`].
     fn affine_terms_into(
         &self,
@@ -278,9 +445,10 @@ impl IntDense {
         t: &mut Vec<f64>,
         u: &mut Vec<f64>,
     ) -> f64 {
-        let ws = self.w_scale as f64;
+        let (w_min, w_scale) = self.per_layer_plan();
+        let ws = w_scale as f64;
         let asc = a_scale as f64;
-        let wmin = self.w_min as f64;
+        let wmin = w_min as f64;
         let amin = a_min as f64;
         let k = self.din as f64;
         t.clear();
@@ -297,6 +465,108 @@ impl IntDense {
                 .map(|(&cs, &b)| ws * amin * cs as f64 + b as f64),
         );
         ws * asc
+    }
+
+    /// Grouped analogue of [`Self::affine_terms_into`]: fills the
+    /// per-row code sums as f64 (`rsf`, what the per-column `awmin`
+    /// multiplies) and the per-column tables in `cols`.  Every f64
+    /// product keeps the exact association of the per-layer path
+    /// (`asc·wmin`, `(k·amin)·wmin`, `(ws·amin)·cs`), so a grouped
+    /// layer whose channels all share one plan reconstructs
+    /// bit-identically to the per-layer kernel.
+    fn grouped_terms_into(
+        &self,
+        a_scale: f32,
+        a_min: f32,
+        row_code_sum: &[i64],
+        rsf: &mut Vec<f64>,
+        cols: &mut GroupedCols,
+    ) {
+        let WeightCodes::PerChannel(groups) = &self.weights else {
+            unreachable!("{}: grouped affine terms on a per-layer layer", self.name)
+        };
+        let asc = a_scale as f64;
+        let amin = a_min as f64;
+        let k = self.din as f64;
+        let kamin = k * amin;
+        rsf.clear();
+        rsf.extend(row_code_sum.iter().map(|&rs| rs as f64));
+        cols.s.clear();
+        cols.awmin.clear();
+        cols.kwmin.clear();
+        cols.u.clear();
+        for ((span, &cs), &b) in groups
+            .spans
+            .iter()
+            .zip(&self.col_code_sum)
+            .zip(&self.bias)
+        {
+            let ws = span.scale as f64;
+            let wmin = span.lmin as f64;
+            cols.s.push(ws * asc);
+            cols.awmin.push(asc * wmin);
+            cols.kwmin.push(kamin * wmin);
+            cols.u.push(ws * amin * cs as f64 + b as f64);
+        }
+    }
+
+    /// Grouped blocked i64 GEMM over one block of batch rows: identical
+    /// loop structure to [`Self::gemm_block`] (4-column register
+    /// blocking over the tiled codes), but the affine reconstruction
+    /// reads the per-output-channel tables — each column carries its
+    /// own `(s, awmin, kwmin, u)` since each channel has its own
+    /// dequantization plan.  `rsf` holds the block's per-row code sums
+    /// as f64.
+    fn gemm_block_grouped(
+        &self,
+        a: &[u16],
+        rsf: &[f64],
+        cols: &GroupedCols,
+        out: &mut [f32],
+    ) {
+        let din = self.din;
+        let dout = self.dout;
+        let relu = self.relu;
+        let codes_t = &self.codes_t;
+        for ((a_row, rf), out_row) in a
+            .chunks_exact(din)
+            .zip(rsf)
+            .zip(out.chunks_exact_mut(dout))
+        {
+            let mut j = 0usize;
+            while j + 4 <= dout {
+                let w0 = &codes_t[j * din..][..din];
+                let w1 = &codes_t[(j + 1) * din..][..din];
+                let w2 = &codes_t[(j + 2) * din..][..din];
+                let w3 = &codes_t[(j + 3) * din..][..din];
+                let (mut s0, mut s1, mut s2, mut s3) = (0i64, 0i64, 0i64, 0i64);
+                for (c, &av) in a_row.iter().enumerate() {
+                    let av = av as i64;
+                    s0 += av * w0[c] as i64;
+                    s1 += av * w1[c] as i64;
+                    s2 += av * w2[c] as i64;
+                    s3 += av * w3[c] as i64;
+                }
+                for (jj, acc) in [s0, s1, s2, s3].into_iter().enumerate() {
+                    let jx = j + jj;
+                    let t = cols.awmin[jx] * *rf + cols.kwmin[jx];
+                    let v = (cols.s[jx] * acc as f64 + t + cols.u[jx]) as f32;
+                    out_row[jx] = if relu { v.max(0.0) } else { v };
+                }
+                j += 4;
+            }
+            while j < dout {
+                let wj = &codes_t[j * din..][..din];
+                let mut acc = 0i64;
+                for (&av, &wv) in a_row.iter().zip(wj) {
+                    acc += av as i64 * wv as i64;
+                }
+                let t = cols.awmin[j] * *rf + cols.kwmin[j];
+                let v = (cols.s[j] * acc as f64 + t + cols.u[j]) as f32;
+                out_row[j] = if relu { v.max(0.0) } else { v };
+                j += 1;
+            }
+        }
     }
 
     /// Split matching rows of (activation codes, per-row affine terms,
@@ -396,20 +666,43 @@ impl IntDense {
             return vec![0.0f32; n * self.dout];
         }
         let (a_codes, row_code_sum, a_scale, a_min) = self.quantize_acts(x, n);
-        let (s, t, u) = self.affine_terms(a_scale, a_min, &row_code_sum);
         let mut out = vec![0.0f32; n * self.dout];
         let threads = self.gemm_threads(n);
-        if threads <= 1 {
-            self.gemm_block(&a_codes, &t, &u, s, &mut out);
-        } else {
-            let u = &u;
-            std::thread::scope(|scope| {
-                for (a, tb, out_chunk) in
-                    self.row_blocks(&a_codes, &t, &mut out, threads)
-                {
-                    scope.spawn(move || self.gemm_block(a, tb, u, s, out_chunk));
+        match &self.weights {
+            WeightCodes::PerLayer(_) => {
+                let (s, t, u) = self.affine_terms(a_scale, a_min, &row_code_sum);
+                if threads <= 1 {
+                    self.gemm_block(&a_codes, &t, &u, s, &mut out);
+                } else {
+                    let u = &u;
+                    std::thread::scope(|scope| {
+                        for (a, tb, out_chunk) in
+                            self.row_blocks(&a_codes, &t, &mut out, threads)
+                        {
+                            scope.spawn(move || self.gemm_block(a, tb, u, s, out_chunk));
+                        }
+                    });
                 }
-            });
+            }
+            WeightCodes::PerChannel(_) => {
+                let mut rsf = Vec::new();
+                let mut cols = GroupedCols::default();
+                self.grouped_terms_into(a_scale, a_min, &row_code_sum, &mut rsf, &mut cols);
+                if threads <= 1 {
+                    self.gemm_block_grouped(&a_codes, &rsf, &cols, &mut out);
+                } else {
+                    let cols = &cols;
+                    std::thread::scope(|scope| {
+                        for (a, rb, out_chunk) in
+                            self.row_blocks(&a_codes, &rsf, &mut out, threads)
+                        {
+                            scope.spawn(move || {
+                                self.gemm_block_grouped(a, rb, cols, out_chunk)
+                            });
+                        }
+                    });
+                }
+            }
         }
         out
     }
@@ -437,22 +730,54 @@ impl IntDense {
         }
         let (a_scale, a_min) =
             self.quantize_acts_into(x, n, &mut sc.codes, &mut sc.row_sum);
-        let s = self.affine_terms_into(a_scale, a_min, &sc.row_sum, &mut sc.t, &mut sc.u);
         let threads = match pool {
             Some(p) if n * self.din * self.dout >= PAR_MIN_MACS => p.workers().min(n),
             _ => 1,
         };
-        if threads <= 1 {
-            self.gemm_block(&sc.codes, &sc.t, &sc.u, s, out);
-        } else {
-            let pool = pool.unwrap();
-            let u = &sc.u;
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(threads);
-            for (a, tb, out_chunk) in self.row_blocks(&sc.codes, &sc.t, out, threads) {
-                jobs.push(Box::new(move || self.gemm_block(a, tb, u, s, out_chunk)));
+        match &self.weights {
+            WeightCodes::PerLayer(_) => {
+                let s = self
+                    .affine_terms_into(a_scale, a_min, &sc.row_sum, &mut sc.t, &mut sc.u);
+                if threads <= 1 {
+                    self.gemm_block(&sc.codes, &sc.t, &sc.u, s, out);
+                } else {
+                    let pool = pool.unwrap();
+                    let u = &sc.u;
+                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(threads);
+                    for (a, tb, out_chunk) in
+                        self.row_blocks(&sc.codes, &sc.t, out, threads)
+                    {
+                        jobs.push(Box::new(move || self.gemm_block(a, tb, u, s, out_chunk)));
+                    }
+                    pool.run_scoped(jobs);
+                }
             }
-            pool.run_scoped(jobs);
+            WeightCodes::PerChannel(_) => {
+                self.grouped_terms_into(
+                    a_scale,
+                    a_min,
+                    &sc.row_sum,
+                    &mut sc.t,
+                    &mut sc.gcols,
+                );
+                if threads <= 1 {
+                    self.gemm_block_grouped(&sc.codes, &sc.t, &sc.gcols, out);
+                } else {
+                    let pool = pool.unwrap();
+                    let cols = &sc.gcols;
+                    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                        Vec::with_capacity(threads);
+                    for (a, rb, out_chunk) in
+                        self.row_blocks(&sc.codes, &sc.t, out, threads)
+                    {
+                        jobs.push(Box::new(move || {
+                            self.gemm_block_grouped(a, rb, cols, out_chunk)
+                        }));
+                    }
+                    pool.run_scoped(jobs);
+                }
+            }
         }
     }
 
@@ -478,30 +803,67 @@ impl IntDense {
         if n == 0 || self.din == 0 || self.dout == 0 {
             return vec![0.0f32; n * self.dout];
         }
-        let codes: Vec<u16> =
-            unpack_codes(&self.packed).iter().map(|&c| c as u16).collect();
         let (a_codes, row_code_sum, a_scale, a_min) = self.quantize_acts(x, n);
-        let (s, t, u) = self.affine_terms(a_scale, a_min, &row_code_sum);
         let mut out = vec![0.0f32; n * self.dout];
-        for r in 0..n {
-            let a_row = &a_codes[r * self.din..(r + 1) * self.din];
-            for j in 0..self.dout {
-                let mut acc = 0i64;
-                for c in 0..self.din {
-                    acc += a_row[c] as i64 * codes[c * self.dout + j] as i64;
+        match &self.weights {
+            WeightCodes::PerLayer(packed) => {
+                let codes: Vec<u16> =
+                    unpack_codes(packed).iter().map(|&c| c as u16).collect();
+                let (s, t, u) = self.affine_terms(a_scale, a_min, &row_code_sum);
+                for r in 0..n {
+                    let a_row = &a_codes[r * self.din..(r + 1) * self.din];
+                    for j in 0..self.dout {
+                        let mut acc = 0i64;
+                        for c in 0..self.din {
+                            acc += a_row[c] as i64 * codes[c * self.dout + j] as i64;
+                        }
+                        let v = (s * acc as f64 + t[r] + u[j]) as f32;
+                        out[r * self.dout + j] = if self.relu { v.max(0.0) } else { v };
+                    }
                 }
-                let v = (s * acc as f64 + t[r] + u[j]) as f32;
-                out[r * self.dout + j] = if self.relu { v.max(0.0) } else { v };
+            }
+            WeightCodes::PerChannel(groups) => {
+                // Scalar grouped baseline: per-channel codes from the
+                // byte-at-a-time reference unpacker (hoisted once per
+                // call, like the per-layer arm's unpack), per-element
+                // affine recomputation — no tiled cache, no hoisted
+                // tables.
+                let codes_by_ch: Vec<Vec<u32>> =
+                    (0..self.dout).map(|j| groups.group_codes_ref(j)).collect();
+                let asc = a_scale as f64;
+                let amin = a_min as f64;
+                let k = self.din as f64;
+                for r in 0..n {
+                    let a_row = &a_codes[r * self.din..(r + 1) * self.din];
+                    let rsf = row_code_sum[r] as f64;
+                    for j in 0..self.dout {
+                        let span = groups.spans[j];
+                        let cj = &codes_by_ch[j];
+                        let mut acc = 0i64;
+                        let mut csum = 0i64;
+                        for (&av, &wv) in a_row.iter().zip(cj.iter()) {
+                            let wv = wv as i64;
+                            acc += av as i64 * wv;
+                            csum += wv;
+                        }
+                        let ws = span.scale as f64;
+                        let wmin = span.lmin as f64;
+                        let t = asc * wmin * rsf + k * amin * wmin;
+                        let u = ws * amin * csum as f64 + self.bias[j] as f64;
+                        let v = (ws * asc * acc as f64 + t + u) as f32;
+                        out[r * self.dout + j] = if self.relu { v.max(0.0) } else { v };
+                    }
+                }
             }
         }
         out
     }
 
     /// Storage of this layer in packed form (bytes): the packed weight
-    /// tensor at the shared convention ([`PackedTensor::stored_bytes`],
-    /// header included) plus the f32 bias.
+    /// codes at the shared convention (payload + headers,
+    /// [`WeightCodes::stored_bytes`]) plus the f32 bias.
     pub fn packed_bytes(&self) -> usize {
-        self.packed.stored_bytes() + self.bias.len() * 4
+        self.weights.stored_bytes() + self.bias.len() * 4
     }
 }
 
@@ -531,6 +893,26 @@ impl IntNet {
         bits_w: &[f32],
         bits_a: &[f32],
         act_ranges: Option<(&[f32], &[f32])>,
+    ) -> Result<Self> {
+        Self::from_trained_with(meta, params, bits_w, bits_a, act_ranges, Granularity::PerLayer)
+    }
+
+    /// [`Self::from_trained`] with an explicit weight granularity.
+    ///
+    /// `Granularity::PerOutputChannel` refines each layer's learned
+    /// bitlength into per-channel bitlengths
+    /// ([`quant::per_channel_bits`]: a channel spanning a fraction of
+    /// the layer's range keeps the layer's quantization step with fewer
+    /// levels) and packs every channel at its own bitlength against its
+    /// own range — the aggressive sub-layer deployment the paper's
+    /// granularity claim promises.
+    pub fn from_trained_with(
+        meta: &ModelMeta,
+        params: &[HostTensor],
+        bits_w: &[f32],
+        bits_a: &[f32],
+        act_ranges: Option<(&[f32], &[f32])>,
+        granularity: Granularity,
     ) -> Result<Self> {
         if meta.layers.iter().any(|l| l.kind != "dense") {
             bail!(
@@ -573,16 +955,32 @@ impl IntNet {
             let w = find(&format!("{i}/w"))?;
             let b = find(&format!("{i}/b"))?;
             let (din, dout) = (geom.cin, geom.cout);
-            let mut layer = IntDense::new(
-                &geom.name,
-                w.as_f32()?,
-                din,
-                dout,
-                b.as_f32()?,
-                quant::int_bits(bits_w[i]),
-                quant::int_bits(bits_a[i]),
-                i != last,
-            )?;
+            let mut layer = match granularity {
+                Granularity::PerLayer => IntDense::new(
+                    &geom.name,
+                    w.as_f32()?,
+                    din,
+                    dout,
+                    b.as_f32()?,
+                    quant::int_bits(bits_w[i]),
+                    quant::int_bits(bits_a[i]),
+                    i != last,
+                )?,
+                Granularity::PerOutputChannel => {
+                    let wf = w.as_f32()?;
+                    let ch_bits = quant::per_channel_bits(wf, din, dout, bits_w[i]);
+                    IntDense::new_grouped(
+                        &geom.name,
+                        wf,
+                        din,
+                        dout,
+                        b.as_f32()?,
+                        &ch_bits,
+                        quant::int_bits(bits_a[i]),
+                        i != last,
+                    )?
+                }
+            };
             if let Some((lo, hi)) = act_ranges {
                 layer.set_act_range(lo[i], hi[i]);
             }
@@ -687,6 +1085,37 @@ impl IntNet {
             .iter()
             .map(|l| (l.din * l.dout + l.dout) * 4)
             .sum()
+    }
+
+    /// Mean stored weight bitlength over every group of every layer
+    /// (per-layer layers count as one group) — the sub-layer average
+    /// the per-channel path reports.
+    pub fn mean_w_bits(&self) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for l in &self.layers {
+            let h = l.weights.bits_histogram();
+            for (bits, &count) in h.iter().enumerate() {
+                sum += (bits * count) as f64;
+                n += count;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Aggregate per-channel weight-bit histogram across layers
+    /// (index = bitlength, 1..=16).
+    pub fn w_bits_histogram(&self) -> [usize; 17] {
+        let mut h = [0usize; 17];
+        for l in &self.layers {
+            for (i, c) in l.weights.bits_histogram().iter().enumerate() {
+                h[i] += c;
+            }
+        }
+        h
     }
 }
 
@@ -820,7 +1249,7 @@ mod tests {
         src.set_act_range(-2.0, 2.0);
         let rebuilt = IntDense::from_packed(
             "fz",
-            src.packed.clone(),
+            src.packed_per_layer().unwrap().clone(),
             din,
             dout,
             src.bias.clone(),
@@ -834,7 +1263,7 @@ mod tests {
         assert!(want.iter().zip(&got).all(|(p, q)| p.to_bits() == q.to_bits()));
         // Untrusted-input validation: geometry/codes disagreement, bad
         // bias length, out-of-range activation bits.
-        let p = src.packed.clone();
+        let p = src.packed_per_layer().unwrap().clone();
         let bias = src.bias.clone();
         assert!(
             IntDense::from_packed("z", p.clone(), din, dout + 1, bias.clone(), 4, true, None)
@@ -847,6 +1276,204 @@ mod tests {
         assert!(IntDense::from_packed("z", p, din, dout, bias, 0, true, None).is_err());
     }
 
+    fn transpose(w: &[f32], din: usize, dout: usize) -> Vec<f32> {
+        let mut wt = vec![0.0f32; din * dout];
+        for i in 0..din {
+            for j in 0..dout {
+                wt[j * din + i] = w[i * dout + j];
+            }
+        }
+        wt
+    }
+
+    #[test]
+    fn grouped_forward_matches_grouped_ref_bitwise() {
+        // Row-varying codes through the blocked GEMM vs the scalar
+        // grouped baseline: odd shapes, mixed per-channel bitlengths,
+        // remainder columns, calibrated and dynamic ranges.
+        let mut rng = Rng::new(0x64E0);
+        for &(n, din, dout, calibrated) in &[
+            (1usize, 1usize, 1usize, false),
+            (3, 5, 7, true),
+            (8, 17, 13, false),
+            (5, 33, 9, true),
+        ] {
+            let x = rand_vec(&mut rng, n * din);
+            let w = rand_vec(&mut rng, din * dout);
+            let b = rand_vec(&mut rng, dout);
+            let bits: Vec<f32> =
+                (0..dout).map(|j| (1 + (j * 5) % 16) as f32).collect();
+            let mut layer =
+                IntDense::new_grouped("g", &w, din, dout, &b, &bits, 4, true).unwrap();
+            if calibrated {
+                layer.set_act_range(-2.0, 2.0);
+            }
+            assert_eq!(layer.granularity(), Granularity::PerOutputChannel);
+            let fast = layer.forward(&x, n);
+            let slow = layer.forward_ref(&x, n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(
+                    f.to_bits(),
+                    s.to_bits(),
+                    "({n},{din},{dout}) elem {i}: {f} vs {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_uniform_plan_is_bit_identical_to_per_layer() {
+        // The parity pin: a PerOutputChannel layer whose channels all
+        // share one bitlength *and one (lmin, scale) plan* must forward
+        // bit-identically to the PerLayer layer it mirrors — fast and
+        // _ref paths.  din is byte-aligned so the per-layer bitstream
+        // of the transposed weights is exactly the group-aligned
+        // layout.
+        let mut rng = Rng::new(0x64E1);
+        for &(n, din, dout, bits) in &[
+            (4usize, 8usize, 7usize, 3u32),
+            (2, 16, 10, 5),
+            (6, 8, 4, 1),
+            (3, 24, 6, 16),
+        ] {
+            let x = rand_vec(&mut rng, n * din);
+            let w = rand_vec(&mut rng, din * dout);
+            let b = rand_vec(&mut rng, dout);
+            let per_layer =
+                IntDense::new("pl", &w, din, dout, &b, bits, 6, true).unwrap();
+            // Same plan, channel-major codes: pack the transposed
+            // weights per-layer (min/max is permutation-invariant), then
+            // reinterpret the byte-aligned stream as per-channel spans.
+            let flat = pack(&transpose(&w, din, dout), bits).unwrap();
+            assert_eq!((din * bits as usize) % 8, 0, "test needs aligned groups");
+            let params: Vec<(u32, f32, f32)> =
+                vec![(flat.bits, flat.lmin, flat.scale); dout];
+            let groups =
+                PackedGroups::from_raw(din, &params, flat.data.clone()).unwrap();
+            let grouped = IntDense::from_packed_groups(
+                "gr", groups, din, dout, b.clone(), 6, true, None,
+            )
+            .unwrap();
+            let want = per_layer.forward(&x, n);
+            let got = grouped.forward(&x, n);
+            let got_ref = grouped.forward_ref(&x, n);
+            for (i, ((a, g), r)) in want.iter().zip(&got).zip(&got_ref).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    g.to_bits(),
+                    "({n},{din},{dout},{bits}b) fast elem {i}: {a} vs {g}"
+                );
+                assert_eq!(
+                    a.to_bits(),
+                    r.to_bits(),
+                    "({n},{din},{dout},{bits}b) ref elem {i}: {a} vs {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_forward_scratch_matches_forward_bitwise() {
+        // The serving path consumes row-varying codes too: scratch +
+        // pooled dispatch must stay bit-identical, including above the
+        // parallel threshold.
+        let pool = crate::util::pool::WorkerPool::new(3);
+        let mut sc = LayerScratch::default();
+        let mut rng = Rng::new(0x64E2);
+        for &(n, din, dout) in &[(1usize, 9usize, 5usize), (7, 31, 11), (67, 128, 128)] {
+            let x = rand_vec(&mut rng, n * din);
+            let w = rand_vec(&mut rng, din * dout);
+            let b = rand_vec(&mut rng, dout);
+            let bits: Vec<f32> =
+                (0..dout).map(|j| (2 + (j * 3) % 7) as f32).collect();
+            let mut layer =
+                IntDense::new_grouped("gs", &w, din, dout, &b, &bits, 5, true).unwrap();
+            layer.set_act_range(-2.5, 2.5);
+            let want = layer.forward(&x, n);
+            let mut got = vec![0.0f32; n * dout];
+            layer.forward_scratch(&x, n, &mut sc, &mut got, Some(&pool));
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "pooled grouped scratch diverged at ({n},{din},{dout})"
+            );
+            let mut inline = vec![0.0f32; n * dout];
+            layer.forward_scratch(&x, n, &mut sc, &mut inline, None);
+            assert!(inline.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn grouped_rebuild_from_packed_groups_is_bit_identical() {
+        // Deploy path for grouped layers: rebuilding from stored groups
+        // must never re-quantize.
+        let mut rng = Rng::new(0x64E3);
+        let (n, din, dout) = (4usize, 13usize, 6usize);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let bits = [1.0f32, 4.0, 7.5, 16.0, 2.0, 3.0];
+        let mut src =
+            IntDense::new_grouped("fzg", &w, din, dout, &b, &bits, 4, false).unwrap();
+        src.set_act_range(-1.5, 1.5);
+        let groups = src.packed_groups().unwrap().clone();
+        let rebuilt = IntDense::from_packed_groups(
+            "fzg",
+            groups.clone(),
+            din,
+            dout,
+            src.bias.clone(),
+            src.a_bits,
+            src.relu,
+            src.act_range(),
+        )
+        .unwrap();
+        let want = src.forward(&x, n);
+        let got = rebuilt.forward(&x, n);
+        assert!(want.iter().zip(&got).all(|(p, q)| p.to_bits() == q.to_bits()));
+        // Validation: wrong group size / group count / bias, bad a_bits.
+        assert!(IntDense::from_packed_groups(
+            "z", groups.clone(), din + 1, dout, b.clone(), 4, false, None
+        )
+        .is_err());
+        assert!(IntDense::from_packed_groups(
+            "z", groups.clone(), din, dout + 1, b.clone(), 4, false, None
+        )
+        .is_err());
+        assert!(IntDense::from_packed_groups(
+            "z", groups.clone(), din, dout, vec![0.0; 2], 4, false, None
+        )
+        .is_err());
+        assert!(
+            IntDense::from_packed_groups("z", groups, din, dout, b, 0, false, None)
+                .is_err()
+        );
+        // new_grouped validates the channel-bit count.
+        assert!(IntDense::new_grouped("z", &w, din, dout, &src.bias, &[4.0], 4, false)
+            .is_err());
+    }
+
+    #[test]
+    fn grouped_mixed_bits_shrink_footprint() {
+        // A mixed-bit grouped layer must cost less than the per-layer
+        // layer at the max channel bitlength, and the histogram/mean
+        // must reflect the assignment.
+        let mut rng = Rng::new(0x64E4);
+        let (din, dout) = (64usize, 8usize);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = vec![0.0f32; dout];
+        let bits: Vec<f32> = vec![2.0, 2.0, 2.0, 2.0, 4.0, 4.0, 8.0, 8.0];
+        let grouped =
+            IntDense::new_grouped("m", &w, din, dout, &b, &bits, 8, true).unwrap();
+        let flat8 = IntDense::new("f", &w, din, dout, &b, 8, 8, true).unwrap();
+        assert!(grouped.packed_bytes() < flat8.packed_bytes());
+        let h = grouped.weights.bits_histogram();
+        assert_eq!((h[2], h[4], h[8]), (4, 2, 2));
+        assert!((grouped.weights.mean_bits() - 4.0).abs() < 1e-12);
+        let net = IntNet { layers: vec![grouped], num_classes: dout };
+        assert!((net.mean_w_bits() - 4.0).abs() < 1e-12);
+        assert_eq!(net.w_bits_histogram()[2], 4);
+    }
+
     #[test]
     fn packed_size_shrinks_with_bits() {
         let mut rng = Rng::new(5);
@@ -856,7 +1483,7 @@ mod tests {
         let l2 = IntDense::new("b", &w, 64, 32, &b, 2, 8, true).unwrap();
         assert!(l2.packed_bytes() < l8.packed_bytes());
         // 2-bit weights ≈ 1/16 of f32
-        assert!(l2.packed.ratio_vs_f32() > 15.0);
+        assert!(l2.packed_per_layer().unwrap().ratio_vs_f32() > 15.0);
     }
 
     #[test]

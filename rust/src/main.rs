@@ -110,8 +110,10 @@ OPTIONS (common):
 
 OPTIONS (deploy):
   export:  --out FILE.bpma  --synthetic | --ckpt FILE.bpck  --bits B
-  inspect: <FILE.bpma>
+           --granularity layer|channel   (per-output-channel weight bits)
+  inspect: <FILE.bpma>                   (reports per-channel bit histograms)
   serve:   --model FILE.bpma  --swap-to B.bpma  --swap-after N
+           --granularity layer|channel   (for --synthetic / trained models)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -426,8 +428,30 @@ fn cmd_infer(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--granularity layer|channel` option (default per-layer).
+fn arg_granularity(args: &Args) -> Result<quant::Granularity> {
+    match args.get("granularity") {
+        None => Ok(quant::Granularity::PerLayer),
+        Some(g) => quant::Granularity::parse(g).ok_or_else(|| {
+            anyhow::anyhow!("unknown granularity '{g}' — expected 'layer' or 'channel'")
+        }),
+    }
+}
+
+/// `[bitlength]: channel count` histogram line for grouped models.
+fn bits_histogram_line(h: &[usize; 17]) -> String {
+    (1..=16usize)
+        .filter(|&b| h[b] > 0)
+        .map(|b| format!("{b}b:{}", h[b]))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
 /// Train (when artifacts permit) and return a calibrated integer net.
-fn trained_calibrated_net(cfg: &RunConfig) -> Result<bitprune::infer::IntNet> {
+fn trained_calibrated_net(
+    cfg: &RunConfig,
+    granularity: quant::Granularity,
+) -> Result<bitprune::infer::IntNet> {
     let rt = Runtime::cpu(&cfg.artifact_dir)?;
     eprintln!("training {} to learn bitlengths...", cfg.model);
     let trainer = bitprune::coordinator::Trainer::new(&rt, cfg)?;
@@ -435,14 +459,18 @@ fn trained_calibrated_net(cfg: &RunConfig) -> Result<bitprune::infer::IntNet> {
     let session = trainer
         .session(&out.final_params)
         .with_calibration(out.act_min.clone(), out.act_max.clone());
-    session.int_net(&out.final_.bits_w, &out.final_.bits_a)
+    session.int_net_with(&out.final_.bits_w, &out.final_.bits_a, granularity)
 }
 
 /// Rebuild a calibrated integer net from a saved checkpoint + the
 /// model meta — no training, no dataset.  Calibrated activation
 /// ranges are taken from the checkpoint's `cal/act_min`/`cal/act_max`
 /// tensors when present (the trainer saves them).
-fn net_from_checkpoint(cfg: &RunConfig, ckpt_path: &str) -> Result<bitprune::infer::IntNet> {
+fn net_from_checkpoint(
+    cfg: &RunConfig,
+    ckpt_path: &str,
+    granularity: quant::Granularity,
+) -> Result<bitprune::infer::IntNet> {
     use bitprune::checkpoint::Checkpoint;
     let ckpt = Checkpoint::load(ckpt_path)?;
     let meta = bitprune::model::ModelMeta::load(
@@ -465,12 +493,13 @@ fn net_from_checkpoint(cfg: &RunConfig, ckpt_path: &str) -> Result<bitprune::inf
             None
         }
     };
-    bitprune::infer::IntNet::from_trained(
+    bitprune::infer::IntNet::from_trained_with(
         &meta,
         &params,
         &bits_w,
         &bits_a,
         ranges.as_ref().map(|(lo, hi)| (lo.as_slice(), hi.as_slice())),
+        granularity,
     )
 }
 
@@ -481,7 +510,12 @@ fn artifact_summary(art: &bitprune::deploy::Artifact) -> String {
         t.row(vec![
             l.name.clone(),
             format!("{}x{}", l.din, l.dout),
-            format!("{}", l.w_bits()),
+            match l.granularity() {
+                quant::Granularity::PerLayer => format!("{}", l.w_bits()),
+                quant::Granularity::PerOutputChannel => {
+                    format!("{:.2} mean/ch (max {})", l.w_bits_mean(), l.w_bits())
+                }
+            },
             format!("{}", l.a_bits),
             match l.act_range {
                 Some((lo, hi)) => format!("[{lo:.3}, {hi:.3}]"),
@@ -503,6 +537,12 @@ fn artifact_summary(art: &bitprune::deploy::Artifact) -> String {
         art.f32_bytes() as f64 / art.packed_bytes().max(1) as f64,
         art.is_calibrated(),
     ));
+    if art.is_grouped() {
+        out.push_str(&format!(
+            "\ngranularity: per-output-channel | W bits histogram: {}",
+            bits_histogram_line(&art.w_bits_histogram())
+        ));
+    }
     out
 }
 
@@ -520,18 +560,19 @@ fn cmd_export(args: &Args) -> Result<()> {
     }
     let out_path = args.get_or("out", "model.bpma").to_string();
     let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
+    let gran = arg_granularity(args)?;
 
     let (net, model_name) = if args.flag("synthetic") {
-        eprintln!("freezing the synthetic calibrated mlp fixture ({bits}-bit)");
-        (
-            bitprune::serve::synthetic_mlp(cfg.seed, bits, bits),
-            "synthetic-mlp".to_string(),
-        )
+        eprintln!(
+            "freezing the synthetic calibrated mlp fixture ({bits}-bit, {} granularity)",
+            gran.name()
+        );
+        (synthetic_for(gran, cfg.seed, bits), "synthetic-mlp".to_string())
     } else if let Some(ckpt) = args.get("ckpt") {
         eprintln!("freezing checkpoint '{ckpt}' ({})", cfg.model);
-        (net_from_checkpoint(&cfg, ckpt)?, cfg.model.clone())
+        (net_from_checkpoint(&cfg, ckpt, gran)?, cfg.model.clone())
     } else {
-        match trained_calibrated_net(&cfg) {
+        match trained_calibrated_net(&cfg, gran) {
             Ok(net) => (net, cfg.model.clone()),
             Err(e) => bail!(
                 "export: cannot train here ({e:#})\n  \
@@ -588,6 +629,20 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The synthetic calibrated mlp fixture at the requested granularity.
+/// Per-channel weights cycle through `{bits/2, bits, 2·bits}` (clamped
+/// to [1,16]) so `--bits` steers the grouped fixture too — the default
+/// `--bits 4` yields the canonical 2/4/8 mix.
+fn synthetic_for(gran: quant::Granularity, seed: u64, bits: u32) -> bitprune::infer::IntNet {
+    match gran {
+        quant::Granularity::PerLayer => bitprune::serve::synthetic_mlp(seed, bits, bits),
+        quant::Granularity::PerOutputChannel => {
+            let cycle = [(bits / 2).max(1), bits, (bits * 2).min(16)];
+            bitprune::serve::synthetic_net_grouped(&[32, 256, 128, 10], seed, &cycle, bits)
+        }
+    }
+}
+
 /// Does `--model` name a BPMA artifact file rather than a model tag?
 fn looks_like_artifact(m: &str) -> bool {
     if m.ends_with(".bpma") {
@@ -641,6 +696,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clients = args.get_usize("clients", 4)?.max(1);
     let threads = args.get_usize("threads", 0)?;
     let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
+    let gran = arg_granularity(args)?;
 
     let (net, label) = if let Some(path) = artifact_model {
         let art = Artifact::load(path)?;
@@ -659,10 +715,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         (art.instantiate()?, path.to_string())
     } else if args.flag("synthetic") {
-        eprintln!("serving the synthetic calibrated mlp fixture ({bits}-bit)");
-        (bitprune::serve::synthetic_mlp(cfg.seed, bits, bits), "synthetic-mlp".into())
+        eprintln!(
+            "serving the synthetic calibrated mlp fixture ({bits}-bit, {} granularity)",
+            gran.name()
+        );
+        (synthetic_for(gran, cfg.seed, bits), "synthetic-mlp".into())
     } else {
-        match trained_calibrated_net(&cfg) {
+        match trained_calibrated_net(&cfg, gran) {
             Ok(net) => (net, cfg.model.clone()),
             Err(e) => {
                 eprintln!(
@@ -673,10 +732,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
                      bitprune serve --model model.bpma\n  \
                      falling back to the synthetic calibrated mlp fixture"
                 );
-                (bitprune::serve::synthetic_mlp(cfg.seed, bits, bits), "synthetic-mlp".into())
+                (synthetic_for(gran, cfg.seed, bits), "synthetic-mlp".into())
             }
         }
     };
+    if net
+        .layers
+        .iter()
+        .any(|l| l.granularity() == quant::Granularity::PerOutputChannel)
+    {
+        eprintln!(
+            "per-channel W bits: mean {:.2} | histogram: {}",
+            net.mean_w_bits(),
+            bits_histogram_line(&net.w_bits_histogram())
+        );
+    }
     let net = Arc::new(net);
     let din = net.layers.first().map(|l| l.din).unwrap_or(0);
 
@@ -888,6 +958,8 @@ impl CliOpts for RunConfig {
             "ckpt",
             "swap-to",
             "swap-after",
+            // weight-quantization granularity (export / serve)
+            "granularity",
         ]);
         v
     }

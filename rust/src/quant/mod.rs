@@ -185,23 +185,128 @@ pub fn fake_quant_slice_ref(xs: &mut [f32], n: f32) {
     }
 }
 
+/// Quantization granularity of a weight tensor — the axis the whole
+/// stack (quantizer, integer GEMM, bitpacker, BPMA artifacts) is
+/// threaded on.  The paper learns bitlengths "at any granularity";
+/// these are the two the deployment path implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One bitlength + `(lmin, scale)` plan per layer.
+    PerLayer,
+    /// One bitlength + plan per output channel (each row of the
+    /// transposed `[dout, din]` weight-code layout is its own group).
+    PerOutputChannel,
+}
+
+impl Granularity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Granularity::PerLayer => "layer",
+            Granularity::PerOutputChannel => "channel",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "layer" | "per-layer" => Some(Granularity::PerLayer),
+            "channel" | "per-channel" => Some(Granularity::PerOutputChannel),
+            _ => None,
+        }
+    }
+}
+
+/// Per-group quantization plans: one [`QuantPlan`] per group, each over
+/// its own min/max and bitlength — the per-channel generalization of
+/// the single-plan path.  Every plan keeps the `alpha == 0`
+/// specialization, so integer-bitlength groups still skip the second
+/// grid.
+#[derive(Debug, Clone)]
+pub struct GroupQuantPlan {
+    /// Values per group.
+    pub group_size: usize,
+    /// One plan per group, group order.
+    pub plans: Vec<QuantPlan>,
+}
+
+impl GroupQuantPlan {
+    /// Build plans for `[groups x group_size]` row-major data, each row
+    /// against its own min/max at its own bitlength.
+    pub fn from_groups(xs: &[f32], group_size: usize, bits: &[f32]) -> Self {
+        assert!(group_size > 0, "group_size must be positive");
+        assert_eq!(
+            xs.len(),
+            group_size * bits.len(),
+            "xs len {} != {} groups x {}",
+            xs.len(),
+            bits.len(),
+            group_size
+        );
+        let plans = xs
+            .chunks(group_size)
+            .zip(bits)
+            .map(|(row, &n)| QuantPlan::from_slice(row, n))
+            .collect();
+        Self { group_size, plans }
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Apply every group's plan to its row in place.
+    pub fn apply(&self, xs: &mut [f32]) {
+        assert_eq!(
+            xs.len(),
+            self.group_size * self.plans.len(),
+            "xs len {} != {} groups x {}",
+            xs.len(),
+            self.plans.len(),
+            self.group_size
+        );
+        for (row, plan) in xs.chunks_mut(self.group_size).zip(&self.plans) {
+            plan.apply(row);
+        }
+    }
+}
+
 /// Group-granularity fake quantization: `xs` is [groups x group_size]
 /// row-major; each row quantizes against its own min/max with its own
 /// bitlength (mirror of kernels/fake_quant_group.py, the per-channel
 /// path).  `bits` is one entry per group.
 pub fn fake_quant_groups(xs: &mut [f32], group_size: usize, bits: &[f32]) {
-    assert!(group_size > 0, "group_size must be positive");
-    assert_eq!(
-        xs.len(),
-        group_size * bits.len(),
-        "xs len {} != {} groups x {}",
-        xs.len(),
-        bits.len(),
-        group_size
-    );
-    for (row, &n) in xs.chunks_mut(group_size).zip(bits) {
-        fake_quant_slice(row, n);
+    if xs.is_empty() && bits.is_empty() {
+        assert!(group_size > 0, "group_size must be positive");
+        return;
     }
+    GroupQuantPlan::from_groups(xs, group_size, bits).apply(xs);
+}
+
+/// Derive per-output-channel bitlengths from one learned per-layer
+/// bitlength.  A channel whose own range is a fraction of the layer's
+/// needs correspondingly fewer levels for the **same quantization step**
+/// (`steps_ch = range_ch / s_layer`), so
+/// `n_ch = clip(ceil(n_layer + log2(range_ch / range_layer)))` — never
+/// above `ceil(n_layer)`, clipped at [`N_MIN`] from below.  `w` is the
+/// `[din, dout]` row-major weight tensor; one entry per output channel
+/// (column) is returned.
+pub fn per_channel_bits(w: &[f32], din: usize, dout: usize, layer_bits: f32) -> Vec<f32> {
+    assert_eq!(w.len(), din * dout, "per_channel_bits: {} != {din}x{dout}", w.len());
+    let (gmin, gmax) = group_minmax(w);
+    let grange = ((gmax - gmin) as f64).max(RANGE_EPS as f64);
+    let nl = clip_bits(layer_bits) as f64;
+    let mut out = Vec::with_capacity(dout);
+    for j in 0..dout {
+        let mut cmin = f32::INFINITY;
+        let mut cmax = f32::NEG_INFINITY;
+        for i in 0..din {
+            let v = w[i * dout + j];
+            cmin = cmin.min(v);
+            cmax = cmax.max(v);
+        }
+        let crange = ((cmax - cmin) as f64).max(RANGE_EPS as f64);
+        out.push(clip_bits((nl + (crange / grange).log2()).ceil() as f32));
+    }
+    out
 }
 
 /// Final bitlength selection (paper §II-C): ceil of the learned value.
@@ -215,6 +320,20 @@ pub fn mean_bits(bits: &[f32]) -> f64 {
         return 0.0;
     }
     bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
+}
+
+/// Average bitlength over every group of every layer (the sub-layer
+/// average the per-channel path reports).
+pub fn mean_bits_grouped(bits: &[Vec<f32>]) -> f64 {
+    let n: usize = bits.iter().map(|g| g.len()).sum();
+    if n == 0 {
+        return 0.0;
+    }
+    bits.iter()
+        .flat_map(|g| g.iter())
+        .map(|&b| b as f64)
+        .sum::<f64>()
+        / n as f64
 }
 
 // ---------------------------------------------------------------------------
@@ -241,6 +360,31 @@ pub fn weight_footprint_bits(meta: &ModelMeta, bits_w: &[f32]) -> f64 {
         .iter()
         .zip(bits_w)
         .map(|(l, &b)| l.weight_elems as f64 * clip_bits(b) as f64)
+        .sum()
+}
+
+/// Weight-memory footprint in bits at **per-output-channel**
+/// bitlengths: `bits_w[l]` holds one entry per output channel of layer
+/// `l` (each channel carries `weight_elems / cout` elements).  With
+/// every channel of a layer at that layer's bitlength this reduces
+/// exactly to [`weight_footprint_bits`].
+pub fn weight_footprint_bits_grouped(meta: &ModelMeta, bits_w: &[Vec<f32>]) -> f64 {
+    assert_per_layer("weight_footprint_bits_grouped", bits_w.len(), meta);
+    meta.layers
+        .iter()
+        .zip(bits_w)
+        .map(|(l, g)| {
+            assert_eq!(
+                g.len(),
+                l.cout,
+                "{}: {} channel bitlengths for {} output channels",
+                l.name,
+                g.len(),
+                l.cout
+            );
+            let per_ch = l.weight_elems as f64 / l.cout as f64;
+            g.iter().map(|&b| per_ch * clip_bits(b) as f64).sum::<f64>()
+        })
         .sum()
 }
 
@@ -278,6 +422,56 @@ pub fn mac_cost(meta: &ModelMeta, bits_w: &[f32], bits_a: &[f32]) -> f64 {
         .zip(bits_w.iter().zip(bits_a))
         .map(|(l, (&bw, &ba))| l.macs as f64 * (clip_bits(bw) + clip_bits(ba)) as f64)
         .sum()
+}
+
+/// A layer's regularizer weight split evenly over its groups, so the
+/// Σ(λ·8) == 1 normalization of [`Criterion::lambdas`] is preserved at
+/// any granularity (an all-8-bit network still scores bit-loss 1.0).
+pub fn split_lambda(lam_layer: f32, groups: usize) -> f32 {
+    assert!(groups > 0, "split_lambda: zero groups");
+    lam_layer / groups as f32
+}
+
+/// Group-summed bit loss — the per-channel generalization of the
+/// paper's Σ λ·n penalty.  Weight bitlengths come per layer **per
+/// group** (`bits_w[l]` has one entry per group of layer `l`, with the
+/// layer's λ split evenly across them via [`split_lambda`]);
+/// activations stay per-layer.  With one group per layer this is
+/// exactly the per-layer penalty.
+pub fn grouped_bit_loss(
+    lam_w: &[f32],
+    bits_w: &[Vec<f32>],
+    lam_a: &[f32],
+    bits_a: &[f32],
+) -> f64 {
+    assert_eq!(
+        lam_w.len(),
+        bits_w.len(),
+        "grouped_bit_loss: {} weight λ for {} layers",
+        lam_w.len(),
+        bits_w.len()
+    );
+    assert_eq!(
+        lam_a.len(),
+        bits_a.len(),
+        "grouped_bit_loss: {} activation λ for {} layers",
+        lam_a.len(),
+        bits_a.len()
+    );
+    let w: f64 = lam_w
+        .iter()
+        .zip(bits_w)
+        .map(|(&lam, g)| {
+            let lg = split_lambda(lam, g.len()) as f64;
+            g.iter().map(|&n| lg * clip_bits(n) as f64).sum::<f64>()
+        })
+        .sum();
+    let a: f64 = lam_a
+        .iter()
+        .zip(bits_a)
+        .map(|(&lam, &n)| lam as f64 * clip_bits(n) as f64)
+        .sum();
+    w + a
 }
 
 /// λ vectors for the regularizer criteria (paper §II-B / §III-A5).
@@ -729,6 +923,134 @@ mod tests {
     #[should_panic(expected = "mac_cost (activations): 1 bitlength entries")]
     fn mac_cost_rejects_short_bits() {
         mac_cost(&tiny_meta(), &[4.0, 4.0], &[4.0]);
+    }
+
+    #[test]
+    fn granularity_parse_roundtrip() {
+        for g in [Granularity::PerLayer, Granularity::PerOutputChannel] {
+            assert_eq!(Granularity::parse(g.name()), Some(g));
+        }
+        assert_eq!(Granularity::parse("per-channel"), Some(Granularity::PerOutputChannel));
+        assert_eq!(Granularity::parse("per-layer"), Some(Granularity::PerLayer));
+        assert_eq!(Granularity::parse("tensor"), None);
+    }
+
+    #[test]
+    fn group_plan_matches_per_row_slices() {
+        // GroupQuantPlan::apply must equal quantizing each row alone —
+        // including the alpha == 0 shortcut on integer rows.
+        let mut rng = Rng::new(0x64B);
+        let (groups, size) = (6usize, 17usize);
+        let xs = rand_vec(&mut rng, groups * size);
+        let bits: Vec<f32> = vec![2.0, 3.5, 4.0, 1.0, 7.25, 16.0];
+        let plan = GroupQuantPlan::from_groups(&xs, size, &bits);
+        assert_eq!(plan.n_groups(), groups);
+        let mut got = xs.clone();
+        plan.apply(&mut got);
+        for (g, (row, &n)) in xs.chunks(size).zip(&bits).enumerate() {
+            let mut want = row.to_vec();
+            fake_quant_slice(&mut want, n);
+            let got_row = &got[g * size..(g + 1) * size];
+            assert!(
+                got_row.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "group {g} differs"
+            );
+        }
+    }
+
+    #[test]
+    fn per_channel_bits_never_exceed_layer_ceiling() {
+        check(
+            "per-channel-bits-bound",
+            64,
+            |rng| {
+                let din = 1 + rng.below_usize(24);
+                let dout = 1 + rng.below_usize(16);
+                let w = rand_vec(rng, din * dout);
+                let n = rng.range_f32(1.0, 12.0);
+                (w, din, dout, n)
+            },
+            |(w, din, dout, n)| {
+                let bits = per_channel_bits(w, *din, *dout, *n);
+                if bits.len() != *dout {
+                    return Err("wrong channel count".into());
+                }
+                let cap = clip_bits(*n).ceil();
+                for (j, &b) in bits.iter().enumerate() {
+                    if !(N_MIN..=cap).contains(&b) {
+                        return Err(format!("channel {j}: {b} outside [1, {cap}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn per_channel_bits_shrink_with_channel_range() {
+        // A channel spanning 1/4 of the layer range needs 2 fewer bits
+        // for the same step; a full-range channel keeps the ceiling.
+        let (din, dout) = (8usize, 2usize);
+        let mut w = vec![0.0f32; din * dout];
+        for i in 0..din {
+            let t = i as f32 / (din - 1) as f32; // 0..=1
+            w[i * dout] = -2.0 + 4.0 * t; // channel 0: full [-2, 2]
+            w[i * dout + 1] = -0.5 + 1.0 * t; // channel 1: quarter range
+        }
+        let bits = per_channel_bits(&w, din, dout, 6.0);
+        assert_eq!(bits[0], 6.0);
+        assert_eq!(bits[1], 4.0);
+    }
+
+    #[test]
+    fn grouped_bit_loss_reduces_to_per_layer_and_normalizes() {
+        let meta = tiny_meta();
+        for crit in [Criterion::Equal, Criterion::MacOps] {
+            let (lw, la) = crit.lambdas(&meta);
+            // One group per layer at 8 bits: the normalization contract.
+            let b8: Vec<Vec<f32>> = vec![vec![8.0]; 2];
+            let a8 = vec![8.0f32; 2];
+            let loss = grouped_bit_loss(&lw, &b8, &la, &a8);
+            assert!((loss - 1.0).abs() < 1e-6, "{crit:?}: {loss}");
+            // Splitting a layer into uniform groups changes nothing.
+            let split: Vec<Vec<f32>> = vec![vec![8.0; 5], vec![8.0; 3]];
+            let loss2 = grouped_bit_loss(&lw, &split, &la, &a8);
+            assert!((loss2 - loss).abs() < 1e-6);
+            // Halving one group's bits strictly lowers the loss.
+            let mut cheaper = split.clone();
+            cheaper[0][2] = 4.0;
+            assert!(grouped_bit_loss(&lw, &cheaper, &la, &a8) < loss2);
+        }
+    }
+
+    #[test]
+    fn grouped_footprint_reduces_to_per_layer() {
+        let meta = tiny_meta();
+        let per_layer = weight_footprint_bits(&meta, &[6.0, 3.0]);
+        let grouped: Vec<Vec<f32>> = meta
+            .layers
+            .iter()
+            .zip([6.0f32, 3.0])
+            .map(|(l, b)| vec![b; l.cout])
+            .collect();
+        let g = weight_footprint_bits_grouped(&meta, &grouped);
+        assert!((g - per_layer).abs() < 1e-9);
+        // Dropping one channel's bits shrinks the footprint.
+        let mut cheaper = grouped.clone();
+        cheaper[0][0] = 1.0;
+        assert!(weight_footprint_bits_grouped(&meta, &cheaper) < g);
+        // Mean over flattened groups.
+        assert_eq!(mean_bits_grouped(&[]), 0.0);
+        let m = mean_bits_grouped(&[vec![2.0, 4.0], vec![6.0]]);
+        assert!((m - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "channel bitlengths")]
+    fn grouped_footprint_rejects_wrong_channel_count() {
+        let meta = tiny_meta();
+        let bad: Vec<Vec<f32>> = vec![vec![4.0; 1], vec![4.0; 1]];
+        weight_footprint_bits_grouped(&meta, &bad);
     }
 
     #[test]

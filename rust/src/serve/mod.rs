@@ -81,9 +81,82 @@ pub fn synthetic_mlp(seed: u64, w_bits: u32, a_bits: u32) -> IntNet {
     synthetic_net(&[32, 256, 128, 10], seed, w_bits, a_bits)
 }
 
+/// [`synthetic_net`] at **per-output-channel** weight granularity:
+/// channel bitlengths cycle through `w_bits_cycle` (e.g. `[2, 4, 8]`),
+/// so every layer carries genuinely mixed row-varying codes — the
+/// fixture the grouped serve/deploy tests, benches and
+/// `bitprune export --synthetic --granularity channel` use.  Calibrated
+/// like [`synthetic_net`].
+pub fn synthetic_net_grouped(
+    dims: &[usize],
+    seed: u64,
+    w_bits_cycle: &[u32],
+    a_bits: u32,
+) -> IntNet {
+    assert!(dims.len() >= 2, "synthetic_net_grouped needs at least one layer");
+    assert!(!w_bits_cycle.is_empty(), "empty bitlength cycle");
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for (i, pair) in dims.windows(2).enumerate() {
+        let (din, dout) = (pair[0], pair[1]);
+        let std = (1.0 / din as f32).sqrt();
+        let w: Vec<f32> = (0..din * dout).map(|_| rng.normal_f32(0.0, std)).collect();
+        let b: Vec<f32> = (0..dout).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+        let bits: Vec<f32> = (0..dout)
+            .map(|j| w_bits_cycle[j % w_bits_cycle.len()] as f32)
+            .collect();
+        let relu = i + 2 < dims.len();
+        layers.push(
+            crate::infer::IntDense::new_grouped(
+                &format!("fc{i}"),
+                &w,
+                din,
+                dout,
+                &b,
+                &bits,
+                a_bits,
+                relu,
+            )
+            .expect("synthetic grouped layer shapes are consistent"),
+        );
+    }
+    let num_classes = *dims.last().unwrap();
+    let mut net = IntNet { layers, num_classes };
+    let calib_n = 256;
+    let calib: Vec<f32> =
+        (0..calib_n * dims[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    net.calibrate(&calib, calib_n).expect("calibration batch is well-formed");
+    net
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_grouped_net_is_calibrated_and_mixed() {
+        let net = synthetic_net_grouped(&[12, 20, 6], 3, &[2, 4, 8], 6);
+        assert_eq!(net.layers.len(), 2);
+        assert!(net.is_calibrated());
+        for l in &net.layers {
+            assert_eq!(
+                l.granularity(),
+                crate::quant::Granularity::PerOutputChannel
+            );
+        }
+        // The cycle produces genuinely mixed channel bitlengths.
+        let h = net.w_bits_histogram();
+        assert!(h[2] > 0 && h[4] > 0 && h[8] > 0);
+        // Calibrated ⇒ batch-invariant, grouped codes included.
+        let solo = net.forward(&[0.3; 12], 1);
+        let mut batch = vec![0.3f32; 12];
+        batch.extend(vec![5.0f32; 12]);
+        let pair = net.forward(&batch, 2);
+        assert!(solo
+            .iter()
+            .zip(&pair[..6])
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
 
     #[test]
     fn synthetic_mlp_is_calibrated_and_shaped() {

@@ -14,7 +14,7 @@
 //!    no OOM-scale allocation.  Pure rust — runs without AOT artifacts.
 
 use bitprune::deploy::{freeze, section_table, Artifact};
-use bitprune::serve::synthetic_net;
+use bitprune::serve::{synthetic_net, synthetic_net_grouped};
 use bitprune::util::proptest::check;
 use bitprune::util::rng::Rng;
 
@@ -84,6 +84,121 @@ fn save_load_file_roundtrip() {
     assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
     // A missing file is a clean error.
     assert!(Artifact::load(dir.join("nope.bpma")).is_err());
+}
+
+#[test]
+fn grouped_roundtrip_instantiate_is_bit_identical_property() {
+    // The GRP0 contract: a mixed-per-channel-bit net roundtrips
+    // export → parse → instantiate() bit-identically.
+    check(
+        "bpma-grouped-roundtrip",
+        16,
+        |rng: &mut Rng| {
+            let n_layers = 1 + rng.below_usize(3);
+            let mut dims = vec![1 + rng.below_usize(20)];
+            for _ in 0..n_layers {
+                dims.push(1 + rng.below_usize(20));
+            }
+            let a_bits = 1 + rng.below(8) as u32;
+            let seed = rng.below(1 << 30);
+            let batch = 1 + rng.below_usize(7);
+            (dims, a_bits, seed, batch)
+        },
+        |(dims, a_bits, seed, batch)| {
+            let net = synthetic_net_grouped(dims, *seed, &[2, 4, 8, 3], *a_bits);
+            let art = freeze(&net, "grouped-prop");
+            if !art.is_grouped() {
+                return Err("fixture is not grouped".into());
+            }
+            let bytes = art.to_bytes();
+            let rebuilt = Artifact::from_bytes(&bytes)
+                .map_err(|e| format!("parse: {e:#}"))?
+                .instantiate()
+                .map_err(|e| format!("instantiate: {e:#}"))?;
+            let mut rng = Rng::new(seed.wrapping_add(0x6666));
+            let x = rand_batch(&mut rng, *batch, dims[0]);
+            let want = net.forward(&x, *batch);
+            let got = rebuilt.forward(&x, *batch);
+            if want.len() != got.len() {
+                return Err("logits length mismatch".into());
+            }
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("logit {i}: source {a} vs instantiated {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grouped_artifact_has_grp0_and_per_layer_does_not() {
+    // Per-layer artifacts must stay byte-compatible with pre-GRP0
+    // writers (exactly the four v1 sections); grouped artifacts append
+    // a checksummed, known GRP0.
+    let flat = freeze(&synthetic_net(&[6, 9, 4], 1, 4, 4), "flat");
+    let tags: Vec<String> = section_table(&flat.to_bytes())
+        .unwrap()
+        .iter()
+        .map(|s| s.tag.clone())
+        .collect();
+    assert_eq!(tags, ["MET0", "LAY0", "WCT0", "BIA0"]);
+
+    let grouped = freeze(&synthetic_net_grouped(&[6, 9, 4], 1, &[2, 4, 8], 4), "grp");
+    let table = section_table(&grouped.to_bytes()).unwrap();
+    let tags: Vec<&str> = table.iter().map(|s| s.tag.as_str()).collect();
+    assert_eq!(tags, ["MET0", "LAY0", "WCT0", "BIA0", "GRP0"]);
+    assert!(table.iter().all(|s| s.crc_ok && s.known));
+}
+
+#[test]
+fn grouped_truncation_and_corruption_fuzz() {
+    // Truncation at every byte and a flipped byte in every section
+    // (GRP0 included) must fail cleanly for a grouped artifact too.
+    let art = freeze(&synthetic_net_grouped(&[5, 7, 3], 0x6B, &[2, 5], 3), "gfuzz");
+    let bytes = art.to_bytes();
+    assert!(Artifact::from_bytes(&bytes).is_ok());
+    for cut in 0..bytes.len() {
+        assert!(
+            Artifact::from_bytes(&bytes[..cut]).is_err(),
+            "grouped prefix of {cut}/{} bytes parsed successfully",
+            bytes.len()
+        );
+    }
+    for s in &section_table(&bytes).unwrap() {
+        for probe in [0, s.payload_len / 2, s.payload_len.saturating_sub(1)] {
+            let mut corrupt = bytes.clone();
+            corrupt[s.payload_offset + probe] ^= 0x20;
+            assert!(
+                Artifact::from_bytes(&corrupt).is_err(),
+                "flipping byte {probe} of grouped section {} went unnoticed",
+                s.tag
+            );
+        }
+    }
+}
+
+#[test]
+fn grouped_flag_without_grp0_is_rejected() {
+    // Splice the GRP0 section out of a grouped artifact: the LAY0
+    // grouped flags survive, so the loader must refuse loudly instead
+    // of mis-decoding the channel-aligned WCT0 payload per-layer.
+    let art = freeze(&synthetic_net_grouped(&[4, 6, 2], 5, &[2, 4], 3), "nogrp");
+    let bytes = art.to_bytes();
+    let table = section_table(&bytes).unwrap();
+    let grp = table.iter().find(|s| s.tag == "GRP0").unwrap();
+    // A section frame is tag(4) + len(8) + payload + crc(4).
+    let frame_start = grp.payload_offset - 12;
+    let frame_end = grp.payload_offset + grp.payload_len + 4;
+    let mut spliced = Vec::new();
+    spliced.extend_from_slice(&bytes[..frame_start]);
+    spliced.extend_from_slice(&bytes[frame_end..]);
+    // Fix the section count (offset 12).
+    let count = u32::from_le_bytes(spliced[12..16].try_into().unwrap());
+    spliced[12..16].copy_from_slice(&(count - 1).to_le_bytes());
+    let err = Artifact::from_bytes(&spliced).unwrap_err();
+    assert!(format!("{err:#}").contains("GRP0"), "{err:#}");
 }
 
 #[test]

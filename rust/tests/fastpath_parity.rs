@@ -109,6 +109,147 @@ fn quantplan_kernel_matches_scalar_ref() {
 }
 
 #[test]
+fn grouped_gemm_matches_scalar_ref() {
+    // Row-varying per-channel codes through the blocked GEMM vs the
+    // scalar grouped baseline: random shapes, random per-channel
+    // bitlengths, both activation conventions.
+    check(
+        "fastpath-grouped-gemm-parity",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(12);
+            let din = 1 + rng.below_usize(48);
+            let dout = 1 + rng.below_usize(40);
+            let ab = 1 + rng.below(16) as u32;
+            let relu = rng.below(2) == 0;
+            let calibrated = rng.below(2) == 0;
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            let ch_bits: Vec<f32> =
+                (0..dout).map(|_| (1 + rng.below(16)) as f32).collect();
+            (n, din, dout, ab, relu, calibrated, x, w, b, ch_bits)
+        },
+        |(n, din, dout, ab, relu, calibrated, x, w, b, ch_bits)| {
+            let mut layer =
+                IntDense::new_grouped("g", w, *din, *dout, b, ch_bits, *ab, *relu)
+                    .map_err(|e| e.to_string())?;
+            if *calibrated {
+                layer.set_act_range(-2.0, 2.0);
+            }
+            let fast = layer.forward(x, *n);
+            let slow = layer.forward_ref(x, *n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                if f.to_bits() != s.to_bits() {
+                    return Err(format!(
+                        "({n},{din},{dout}) a_bits {ab} elem {i}: {f} vs {s}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grouped_uniform_bits_match_per_layer_bitwise() {
+    // The granularity parity pin: a PerOutputChannel layer whose
+    // channels all share the per-layer bitlength *and plan* must be
+    // bit-identical to the PerLayer layer — fast and _ref paths.  din
+    // is byte-aligned so the per-layer bitstream of the transposed
+    // weights doubles as the group-aligned layout.
+    check(
+        "fastpath-granularity-parity",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(8);
+            let din = 8 * (1 + rng.below_usize(6)); // byte-aligned groups
+            let dout = 1 + rng.below_usize(24);
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            (n, din, dout, wb, ab, x, w, b)
+        },
+        |(n, din, dout, wb, ab, x, w, b)| {
+            let per_layer = IntDense::new("pl", w, *din, *dout, b, *wb, *ab, true)
+                .map_err(|e| e.to_string())?;
+            // Same plan (min/max is permutation-invariant), channel-major
+            // codes, reinterpreted as byte-aligned per-channel spans.
+            let mut wt = vec![0.0f32; din * dout];
+            for i in 0..*din {
+                for j in 0..*dout {
+                    wt[j * din + i] = w[i * dout + j];
+                }
+            }
+            let flat = bitpack::pack(&wt, *wb).map_err(|e| e.to_string())?;
+            let params: Vec<(u32, f32, f32)> =
+                vec![(flat.bits, flat.lmin, flat.scale); *dout];
+            let groups = bitpack::PackedGroups::from_raw(*din, &params, flat.data.clone())
+                .map_err(|e| e.to_string())?;
+            let grouped = IntDense::from_packed_groups(
+                "gr",
+                groups,
+                *din,
+                *dout,
+                b.clone(),
+                *ab,
+                true,
+                None,
+            )
+            .map_err(|e| e.to_string())?;
+            let want = per_layer.forward(x, *n);
+            let got = grouped.forward(x, *n);
+            let got_ref = grouped.forward_ref(x, *n);
+            for (i, ((a, g), r)) in want.iter().zip(&got).zip(&got_ref).enumerate() {
+                if a.to_bits() != g.to_bits() {
+                    return Err(format!(
+                        "fast elem {i}: per-layer {a} vs grouped {g} ({wb}b)"
+                    ));
+                }
+                if a.to_bits() != r.to_bits() {
+                    return Err(format!(
+                        "ref elem {i}: per-layer {a} vs grouped {r} ({wb}b)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn grouped_packer_matches_scalar_ref() {
+    check(
+        "fastpath-grouped-pack-parity",
+        128,
+        |rng| {
+            let groups = 1 + rng.below_usize(12);
+            let size = 1 + rng.below_usize(150);
+            let xs = rand_vec(rng, groups * size);
+            let bits: Vec<u32> =
+                (0..groups).map(|_| 1 + rng.below(16) as u32).collect();
+            (xs, size, bits)
+        },
+        |(xs, size, bits)| {
+            let fast = bitpack::pack_groups(xs, *size, bits).map_err(|e| e.to_string())?;
+            let slow =
+                bitpack::pack_groups_ref(xs, *size, bits).map_err(|e| e.to_string())?;
+            if fast != slow {
+                return Err("grouped byte streams differ".into());
+            }
+            for g in 0..fast.n_groups() {
+                if fast.group_codes(g) != fast.group_codes_ref(g) {
+                    return Err(format!("group {g} code unpack differs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn blocked_gemm_matches_scalar_ref() {
     check(
         "fastpath-gemm-parity",

@@ -16,19 +16,29 @@
 # Each bench target appends JSONL records via $BENCH_OUT (see
 # util::bench); merge_suite derives fast-vs-ref speedups for every
 # */foo vs */foo_ref pair.
+#
+# Output always lands at the repo root (absolute $ROOT paths — the
+# script works from any CWD), and a suite that emits no JSONL at all is
+# a hard failure instead of a silently empty BENCH_*.json.
 
 set -euo pipefail
-cd "$(dirname "$0")/.."
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 
 quick="${QUICK:+--quick}"
 
 merge_suite() { # <suite-name> <jsonl-file> <out-json>
+    if [ ! -s "$2" ]; then
+        echo "error: suite '$1' emitted no JSONL records — benches failed to run?" >&2
+        exit 1
+    fi
     python3 - "$1" "$2" "$3" <<'PY'
 import json
 import sys
 
 suite, src, dst = sys.argv[1:4]
 recs = [json.loads(line) for line in open(src) if line.strip()]
+if not recs:
+    sys.exit(f"error: suite '{suite}' produced an empty record set")
 by_name = {r["name"]: r for r in recs}
 
 speedups = {}
@@ -54,19 +64,19 @@ trap 'rm -f "$tmp"' EXIT
 # --- inference fast-path suite -> BENCH_infer.json -------------------
 : > "$tmp"
 export BENCH_OUT="$tmp"
-(cd rust && cargo bench --bench quantizer -- $quick)
-(cd rust && cargo bench --bench intnet -- $quick)
+(cd "$ROOT/rust" && cargo bench --bench quantizer -- $quick)
+(cd "$ROOT/rust" && cargo bench --bench intnet -- $quick)
 # end_to_end needs AOT artifacts; it self-skips (and records nothing)
 # when they are absent.
-(cd rust && cargo bench --bench end_to_end -- $quick)
-merge_suite "infer-fastpath" "$tmp" BENCH_infer.json
+(cd "$ROOT/rust" && cargo bench --bench end_to_end -- $quick)
+merge_suite "infer-fastpath" "$tmp" "$ROOT/BENCH_infer.json"
 
 # --- serving suite -> BENCH_serve.json -------------------------------
 : > "$tmp"
-(cd rust && cargo bench --bench serve -- $quick)
-merge_suite "serve" "$tmp" BENCH_serve.json
+(cd "$ROOT/rust" && cargo bench --bench serve -- $quick)
+merge_suite "serve" "$tmp" "$ROOT/BENCH_serve.json"
 
 # --- deploy suite -> BENCH_deploy.json -------------------------------
 : > "$tmp"
-(cd rust && cargo bench --bench deploy -- $quick)
-merge_suite "deploy" "$tmp" BENCH_deploy.json
+(cd "$ROOT/rust" && cargo bench --bench deploy -- $quick)
+merge_suite "deploy" "$tmp" "$ROOT/BENCH_deploy.json"

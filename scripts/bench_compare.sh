@@ -1,0 +1,170 @@
+#!/usr/bin/env bash
+# Perf-regression gate over the committed bench trajectory.
+#
+#   scripts/bench_compare.sh compare BASELINE.json CURRENT.json
+#       Compare one suite's fresh run against its committed baseline:
+#       for every tracked key, fail when the current median is more
+#       than $BENCH_MAX_SLOWDOWN (default 0.30 = 30%) slower than the
+#       baseline median.  Tracked keys missing from the current run
+#       fail too (a silently dropped bench is a regression in
+#       coverage); keys missing from the baseline only warn, so new
+#       benches can land before their baseline is refreshed.
+#
+#   scripts/bench_compare.sh self-test
+#       Prove the gate trips: for each committed BENCH_*.json, an
+#       identity comparison must PASS and a synthetic copy with every
+#       tracked median inflated 1.5x (a 50% slowdown) must FAIL.
+#       Runs without cargo or benches — this is the CI sanity check
+#       that the gate itself works.
+#
+# Baselines live at the repo root (BENCH_infer.json / BENCH_serve.json /
+# BENCH_deploy.json — the committed perf trajectory).  `scripts/bench.sh`
+# overwrites them with a fresh run, so CI copies the committed files
+# aside before benching (see .github/workflows/ci.yml bench-smoke).
+#
+# Medians are hardware-dependent: refresh the committed baselines
+# (run scripts/bench.sh on the CI runner class and commit the result)
+# whenever a PR intentionally changes performance.
+
+set -euo pipefail
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+THRESHOLD="${BENCH_MAX_SLOWDOWN:-0.30}"
+
+compare() { # <baseline.json> <current.json>
+    python3 - "$1" "$2" "$THRESHOLD" <<'PY'
+import json
+import sys
+
+base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+
+# Baselines generated without a measured run carry "seed_estimate": true
+# (see the committed seed trajectory).  Against such a baseline the
+# comparison still runs and reports, but regressions only warn — the
+# numbers are placeholders, not measurements.  scripts/bench.sh never
+# writes the marker, so the first committed real run arms the gate
+# automatically.
+
+# The gated hot-path keys per suite.  Keep this list small and stable:
+# every key here must exist in quick-mode runs.
+TRACKED = {
+    "infer-fastpath": [
+        "intnet/forward/64x256x256/4b",
+        "intnet/forward_grouped/64x256x256/ch248",
+        "rust/fake_quant/16384",
+        "bitpack/pack/65536/4b",
+    ],
+    "serve": [
+        "serve/forward/mlp/bs64",
+        "serve/server/8clients_x32req",
+    ],
+    "deploy": [
+        "deploy/parse",
+        "deploy/instantiate",
+        "deploy/artifact_load_file",
+    ],
+}
+
+
+def medians(path):
+    with open(path) as f:
+        doc = json.load(f)
+    med = {r["name"]: r.get("median_s") for r in doc.get("benches", [])}
+    return doc.get("suite", "?"), med, bool(doc.get("seed_estimate"))
+
+
+suite, base, seeded = medians(base_path)
+cur_suite, cur, _ = medians(cur_path)
+if suite != cur_suite:
+    sys.exit(f"FAIL: comparing suite '{suite}' against '{cur_suite}'")
+tracked = TRACKED.get(suite)
+if tracked is None:
+    sys.exit(f"FAIL: unknown suite '{suite}' (no tracked keys)")
+
+failures, rows = [], []
+for key in tracked:
+    b = base.get(key)
+    c = cur.get(key)
+    if b is None:
+        rows.append((key, "-", "-", "SKIP (no baseline yet)"))
+        continue
+    if c is None:
+        rows.append((key, f"{b:.6f}", "-", "FAIL (missing from current run)"))
+        failures.append(key)
+        continue
+    slowdown = c / b - 1.0
+    status = "ok" if slowdown <= threshold else "FAIL"
+    if status == "FAIL":
+        failures.append(key)
+    rows.append((key, f"{b:.6f}", f"{c:.6f}", f"{status} ({slowdown:+.1%})"))
+
+width = max(len(r[0]) for r in rows)
+print(f"suite '{suite}' vs baseline (gate: >{threshold:.0%} median slowdown fails)")
+for key, b, c, status in rows:
+    print(f"  {key:<{width}}  base {b:>12}  cur {c:>12}  {status}")
+
+if failures:
+    msg = f"{len(failures)} tracked key(s) regressed: {', '.join(failures)}"
+    if seeded:
+        print(
+            f"WARN (gate disarmed): {msg}\n"
+            "baseline is a seed estimate (\"seed_estimate\": true) — refresh it\n"
+            "with a real scripts/bench.sh run to arm the gate"
+        )
+    else:
+        sys.exit(f"FAIL: {msg}")
+else:
+    print("PASS")
+PY
+}
+
+self_test() {
+    local tmpdir pass=0
+    tmpdir="$(mktemp -d)"
+    trap 'rm -rf "$tmpdir"' RETURN
+    for base in "$ROOT"/BENCH_infer.json "$ROOT"/BENCH_serve.json "$ROOT"/BENCH_deploy.json; do
+        [ -f "$base" ] || { echo "error: missing committed baseline $base" >&2; exit 1; }
+        local name
+        name="$(basename "$base")"
+
+        # The self-test proves the *armed* gate semantics, so it strips
+        # any seed_estimate marker from its working copies.
+        python3 - "$base" "$tmpdir/armed_$name" "$tmpdir/slow_$name" <<'PY'
+import json
+import sys
+
+src, armed, slow = sys.argv[1], sys.argv[2], sys.argv[3]
+doc = json.load(open(src))
+doc.pop("seed_estimate", None)
+json.dump(doc, open(armed, "w"))
+for r in doc.get("benches", []):
+    if r.get("median_s") is not None:
+        r["median_s"] = r["median_s"] * 1.5
+json.dump(doc, open(slow, "w"))
+PY
+        echo "== self-test ($name): identity comparison must pass =="
+        compare "$tmpdir/armed_$name" "$tmpdir/armed_$name"
+
+        echo "== self-test ($name): injected 50% slowdown must fail =="
+        if compare "$tmpdir/armed_$name" "$tmpdir/slow_$name"; then
+            echo "self-test FAILED: the gate accepted a 50% slowdown on $name" >&2
+            exit 1
+        fi
+        echo "(gate tripped as expected)"
+        pass=$((pass + 1))
+    done
+    echo "self-test PASSED on $pass suites"
+}
+
+case "${1:-}" in
+    compare)
+        [ $# -eq 3 ] || { echo "usage: $0 compare BASELINE.json CURRENT.json" >&2; exit 2; }
+        compare "$2" "$3"
+        ;;
+    self-test)
+        self_test
+        ;;
+    *)
+        echo "usage: $0 compare BASELINE.json CURRENT.json | $0 self-test" >&2
+        exit 2
+        ;;
+esac
