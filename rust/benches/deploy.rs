@@ -40,6 +40,7 @@ fn run_load(
             max_batch: 16,
             batch_window: Duration::from_micros(200),
             max_queue: 8192,
+            ..ServeConfig::default()
         },
     )
     .expect("server starts");

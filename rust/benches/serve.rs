@@ -7,12 +7,26 @@
 //! `BENCH_serve.json` with `speedup_vs_ref` pairs — the acceptance
 //! number for the serve subsystem is `serve/forward/*` beating
 //! `serve/forward_ref/*`.
+//!
+//! Failure-path numbers (tracked by `scripts/bench_compare.sh`):
+//!
+//! * `serve/server/overload_shed` — 4x-over-capacity bursts against a
+//!   tiny bounded queue with a 1ms deadline and `drop-expired`
+//!   shedding; measures how fast the server *resolves* an overloaded
+//!   burst (every request served or typed-shed, none lingering).
+//! * `serve/server/swap_storm` — closed-loop client latencies while
+//!   the registry republishes every few dozen responses; its p99 is
+//!   the tail cost of living through a publish storm.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use bitprune::serve::{synthetic_mlp, ServeConfig, ServeEngine, Server};
-use bitprune::util::bench::Bench;
+use bitprune::deploy::ModelRegistry;
+use bitprune::serve::{
+    synthetic_mlp, ServeConfig, ServeEngine, Server, ShedPolicy,
+};
+use bitprune::util::bench::{append_jsonl, Bench, BenchResult};
 use bitprune::util::rng::Rng;
 
 fn main() {
@@ -86,5 +100,120 @@ fn main() {
         stats.mean_batch()
     );
 
+    // Overload shedding: 256-request bursts against a 64-slot queue
+    // with a 1ms deadline.  The measured work is full resolution of
+    // the burst — admission rejections, deadline sheds and serves all
+    // land as typed results before the iteration ends.
+    let shed_server = Server::start(
+        Arc::clone(&net),
+        ServeConfig {
+            threads: 0,
+            max_batch: 16,
+            batch_window: Duration::from_micros(100),
+            max_queue: 64,
+            deadline: Some(Duration::from_millis(1)),
+            shed_policy: ShedPolicy::DropExpired,
+        },
+    )
+    .expect("server starts");
+    let burst: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    b.run_elems("serve/server/overload_shed", 256.0, || {
+        let handle = shed_server.handle();
+        let pending: Vec<_> = burst
+            .iter()
+            .filter_map(|x| handle.submit(x.clone()).ok())
+            .collect();
+        let mut served = 0usize;
+        for rx in pending {
+            if let Ok(Ok(_)) = rx.recv() {
+                served += 1;
+            }
+        }
+        served
+    });
+    let stats = shed_server.shutdown();
+    println!(
+        "  -> overload: {} served / {} shed ({} queue-full, {} deadline) in {} batches",
+        stats.requests,
+        stats.shed(),
+        stats.shed_queue_full,
+        stats.shed_expired,
+        stats.batches
+    );
+
+    // Swap storm: per-request latency under closed-loop load while the
+    // registry republishes every requests/32 responses.  The p99 of
+    // the sample set is the number bench_compare.sh tracks.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let requests = if quick { 512 } else { 2048 };
+    let alt = Arc::new(synthetic_mlp(0x517F, 4, 8));
+    let registry =
+        Arc::new(ModelRegistry::new(Arc::clone(&net), "v1").expect("registry"));
+    let storm_server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 0,
+            max_batch: 16,
+            batch_window: Duration::from_micros(100),
+            ..ServeConfig::default()
+        },
+    )
+    .expect("server starts");
+    let clients = 4usize;
+    let served = AtomicUsize::new(0);
+    let mut lats: Vec<f64> = Vec::with_capacity(requests);
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let handle = storm_server.handle();
+            let served = &served;
+            let n_req = requests / clients + usize::from(c < requests % clients);
+            joins.push(scope.spawn(move || {
+                let mut rng = Rng::new(0x570 + c as u64);
+                let mut out = Vec::with_capacity(n_req);
+                for _ in 0..n_req {
+                    let x: Vec<f32> =
+                        (0..32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                    let t = Instant::now();
+                    handle.infer(x).expect("request served");
+                    out.push(t.elapsed().as_secs_f64());
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+                out
+            }));
+        }
+        let swap_every = requests / 32;
+        let mut next = swap_every;
+        let mut flip = 0usize;
+        'storm: while next < requests {
+            while served.load(Ordering::Relaxed) < next {
+                if joins.iter().all(|j| j.is_finished()) {
+                    break 'storm;
+                }
+                std::thread::yield_now();
+            }
+            flip += 1;
+            let n = if flip % 2 == 0 { &net } else { &alt };
+            registry
+                .publish(Arc::clone(n), &format!("storm-{flip}"))
+                .expect("storm publish");
+            next += swap_every;
+        }
+        for j in joins {
+            lats.extend(j.join().expect("client panicked"));
+        }
+    });
+    let stats = storm_server.shutdown();
+    let storm = BenchResult::from_samples("serve/server/swap_storm", lats, None);
+    println!("{}", storm.report());
+    println!(
+        "  -> swap storm: {} swaps crossed the batcher, p99 {:.0}us",
+        stats.swaps,
+        storm.percentile(99.0) * 1e6
+    );
+
     b.flush_jsonl();
+    append_jsonl(&[storm]);
 }

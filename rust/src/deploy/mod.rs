@@ -16,6 +16,9 @@
 //!   they resolved) and rollback to any retained version.  The serving
 //!   loop (`serve::Server`) resolves its net through a registry once
 //!   per batch, which is what makes a live swap invisible to clients.
+//!   Canary staging ([`ModelRegistry::begin_canary`] → promote or
+//!   auto-rollback) and endpoint drain mode gate the control plane
+//!   with typed [`RegistryError`]s.
 //!
 //! CLI surface: `bitprune export` (train/checkpoint → `.bpma`),
 //! `bitprune inspect` (section table, bitlengths, footprint),
@@ -26,4 +29,4 @@ pub mod artifact;
 pub mod registry;
 
 pub use artifact::{freeze, section_table, Artifact, LayerRecord, SectionInfo};
-pub use registry::{ModelRegistry, ModelVersion, DEFAULT_RETAIN};
+pub use registry::{ModelRegistry, ModelVersion, RegistryError, DEFAULT_RETAIN};

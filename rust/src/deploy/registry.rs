@@ -19,18 +19,97 @@
 //! `serve::Server` keep handing out stable request/response dims across
 //! swaps.
 //!
+//! Beyond plain publish/rollback, the registry understands two fleet
+//! states that gate the control plane:
+//!
+//! * **Canary** ([`begin_canary`]): a staged version that receives a
+//!   traffic split but is *not* active.  While a canary is in flight,
+//!   publish and rollback are refused ([`RegistryError::CanaryActive`])
+//!   so the experiment has a stable incumbent to compare against; the
+//!   canary resolves via [`promote_canary`] (becomes active) or
+//!   [`end_canary`] (rolled back, incumbent untouched).
+//! * **Draining** ([`begin_drain`]): the endpoint is shutting down —
+//!   [`current`] keeps serving in-flight traffic, but publishing or
+//!   staging new versions is refused ([`RegistryError::Draining`]).
+//!   Rollback and canary resolution stay allowed: they are how an
+//!   operator lands a misbehaving fleet, not new work.
+//!
+//! All control-plane failures are typed ([`RegistryError`]) so callers
+//! can distinguish "retry later" from "operator error".
+//!
 //! [`current`]: ModelRegistry::current
 //! [`rollback`]: ModelRegistry::rollback
+//! [`begin_canary`]: ModelRegistry::begin_canary
+//! [`promote_canary`]: ModelRegistry::promote_canary
+//! [`end_canary`]: ModelRegistry::end_canary
+//! [`begin_drain`]: ModelRegistry::begin_drain
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
-
-use anyhow::{bail, Result};
 
 use crate::infer::IntNet;
 
 /// How many published versions a registry keeps around for rollback
 /// when no explicit limit is given.
 pub const DEFAULT_RETAIN: usize = 4;
+
+/// Typed control-plane failure.  Everything here is an *operator*
+/// outcome, not a serving fault: the active version keeps serving
+/// regardless.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    /// Refusing an empty network.
+    EmptyNet,
+    /// Zero input or output dimensionality.
+    DegenerateShape { din: usize, out_dim: usize },
+    /// `retain` must be at least 1.
+    BadRetain,
+    /// Published model's shape does not match the endpoint's.
+    ShapeMismatch { din: usize, out_dim: usize, want_din: usize, want_out: usize },
+    /// The requested version was never published or has been trimmed
+    /// out of the retention window.
+    NotRetained { version: u64, retained: Vec<u64> },
+    /// A canary is in flight; publish/rollback would invalidate the
+    /// experiment.  Promote or end the canary first.
+    CanaryActive { canary: u64 },
+    /// The version is not the in-flight canary (or no canary is
+    /// active).
+    NotCanary { version: u64, canary: Option<u64> },
+    /// The endpoint is draining: no new versions are accepted.
+    Draining,
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::EmptyNet => write!(f, "registry: refusing an empty network"),
+            Self::DegenerateShape { din, out_dim } => {
+                write!(f, "registry: degenerate network shape ({din} in, {out_dim} out)")
+            }
+            Self::BadRetain => write!(f, "registry: retain must be at least 1"),
+            Self::ShapeMismatch { din, out_dim, want_din, want_out } => write!(
+                f,
+                "registry: published model is {din}->{out_dim} but this endpoint serves {want_din}->{want_out}"
+            ),
+            Self::NotRetained { version, retained } => {
+                write!(f, "registry: version {version} is not retained (have {retained:?})")
+            }
+            Self::CanaryActive { canary } => write!(
+                f,
+                "registry: canary v{canary} is in flight — promote or end it before changing versions"
+            ),
+            Self::NotCanary { version, canary } => write!(
+                f,
+                "registry: v{version} is not the in-flight canary (canary: {canary:?})"
+            ),
+            Self::Draining => {
+                write!(f, "registry: endpoint is draining — no new versions accepted")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
 
 /// One published model version (immutable once published).
 pub struct ModelVersion {
@@ -47,6 +126,9 @@ struct Inner {
     /// Every retained version, oldest first (always contains `active`).
     retained: Vec<Arc<ModelVersion>>,
     next_version: u64,
+    /// Version id of the in-flight canary, if any.  The canary is
+    /// retained but *not* active; trim never removes it.
+    canary: Option<u64>,
 }
 
 /// Thread-safe name→versioned-model store with atomic hot-swap.
@@ -56,21 +138,26 @@ pub struct ModelRegistry {
     /// Output dimensionality every version must emit.
     out_dim: usize,
     retain: usize,
+    draining: AtomicBool,
     inner: RwLock<Inner>,
 }
 
 impl ModelRegistry {
     /// Create a registry with `net` as version 1.  The net fixes the
     /// endpoint's input/output shape; later publishes must match it.
-    pub fn new(net: Arc<IntNet>, label: &str) -> Result<Self> {
+    pub fn new(net: Arc<IntNet>, label: &str) -> Result<Self, RegistryError> {
         Self::with_retain(net, label, DEFAULT_RETAIN)
     }
 
     /// [`Self::new`] with an explicit rollback-retention depth
     /// (`retain >= 1`; the active version is always retained).
-    pub fn with_retain(net: Arc<IntNet>, label: &str, retain: usize) -> Result<Self> {
+    pub fn with_retain(
+        net: Arc<IntNet>,
+        label: &str,
+        retain: usize,
+    ) -> Result<Self, RegistryError> {
         if retain == 0 {
-            bail!("registry: retain must be at least 1");
+            return Err(RegistryError::BadRetain);
         }
         let (din, out_dim) = endpoint_shape(&net)?;
         let v1 = Arc::new(ModelVersion { version: 1, label: label.to_string(), net });
@@ -78,10 +165,12 @@ impl ModelRegistry {
             din,
             out_dim,
             retain,
+            draining: AtomicBool::new(false),
             inner: RwLock::new(Inner {
                 active: Arc::clone(&v1),
                 retained: vec![v1],
                 next_version: 2,
+                canary: None,
             }),
         })
     }
@@ -102,20 +191,33 @@ impl ModelRegistry {
         Arc::clone(&self.read().active)
     }
 
+    /// Look up a retained version by id (canaries resolve here too).
+    pub fn get(&self, version: u64) -> Result<Arc<ModelVersion>, RegistryError> {
+        let g = self.read();
+        g.retained
+            .iter()
+            .find(|m| m.version == version)
+            .map(Arc::clone)
+            .ok_or_else(|| RegistryError::NotRetained {
+                version,
+                retained: g.retained.iter().map(|m| m.version).collect(),
+            })
+    }
+
     /// Atomically publish `net` as the new active version; returns the
     /// assigned version id.  In-flight work on the previous version
     /// drains on its own `Arc`; submissions that resolve after this
-    /// call see the new version.
-    pub fn publish(&self, net: Arc<IntNet>, label: &str) -> Result<u64> {
-        let (din, out_dim) = endpoint_shape(&net)?;
-        if din != self.din || out_dim != self.out_dim {
-            bail!(
-                "registry: published model is {din}->{out_dim} but this endpoint serves {}->{}",
-                self.din,
-                self.out_dim
-            );
+    /// call see the new version.  Refused while a canary is in flight
+    /// or the endpoint is draining.
+    pub fn publish(&self, net: Arc<IntNet>, label: &str) -> Result<u64, RegistryError> {
+        self.check_shape(&net)?;
+        if self.is_draining() {
+            return Err(RegistryError::Draining);
         }
         let mut g = self.write();
+        if let Some(canary) = g.canary {
+            return Err(RegistryError::CanaryActive { canary });
+        }
         let version = g.next_version;
         g.next_version += 1;
         let mv = Arc::new(ModelVersion { version, label: label.to_string(), net });
@@ -127,15 +229,94 @@ impl ModelRegistry {
 
     /// Re-activate a retained version (atomic, like [`Self::publish`]).
     /// Fails if the version was never published or has been trimmed
-    /// out of the retention window.
-    pub fn rollback(&self, version: u64) -> Result<()> {
+    /// out of the retention window, and while a canary is in flight
+    /// (end it first — rollback would yank the incumbent out from
+    /// under the comparison).
+    pub fn rollback(&self, version: u64) -> Result<(), RegistryError> {
         let mut g = self.write();
+        if let Some(canary) = g.canary {
+            return Err(RegistryError::CanaryActive { canary });
+        }
         let Some(mv) = g.retained.iter().find(|m| m.version == version) else {
-            let have: Vec<u64> = g.retained.iter().map(|m| m.version).collect();
-            bail!("registry: version {version} is not retained (have {have:?})");
+            return Err(RegistryError::NotRetained {
+                version,
+                retained: g.retained.iter().map(|m| m.version).collect(),
+            });
         };
         g.active = Arc::clone(mv);
         Ok(())
+    }
+
+    /// Stage `net` as a canary: retained and addressable via
+    /// [`Self::get`], receiving whatever traffic split the serving
+    /// layer routes to it, but **not** active.  Exactly one canary can
+    /// be in flight; publish/rollback are refused until it resolves
+    /// via [`Self::promote_canary`] or [`Self::end_canary`].
+    pub fn begin_canary(&self, net: Arc<IntNet>, label: &str) -> Result<u64, RegistryError> {
+        self.check_shape(&net)?;
+        if self.is_draining() {
+            return Err(RegistryError::Draining);
+        }
+        let mut g = self.write();
+        if let Some(canary) = g.canary {
+            return Err(RegistryError::CanaryActive { canary });
+        }
+        let version = g.next_version;
+        g.next_version += 1;
+        let mv = Arc::new(ModelVersion { version, label: label.to_string(), net });
+        g.retained.push(mv);
+        g.canary = Some(version);
+        self.trim(&mut g);
+        Ok(version)
+    }
+
+    /// Promote the in-flight canary to active (atomic swap, same drain
+    /// semantics as publish) and clear the canary state.
+    pub fn promote_canary(&self, version: u64) -> Result<(), RegistryError> {
+        let mut g = self.write();
+        if g.canary != Some(version) {
+            return Err(RegistryError::NotCanary { version, canary: g.canary });
+        }
+        let Some(mv) = g.retained.iter().find(|m| m.version == version) else {
+            // Unreachable by construction (trim never drops the
+            // canary), but degrade to a typed error rather than panic.
+            g.canary = None;
+            return Err(RegistryError::NotRetained {
+                version,
+                retained: g.retained.iter().map(|m| m.version).collect(),
+            });
+        };
+        g.active = Arc::clone(mv);
+        g.canary = None;
+        Ok(())
+    }
+
+    /// End the in-flight canary *without* promoting it: the incumbent
+    /// keeps serving (this is the auto-rollback path).  The canary
+    /// stays retained for post-mortem until trimmed.
+    pub fn end_canary(&self, version: u64) -> Result<(), RegistryError> {
+        let mut g = self.write();
+        if g.canary != Some(version) {
+            return Err(RegistryError::NotCanary { version, canary: g.canary });
+        }
+        g.canary = None;
+        Ok(())
+    }
+
+    /// Version id of the in-flight canary, if any.
+    pub fn canary_version(&self) -> Option<u64> {
+        self.read().canary
+    }
+
+    /// Put the endpoint into drain mode: [`Self::current`] keeps
+    /// serving, but publish and canary staging are refused.  One-way
+    /// (a draining endpoint is on its way out).
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
     }
 
     /// The active version id.
@@ -152,16 +333,29 @@ impl ModelRegistry {
             .collect()
     }
 
+    fn check_shape(&self, net: &IntNet) -> Result<(), RegistryError> {
+        let (din, out_dim) = endpoint_shape(net)?;
+        if din != self.din || out_dim != self.out_dim {
+            return Err(RegistryError::ShapeMismatch {
+                din,
+                out_dim,
+                want_din: self.din,
+                want_out: self.out_dim,
+            });
+        }
+        Ok(())
+    }
+
     /// Drop the oldest retained versions beyond the retention depth —
-    /// never the active one.
+    /// never the active one, never the in-flight canary.
     fn trim(&self, g: &mut Inner) {
         while g.retained.len() > self.retain {
             let Some(idx) = g
                 .retained
                 .iter()
-                .position(|m| m.version != g.active.version)
+                .position(|m| m.version != g.active.version && Some(m.version) != g.canary)
             else {
-                return; // only the active version is left
+                return; // only active/canary versions are left
             };
             g.retained.remove(idx);
         }
@@ -177,14 +371,14 @@ impl ModelRegistry {
 }
 
 /// Validate a servable net and return its `(din, out_dim)`.
-fn endpoint_shape(net: &IntNet) -> Result<(usize, usize)> {
+fn endpoint_shape(net: &IntNet) -> Result<(usize, usize), RegistryError> {
     let Some(first) = net.layers.first() else {
-        bail!("registry: refusing an empty network");
+        return Err(RegistryError::EmptyNet);
     };
     let din = first.din;
     let out_dim = net.layers.last().unwrap().dout;
     if din == 0 || out_dim == 0 {
-        bail!("registry: degenerate network shape ({din} in, {out_dim} out)");
+        return Err(RegistryError::DegenerateShape { din, out_dim });
     }
     Ok((din, out_dim))
 }
@@ -222,7 +416,10 @@ mod tests {
         assert_eq!(reg.active_version(), 3);
         reg.rollback(1).unwrap();
         assert_eq!(reg.active_version(), 1);
-        assert!(reg.rollback(99).is_err());
+        assert!(matches!(
+            reg.rollback(99),
+            Err(RegistryError::NotRetained { version: 99, .. })
+        ));
         // Version ids are never reused: the next publish is v4.
         assert_eq!(reg.publish(net(4), "v4").unwrap(), 4);
         let versions: Vec<u64> = reg.versions().iter().map(|(v, _)| *v).collect();
@@ -251,14 +448,107 @@ mod tests {
     fn shape_mismatch_and_bad_nets_rejected() {
         let reg = ModelRegistry::new(net(1), "v1").unwrap();
         let wrong = Arc::new(synthetic_net(&[7, 12, 3], 9, 4, 4));
-        assert!(reg.publish(wrong, "bad-in").is_err());
+        assert!(matches!(
+            reg.publish(wrong, "bad-in"),
+            Err(RegistryError::ShapeMismatch { .. })
+        ));
         let wrong_out = Arc::new(synthetic_net(&[6, 12, 4], 9, 4, 4));
-        assert!(reg.publish(wrong_out, "bad-out").is_err());
+        assert!(matches!(
+            reg.publish(wrong_out, "bad-out"),
+            Err(RegistryError::ShapeMismatch { .. })
+        ));
         assert_eq!(reg.active_version(), 1, "failed publish must not swap");
 
         let empty = Arc::new(IntNet { layers: vec![], num_classes: 0 });
-        assert!(ModelRegistry::new(empty, "e").is_err());
-        assert!(ModelRegistry::with_retain(net(1), "r", 0).is_err());
+        assert!(matches!(
+            ModelRegistry::new(empty, "e"),
+            Err(RegistryError::EmptyNet)
+        ));
+        assert!(matches!(
+            ModelRegistry::with_retain(net(1), "r", 0),
+            Err(RegistryError::BadRetain)
+        ));
+    }
+
+    #[test]
+    fn canary_lifecycle_gates_publish_and_rollback() {
+        let reg = ModelRegistry::new(net(1), "v1").unwrap();
+        reg.publish(net(2), "v2").unwrap();
+        let cv = reg.begin_canary(net(3), "candidate").unwrap();
+        assert_eq!(cv, 3);
+        assert_eq!(reg.canary_version(), Some(3));
+        // Staged, addressable, but not active.
+        assert_eq!(reg.active_version(), 2);
+        assert_eq!(reg.get(cv).unwrap().version, 3);
+        // The control plane is frozen while the experiment runs.
+        assert!(matches!(
+            reg.publish(net(4), "v4"),
+            Err(RegistryError::CanaryActive { canary: 3 })
+        ));
+        assert!(matches!(
+            reg.rollback(1),
+            Err(RegistryError::CanaryActive { canary: 3 })
+        ));
+        assert!(matches!(
+            reg.begin_canary(net(5), "second"),
+            Err(RegistryError::CanaryActive { canary: 3 })
+        ));
+        // Ending the canary restores the control plane; incumbent
+        // never moved.
+        reg.end_canary(cv).unwrap();
+        assert_eq!(reg.canary_version(), None);
+        assert_eq!(reg.active_version(), 2);
+        assert!(matches!(
+            reg.end_canary(cv),
+            Err(RegistryError::NotCanary { version: 3, canary: None })
+        ));
+        reg.publish(net(4), "v4").unwrap();
+        assert_eq!(reg.active_version(), 4);
+    }
+
+    #[test]
+    fn promote_canary_swaps_atomically() {
+        let reg = ModelRegistry::new(net(1), "v1").unwrap();
+        let cv = reg.begin_canary(net(2), "candidate").unwrap();
+        assert!(matches!(
+            reg.promote_canary(99),
+            Err(RegistryError::NotCanary { version: 99, canary: Some(2) })
+        ));
+        reg.promote_canary(cv).unwrap();
+        assert_eq!(reg.active_version(), cv);
+        assert_eq!(reg.canary_version(), None);
+    }
+
+    #[test]
+    fn trim_never_drops_the_canary() {
+        let reg = ModelRegistry::with_retain(net(1), "v1", 2).unwrap();
+        let cv = reg.begin_canary(net(2), "candidate").unwrap();
+        // Resolve + publish after ending: canary survives retention
+        // pressure while flagged.
+        assert!(reg.get(cv).is_ok());
+        reg.end_canary(cv).unwrap();
+        reg.publish(net(3), "v3").unwrap();
+        reg.publish(net(4), "v4").unwrap();
+        let versions: Vec<u64> = reg.versions().iter().map(|(v, _)| *v).collect();
+        assert_eq!(versions.len(), 2);
+        assert!(versions.contains(&4));
+    }
+
+    #[test]
+    fn drain_refuses_new_versions_but_keeps_serving() {
+        let reg = ModelRegistry::new(net(1), "v1").unwrap();
+        reg.publish(net(2), "v2").unwrap();
+        reg.begin_drain();
+        assert!(reg.is_draining());
+        assert!(matches!(reg.publish(net(3), "v3"), Err(RegistryError::Draining)));
+        assert!(matches!(
+            reg.begin_canary(net(3), "c"),
+            Err(RegistryError::Draining)
+        ));
+        // In-flight traffic and emergency rollback still work.
+        assert_eq!(reg.current().version, 2);
+        reg.rollback(1).unwrap();
+        assert_eq!(reg.active_version(), 1);
     }
 
     #[test]

@@ -98,7 +98,11 @@ COMMANDS:
                 --max-batch N --clients N --threads N --synthetic);
                 --model FILE.bpma serves a frozen artifact with no
                 trainer or dataset in memory; --swap-to B.bpma
-                --swap-after N hot-swaps mid-traffic via the registry
+                --swap-after N hot-swaps mid-traffic via the registry;
+                --deadline-ms N --shed-policy reject-newest|drop-expired
+                sheds overload with typed errors; --canary B.bpma
+                --canary-pct P splits traffic and auto-promotes or
+                rolls back on online agreement/latency
   fig         render figure 1/3 ASCII charts from a reports/<run>.json
 
 OPTIONS (common):
@@ -114,6 +118,8 @@ OPTIONS (deploy):
   inspect: <FILE.bpma>                   (reports per-channel bit histograms)
   serve:   --model FILE.bpma  --swap-to B.bpma  --swap-after N
            --granularity layer|channel   (for --synthetic / trained models)
+           --deadline-ms N  --shed-policy reject-newest|drop-expired
+           --canary B.bpma --canary-pct P --canary-window N --canary-promote K
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -673,7 +679,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // rejected requests, per-version accounting, and the swap visible
     // only as a version-tag change in the responses.
     use bitprune::deploy::{Artifact, ModelRegistry};
-    use bitprune::serve::{ServeConfig, Server};
+    use bitprune::serve::{
+        CanaryConfig, CanaryOutcome, RetryPolicy, ServeConfig, Server, ShedPolicy,
+    };
     use bitprune::util::bench::{append_jsonl, BenchResult};
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
@@ -697,6 +705,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?;
     let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
     let gran = arg_granularity(args)?;
+    let deadline_ms = args.get_u64("deadline-ms", 0)?;
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+    let shed_policy = match args.get("shed-policy") {
+        None => ShedPolicy::default(),
+        Some(s) => ShedPolicy::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "serve: unknown --shed-policy '{s}' (expected reject-newest or drop-expired)"
+            )
+        })?,
+    };
 
     let (net, label) = if let Some(path) = artifact_model {
         let art = Artifact::load(path)?;
@@ -761,6 +779,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
     let swap_after = args.get_usize("swap-after", requests / 2)?;
 
+    // Canary staging conflicts with the publish-based swap demo: the
+    // registry refuses publishes while an experiment is in flight.
+    let canary_arg = args.get("canary").map(str::to_string);
+    if canary_arg.is_some() && swap_to.is_some() {
+        bail!("serve: --canary and --swap-to are mutually exclusive (publish is refused while a canary is in flight)");
+    }
+
     let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), &label)?);
     let server = Server::start_registry(
         Arc::clone(&registry),
@@ -769,17 +794,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch,
             max_queue,
             batch_window: Duration::from_micros(window_us),
+            deadline,
+            shed_policy,
         },
     )?;
+    if let Some(path) = &canary_arg {
+        let art = Artifact::load(path)?;
+        let cnet = Arc::new(art.instantiate()?);
+        let ccfg = CanaryConfig {
+            pct: args.get_usize("canary-pct", 10)?.min(99) as u8,
+            window: args.get_usize("canary-window", 64)?,
+            promote_after: args.get_usize("canary-promote", 3)?,
+            ..CanaryConfig::default()
+        };
+        let pct = ccfg.pct;
+        let v = server.start_canary(cnet, path, ccfg)?;
+        eprintln!(
+            "staged canary '{path}' as v{v} at {pct}% of traffic \
+             (auto-promotes or rolls back online)"
+        );
+    }
     eprintln!(
         "serving {requests} requests from {clients} clients \
-         (max_batch {max_batch}, window {window_us}us)..."
+         (max_batch {max_batch}, window {window_us}us, deadline {}, shed {})...",
+        if deadline_ms > 0 {
+            format!("{deadline_ms}ms")
+        } else {
+            "none".into()
+        },
+        shed_policy.name(),
     );
     if swap_to.is_some() {
         eprintln!("will hot-swap to the --swap-to artifact after ~{swap_after} responses");
     }
 
     let served = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
     let t0 = Instant::now();
     let mut samples: Vec<(u64, f64)> = Vec::with_capacity(requests);
     let mut swap_version: Option<u64> = None;
@@ -787,18 +837,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let mut joins = Vec::new();
         for c in 0..clients {
             let handle = server.handle();
-            let served = &served;
+            let (served, shed) = (&served, &shed);
             let n_req = requests / clients + usize::from(c < requests % clients);
             joins.push(scope.spawn(move || -> Result<Vec<(u64, f64)>> {
                 let mut rng = Rng::new(0xC11E47 + c as u64);
+                // Retryable rejections (backpressure, a panicked
+                // batch) back off and retry; sheds that survive the
+                // retry budget are counted, not fatal.
+                let policy =
+                    RetryPolicy { seed: 0x8E7247 ^ c as u64, ..RetryPolicy::default() };
                 let mut lats = Vec::with_capacity(n_req);
                 for _ in 0..n_req {
                     let x: Vec<f32> =
                         (0..din).map(|_| rng.normal_f32(0.0, 1.0)).collect();
                     let t = Instant::now();
-                    let (version, _) = handle.infer_versioned(x)?;
-                    lats.push((version, t.elapsed().as_secs_f64()));
-                    served.fetch_add(1, Ordering::Relaxed);
+                    match handle.infer_with_retry(x, &policy) {
+                        Ok((version, _)) => {
+                            lats.push((version, t.elapsed().as_secs_f64()));
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) if e.is_shed() => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
                 }
                 Ok(lats)
             }));
@@ -839,9 +901,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         println!("post-drain request served by v{v} (the swapped-in model)");
     }
+    let canary_status = server.canary_status();
     let stats = server.shutdown();
 
     let latencies: Vec<f64> = samples.iter().map(|(_, l)| *l).collect();
+    if latencies.is_empty() {
+        println!(
+            "served 0 requests — every request was shed \
+             ({} queue-full, {} deadline-expired, policy {})",
+            stats.shed_queue_full,
+            stats.shed_expired,
+            shed_policy.name()
+        );
+        return Ok(());
+    }
     let lat = BenchResult::from_samples("serve/request_latency", latencies, None);
     println!("{}", lat.report());
     println!(
@@ -858,6 +931,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.mean_batch(),
         stats.swaps,
     );
+    if stats.shed() > 0 || stats.failed > 0 || shed.load(Ordering::Relaxed) > 0 {
+        println!(
+            "shed {} requests ({} queue-full, {} deadline-expired; policy {}) | \
+             {} failed on panicked batches | {} gave up after retries",
+            stats.shed(),
+            stats.shed_queue_full,
+            stats.shed_expired,
+            shed_policy.name(),
+            stats.failed,
+            shed.load(Ordering::Relaxed),
+        );
+    }
+    if let Some(status) = &canary_status {
+        let agreement = status
+            .agreement()
+            .map(|a| format!("{:.1}%", a * 100.0))
+            .unwrap_or_else(|| "n/a".into());
+        match &status.outcome {
+            Some(CanaryOutcome::Promoted { version }) => println!(
+                "canary v{version} PROMOTED after {} healthy windows \
+                 ({} canary requests, agreement {agreement})",
+                status.healthy_windows, status.served
+            ),
+            Some(CanaryOutcome::RolledBack { version, reason }) => println!(
+                "canary v{version} ROLLED BACK ({reason}) — incumbent \
+                 v{} never stopped serving",
+                status.incumbent_version
+            ),
+            None => println!(
+                "canary v{} still in flight: {} requests served at {}%, \
+                 agreement {agreement}, {} healthy window(s)",
+                status.canary_version, status.served, status.pct, status.healthy_windows
+            ),
+        }
+    }
     if swap_version.is_some() {
         let mut by_version: Vec<(u64, usize)> = Vec::new();
         for &(v, _) in &samples {
@@ -958,6 +1066,13 @@ impl CliOpts for RunConfig {
             "ckpt",
             "swap-to",
             "swap-after",
+            // failure hardening (serve)
+            "deadline-ms",
+            "shed-policy",
+            "canary",
+            "canary-pct",
+            "canary-window",
+            "canary-promote",
             // weight-quantization granularity (export / serve)
             "granularity",
         ]);

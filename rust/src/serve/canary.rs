@@ -1,0 +1,462 @@
+//! Canary analysis: weighted traffic splits with online health
+//! evaluation, automatic promotion, and automatic rollback.
+//!
+//! A canary is a staged registry version (see
+//! [`crate::deploy::ModelRegistry::begin_canary`]) that receives a
+//! deterministic percentage of live traffic while the incumbent keeps
+//! serving the rest.  [`CanaryController`] is the pure state machine
+//! the batcher drives:
+//!
+//! * **Routing** — per-request, by hashing the request's id against
+//!   the canary version ([`CanaryController::routes_to_canary`]).
+//!   Deterministic: the same request id always lands on the same side,
+//!   so replays and tests are exact, and the split converges to `pct`
+//!   without any shared mutable routing state.
+//! * **Agreement** — every canary-routed sub-batch is *shadow-run* on
+//!   the incumbent, and argmax agreement between the two answers is
+//!   the online accuracy proxy (quantization papers' concern made
+//!   operational: a mis-calibrated low-bit artifact disagrees with its
+//!   reference, and that is observable without labels).
+//! * **Latency** — per-sample forward latency of each side feeds
+//!   bounded reservoirs; the canary's p99 is compared against the
+//!   incumbent's at each window boundary.
+//! * **Windows** — every `window` canary-served requests the
+//!   controller closes a health window: agreement below
+//!   `min_agreement` or canary p99 above `max_latency_ratio` × the
+//!   incumbent's p99 triggers **immediate rollback**; `promote_after`
+//!   consecutive healthy windows triggers **promotion**.  Either way
+//!   the decision is applied through the registry's atomic swap
+//!   machinery, so rollback is as zero-downtime as the hot-swap it
+//!   reuses — and a bad canary never reaches 100% of traffic.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::util::stats::percentile;
+
+/// Latency reservoirs ignore the ratio check until both sides have
+/// this many batch samples (a p99 over two points is noise).
+const MIN_LATENCY_SAMPLES: usize = 4;
+
+/// Bounded per-side latency reservoir length (batch-level samples).
+const LATENCY_RESERVOIR: usize = 512;
+
+/// Knobs for one canary experiment.
+#[derive(Debug, Clone)]
+pub struct CanaryConfig {
+    /// Percentage of traffic routed to the canary (1..=99 — a canary
+    /// at 0% learns nothing and at 100% is not a canary).
+    pub pct: u8,
+    /// Canary-served requests per health window.
+    pub window: usize,
+    /// Consecutive healthy windows before promotion.
+    pub promote_after: usize,
+    /// Minimum argmax agreement with the incumbent per window.
+    pub min_agreement: f64,
+    /// Canary p99 per-sample latency ceiling, as a multiple of the
+    /// incumbent's p99.
+    pub max_latency_ratio: f64,
+}
+
+impl Default for CanaryConfig {
+    fn default() -> Self {
+        Self {
+            pct: 10,
+            window: 64,
+            promote_after: 3,
+            min_agreement: 0.98,
+            max_latency_ratio: 2.0,
+        }
+    }
+}
+
+impl CanaryConfig {
+    /// Validate operator input; returns a human-readable complaint.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=99).contains(&self.pct) {
+            return Err(format!("canary pct must be 1..=99, got {}", self.pct));
+        }
+        if self.window == 0 || self.promote_after == 0 {
+            return Err("canary window and promote_after must be at least 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.min_agreement) {
+            return Err(format!(
+                "canary min_agreement must be in [0, 1], got {}",
+                self.min_agreement
+            ));
+        }
+        if !self.max_latency_ratio.is_finite() || self.max_latency_ratio <= 0.0 {
+            return Err(format!(
+                "canary max_latency_ratio must be positive, got {}",
+                self.max_latency_ratio
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// How a canary experiment ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CanaryOutcome {
+    /// Promoted to active after the configured healthy windows.
+    Promoted { version: u64 },
+    /// Rolled back; the incumbent never stopped being active.
+    RolledBack { version: u64, reason: String },
+}
+
+/// What the batcher should do after a window closed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CanaryDecision {
+    Promote,
+    Rollback { reason: String },
+}
+
+/// Point-in-time observability snapshot of a canary experiment.
+#[derive(Debug, Clone)]
+pub struct CanaryStatus {
+    pub canary_version: u64,
+    pub incumbent_version: u64,
+    pub pct: u8,
+    /// Requests the canary actually served.
+    pub served: u64,
+    /// Canary answers shadow-compared against the incumbent.
+    pub compared: u64,
+    /// Of those, how many argmaxes agreed.
+    pub agreements: u64,
+    pub healthy_windows: usize,
+    /// p99 per-sample forward latency, seconds (None until enough
+    /// samples).
+    pub canary_p99: Option<f64>,
+    pub incumbent_p99: Option<f64>,
+    /// Set once the experiment resolved.
+    pub outcome: Option<CanaryOutcome>,
+}
+
+impl CanaryStatus {
+    /// Cumulative argmax agreement fraction (None before any
+    /// comparison).
+    pub fn agreement(&self) -> Option<f64> {
+        (self.compared > 0).then(|| self.agreements as f64 / self.compared as f64)
+    }
+}
+
+/// The per-experiment state machine.  Single-writer by design: only
+/// the batcher thread observes and evaluates, so the struct needs no
+/// interior synchronization (the server wraps it in its own mutex for
+/// status snapshots).
+pub struct CanaryController {
+    cfg: CanaryConfig,
+    canary_version: u64,
+    incumbent_version: u64,
+    served: u64,
+    compared: u64,
+    agreements: u64,
+    window_served: u64,
+    window_compared: u64,
+    window_agreements: u64,
+    canary_lat: VecDeque<f64>,
+    incumbent_lat: VecDeque<f64>,
+    healthy: usize,
+    outcome: Option<CanaryOutcome>,
+}
+
+/// SplitMix64 finalizer — the deterministic request-id → route hash.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl CanaryController {
+    pub fn new(canary_version: u64, incumbent_version: u64, cfg: CanaryConfig) -> Self {
+        Self {
+            cfg,
+            canary_version,
+            incumbent_version,
+            served: 0,
+            compared: 0,
+            agreements: 0,
+            window_served: 0,
+            window_compared: 0,
+            window_agreements: 0,
+            canary_lat: VecDeque::new(),
+            incumbent_lat: VecDeque::new(),
+            healthy: 0,
+            outcome: None,
+        }
+    }
+
+    pub fn canary_version(&self) -> u64 {
+        self.canary_version
+    }
+
+    /// Still routing traffic?  False once promoted or rolled back.
+    pub fn active(&self) -> bool {
+        self.outcome.is_none()
+    }
+
+    /// Deterministic per-request split: hash the request id salted by
+    /// the canary version (a different canary re-shuffles which
+    /// requests land on it) into 0..100 and compare against `pct`.
+    pub fn routes_to_canary(&self, request_id: u64) -> bool {
+        if self.outcome.is_some() {
+            return false;
+        }
+        mix64(request_id ^ self.canary_version.wrapping_mul(0xD6E8FEB86659FD93)) % 100
+            < u64::from(self.cfg.pct)
+    }
+
+    /// Record one batch's worth of evidence.  Latencies are per-sample
+    /// seconds for whichever sub-batches ran (None when that side had
+    /// no rows or its forward failed).
+    pub fn observe(
+        &mut self,
+        incumbent_per_sample: Option<f64>,
+        canary_per_sample: Option<f64>,
+        canary_served: u64,
+        agreements: u64,
+        compared: u64,
+    ) {
+        if self.outcome.is_some() {
+            return;
+        }
+        if let Some(s) = incumbent_per_sample {
+            push_bounded(&mut self.incumbent_lat, s);
+        }
+        if let Some(s) = canary_per_sample {
+            push_bounded(&mut self.canary_lat, s);
+        }
+        self.served += canary_served;
+        self.window_served += canary_served;
+        self.compared += compared;
+        self.agreements += agreements;
+        self.window_compared += compared;
+        self.window_agreements += agreements;
+    }
+
+    /// Close any full windows and return the decision, if one fell
+    /// out.  Rollback fires on the first unhealthy window; promotion
+    /// after `promote_after` consecutive healthy ones.
+    pub fn evaluate(&mut self) -> Option<CanaryDecision> {
+        if self.outcome.is_some() {
+            return None;
+        }
+        while self.window_served >= self.cfg.window as u64 {
+            // Agreement check (skipped when nothing was comparable —
+            // e.g. every shadow forward failed; latency still gates).
+            if self.window_compared > 0 {
+                let agreement =
+                    self.window_agreements as f64 / self.window_compared as f64;
+                if agreement < self.cfg.min_agreement {
+                    return Some(CanaryDecision::Rollback {
+                        reason: format!(
+                            "disagreement: window argmax agreement {:.4} < required {:.4} \
+                             ({}/{} compared)",
+                            agreement,
+                            self.cfg.min_agreement,
+                            self.window_agreements,
+                            self.window_compared
+                        ),
+                    });
+                }
+            }
+            // Latency check, once both reservoirs are meaningful.
+            if let (Some(cp99), Some(ip99)) = (self.canary_p99(), self.incumbent_p99())
+            {
+                if ip99 > 0.0 && cp99 > self.cfg.max_latency_ratio * ip99 {
+                    return Some(CanaryDecision::Rollback {
+                        reason: format!(
+                            "latency: canary p99 {:.1}us > {:.1}x incumbent p99 {:.1}us",
+                            cp99 * 1e6,
+                            self.cfg.max_latency_ratio,
+                            ip99 * 1e6
+                        ),
+                    });
+                }
+            }
+            self.healthy += 1;
+            self.window_served -= self.cfg.window as u64;
+            self.window_compared = 0;
+            self.window_agreements = 0;
+            if self.healthy >= self.cfg.promote_after {
+                return Some(CanaryDecision::Promote);
+            }
+        }
+        None
+    }
+
+    /// Record how the experiment ended (the batcher calls this after
+    /// applying the decision through the registry).
+    pub fn resolve(&mut self, outcome: CanaryOutcome) {
+        self.outcome = Some(outcome);
+    }
+
+    pub fn outcome(&self) -> Option<&CanaryOutcome> {
+        self.outcome.as_ref()
+    }
+
+    fn canary_p99(&self) -> Option<f64> {
+        p99_of(&self.canary_lat)
+    }
+
+    fn incumbent_p99(&self) -> Option<f64> {
+        p99_of(&self.incumbent_lat)
+    }
+
+    pub fn status(&self) -> CanaryStatus {
+        CanaryStatus {
+            canary_version: self.canary_version,
+            incumbent_version: self.incumbent_version,
+            pct: self.cfg.pct,
+            served: self.served,
+            compared: self.compared,
+            agreements: self.agreements,
+            healthy_windows: self.healthy,
+            canary_p99: self.canary_p99(),
+            incumbent_p99: self.incumbent_p99(),
+            outcome: self.outcome.clone(),
+        }
+    }
+}
+
+fn push_bounded(buf: &mut VecDeque<f64>, v: f64) {
+    if buf.len() == LATENCY_RESERVOIR {
+        buf.pop_front();
+    }
+    buf.push_back(v);
+}
+
+fn p99_of(buf: &VecDeque<f64>) -> Option<f64> {
+    if buf.len() < MIN_LATENCY_SAMPLES {
+        return None;
+    }
+    let mut sorted: Vec<f64> = buf.iter().copied().collect();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    Some(percentile(&sorted, 99.0))
+}
+
+/// Per-sample seconds from one sub-batch forward.
+pub(crate) fn per_sample_secs(total: Duration, rows: usize) -> Option<f64> {
+    (rows > 0).then(|| total.as_secs_f64() / rows as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(pct: u8, window: usize, promote_after: usize) -> CanaryConfig {
+        CanaryConfig {
+            pct,
+            window,
+            promote_after,
+            min_agreement: 0.9,
+            max_latency_ratio: 2.0,
+        }
+    }
+
+    #[test]
+    fn config_validation_catches_operator_errors() {
+        assert!(CanaryConfig::default().validate().is_ok());
+        assert!(CanaryConfig { pct: 0, ..CanaryConfig::default() }.validate().is_err());
+        assert!(CanaryConfig { pct: 100, ..CanaryConfig::default() }
+            .validate()
+            .is_err());
+        assert!(CanaryConfig { window: 0, ..CanaryConfig::default() }
+            .validate()
+            .is_err());
+        assert!(CanaryConfig { promote_after: 0, ..CanaryConfig::default() }
+            .validate()
+            .is_err());
+        assert!(CanaryConfig { min_agreement: 1.5, ..CanaryConfig::default() }
+            .validate()
+            .is_err());
+        assert!(
+            CanaryConfig { max_latency_ratio: 0.0, ..CanaryConfig::default() }
+                .validate()
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_converges_to_pct() {
+        let ctrl = CanaryController::new(7, 1, cfg(20, 64, 3));
+        let hits: usize = (0..10_000).filter(|&id| ctrl.routes_to_canary(id)).count();
+        // Exactly reproducible...
+        let hits2: usize = (0..10_000).filter(|&id| ctrl.routes_to_canary(id)).count();
+        assert_eq!(hits, hits2);
+        // ...and close to the requested split.
+        assert!((1500..2500).contains(&hits), "20% split routed {hits}/10000");
+        // A different canary version reshuffles the assignment but
+        // keeps the rate.
+        let other = CanaryController::new(8, 1, cfg(20, 64, 3));
+        let overlap = (0..10_000)
+            .filter(|&id| ctrl.routes_to_canary(id) && other.routes_to_canary(id))
+            .count();
+        assert!(overlap < hits, "different canaries must not share one split");
+    }
+
+    #[test]
+    fn healthy_windows_promote() {
+        let mut ctrl = CanaryController::new(2, 1, cfg(50, 10, 3));
+        // Two full healthy windows: no decision yet.
+        for _ in 0..2 {
+            ctrl.observe(Some(10e-6), Some(11e-6), 10, 10, 10);
+            assert_eq!(ctrl.evaluate(), None);
+        }
+        assert_eq!(ctrl.status().healthy_windows, 2);
+        // Third closes the deal.
+        ctrl.observe(Some(10e-6), Some(11e-6), 10, 10, 10);
+        assert_eq!(ctrl.evaluate(), Some(CanaryDecision::Promote));
+        ctrl.resolve(CanaryOutcome::Promoted { version: 2 });
+        assert!(!ctrl.active());
+        assert!(!ctrl.routes_to_canary(0), "resolved canary routes nothing");
+        assert_eq!(ctrl.evaluate(), None);
+    }
+
+    #[test]
+    fn disagreement_rolls_back_at_first_window() {
+        let mut ctrl = CanaryController::new(2, 1, cfg(50, 10, 3));
+        // 6/10 agreement < 0.9 — one window is enough to kill it.
+        ctrl.observe(Some(10e-6), Some(10e-6), 10, 6, 10);
+        match ctrl.evaluate() {
+            Some(CanaryDecision::Rollback { reason }) => {
+                assert!(reason.contains("disagreement"), "{reason}");
+            }
+            other => panic!("expected rollback, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn latency_regression_rolls_back_once_measurable() {
+        let mut ctrl = CanaryController::new(2, 1, cfg(50, 4, 100));
+        // Perfect agreement, but the canary is 10x slower.  Below
+        // MIN_LATENCY_SAMPLES the ratio check abstains (windows pass);
+        // once both reservoirs fill it trips.
+        let mut decision = None;
+        for _ in 0..MIN_LATENCY_SAMPLES + 1 {
+            ctrl.observe(Some(10e-6), Some(100e-6), 4, 4, 4);
+            if let Some(d) = ctrl.evaluate() {
+                decision = Some(d);
+                break;
+            }
+        }
+        match decision {
+            Some(CanaryDecision::Rollback { reason }) => {
+                assert!(reason.contains("latency"), "{reason}");
+            }
+            other => panic!("expected latency rollback, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn windows_span_batches_and_partial_windows_wait() {
+        let mut ctrl = CanaryController::new(2, 1, cfg(50, 10, 1));
+        // 9 served: no window closes, no decision.
+        ctrl.observe(None, Some(10e-6), 9, 9, 9);
+        assert_eq!(ctrl.evaluate(), None);
+        // 1 more completes the window; promote_after=1 promotes.
+        ctrl.observe(None, Some(10e-6), 1, 1, 1);
+        assert_eq!(ctrl.evaluate(), Some(CanaryDecision::Promote));
+    }
+}

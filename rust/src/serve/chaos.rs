@@ -1,0 +1,191 @@
+//! Deterministic fault injection for the serving fleet (feature
+//! `chaos`).
+//!
+//! Production code never probabilistically misbehaves on its own — in
+//! chaos builds (`cargo test --features chaos`) a [`Chaos`] instance
+//! can be threaded into a `WorkerPool` (worker exits, in-job panics)
+//! and a `serve::Server` (queue stalls, forward panics, latency
+//! spikes), and `tests/serve_chaos.rs` proves the fleet's failure
+//! invariants hold under all of them:
+//!
+//! * no request is silently lost — every submit resolves to a response
+//!   or a typed [`crate::serve::ServeError`];
+//! * dead workers are respawned and subsequent batches are
+//!   bit-identical;
+//! * a corrupted or slow canary is auto-rolled-back before it ever
+//!   reaches 100% of traffic.
+//!
+//! **Determinism.**  Injectors fire on *every-Nth-event* atomic
+//! counters, not coin flips: under a pinned seed and fixed trigger
+//! periods the injected-fault schedule is a pure function of the event
+//! sequence, so the suite asserts exact invariants instead of
+//! probabilistic ones.  The seed ([`pinned_seed`], `CHAOS_SEED` env)
+//! feeds fixture construction ([`corrupted_twin`]), keeping the whole
+//! suite reproducible from one number.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::infer::IntNet;
+
+/// Trigger periods for each injector; `0` disables that injector.
+/// "Every Nth" counts that injector's own checkpoints (worker polls,
+/// batches, forwards), so the schedule is deterministic per run.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Kill the polling worker thread at every Nth poll (between jobs
+    /// — a claimed job is never lost).  Exercises pool respawn.
+    pub worker_exit_every: u64,
+    /// Panic inside every Nth pool job (inside the worker's
+    /// catch_unwind — the path a real kernel panic would take).
+    pub job_panic_every: u64,
+    /// Panic inside every Nth batch forward on the batcher thread.
+    pub forward_panic_every: u64,
+    /// Stall the batcher for [`Self::stall`] before every Nth dequeue
+    /// (simulates a wedged batcher; expired deadlines shed).
+    pub stall_every: u64,
+    pub stall: Duration,
+    /// Sleep [`Self::spike`] inside every Nth forward's timed region
+    /// (simulates a latency regression).
+    pub spike_every: u64,
+    pub spike: Duration,
+    /// Restrict spikes to canary sub-batches — the fixture for
+    /// latency-triggered canary rollback.
+    pub spike_canary_only: bool,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        Self {
+            worker_exit_every: 0,
+            job_panic_every: 0,
+            forward_panic_every: 0,
+            stall_every: 0,
+            stall: Duration::from_millis(2),
+            spike_every: 0,
+            spike: Duration::from_millis(2),
+            spike_canary_only: false,
+        }
+    }
+}
+
+/// A live injector: shared (via `Arc`) between the component under
+/// test and the test making assertions about what was injected.
+/// Per-instance state — parallel tests never interfere.
+#[derive(Debug, Default)]
+pub struct Chaos {
+    cfg: ChaosConfig,
+    worker_polls: AtomicU64,
+    jobs: AtomicU64,
+    forwards: AtomicU64,
+    batches: AtomicU64,
+    spikes: AtomicU64,
+    injected_exits: AtomicU64,
+    injected_job_panics: AtomicU64,
+    injected_forward_panics: AtomicU64,
+    injected_stalls: AtomicU64,
+    injected_spikes: AtomicU64,
+}
+
+/// `counter`'s next tick fires when it lands on a multiple of `every`.
+fn fire(counter: &AtomicU64, every: u64) -> bool {
+    every != 0 && (counter.fetch_add(1, Ordering::Relaxed) + 1) % every == 0
+}
+
+impl Chaos {
+    pub fn new(cfg: ChaosConfig) -> Arc<Self> {
+        Arc::new(Self { cfg, ..Self::default() })
+    }
+
+    /// Pool hook: should the polling worker thread die now?
+    pub fn worker_should_exit(&self) -> bool {
+        let hit = fire(&self.worker_polls, self.cfg.worker_exit_every);
+        if hit {
+            self.injected_exits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Pool hook: panics inside the worker's job boundary on the Nth
+    /// job.
+    pub fn maybe_job_panic(&self) {
+        if fire(&self.jobs, self.cfg.job_panic_every) {
+            self.injected_job_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: injected job panic");
+        }
+    }
+
+    /// Batcher hook: panics inside the batch-forward boundary on the
+    /// Nth forward.
+    pub fn maybe_forward_panic(&self) {
+        if fire(&self.forwards, self.cfg.forward_panic_every) {
+            self.injected_forward_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: injected forward panic");
+        }
+    }
+
+    /// Batcher hook: how long to stall before the Nth dequeue.
+    pub fn batch_stall(&self) -> Option<Duration> {
+        if fire(&self.batches, self.cfg.stall_every) {
+            self.injected_stalls.fetch_add(1, Ordering::Relaxed);
+            Some(self.cfg.stall)
+        } else {
+            None
+        }
+    }
+
+    /// Batcher hook: latency spike to inject into this forward's timed
+    /// region.  Spikes key on their own counter; with
+    /// `spike_canary_only` non-canary forwards neither spike nor
+    /// advance the counter (so "every Nth" means every Nth *canary*
+    /// forward).
+    pub fn forward_spike(&self, is_canary: bool) -> Option<Duration> {
+        if self.cfg.spike_canary_only && !is_canary {
+            return None;
+        }
+        if fire(&self.spikes, self.cfg.spike_every) {
+            self.injected_spikes.fetch_add(1, Ordering::Relaxed);
+            Some(self.cfg.spike)
+        } else {
+            None
+        }
+    }
+
+    pub fn injected_exits(&self) -> u64 {
+        self.injected_exits.load(Ordering::Relaxed)
+    }
+    pub fn injected_job_panics(&self) -> u64 {
+        self.injected_job_panics.load(Ordering::Relaxed)
+    }
+    pub fn injected_forward_panics(&self) -> u64 {
+        self.injected_forward_panics.load(Ordering::Relaxed)
+    }
+    pub fn injected_stalls(&self) -> u64 {
+        self.injected_stalls.load(Ordering::Relaxed)
+    }
+    pub fn injected_spikes(&self) -> u64 {
+        self.injected_spikes.load(Ordering::Relaxed)
+    }
+}
+
+/// The suite's pinned seed: `CHAOS_SEED` env when set (CI pins it),
+/// a fixed default otherwise.  Everything derived from it is
+/// reproducible from the one number.
+pub fn pinned_seed() -> u64 {
+    std::env::var("CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x20260807)
+}
+
+/// A same-shape, differently-seeded twin of `net`: passes every
+/// registry shape check, serves finite logits — and disagrees with the
+/// original on most argmaxes.  The fixture for "corrupted-logit canary
+/// must be auto-rolled-back".
+pub fn corrupted_twin(net: &IntNet, seed: u64) -> IntNet {
+    let mut dims = Vec::with_capacity(net.layers.len() + 1);
+    dims.push(net.layers[0].din);
+    dims.extend(net.layers.iter().map(|l| l.dout));
+    super::synthetic_net(&dims, seed, 4, 6)
+}

@@ -30,6 +30,31 @@ impl ServeEngine {
         Self { pool, scratch: NetScratch::default() }
     }
 
+    /// [`Self::new`] with a fault injector threaded into the worker
+    /// pool (chaos builds only): workers then deterministically die
+    /// and panic on schedule, which is how `tests/serve_chaos.rs`
+    /// proves respawned pools produce bit-identical forwards.
+    #[cfg(feature = "chaos")]
+    pub fn with_chaos(
+        threads: usize,
+        chaos: Option<std::sync::Arc<crate::serve::chaos::Chaos>>,
+    ) -> Self {
+        let workers = if threads == 0 {
+            crate::util::pool::default_workers()
+        } else {
+            threads
+        };
+        Self {
+            pool: WorkerPool::with_chaos(workers, chaos),
+            scratch: NetScratch::default(),
+        }
+    }
+
+    /// The engine's worker pool (for respawn counters in tests).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
     /// Forward a `[n, din]` batch through `net`; returns logits
     /// `[n, net.num_classes]` borrowed from the engine's scratch.
     /// Bit-identical to `IntNet::forward` on the same net.

@@ -28,6 +28,14 @@
 //!   that computed it, and [`ServeStats::swaps`] counts the
 //!   transitions.  Frozen `.bpma` artifacts (`crate::deploy::artifact`)
 //!   are the shipping form models enter the registry in.
+//! * **Failure hardening** — typed [`ServeError`] outcomes for every
+//!   request, deadline-aware load shedding ([`ShedPolicy`]), bounded
+//!   jittered retry ([`RetryPolicy`]), panic isolation around batch
+//!   forwards, and canary traffic splits with auto-rollback
+//!   ([`Server::start_canary`], [`CanaryController`]).  A
+//!   deterministic fault-injection layer (`serve::chaos`, feature
+//!   `chaos`)
+//!   proves the invariants in `tests/serve_chaos.rs`.
 //! * Synthetic fixtures ([`synthetic_net`] / [`synthetic_mlp`]) — a
 //!   calibrated random network on the mlp artifact shapes
 //!   (32→256→128→10, python/compile/models.py), so `bitprune serve`,
@@ -38,11 +46,18 @@
 //! `benches/serve.rs` and `benches/deploy.rs` (`BENCH_serve.json` /
 //! `BENCH_deploy.json`).
 
+mod canary;
+#[cfg(feature = "chaos")]
+pub mod chaos;
 mod engine;
 mod server;
 
+pub use canary::{CanaryConfig, CanaryController, CanaryOutcome, CanaryStatus};
 pub use engine::ServeEngine;
-pub use server::{Response, ServeConfig, ServeStats, Server, ServerHandle};
+pub use server::{
+    Response, RetryPolicy, ServeConfig, ServeError, ServeResult, ServeStats, Server,
+    ServerHandle, ShedPolicy,
+};
 
 use crate::infer::{IntDense, IntNet};
 use crate::util::rng::Rng;

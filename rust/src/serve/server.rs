@@ -1,5 +1,5 @@
 //! Dynamic micro-batching request queue over a versioned model
-//! registry.
+//! registry, hardened for operation under failure.
 //!
 //! Requests are single samples; a dedicated batcher thread coalesces
 //! them into batches (flushing when `max_batch` are waiting or the
@@ -15,8 +15,38 @@
 //! Because every published net carries calibrated activation ranges,
 //! each answer is bit-identical to the sample's solo forward on that
 //! version, however it was batched.
+//!
+//! Failure hardening, on top of that:
+//!
+//! * **Typed outcomes** — every submit resolves to exactly one
+//!   [`ServeResult`]: the logits, or a [`ServeError`] saying *why* not
+//!   and whether retrying can help.  Nothing is silently dropped.
+//! * **Deadlines + load shedding** — a request may carry an absolute
+//!   deadline ([`ServerHandle::submit_with_deadline`], or the
+//!   server-wide [`ServeConfig::deadline`] default).  The batcher
+//!   sheds expired requests at dequeue with
+//!   [`ServeError::DeadlineExpired`] instead of burning a batch slot
+//!   on an answer nobody is waiting for.  Admission at a full queue
+//!   follows [`ServeConfig::shed_policy`]: reject the newcomer
+//!   ([`ShedPolicy::RejectNewest`]) or first evict already-expired
+//!   entries to make room ([`ShedPolicy::DropExpired`]).  Every shed
+//!   is counted in [`ServeStats`].
+//! * **Retry** — [`ServerHandle::infer_with_retry`] retries retryable
+//!   rejections (queue full, a panicked batch) with bounded, jittered
+//!   exponential backoff ([`RetryPolicy`]).
+//! * **Panic isolation** — a panic unwinding out of a batch forward is
+//!   caught; the affected requests get [`ServeError::WorkerPanic`]
+//!   (retryable) and the batcher keeps serving subsequent batches.
+//! * **Canary splits** — [`Server::start_canary`] stages a candidate
+//!   version behind a deterministic per-request traffic split with
+//!   shadow-compare against the incumbent; a
+//!   [`super::canary::CanaryController`] promotes it after consecutive
+//!   healthy windows or auto-rolls it back on disagreement/latency
+//!   regression, through the registry's atomic swap.  See
+//!   [`super::canary`].
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -25,9 +55,113 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::canary::{
+    per_sample_secs, CanaryConfig, CanaryController, CanaryDecision, CanaryOutcome,
+    CanaryStatus,
+};
 use super::engine::ServeEngine;
 use crate::deploy::ModelRegistry;
-use crate::infer::IntNet;
+use crate::infer::{argmax_rows, IntNet};
+use crate::util::rng::Rng;
+
+/// Why a request was not served.  Every failed submit or response
+/// resolves to one of these — the contract that makes "no request
+/// silently lost" checkable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Request length does not match the endpoint's input dim.
+    BadInput { got: usize, want: usize },
+    /// Admission refused: the queue is at `max_queue`.  Retryable —
+    /// backpressure, not failure.
+    QueueFull { queued: usize },
+    /// Shed: the request's deadline expired while it waited in the
+    /// queue (`waited` = time from enqueue to shed).
+    DeadlineExpired { waited: Duration },
+    /// The server is shut down (or shutting down took the request
+    /// with it).
+    ShuttingDown,
+    /// The batch this request was in panicked mid-forward.  The
+    /// server survives; the request is retryable.
+    WorkerPanic,
+    /// The server dropped the response channel without answering —
+    /// only possible if the batcher died abnormally.
+    Disconnected,
+}
+
+impl ServeError {
+    /// Worth retrying with backoff?  True for transient conditions
+    /// (backpressure, a panicked batch); false for caller errors and
+    /// terminal states.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Self::QueueFull { .. } | Self::WorkerPanic)
+    }
+
+    /// Was this a load-shed (counted in [`ServeStats`] shed counters)?
+    pub fn is_shed(&self) -> bool {
+        matches!(self, Self::QueueFull { .. } | Self::DeadlineExpired { .. })
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::BadInput { got, want } => {
+                write!(f, "serve: request has {got} values, model wants {want}")
+            }
+            Self::QueueFull { queued } => write!(
+                f,
+                "serve: queue full ({queued} requests) — backpressure, retry later"
+            ),
+            Self::DeadlineExpired { waited } => write!(
+                f,
+                "serve: deadline expired after {:.1}us in queue — request shed",
+                waited.as_secs_f64() * 1e6
+            ),
+            Self::ShuttingDown => write!(f, "serve: server is shut down"),
+            Self::WorkerPanic => {
+                write!(f, "serve: batch forward panicked — request not served (retryable)")
+            }
+            Self::Disconnected => write!(f, "serve: server dropped the request"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One request's terminal outcome.
+pub type ServeResult = std::result::Result<Response, ServeError>;
+
+/// What to do when a submission meets a full queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Reject the incoming request ([`ServeError::QueueFull`]); queued
+    /// requests keep their slots.  FIFO-fair; the default.
+    #[default]
+    RejectNewest,
+    /// First shed queued requests whose deadline already expired
+    /// (they'd be shed at dequeue anyway), then admit if that made
+    /// room.  Keeps the queue full of *answerable* work under
+    /// sustained overload.
+    DropExpired,
+}
+
+impl ShedPolicy {
+    /// Parse an operator string (`reject-newest` / `drop-expired`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reject-newest" => Some(Self::RejectNewest),
+            "drop-expired" => Some(Self::DropExpired),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RejectNewest => "reject-newest",
+            Self::DropExpired => "drop-expired",
+        }
+    }
+}
 
 /// Knobs for the micro-batching serving loop.
 #[derive(Debug, Clone)]
@@ -39,10 +173,17 @@ pub struct ServeConfig {
     /// Flush once the oldest queued request has waited this long since
     /// it was enqueued (the latency deadline).
     pub batch_window: Duration,
-    /// Backpressure bound: submissions are rejected while this many
-    /// requests are already queued (otherwise sustained overload grows
-    /// the queue — and memory, and tail latency — without limit).
+    /// Backpressure bound: admissions hit [`ServeConfig::shed_policy`]
+    /// while this many requests are already queued (otherwise
+    /// sustained overload grows the queue — and memory, and tail
+    /// latency — without limit).
     pub max_queue: usize,
+    /// Default per-request deadline, measured from enqueue (`None` =
+    /// requests wait indefinitely).  Explicit
+    /// [`ServerHandle::submit_with_deadline`] deadlines override it.
+    pub deadline: Option<Duration>,
+    /// Admission behavior at a full queue.
+    pub shed_policy: ShedPolicy,
 }
 
 impl Default for ServeConfig {
@@ -52,7 +193,44 @@ impl Default for ServeConfig {
             max_batch: 64,
             batch_window: Duration::from_micros(500),
             max_queue: 4096,
+            deadline: None,
+            shed_policy: ShedPolicy::RejectNewest,
         }
+    }
+}
+
+/// Bounded retry with jittered exponential backoff for retryable
+/// rejections ([`ServeError::is_retryable`]).  Deterministic: the
+/// jitter is a pure function of `seed` and the attempt number.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before retry k (0-based) is `base * 2^k`, capped at
+    /// [`Self::cap`], scaled by a jitter factor in [0.5, 1.5).
+    pub base: Duration,
+    pub cap: Duration,
+    /// Jitter seed; vary per client to de-synchronize retry storms.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 4,
+            base: Duration::from_micros(500),
+            cap: Duration::from_millis(20),
+            seed: 0x8E7247,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before 0-based retry `attempt`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16)).min(self.cap);
+        let mut rng = Rng::new(self.seed ^ u64::from(attempt).wrapping_mul(0x9E3779B97F4A7C15));
+        exp.mul_f64(0.5 + rng.uniform())
     }
 }
 
@@ -60,10 +238,26 @@ impl Default for ServeConfig {
 #[derive(Debug, Clone, Copy)]
 pub struct ServeStats {
     pub batches: u64,
+    /// Requests answered with logits (sheds and failures not
+    /// included).
     pub requests: u64,
     /// Times the batcher observed a different registry version than
     /// the previous batch (publishes *and* rollbacks land here).
     pub swaps: u64,
+    /// Admissions refused at a full queue
+    /// ([`ServeError::QueueFull`]).
+    pub shed_queue_full: u64,
+    /// Requests shed because their deadline expired in the queue
+    /// ([`ServeError::DeadlineExpired`]).
+    pub shed_expired: u64,
+    /// Requests answered [`ServeError::WorkerPanic`] because their
+    /// batch's forward panicked.
+    pub failed: u64,
+    /// Requests served by an in-flight canary version.
+    pub canary_requests: u64,
+    /// Canary experiments promoted / rolled back on this server.
+    pub promotions: u64,
+    pub rollbacks: u64,
 }
 
 impl ServeStats {
@@ -74,6 +268,11 @@ impl ServeStats {
         } else {
             self.requests as f64 / self.batches as f64
         }
+    }
+
+    /// Total requests shed (admission + deadline).
+    pub fn shed(&self) -> u64 {
+        self.shed_queue_full + self.shed_expired
     }
 }
 
@@ -86,11 +285,16 @@ pub struct Response {
 }
 
 struct Request {
+    /// Server-assigned sequence number — the deterministic canary
+    /// routing key.
+    id: u64,
     x: Vec<f32>,
-    resp: Sender<Response>,
+    resp: Sender<ServeResult>,
     /// When the request entered the queue — the batch-window deadline
     /// counts from here, not from when the batcher gets around to it.
     enqueued: Instant,
+    /// Absolute shed deadline, if any.
+    deadline: Option<Instant>,
 }
 
 struct Shared {
@@ -99,9 +303,76 @@ struct Shared {
     shutdown: AtomicBool,
     /// Backpressure bound (ServeConfig::max_queue), fixed at start.
     max_queue: usize,
+    /// Server-wide default deadline (ServeConfig::deadline).
+    default_deadline: Option<Duration>,
+    shed_policy: ShedPolicy,
+    /// Request id sequence (canary routing key).
+    seq: AtomicU64,
     batches: AtomicU64,
     requests: AtomicU64,
     swaps: AtomicU64,
+    shed_queue_full: AtomicU64,
+    shed_expired: AtomicU64,
+    failed: AtomicU64,
+    canary_requests: AtomicU64,
+    promotions: AtomicU64,
+    rollbacks: AtomicU64,
+    /// The in-flight canary experiment, if any.  Locked briefly by the
+    /// batcher (routing + observation) and by status snapshots; never
+    /// held across a forward.
+    canary: Mutex<Option<CanaryController>>,
+}
+
+impl Shared {
+    fn shed_expired_requests(&self, q: &mut VecDeque<Request>, now: Instant) {
+        if !q.iter().any(|r| matches!(r.deadline, Some(d) if now >= d)) {
+            return; // common case: nothing expired, no churn
+        }
+        let pending: Vec<Request> = q.drain(..).collect();
+        for r in pending {
+            match r.deadline {
+                Some(d) if now >= d => {
+                    let waited = now.saturating_duration_since(r.enqueued);
+                    let _ = r.resp.send(Err(ServeError::DeadlineExpired { waited }));
+                    self.shed_expired.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => q.push_back(r),
+            }
+        }
+    }
+}
+
+/// Runtime fault injectors threaded through the batcher.  Empty (and
+/// every hook a no-op) outside chaos builds.
+#[derive(Default)]
+pub(crate) struct Injectors {
+    #[cfg(feature = "chaos")]
+    pub(crate) chaos: Option<Arc<super::chaos::Chaos>>,
+}
+
+impl Injectors {
+    fn batch_stall(&self) -> Option<Duration> {
+        #[cfg(feature = "chaos")]
+        if let Some(c) = &self.chaos {
+            return c.batch_stall();
+        }
+        None
+    }
+
+    fn forward_spike(&self, _is_canary: bool) -> Option<Duration> {
+        #[cfg(feature = "chaos")]
+        if let Some(c) = &self.chaos {
+            return c.forward_spike(_is_canary);
+        }
+        None
+    }
+
+    fn maybe_forward_panic(&self) {
+        #[cfg(feature = "chaos")]
+        if let Some(c) = &self.chaos {
+            c.maybe_forward_panic();
+        }
+    }
 }
 
 /// The serving endpoint: owns the batcher thread and resolves its
@@ -140,26 +411,58 @@ impl Server {
     /// stays shared: publishing to it while this server runs hot-swaps
     /// the model between batches with zero downtime.
     pub fn start_registry(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Result<Self> {
+        Self::start_inner(registry, cfg, Injectors::default())
+    }
+
+    /// [`Self::start_registry`] with a fault injector wired into the
+    /// batcher and the engine's worker pool (chaos builds only).
+    #[cfg(feature = "chaos")]
+    pub fn start_chaos(
+        registry: Arc<ModelRegistry>,
+        cfg: ServeConfig,
+        chaos: Arc<super::chaos::Chaos>,
+    ) -> Result<Self> {
+        Self::start_inner(registry, cfg, Injectors { chaos: Some(chaos) })
+    }
+
+    fn start_inner(
+        registry: Arc<ModelRegistry>,
+        cfg: ServeConfig,
+        inj: Injectors,
+    ) -> Result<Self> {
         if cfg.max_batch == 0 || cfg.max_queue == 0 {
             bail!("serve: max_batch and max_queue must be at least 1");
         }
         let din = registry.input_dim();
         let out_dim = registry.out_dim();
+        #[cfg(feature = "chaos")]
+        let engine = ServeEngine::with_chaos(cfg.threads, inj.chaos.clone());
+        #[cfg(not(feature = "chaos"))]
         let engine = ServeEngine::new(cfg.threads);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             max_queue: cfg.max_queue,
+            default_deadline: cfg.deadline,
+            shed_policy: cfg.shed_policy,
+            seq: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            shed_queue_full: AtomicU64::new(0),
+            shed_expired: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            canary_requests: AtomicU64::new(0),
+            promotions: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+            canary: Mutex::new(None),
         });
         let shared2 = Arc::clone(&shared);
         let registry2 = Arc::clone(&registry);
         let batcher = std::thread::Builder::new()
             .name("bitprune-batcher".into())
-            .spawn(move || batcher_loop(shared2, registry2, engine, cfg, out_dim))
+            .spawn(move || batcher_loop(shared2, registry2, engine, cfg, out_dim, inj))
             .map_err(|e| anyhow!("serve: spawning batcher thread: {e}"))?;
         Ok(Self { shared, registry, din, out_dim, batcher: Some(batcher) })
     }
@@ -184,11 +487,49 @@ impl Server {
         self.out_dim
     }
 
+    /// Stage `net` as a canary receiving `cfg.pct`% of traffic (see
+    /// [`super::canary`]).  Returns the staged version id; the
+    /// experiment then runs inside the batcher until it promotes or
+    /// rolls back (watch [`Self::canary_status`] /
+    /// [`ServeStats::promotions`] / [`ServeStats::rollbacks`]).
+    pub fn start_canary(
+        &self,
+        net: Arc<IntNet>,
+        label: &str,
+        cfg: CanaryConfig,
+    ) -> Result<u64> {
+        cfg.validate().map_err(|m| anyhow!("serve: {m}"))?;
+        let incumbent = self.registry.active_version();
+        // begin_canary holds the canary slot in the *registry*; only
+        // then install the controller (no canary mutex is held while
+        // touching the registry, so lock order is batcher-compatible).
+        let version = self.registry.begin_canary(net, label)?;
+        let mut slot = self.shared.canary.lock().unwrap_or_else(|p| p.into_inner());
+        *slot = Some(CanaryController::new(version, incumbent, cfg));
+        Ok(version)
+    }
+
+    /// Snapshot of the current (or last resolved) canary experiment.
+    pub fn canary_status(&self) -> Option<CanaryStatus> {
+        self.shared
+            .canary
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .as_ref()
+            .map(|c| c.status())
+    }
+
     pub fn stats(&self) -> ServeStats {
         ServeStats {
             batches: self.shared.batches.load(Ordering::Relaxed),
             requests: self.shared.requests.load(Ordering::Relaxed),
             swaps: self.shared.swaps.load(Ordering::Relaxed),
+            shed_queue_full: self.shared.shed_queue_full.load(Ordering::Relaxed),
+            shed_expired: self.shared.shed_expired.load(Ordering::Relaxed),
+            failed: self.shared.failed.load(Ordering::Relaxed),
+            canary_requests: self.shared.canary_requests.load(Ordering::Relaxed),
+            promotions: self.shared.promotions.load(Ordering::Relaxed),
+            rollbacks: self.shared.rollbacks.load(Ordering::Relaxed),
         }
     }
 
@@ -220,13 +561,32 @@ impl Drop for Server {
 }
 
 impl ServerHandle {
-    /// Enqueue one sample; returns the channel the versioned logits
-    /// row arrives on.  Fails fast on wrong input length, a shut-down
-    /// server, or a full queue (backpressure — see
-    /// [`ServeConfig::max_queue`]).
-    pub fn submit(&self, x: Vec<f32>) -> Result<Receiver<Response>> {
+    /// Enqueue one sample; returns the channel its [`ServeResult`]
+    /// arrives on.  Fails fast (typed) on wrong input length, a
+    /// shut-down server, or a full queue.  The deadline is the
+    /// server-wide default, if one is configured.
+    pub fn submit(&self, x: Vec<f32>) -> std::result::Result<Receiver<ServeResult>, ServeError> {
+        self.submit_inner(x, None)
+    }
+
+    /// [`Self::submit`] with an explicit absolute deadline: if the
+    /// request is still queued at `deadline`, it is shed with
+    /// [`ServeError::DeadlineExpired`] instead of served late.
+    pub fn submit_with_deadline(
+        &self,
+        x: Vec<f32>,
+        deadline: Instant,
+    ) -> std::result::Result<Receiver<ServeResult>, ServeError> {
+        self.submit_inner(x, Some(deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        x: Vec<f32>,
+        explicit_deadline: Option<Instant>,
+    ) -> std::result::Result<Receiver<ServeResult>, ServeError> {
         if x.len() != self.din {
-            bail!("serve: request has {} values, model wants {}", x.len(), self.din);
+            return Err(ServeError::BadInput { got: x.len(), want: self.din });
         }
         let (tx, rx) = channel();
         {
@@ -234,59 +594,152 @@ impl ServerHandle {
                 .shared
                 .queue
                 .lock()
-                .map_err(|_| anyhow!("serve: request queue poisoned"))?;
+                .map_err(|_| ServeError::Disconnected)?;
             // Check shutdown *under the queue lock*: stop() flips the
             // flag under this lock, so a request enqueued here is
             // guaranteed to be seen by the batcher's drain pass — no
             // window where a request slips in after the batcher exited
             // and blocks its caller forever.
             if self.shared.shutdown.load(Ordering::SeqCst) {
-                bail!("serve: server is shut down");
+                return Err(ServeError::ShuttingDown);
             }
+            let now = Instant::now();
             if q.len() >= self.shared.max_queue {
-                bail!(
-                    "serve: queue full ({} requests) — backpressure, retry later",
-                    q.len()
-                );
+                // DropExpired: evict already-dead queue entries first;
+                // they would be shed at dequeue anyway, and the slot
+                // is better spent on an answerable request.
+                if self.shared.shed_policy == ShedPolicy::DropExpired {
+                    self.shared.shed_expired_requests(&mut q, now);
+                }
+                if q.len() >= self.shared.max_queue {
+                    self.shared.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                    return Err(ServeError::QueueFull { queued: q.len() });
+                }
             }
-            q.push_back(Request { x, resp: tx, enqueued: Instant::now() });
+            let deadline = explicit_deadline
+                .or_else(|| self.shared.default_deadline.map(|d| now + d));
+            let id = self.shared.seq.fetch_add(1, Ordering::Relaxed);
+            q.push_back(Request { id, x, resp: tx, enqueued: now, deadline });
         }
         self.shared.cv.notify_all();
         Ok(rx)
     }
 
     /// Submit and block for the answer.
-    pub fn infer(&self, x: Vec<f32>) -> Result<Vec<f32>> {
+    pub fn infer(&self, x: Vec<f32>) -> std::result::Result<Vec<f32>, ServeError> {
         self.infer_versioned(x).map(|(_, logits)| logits)
     }
 
     /// Submit and block for the answer plus the registry version of
     /// the model that computed it (what the hot-swap tests and the
     /// `--swap-to` CLI demo key on).
-    pub fn infer_versioned(&self, x: Vec<f32>) -> Result<(u64, Vec<f32>)> {
-        let r = self
-            .submit(x)?
-            .recv()
-            .map_err(|_| anyhow!("serve: server dropped the request"))?;
-        Ok((r.version, r.logits))
+    pub fn infer_versioned(
+        &self,
+        x: Vec<f32>,
+    ) -> std::result::Result<(u64, Vec<f32>), ServeError> {
+        match self.submit(x)?.recv() {
+            Ok(Ok(r)) => Ok((r.version, r.logits)),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(ServeError::Disconnected),
+        }
+    }
+
+    /// [`Self::infer_versioned`] with bounded retry: retryable errors
+    /// ([`ServeError::is_retryable`]) back off and try again up to
+    /// `policy.max_attempts` total attempts; everything else returns
+    /// immediately.
+    pub fn infer_with_retry(
+        &self,
+        x: Vec<f32>,
+        policy: &RetryPolicy,
+    ) -> std::result::Result<(u64, Vec<f32>), ServeError> {
+        let attempts = policy.max_attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            match self.infer_versioned(x.clone()) {
+                Ok(r) => return Ok(r),
+                Err(e) if e.is_retryable() && attempt + 1 < attempts => {
+                    std::thread::sleep(policy.backoff(attempt));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 
 /// Marks the server dead when the batcher exits for *any* reason —
-/// including a panic unwinding out of the forward (e.g. a worker-pool
-/// job panicked).  Sets the shutdown flag, drops every queued request
-/// (their response Senders drop, so blocked `infer` callers get a
-/// clean error instead of hanging) and wakes everyone.
+/// including a panic unwinding out of the loop itself.  Sets the
+/// shutdown flag, answers every still-queued request with a typed
+/// [`ServeError::ShuttingDown`] (no caller blocks forever) and wakes
+/// everyone.
 struct BatcherGuard(Arc<Shared>);
 
 impl Drop for BatcherGuard {
     fn drop(&mut self) {
         self.0.shutdown.store(true, Ordering::SeqCst);
-        match self.0.queue.lock() {
-            Ok(mut q) => q.clear(),
-            Err(poisoned) => poisoned.into_inner().clear(),
+        let mut q = match self.0.queue.lock() {
+            Ok(q) => q,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for r in q.drain(..) {
+            let _ = r.resp.send(Err(ServeError::ShuttingDown));
         }
+        drop(q);
         self.0.cv.notify_all();
+    }
+}
+
+/// One sub-batch forward: gather the rows, run (with chaos spikes /
+/// injected panics applied inside the timed + caught region), return
+/// the logits and wall time — or `None` if the forward panicked.
+fn run_leg(
+    engine: &mut ServeEngine,
+    net: &IntNet,
+    batch: &[Request],
+    idxs: &[usize],
+    gather: &mut Vec<f32>,
+    inj: &Injectors,
+    is_canary: bool,
+) -> Option<(Vec<f32>, Duration)> {
+    gather.clear();
+    for &i in idxs {
+        gather.extend_from_slice(&batch[i].x);
+    }
+    let t0 = Instant::now();
+    if let Some(d) = inj.forward_spike(is_canary) {
+        std::thread::sleep(d);
+    }
+    let out = catch_unwind(AssertUnwindSafe(|| {
+        inj.maybe_forward_panic();
+        engine.forward(net, gather, idxs.len()).to_vec()
+    }));
+    out.ok().map(|v| (v, t0.elapsed()))
+}
+
+/// Send `logits` rows back to the requests at `idxs`, tagged
+/// `version`; returns how many were delivered.
+fn deliver(
+    batch: &[Request],
+    idxs: &[usize],
+    logits: &[f32],
+    out_dim: usize,
+    version: u64,
+) -> u64 {
+    for (row, &i) in logits.chunks_exact(out_dim).zip(idxs) {
+        // A client that gave up (dropped its Receiver) is not an
+        // error for the batch.
+        let _ = batch[i]
+            .resp
+            .send(Ok(Response { version, logits: row.to_vec() }));
+    }
+    idxs.len() as u64
+}
+
+/// Answer the requests at `idxs` with a typed failure.
+fn fail(batch: &[Request], idxs: &[usize], err: ServeError) {
+    for &i in idxs {
+        let _ = batch[i].resp.send(Err(err.clone()));
     }
 }
 
@@ -296,6 +749,7 @@ fn batcher_loop(
     mut engine: ServeEngine,
     cfg: ServeConfig,
     out_dim: usize,
+    inj: Injectors,
 ) {
     let _guard = BatcherGuard(Arc::clone(&shared));
     let mut gather: Vec<f32> = Vec::new();
@@ -303,67 +757,217 @@ fn batcher_loop(
     let mut last_version = 0u64;
     loop {
         batch.clear();
+        // Chaos: a wedged batcher — requests age (and deadlines
+        // expire) while it stalls.
+        if let Some(d) = inj.batch_stall() {
+            std::thread::sleep(d);
+        }
         {
             let mut q = match shared.queue.lock() {
                 Ok(g) => g,
                 Err(_) => return,
             };
-            // Wait for the first request; exit only when shut down AND
-            // drained (late-queued requests still get served).
-            while q.is_empty() {
-                if shared.shutdown.load(Ordering::SeqCst) {
-                    return;
+            // Wait for the first *live* request; exit only when shut
+            // down AND drained (late-queued requests still get
+            // served).  Expired requests are shed — typed, counted —
+            // right here at dequeue, before they cost a batch slot.
+            loop {
+                while q.is_empty() {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    q = match shared.cv.wait(q) {
+                        Ok(g) => g,
+                        Err(_) => return,
+                    };
                 }
-                q = match shared.cv.wait(q) {
-                    Ok(g) => g,
-                    Err(_) => return,
-                };
+                shared.shed_expired_requests(&mut q, Instant::now());
+                if !q.is_empty() {
+                    break;
+                }
             }
             // Dynamic micro-batching: flush at max_batch or when the
             // *oldest* request's latency deadline (its enqueue time
             // plus batch_window) expires — requests that queued while a
             // previous batch was computing have already burned part of
             // their window.
-            let deadline = q
+            let window_deadline = q
                 .front()
                 .map(|r| r.enqueued + cfg.batch_window)
                 .expect("queue is non-empty here");
             while q.len() < cfg.max_batch && !shared.shutdown.load(Ordering::SeqCst) {
                 let now = Instant::now();
-                if now >= deadline {
+                if now >= window_deadline {
                     break;
                 }
-                q = match shared.cv.wait_timeout(q, deadline - now) {
+                q = match shared.cv.wait_timeout(q, window_deadline - now) {
                     Ok((g, _)) => g,
                     Err(_) => return,
                 };
             }
+            // Deadlines may have expired during the coalescing wait.
+            shared.shed_expired_requests(&mut q, Instant::now());
             let take = q.len().min(cfg.max_batch);
             batch.extend(q.drain(..take));
         } // queue unlocked before the forward: submitters never block on compute
-        let n = batch.len();
-        gather.clear();
-        for r in &batch {
-            gather.extend_from_slice(&r.x);
+        if batch.is_empty() {
+            continue; // everything shed while coalescing
         }
         // Resolve the model once per batch: the whole batch runs on one
         // version, and holding the Arc is what gives a concurrent
         // publish its drain semantics.
-        let mv = registry.current();
-        if last_version != 0 && mv.version != last_version {
+        let active = registry.current();
+        if last_version != 0 && active.version != last_version {
             shared.swaps.fetch_add(1, Ordering::Relaxed);
         }
-        last_version = mv.version;
-        let logits = engine.forward(&mv.net, &gather, n);
-        for (row, r) in logits.chunks_exact(out_dim).zip(&batch) {
-            // A client that gave up (dropped its Receiver) is not an
-            // error for the batch.
-            let _ = r
-                .resp
-                .send(Response { version: mv.version, logits: row.to_vec() });
+        last_version = active.version;
+
+        // Canary routing: partition the batch by hashed request id.
+        // The slot lock is held only for the partition (and later the
+        // observation) — never across a forward.
+        let mut canary_idx: Vec<usize> = Vec::new();
+        let canary_split: Option<(u64, Arc<IntNet>)> = {
+            let slot = shared.canary.lock().unwrap_or_else(|p| p.into_inner());
+            slot.as_ref().filter(|c| c.active()).and_then(|c| {
+                registry.get(c.canary_version()).ok().map(|mv| {
+                    canary_idx.extend(
+                        batch
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, r)| c.routes_to_canary(r.id))
+                            .map(|(i, _)| i),
+                    );
+                    (c.canary_version(), Arc::clone(&mv.net))
+                })
+            })
+        };
+        let incumbent_idx: Vec<usize> = (0..batch.len())
+            .filter(|i| !canary_idx.contains(i))
+            .collect();
+
+        let mut served = 0u64;
+        // Incumbent leg.
+        let mut incumbent_lat = None;
+        if !incumbent_idx.is_empty() {
+            match run_leg(
+                &mut engine,
+                &active.net,
+                &batch,
+                &incumbent_idx,
+                &mut gather,
+                &inj,
+                false,
+            ) {
+                Some((logits, dur)) => {
+                    served +=
+                        deliver(&batch, &incumbent_idx, &logits, out_dim, active.version);
+                    incumbent_lat = per_sample_secs(dur, incumbent_idx.len());
+                }
+                None => {
+                    fail(&batch, &incumbent_idx, ServeError::WorkerPanic);
+                    shared
+                        .failed
+                        .fetch_add(incumbent_idx.len() as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        // Canary leg + incumbent shadow for agreement.
+        let mut canary_lat = None;
+        let mut canary_served = 0u64;
+        let mut agreements = 0u64;
+        let mut compared = 0u64;
+        if let Some((cv, cnet)) = &canary_split {
+            let cv = *cv;
+            if !canary_idx.is_empty() {
+                match run_leg(&mut engine, cnet, &batch, &canary_idx, &mut gather, &inj, true)
+                {
+                    Some((clogits, cdur)) => {
+                        canary_served =
+                            deliver(&batch, &canary_idx, &clogits, out_dim, cv);
+                        served += canary_served;
+                        shared
+                            .canary_requests
+                            .fetch_add(canary_served, Ordering::Relaxed);
+                        canary_lat = per_sample_secs(cdur, canary_idx.len());
+                        // Shadow the same rows on the incumbent for
+                        // online agreement.  Its latency feeds the
+                        // incumbent reservoir too (same work, same
+                        // side); a shadow panic just skips agreement
+                        // for this batch — the clients already have
+                        // their canary answers.
+                        if let Some((slogits, sdur)) = run_leg(
+                            &mut engine,
+                            &active.net,
+                            &batch,
+                            &canary_idx,
+                            &mut gather,
+                            &inj,
+                            false,
+                        ) {
+                            let want = argmax_rows(&slogits, out_dim);
+                            let got = argmax_rows(&clogits, out_dim);
+                            compared = got.len() as u64;
+                            agreements =
+                                got.iter().zip(&want).filter(|(a, b)| a == b).count()
+                                    as u64;
+                            if incumbent_lat.is_none() {
+                                incumbent_lat = per_sample_secs(sdur, canary_idx.len());
+                            }
+                        }
+                    }
+                    None => {
+                        fail(&batch, &canary_idx, ServeError::WorkerPanic);
+                        shared
+                            .failed
+                            .fetch_add(canary_idx.len() as u64, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        // Feed the controller and apply any promotion/rollback through
+        // the registry's atomic swap (lock order: canary slot, then
+        // registry — nothing takes them in the other order while
+        // nested).
+        if canary_split.is_some() {
+            let mut slot = shared.canary.lock().unwrap_or_else(|p| p.into_inner());
+            if let Some(ctrl) = slot.as_mut().filter(|c| c.active()) {
+                ctrl.observe(
+                    incumbent_lat,
+                    canary_lat,
+                    canary_served,
+                    agreements,
+                    compared,
+                );
+                let version = ctrl.canary_version();
+                match ctrl.evaluate() {
+                    Some(CanaryDecision::Promote) => match registry.promote_canary(version) {
+                        Ok(()) => {
+                            shared.promotions.fetch_add(1, Ordering::Relaxed);
+                            ctrl.resolve(CanaryOutcome::Promoted { version });
+                        }
+                        Err(e) => {
+                            // Registry refused (raced with an operator
+                            // action): end the experiment safely on
+                            // the incumbent.
+                            let _ = registry.end_canary(version);
+                            shared.rollbacks.fetch_add(1, Ordering::Relaxed);
+                            ctrl.resolve(CanaryOutcome::RolledBack {
+                                version,
+                                reason: format!("promotion refused: {e}"),
+                            });
+                        }
+                    },
+                    Some(CanaryDecision::Rollback { reason }) => {
+                        let _ = registry.end_canary(version);
+                        shared.rollbacks.fetch_add(1, Ordering::Relaxed);
+                        ctrl.resolve(CanaryOutcome::RolledBack { version, reason });
+                    }
+                    None => {}
+                }
+            }
         }
         shared.batches.fetch_add(1, Ordering::Relaxed);
-        shared.requests.fetch_add(n as u64, Ordering::Relaxed);
+        shared.requests.fetch_add(served, Ordering::Relaxed);
     }
 }
 
@@ -375,6 +979,10 @@ mod tests {
 
     fn small_net() -> Arc<IntNet> {
         Arc::new(synthetic_net(&[6, 14, 3], 0x5EED, 4, 6))
+    }
+
+    fn same(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
     }
 
     #[test]
@@ -403,15 +1011,12 @@ mod tests {
             .map(|s| handle.submit(s.clone()).unwrap())
             .collect();
         for (s, rx) in samples.iter().zip(pending) {
-            let got = rx.recv().unwrap();
+            let got = rx.recv().unwrap().expect("request served");
             assert_eq!(got.version, 1, "single-model server serves version 1");
             let want = net.forward(s, 1);
             assert_eq!(got.logits.len(), want.len());
             assert!(
-                got.logits
-                    .iter()
-                    .zip(&want)
-                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                same(&got.logits, &want),
                 "served answer differs from solo forward"
             );
         }
@@ -420,6 +1025,8 @@ mod tests {
         assert!(stats.batches >= 5, "max_batch 8 over 40 requests => >= 5 batches");
         assert!(stats.mean_batch() >= 1.0);
         assert_eq!(stats.swaps, 0);
+        assert_eq!(stats.shed(), 0);
+        assert_eq!(stats.failed, 0);
     }
 
     #[test]
@@ -458,12 +1065,19 @@ mod tests {
     }
 
     #[test]
-    fn submit_validates_and_shutdown_rejects() {
+    fn submit_validates_and_shutdown_rejects_typed() {
         let server = Server::start(small_net(), ServeConfig::default()).unwrap();
         let handle = server.handle();
-        assert!(handle.submit(vec![0.0; 5]).is_err(), "wrong input length");
+        assert_eq!(
+            handle.submit(vec![0.0; 5]).err(),
+            Some(ServeError::BadInput { got: 5, want: 6 })
+        );
         server.shutdown();
-        assert!(handle.infer(vec![0.0; 6]).is_err(), "server is gone");
+        assert_eq!(
+            handle.infer(vec![0.0; 6]).err(),
+            Some(ServeError::ShuttingDown)
+        );
+        assert!(!ServeError::ShuttingDown.is_retryable());
     }
 
     #[test]
@@ -488,6 +1102,7 @@ mod tests {
                 max_batch: 64,
                 batch_window: Duration::from_secs(30),
                 max_queue: 8,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
@@ -496,11 +1111,170 @@ mod tests {
             .map(|_| handle.submit(vec![0.1; 6]).unwrap())
             .collect();
         let err = handle.submit(vec![0.1; 6]).unwrap_err();
+        assert_eq!(err, ServeError::QueueFull { queued: 8 });
+        assert!(err.is_retryable() && err.is_shed());
         assert!(err.to_string().contains("queue full"), "{err}");
+        assert_eq!(server.stats().shed_queue_full, 1);
         // Shutdown still drains and answers the queued 8 without
         // waiting out the 30s window.
         let stats = server.shutdown();
         assert_eq!(stats.requests, 8);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_typed_not_served() {
+        // A long stall (no batcher progress possible: the window is
+        // long and max_batch unreachable) lets a deadline lapse; the
+        // batcher must shed it at dequeue, typed and counted, while
+        // serving the live request that follows.
+        let server = Server::start(
+            small_net(),
+            ServeConfig {
+                threads: 1,
+                max_batch: 64,
+                batch_window: Duration::from_millis(30),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        // Deadline already in the past: shed deterministically.
+        let rx = handle
+            .submit_with_deadline(vec![0.2; 6], Instant::now() - Duration::from_millis(1))
+            .unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::DeadlineExpired { .. }) => {}
+            other => panic!("expected deadline shed, got {other:?}"),
+        }
+        // A live request right behind it is served normally.
+        let out = handle.infer(vec![0.2; 6]).unwrap();
+        assert_eq!(out.len(), 3);
+        let stats = server.shutdown();
+        assert_eq!(stats.shed_expired, 1);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn default_deadline_applies_to_plain_submits() {
+        // With a server-wide deadline shorter than the batch window,
+        // a queued request expires before the window flush and is
+        // shed; stats count it.
+        let server = Server::start(
+            small_net(),
+            ServeConfig {
+                threads: 1,
+                max_batch: 64,
+                batch_window: Duration::from_millis(200),
+                deadline: Some(Duration::from_millis(5)),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        let rx = handle.submit(vec![0.3; 6]).unwrap();
+        match rx.recv().unwrap() {
+            Err(ServeError::DeadlineExpired { waited }) => {
+                assert!(waited >= Duration::from_millis(5));
+            }
+            other => panic!("expected deadline shed, got {other:?}"),
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.shed_expired, 1);
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn drop_expired_policy_makes_room_at_admission() {
+        // Queue full of already-expired requests: RejectNewest would
+        // bounce the newcomer, DropExpired sheds the dead entries and
+        // admits it.
+        let server = Server::start(
+            small_net(),
+            ServeConfig {
+                threads: 1,
+                max_batch: 64,
+                batch_window: Duration::from_secs(30),
+                max_queue: 4,
+                shed_policy: ShedPolicy::DropExpired,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        let dead = Instant::now() - Duration::from_millis(1);
+        let pending: Vec<_> = (0..4)
+            .map(|_| handle.submit_with_deadline(vec![0.1; 6], dead).unwrap())
+            .collect();
+        // 5th submission: admission evicts the 4 expired entries.
+        let live = handle.submit(vec![0.1; 6]).unwrap();
+        for rx in pending {
+            match rx.recv().unwrap() {
+                Err(ServeError::DeadlineExpired { .. }) => {}
+                other => panic!("expected shed, got {other:?}"),
+            }
+        }
+        let stats = server.stats();
+        assert_eq!(stats.shed_expired, 4);
+        assert_eq!(stats.shed_queue_full, 0);
+        drop(live);
+        server.shutdown();
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_bounded_and_deterministic() {
+        let p = RetryPolicy::default();
+        for k in 0..8 {
+            let d = p.backoff(k);
+            assert_eq!(d, p.backoff(k), "jitter must be deterministic per attempt");
+            // Cap × max jitter bounds every backoff.
+            assert!(d <= p.cap.mul_f64(1.5), "attempt {k}: {d:?}");
+            assert!(d >= p.base.mul_f64(0.5), "attempt {k}: {d:?}");
+        }
+        // Exponential growth before the cap bites.
+        assert!(p.backoff(3) > p.backoff(0));
+    }
+
+    #[test]
+    fn infer_with_retry_recovers_from_backpressure() {
+        // Tiny queue + steady drain: direct submits can hit QueueFull,
+        // but the retrying client always lands.
+        let server = Server::start(
+            small_net(),
+            ServeConfig {
+                threads: 1,
+                max_batch: 2,
+                batch_window: Duration::from_micros(100),
+                max_queue: 2,
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let handle = server.handle();
+        let policy = RetryPolicy { max_attempts: 16, ..RetryPolicy::default() };
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let h = handle.clone();
+                let p = policy.clone();
+                scope.spawn(move || {
+                    for _ in 0..25 {
+                        let (_, logits) =
+                            h.infer_with_retry(vec![0.4; 6], &p).expect("retry exhausted");
+                        assert_eq!(logits.len(), 3);
+                    }
+                });
+            }
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 100, "every retried request eventually served");
+    }
+
+    #[test]
+    fn shed_policy_parses_operator_strings() {
+        assert_eq!(ShedPolicy::parse("reject-newest"), Some(ShedPolicy::RejectNewest));
+        assert_eq!(ShedPolicy::parse("drop-expired"), Some(ShedPolicy::DropExpired));
+        assert_eq!(ShedPolicy::parse("bogus"), None);
+        assert_eq!(ShedPolicy::RejectNewest.name(), "reject-newest");
+        assert_eq!(ShedPolicy::default(), ShedPolicy::RejectNewest);
     }
 
     #[test]
@@ -530,22 +1304,104 @@ mod tests {
         let (v, logits) = handle.infer_versioned(x.clone()).unwrap();
         assert_eq!(v, 1);
         let want_a = a.forward(&x, 1);
-        assert!(logits.iter().zip(&want_a).all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert!(same(&logits, &want_a));
 
         registry.publish(Arc::clone(&b), "b").unwrap();
         let (v, logits) = handle.infer_versioned(x.clone()).unwrap();
         assert_eq!(v, 2, "post-publish requests must run on the new version");
         let want_b = b.forward(&x, 1);
-        assert!(logits.iter().zip(&want_b).all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert!(same(&logits, &want_b));
 
         // Rollback retargets again.
         registry.rollback(1).unwrap();
         let (v, logits) = handle.infer_versioned(x.clone()).unwrap();
         assert_eq!(v, 1);
-        assert!(logits.iter().zip(&want_a).all(|(p, q)| p.to_bits() == q.to_bits()));
+        assert!(same(&logits, &want_a));
 
         let stats = server.shutdown();
         assert_eq!(stats.requests, 3);
         assert_eq!(stats.swaps, 2, "publish + rollback each count as one swap");
+    }
+
+    #[test]
+    fn canary_split_tags_versions_and_bitwise_matches_each_side() {
+        // A 50% canary over async traffic: every response is tagged
+        // with the version whose solo forward it bit-matches, both
+        // sides serve, and the split follows the deterministic hash.
+        let a = small_net();
+        let b = Arc::new(synthetic_net(&[6, 14, 3], 0xCAFE, 4, 6));
+        let registry =
+            Arc::new(crate::deploy::ModelRegistry::new(Arc::clone(&a), "a").unwrap());
+        let server = Server::start_registry(
+            Arc::clone(&registry),
+            ServeConfig {
+                threads: 1,
+                max_batch: 8,
+                batch_window: Duration::from_micros(200),
+                ..ServeConfig::default()
+            },
+        )
+        .unwrap();
+        let cv = server
+            .start_canary(
+                Arc::clone(&b),
+                "candidate",
+                CanaryConfig {
+                    pct: 50,
+                    window: 1_000_000, // never closes: pure split test
+                    ..CanaryConfig::default()
+                },
+            )
+            .unwrap();
+        assert_eq!(cv, 2);
+        assert_eq!(registry.active_version(), 1, "canary is staged, not active");
+        let handle = server.handle();
+        let mut rng = Rng::new(0xD0);
+        let samples: Vec<Vec<f32>> = (0..64)
+            .map(|_| (0..6).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let pending: Vec<_> = samples
+            .iter()
+            .map(|s| handle.submit(s.clone()).unwrap())
+            .collect();
+        let mut on_canary = 0u64;
+        for (s, rx) in samples.iter().zip(pending) {
+            let got = rx.recv().unwrap().expect("served");
+            match got.version {
+                1 => assert!(same(&got.logits, &a.forward(s, 1))),
+                2 => {
+                    assert!(same(&got.logits, &b.forward(s, 1)));
+                    on_canary += 1;
+                }
+                v => panic!("impossible version {v}"),
+            }
+        }
+        assert!(on_canary > 0, "canary must see traffic at 50%");
+        assert!(on_canary < 64, "canary must not see all traffic");
+        let status = server.canary_status().expect("experiment in flight");
+        assert_eq!(status.served, on_canary);
+        assert_eq!(status.canary_version, 2);
+        assert!(status.outcome.is_none());
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 64);
+        assert_eq!(stats.canary_requests, on_canary);
+    }
+
+    #[test]
+    fn second_canary_while_active_is_refused() {
+        let a = small_net();
+        let server = Server::start(Arc::clone(&a), ServeConfig::default()).unwrap();
+        server
+            .start_canary(Arc::clone(&a), "c1", CanaryConfig::default())
+            .unwrap();
+        assert!(server
+            .start_canary(Arc::clone(&a), "c2", CanaryConfig::default())
+            .is_err());
+        // Bad operator config is refused before touching the registry.
+        let sv = Server::start(Arc::clone(&a), ServeConfig::default()).unwrap();
+        assert!(sv
+            .start_canary(a, "bad", CanaryConfig { pct: 0, ..CanaryConfig::default() })
+            .is_err());
+        assert_eq!(sv.registry().canary_version(), None);
     }
 }

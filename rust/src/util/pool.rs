@@ -9,64 +9,154 @@
 //! the borrowed data provably outlives the work (the same contract
 //! `std::thread::scope` provides, without the per-call spawn/join).
 //!
+//! Failure hardening: a job that panics is caught on the worker
+//! (`catch_unwind`) and reported to the dispatcher as a typed
+//! [`PoolError`] from [`WorkerPool::try_run_scoped`] — the pool itself
+//! is never poisoned and never deadlocks.  A worker *thread* that dies
+//! (a panic escaping the catch, or a chaos-injected exit) is respawned
+//! with an identical context before the next dispatch, and the wait
+//! loop self-heals mid-round: if completions stall, dead workers are
+//! replaced and the still-queued jobs drain on the replacements.
+//!
 //! Jobs must not call back into `run_scoped` on the same pool: a job
 //! waiting on jobs can deadlock once every worker is occupied.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// A queued job plus the completion channel it must signal (`true` if
 /// the job ran to completion, `false` if it panicked).
 type Job = (Box<dyn FnOnce() + Send + 'static>, Sender<bool>);
 
+/// Typed failure from [`WorkerPool::try_run_scoped`].  The pool stays
+/// usable after any of these.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// `panicked` of the `jobs` dispatched jobs panicked; the rest ran
+    /// to completion (every job signalled, so no borrow escaped).
+    JobPanicked { panicked: usize, jobs: usize },
+}
+
+impl std::fmt::Display for PoolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::JobPanicked { panicked, jobs } => {
+                write!(f, "worker pool: {panicked} of {jobs} job(s) panicked")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Everything a worker thread runs with; the pool keeps a copy so dead
+/// workers can be respawned with an identical context.
+#[derive(Clone)]
+struct WorkerCtx {
+    rx: Arc<Mutex<Receiver<Job>>>,
+    #[cfg(feature = "chaos")]
+    chaos: Option<Arc<crate::serve::chaos::Chaos>>,
+}
+
+/// How long the completion wait runs before checking for (and
+/// replacing) dead workers.  Only paid when a worker actually died
+/// mid-round; the healthy path never times out.
+const HEAL_INTERVAL: Duration = Duration::from_millis(20);
+
 pub struct WorkerPool {
     /// `None` only during drop (taking it closes the channel, which
     /// terminates the worker loops).
     tx: Option<Sender<Job>>,
-    handles: Vec<JoinHandle<()>>,
+    /// Guarded so the dispatcher can swap dead handles for respawns.
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    ctx: WorkerCtx,
     workers: usize,
+    respawns: AtomicU64,
 }
 
 impl WorkerPool {
     /// Spawn `workers` persistent threads (at least one).
     pub fn new(workers: usize) -> Self {
-        let workers = workers.max(1);
         let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        let handles = (0..workers)
-            .map(|i| {
-                let rx = Arc::clone(&rx);
-                std::thread::Builder::new()
-                    .name(format!("bitprune-pool-{i}"))
-                    .spawn(move || worker_loop(rx))
-                    .expect("spawning worker-pool thread")
-            })
-            .collect();
-        Self { tx: Some(tx), handles, workers }
+        let ctx = WorkerCtx {
+            rx: Arc::new(Mutex::new(rx)),
+            #[cfg(feature = "chaos")]
+            chaos: None,
+        };
+        Self::start(workers, tx, ctx)
+    }
+
+    /// [`Self::new`] with a fault injector wired into every worker
+    /// (chaos builds only — see `serve::chaos`).
+    #[cfg(feature = "chaos")]
+    pub fn with_chaos(
+        workers: usize,
+        chaos: Option<Arc<crate::serve::chaos::Chaos>>,
+    ) -> Self {
+        let (tx, rx) = channel::<Job>();
+        let ctx = WorkerCtx { rx: Arc::new(Mutex::new(rx)), chaos };
+        Self::start(workers, tx, ctx)
+    }
+
+    fn start(workers: usize, tx: Sender<Job>, ctx: WorkerCtx) -> Self {
+        let workers = workers.max(1);
+        let handles = (0..workers).map(|i| spawn_worker(i, ctx.clone())).collect();
+        Self {
+            tx: Some(tx),
+            handles: Mutex::new(handles),
+            ctx,
+            workers,
+            respawns: AtomicU64::new(0),
+        }
     }
 
     /// Pool sized to the machine (`available_parallelism`).
     pub fn with_default_size() -> Self {
-        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-        Self::new(n)
+        Self::new(default_workers())
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    /// How many dead worker threads have been replaced so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
     /// Run `jobs` on the pool and block until all of them have
     /// completed.  Jobs may borrow data from the caller's stack: because
     /// this method does not return until every job has signalled
     /// completion, those borrows cannot be outlived (the
-    /// `std::thread::scope` guarantee).  Panics if any job panicked.
+    /// `std::thread::scope` guarantee).  Panics if any job panicked —
+    /// use [`Self::try_run_scoped`] to handle that as a typed error.
     pub fn run_scoped<'a>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if let Err(e) = self.try_run_scoped(jobs) {
+            panic!("{e}");
+        }
+    }
+
+    /// [`Self::run_scoped`] with job panics surfaced as a typed
+    /// [`PoolError`] instead of a propagated panic.  Either way every
+    /// job has signalled before this returns, so the scoped-borrow
+    /// guarantee is identical.
+    pub fn try_run_scoped<'a>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'a>>,
+    ) -> Result<(), PoolError> {
         let njobs = jobs.len();
         if njobs == 0 {
-            return;
+            return Ok(());
         }
+        // Replace any worker that died since the last round *before*
+        // queueing: dispatching into a fully-dead pool would strand
+        // the jobs (the wait loop below would eventually heal it, but
+        // cheaper to not get there).
+        self.respawn_dead();
         let (done_tx, done_rx) = channel::<bool>();
         let tx = self.tx.as_ref().expect("worker pool is shut down");
         for job in jobs {
@@ -84,22 +174,74 @@ impl WorkerPool {
             tx.send((job, done_tx.clone()))
                 .expect("worker pool channel closed");
         }
-        let mut ok = true;
-        for _ in 0..njobs {
-            // recv cannot Err while we hold `done_tx`; workers always
-            // send exactly once per job.
-            ok &= done_rx.recv().expect("worker pool completion channel broken");
+        let mut panicked = 0usize;
+        let mut remaining = njobs;
+        while remaining > 0 {
+            match done_rx.recv_timeout(HEAL_INTERVAL) {
+                Ok(ok) => {
+                    if !ok {
+                        panicked += 1;
+                    }
+                    remaining -= 1;
+                }
+                // A stall means a worker died between claiming the
+                // round and finishing it, or every worker is dead and
+                // jobs sit unclaimed in the channel.  Replacements
+                // pick the queued jobs straight back up — the round
+                // always completes.
+                Err(RecvTimeoutError::Timeout) => self.respawn_dead(),
+                // Impossible while we hold `done_tx`.
+                Err(RecvTimeoutError::Disconnected) => {
+                    unreachable!("worker pool completion channel broken")
+                }
+            }
         }
-        assert!(ok, "a worker-pool job panicked");
+        if panicked > 0 {
+            Err(PoolError::JobPanicked { panicked, jobs: njobs })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// Swap a fresh thread in for every finished (dead) worker.
+    fn respawn_dead(&self) {
+        let mut handles = self.handles.lock().unwrap_or_else(|p| p.into_inner());
+        for (i, h) in handles.iter_mut().enumerate() {
+            if h.is_finished() {
+                let fresh = spawn_worker(i, self.ctx.clone());
+                let dead = std::mem::replace(h, fresh);
+                let _ = dead.join();
+                self.respawns.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 }
 
-fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
+pub(crate) fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+fn spawn_worker(i: usize, ctx: WorkerCtx) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("bitprune-pool-{i}"))
+        .spawn(move || worker_loop(ctx))
+        .expect("spawning worker-pool thread")
+}
+
+fn worker_loop(ctx: WorkerCtx) {
     loop {
+        // Chaos: a worker may be told to die *between* jobs — never
+        // while holding one, so no claimed job is ever lost.
+        #[cfg(feature = "chaos")]
+        if let Some(c) = &ctx.chaos {
+            if c.worker_should_exit() {
+                return;
+            }
+        }
         // Hold the lock only while waiting for one message; the guard
         // drops at the end of the statement, before the job runs.
         let msg = {
-            let guard = match rx.lock() {
+            let guard = match ctx.rx.lock() {
                 Ok(g) => g,
                 Err(_) => return,
             };
@@ -109,7 +251,17 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
             Ok(j) => j,
             Err(_) => return, // pool dropped
         };
-        let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+        let ok = catch_unwind(AssertUnwindSafe(|| {
+            // Chaos: an injected panic *inside* the job boundary —
+            // exercises the exact catch/report path a real GEMM
+            // kernel panic would take.
+            #[cfg(feature = "chaos")]
+            if let Some(c) = &ctx.chaos {
+                c.maybe_job_panic();
+            }
+            job()
+        }))
+        .is_ok();
         let _ = done.send(ok);
     }
 }
@@ -117,7 +269,8 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Job>>>) {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         self.tx.take(); // closes the channel; workers exit their loops
-        for h in self.handles.drain(..) {
+        let mut handles = self.handles.lock().unwrap_or_else(|p| p.into_inner());
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -170,6 +323,7 @@ mod tests {
     fn empty_job_list_is_a_noop() {
         let pool = WorkerPool::new(1);
         pool.run_scoped(Vec::new());
+        assert_eq!(pool.try_run_scoped(Vec::new()), Ok(()));
     }
 
     #[test]
@@ -194,5 +348,107 @@ mod tests {
         })];
         pool.run_scoped(jobs);
         assert_eq!(flag.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn try_run_scoped_reports_typed_error_without_poisoning() {
+        let pool = WorkerPool::new(2);
+        let boom: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| panic!("boom 1")),
+            Box::new(|| {}),
+            Box::new(|| panic!("boom 2")),
+        ];
+        assert_eq!(
+            pool.try_run_scoped(boom),
+            Err(PoolError::JobPanicked { panicked: 2, jobs: 3 })
+        );
+        // No poison, no deadlock: the next round is clean.
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        assert_eq!(pool.try_run_scoped(jobs), Ok(()));
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn panic_mid_batch_leaves_siblings_and_results_intact() {
+        // A panic in one job of a data-parallel batch must not corrupt
+        // or skip the sibling jobs: the surviving chunks are
+        // bit-identical to a clean run, round after round.
+        let pool = WorkerPool::new(3);
+        for round in 0..10 {
+            let mut data = vec![0u64; 600];
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+                .chunks_mut(100)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    Box::new(move || {
+                        if i == 2 {
+                            panic!("mid-batch boom");
+                        }
+                        for (j, v) in chunk.iter_mut().enumerate() {
+                            *v = (i * 100 + j) as u64;
+                        }
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            assert_eq!(
+                pool.try_run_scoped(jobs),
+                Err(PoolError::JobPanicked { panicked: 1, jobs: 6 }),
+                "round {round}"
+            );
+            for (i, v) in data.iter().enumerate() {
+                let chunk = i / 100;
+                let want = if chunk == 2 { 0 } else { i as u64 };
+                assert_eq!(*v, want, "round {round}: index {i}");
+            }
+        }
+        // Healthy rounds after all that are bit-identical to a fresh
+        // pool's output.
+        let mut data = vec![0u64; 600];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+            .chunks_mut(100)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 100 + j) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+        assert_eq!(pool.respawns(), 0, "caught panics never kill workers");
+    }
+
+    #[test]
+    fn many_panics_across_rounds_never_deadlock() {
+        // Regression guard for the old assert!-based dispatcher: a
+        // panic on every round, interleaved with healthy jobs, must
+        // neither hang run_scoped nor wedge the queue.
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        for _ in 0..25 {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {
+                    done.fetch_add(1, Ordering::Relaxed);
+                }),
+                Box::new(|| panic!("round boom")),
+                Box::new(|| {
+                    done.fetch_add(1, Ordering::Relaxed);
+                }),
+            ];
+            let err = pool.try_run_scoped(jobs).unwrap_err();
+            assert_eq!(err, PoolError::JobPanicked { panicked: 1, jobs: 3 });
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 50);
     }
 }

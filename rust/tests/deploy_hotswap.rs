@@ -16,9 +16,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use bitprune::deploy::ModelRegistry;
+use bitprune::deploy::{ModelRegistry, RegistryError};
 use bitprune::infer::IntNet;
-use bitprune::serve::{synthetic_net, ServeConfig, Server};
+use bitprune::serve::{synthetic_net, CanaryConfig, CanaryOutcome, ServeConfig, Server};
 use bitprune::util::rng::Rng;
 
 const DIMS: &[usize] = &[10, 22, 4];
@@ -65,6 +65,7 @@ fn swap_under_concurrent_traffic_never_drops_or_mixes() {
             max_batch: 8,
             batch_window: Duration::from_micros(300),
             max_queue: 4096,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -183,6 +184,7 @@ fn repeated_swaps_stay_consistent() {
             max_batch: 4,
             batch_window: Duration::from_micros(200),
             max_queue: 1024,
+            ..ServeConfig::default()
         },
     )
     .unwrap();
@@ -214,4 +216,214 @@ fn repeated_swaps_stay_consistent() {
     let stats = server.shutdown();
     assert_eq!(stats.requests, 60);
     assert!(stats.swaps >= 1);
+}
+
+#[test]
+fn rollback_past_retention_is_a_typed_error() {
+    // Publish past the retention window, then ask for a trimmed
+    // version: the error names the version and what *is* retained, and
+    // the active version is untouched.
+    let registry = ModelRegistry::with_retain(fixture(1), "v1", 2).unwrap();
+    for seed in 2u64..=4 {
+        registry.publish(fixture(seed), &format!("v{seed}")).unwrap();
+    }
+    // retain=2 ⇒ only versions 3 and 4 survive.
+    match registry.rollback(1) {
+        Err(RegistryError::NotRetained { version, retained }) => {
+            assert_eq!(version, 1);
+            assert_eq!(retained, vec![3, 4]);
+        }
+        other => panic!("expected NotRetained, got {other:?}"),
+    }
+    assert_eq!(registry.active_version(), 4);
+    // A retained version still rolls back fine afterwards.
+    registry.rollback(3).unwrap();
+    assert_eq!(registry.active_version(), 3);
+}
+
+#[test]
+fn canary_blocks_publish_and_rollback_until_resolved() {
+    // While an experiment is in flight, version changes that would
+    // invalidate it are refused — typed, with the canary version in
+    // the error. Ending the canary unblocks them.
+    let registry = ModelRegistry::new(fixture(0xA), "a").unwrap();
+    registry.publish(fixture(0xB), "b").unwrap();
+    let cv = registry.begin_canary(fixture(0xC), "candidate").unwrap();
+    assert_eq!(registry.canary_version(), Some(cv));
+    assert_eq!(registry.active_version(), 2, "staging must not swap");
+    assert_eq!(
+        registry.publish(fixture(0xD), "d").unwrap_err(),
+        RegistryError::CanaryActive { canary: cv }
+    );
+    assert_eq!(
+        registry.rollback(1).unwrap_err(),
+        RegistryError::CanaryActive { canary: cv }
+    );
+    // Promoting a non-canary version is also refused.
+    assert_eq!(
+        registry.promote_canary(1).unwrap_err(),
+        RegistryError::NotCanary { version: 1, canary: Some(cv) }
+    );
+    registry.end_canary(cv).unwrap();
+    assert_eq!(registry.canary_version(), None);
+    assert_eq!(registry.active_version(), 2, "ending leaves the incumbent");
+    registry.publish(fixture(0xD), "d").unwrap();
+    registry.rollback(2).unwrap();
+    assert_eq!(registry.active_version(), 2);
+    // With no canary in flight, end/promote are typed no-ops.
+    assert_eq!(
+        registry.end_canary(cv).unwrap_err(),
+        RegistryError::NotCanary { version: cv, canary: None }
+    );
+}
+
+#[test]
+fn drain_refuses_publishes_but_allows_emergency_rollback() {
+    let registry = ModelRegistry::new(fixture(0xA), "a").unwrap();
+    registry.publish(fixture(0xB), "b").unwrap();
+    registry.begin_drain();
+    assert!(registry.is_draining());
+    assert_eq!(
+        registry.publish(fixture(0xC), "c").unwrap_err(),
+        RegistryError::Draining
+    );
+    assert_eq!(
+        registry.begin_canary(fixture(0xC), "c").unwrap_err(),
+        RegistryError::Draining
+    );
+    // Serving continues, and rollback — the emergency path — still
+    // works during drain.
+    assert_eq!(registry.current().version, 2);
+    registry.rollback(1).unwrap();
+    assert_eq!(registry.active_version(), 1);
+}
+
+#[test]
+fn healthy_canary_promotes_on_live_traffic() {
+    // Canary = the incumbent's identical twin: agreement is 100% and
+    // latency statistically indistinguishable, so with a generous
+    // latency guard the controller must promote after the configured
+    // healthy windows — visible to clients as a version swap.
+    let net = fixture(0x77);
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), "a").unwrap());
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let cv = server
+        .start_canary(
+            Arc::clone(&net),
+            "twin",
+            CanaryConfig {
+                pct: 50,
+                window: 8,
+                promote_after: 2,
+                min_agreement: 0.95,
+                // Identical nets can still jitter on wall-clock; this
+                // test pins the promotion logic, not the latency gate.
+                max_latency_ratio: 1000.0,
+            },
+        )
+        .unwrap();
+    assert_eq!(cv, 2);
+    let handle = server.handle();
+    let mut rng = Rng::new(0x9);
+    let mut promoted_at = None;
+    for i in 0..400 {
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (version, logits) = handle.infer_versioned(x.clone()).unwrap();
+        assert!(same(&logits, &net.forward(&x, 1)), "twin must answer identically");
+        assert!(version == 1 || version == 2, "impossible version {version}");
+        if registry.active_version() == cv {
+            promoted_at = Some(i);
+            break;
+        }
+    }
+    assert!(
+        promoted_at.is_some(),
+        "canary never promoted: {:?}",
+        server.canary_status()
+    );
+    let status = server.canary_status().unwrap();
+    assert_eq!(status.outcome, Some(CanaryOutcome::Promoted { version: cv }));
+    assert_eq!(status.agreement(), Some(1.0));
+    assert_eq!(registry.canary_version(), None, "promotion clears the canary slot");
+    // Post-promotion traffic runs on the promoted version.
+    let (version, _) = handle.infer_versioned(vec![0.1; DIMS[0]]).unwrap();
+    assert_eq!(version, cv);
+    let stats = server.shutdown();
+    assert_eq!(stats.promotions, 1);
+    assert_eq!(stats.rollbacks, 0);
+    assert!(stats.canary_requests > 0);
+}
+
+#[test]
+fn disagreeing_canary_rolls_back_before_full_promotion() {
+    // Canary = a differently-seeded net: argmaxes disagree on a large
+    // fraction of random inputs, so the first closed window must roll
+    // it back. The incumbent never stops being active.
+    let net_a = fixture(0xA11CE);
+    let net_b = fixture(0xB0B);
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net_a), "a").unwrap());
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let cv = server
+        .start_canary(
+            Arc::clone(&net_b),
+            "bad",
+            CanaryConfig {
+                pct: 50,
+                window: 16,
+                promote_after: 3,
+                min_agreement: 0.99,
+                max_latency_ratio: 1000.0,
+            },
+        )
+        .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(0x51);
+    let mut resolved = false;
+    for _ in 0..600 {
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        handle.infer_versioned(x).unwrap();
+        if let Some(s) = server.canary_status() {
+            if s.outcome.is_some() {
+                resolved = true;
+                break;
+            }
+        }
+    }
+    assert!(resolved, "experiment never resolved: {:?}", server.canary_status());
+    let status = server.canary_status().unwrap();
+    match &status.outcome {
+        Some(CanaryOutcome::RolledBack { version, reason }) => {
+            assert_eq!(*version, cv);
+            assert!(reason.contains("disagreement"), "unexpected reason: {reason}");
+        }
+        other => panic!("expected rollback, got {other:?}"),
+    }
+    assert_eq!(registry.active_version(), 1, "incumbent must stay active");
+    assert_eq!(registry.canary_version(), None);
+    // Post-rollback traffic is 100% incumbent.
+    let x = vec![0.2f32; DIMS[0]];
+    let (version, logits) = handle.infer_versioned(x.clone()).unwrap();
+    assert_eq!(version, 1);
+    assert!(same(&logits, &net_a.forward(&x, 1)));
+    let stats = server.shutdown();
+    assert_eq!(stats.rollbacks, 1);
+    assert_eq!(stats.promotions, 0);
 }

@@ -1,0 +1,433 @@
+//! Deterministic fault-injection suite (`cargo test --features chaos`).
+//!
+//! Every test here runs with injected faults — dying workers, panicking
+//! jobs, panicking batch forwards, wedged batchers, latency spikes,
+//! corrupted-logit canaries — and asserts the fleet's hard invariants:
+//!
+//! 1. **No request is silently lost**: every submit resolves to logits
+//!    or a typed `ServeError`, and the stats counters account for every
+//!    one of them exactly.
+//! 2. **Dead workers are respawned** and post-respawn forwards are
+//!    bit-identical to a healthy pool's.
+//! 3. **A corrupted (or slow) canary is auto-rolled-back** before it
+//!    ever reaches 100% of traffic; the incumbent never stops serving.
+//!
+//! Injectors are every-Nth-event counters, so fault schedules are a
+//! pure function of the event sequence; the seed (`CHAOS_SEED`, pinned
+//! in CI) feeds fixture construction.  See `src/serve/chaos.rs`.
+
+#![cfg(feature = "chaos")]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bitprune::deploy::ModelRegistry;
+use bitprune::infer::IntNet;
+use bitprune::serve::chaos::{corrupted_twin, pinned_seed, Chaos, ChaosConfig};
+use bitprune::serve::{
+    synthetic_net, CanaryConfig, CanaryOutcome, RetryPolicy, ServeConfig, ServeEngine,
+    ServeError, Server, ShedPolicy,
+};
+use bitprune::util::pool::{PoolError, WorkerPool};
+use bitprune::util::rng::Rng;
+
+const DIMS: &[usize] = &[10, 22, 4];
+
+fn fixture(seed: u64) -> Arc<IntNet> {
+    Arc::new(synthetic_net(DIMS, seed, 4, 6))
+}
+
+fn same(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn no_request_silently_lost_under_full_chaos() {
+    // Stalls, forward panics and latency spikes all at once, against a
+    // tiny bounded queue with tight deadlines: whatever happens, all
+    // 300 submissions must resolve to exactly one typed outcome, and
+    // the stats must account for every single one.
+    let seed = pinned_seed();
+    let net = fixture(seed);
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), "v1").unwrap());
+    let chaos = Chaos::new(ChaosConfig {
+        forward_panic_every: 13,
+        stall_every: 5,
+        stall: Duration::from_millis(30),
+        spike_every: 11,
+        spike: Duration::from_millis(1),
+        ..ChaosConfig::default()
+    });
+    let server = Server::start_chaos(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            max_queue: 64,
+            deadline: Some(Duration::from_millis(10)),
+            shed_policy: ShedPolicy::DropExpired,
+        },
+        Arc::clone(&chaos),
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(seed ^ 0xC1);
+    let total = 300usize;
+    let (mut served, mut queue_full, mut expired, mut panicked) = (0u64, 0u64, 0u64, 0u64);
+    let mut pending = Vec::new();
+    for _ in 0..total {
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        match handle.submit(x) {
+            Ok(rx) => pending.push(rx),
+            Err(ServeError::QueueFull { .. }) => {
+                queue_full += 1;
+                // Pace on backpressure so the batcher makes progress
+                // and the faults actually interleave with live load.
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            Err(e) => panic!("unexpected admission error: {e:?}"),
+        }
+    }
+    for rx in pending {
+        // `recv` erroring would mean the server dropped the request
+        // without answering — the one thing that must never happen.
+        match rx.recv().expect("request silently lost") {
+            Ok(r) => {
+                assert_eq!(r.logits.len(), 4);
+                served += 1;
+            }
+            Err(ServeError::DeadlineExpired { .. }) => expired += 1,
+            Err(ServeError::WorkerPanic) => panicked += 1,
+            Err(e) => panic!("unexpected outcome: {e:?}"),
+        }
+    }
+    assert_eq!(served + queue_full + expired + panicked, total as u64);
+    let stats = server.shutdown();
+    // The ledger must balance exactly: what clients saw is what the
+    // server counted.
+    assert_eq!(stats.requests, served);
+    assert_eq!(stats.shed_queue_full, queue_full);
+    assert_eq!(stats.shed_expired, expired);
+    assert_eq!(stats.failed, panicked);
+    assert!(served > 0, "chaos must not stop the server from serving");
+    // The injectors actually fired (the test would be vacuous otherwise).
+    assert!(chaos.injected_stalls() > 0, "no stall was injected");
+    assert_eq!(
+        panicked > 0,
+        chaos.injected_forward_panics() > 0,
+        "WorkerPanic outcomes must correspond to injected forward panics"
+    );
+}
+
+#[test]
+fn stalled_batcher_sheds_expired_requests_typed() {
+    // A batcher wedged on every dequeue (50ms stalls) against 5ms
+    // deadlines: every queued request must come back as a typed
+    // DeadlineExpired — shed, counted, never silently dropped.
+    let net = fixture(pinned_seed());
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), "v1").unwrap());
+    let chaos = Chaos::new(ChaosConfig {
+        stall_every: 1,
+        stall: Duration::from_millis(50),
+        ..ChaosConfig::default()
+    });
+    let server = Server::start_chaos(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 64,
+            batch_window: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+        Arc::clone(&chaos),
+    )
+    .unwrap();
+    let handle = server.handle();
+    let deadline = Instant::now() + Duration::from_millis(5);
+    let pending: Vec<_> = (0..10)
+        .map(|_| handle.submit_with_deadline(vec![0.1; DIMS[0]], deadline).unwrap())
+        .collect();
+    for rx in pending {
+        match rx.recv().expect("request silently lost") {
+            Err(ServeError::DeadlineExpired { waited }) => {
+                assert!(waited >= Duration::from_millis(5));
+            }
+            other => panic!("expected deadline shed under stall, got {other:?}"),
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.shed_expired, 10);
+    assert_eq!(stats.requests, 0);
+    assert!(chaos.injected_stalls() > 0);
+}
+
+#[test]
+fn injected_job_panics_are_typed_and_exactly_counted() {
+    // Every 4th pool job panics: the error is typed with exact counts,
+    // the pool is never poisoned, and the schedule is deterministic
+    // across rounds (jobs 4,8 then 12,16 — two per round of eight).
+    let chaos = Chaos::new(ChaosConfig { job_panic_every: 4, ..ChaosConfig::default() });
+    let pool = WorkerPool::with_chaos(2, Some(Arc::clone(&chaos)));
+    for round in 1..=3u64 {
+        let jobs: Vec<Box<dyn FnOnce() + Send>> =
+            (0..8).map(|_| Box::new(|| {}) as Box<dyn FnOnce() + Send>).collect();
+        match pool.try_run_scoped(jobs) {
+            Err(PoolError::JobPanicked { panicked, jobs }) => {
+                assert_eq!(jobs, 8);
+                assert_eq!(panicked, 2, "round {round}: every 4th of 8 jobs");
+            }
+            Ok(()) => panic!("round {round}: injected panics did not surface"),
+        }
+        assert_eq!(chaos.injected_job_panics(), 2 * round);
+    }
+    // Caught panics kill jobs, not workers: nothing needed respawning.
+    assert_eq!(pool.respawns(), 0);
+}
+
+#[test]
+fn dying_workers_are_respawned_and_results_stay_correct() {
+    // A worker thread exits on every 3rd poll; the pool must replace
+    // it (respawns > 0) and every round's results must still be exact
+    // — including rounds dispatched into a partially-dead pool.
+    let chaos =
+        Chaos::new(ChaosConfig { worker_exit_every: 3, ..ChaosConfig::default() });
+    let pool = WorkerPool::with_chaos(3, Some(Arc::clone(&chaos)));
+    for round in 0..20u64 {
+        let mut results = vec![0u64; 12];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = results
+            .chunks_mut(2)
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = round * 100 + (i * 2 + j) as u64;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        for (k, v) in results.iter().enumerate() {
+            assert_eq!(*v, round * 100 + k as u64, "round {round} slot {k}");
+        }
+    }
+    assert!(chaos.injected_exits() > 0, "no worker exit was injected");
+    assert!(pool.respawns() > 0, "dead workers were never respawned");
+}
+
+#[test]
+fn respawned_pool_forwards_big_batches_bit_identical() {
+    // A net big enough to cross the pooled-dispatch threshold
+    // (n*din*dout >= 2^20), forwarded repeatedly while workers keep
+    // dying: every forward must be bit-identical to the healthy
+    // per-call reference.
+    let seed = pinned_seed();
+    let net = synthetic_net(&[256, 512, 10], seed, 4, 6);
+    let n = 16usize; // 16*256*512 = 2^21: layer 0 dispatches to the pool
+    let mut rng = Rng::new(seed ^ 0xB16);
+    let x: Vec<f32> = (0..n * 256).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let want = net.forward(&x, n);
+    let chaos =
+        Chaos::new(ChaosConfig { worker_exit_every: 3, ..ChaosConfig::default() });
+    let mut engine = ServeEngine::with_chaos(4, Some(Arc::clone(&chaos)));
+    for i in 0..10 {
+        let got = engine.forward(&net, &x, n);
+        assert!(same(got, &want), "forward {i} diverged after worker deaths");
+    }
+    assert!(chaos.injected_exits() > 0);
+    assert!(engine.pool().respawns() > 0, "engine pool never respawned a worker");
+}
+
+#[test]
+fn forward_panics_surface_typed_and_retry_recovers() {
+    // Sequential load with every 3rd batch forward panicking.  Plain
+    // clients see typed retryable WorkerPanic; a retrying client always
+    // lands.  Single-client sequential traffic makes the whole schedule
+    // exact: 20 successes need 29 forwards, 9 of which panic.
+    let net = fixture(pinned_seed());
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), "v1").unwrap());
+    let chaos =
+        Chaos::new(ChaosConfig { forward_panic_every: 3, ..ChaosConfig::default() });
+    let server = Server::start_chaos(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_micros(100),
+            ..ServeConfig::default()
+        },
+        Arc::clone(&chaos),
+    )
+    .unwrap();
+    let handle = server.handle();
+    let policy = RetryPolicy::default();
+    for _ in 0..20 {
+        let (v, logits) =
+            handle.infer_with_retry(vec![0.3; DIMS[0]], &policy).expect("retry exhausted");
+        assert_eq!(v, 1);
+        assert!(same(&logits, &net.forward(&vec![0.3; DIMS[0]], 1)));
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 20);
+    assert_eq!(stats.failed, 9, "every 3rd of 29 forwards panicked");
+    assert_eq!(chaos.injected_forward_panics(), 9);
+    assert!(ServeError::WorkerPanic.is_retryable());
+}
+
+#[test]
+fn corrupted_canary_rolls_back_before_full_promotion() {
+    // The headline invariant: a canary serving corrupted logits (same
+    // shape, garbage weights) must be auto-rolled-back on online
+    // disagreement — it never becomes the active version, and after
+    // resolution 100% of traffic is back on the incumbent.
+    let seed = pinned_seed();
+    let net = fixture(seed);
+    let bad = Arc::new(corrupted_twin(&net, seed ^ 0xBAD));
+    // Precondition: the twin really is corrupted (argmaxes disagree).
+    let mut rng = Rng::new(seed ^ 0x9E);
+    let probes: Vec<Vec<f32>> = (0..64)
+        .map(|_| (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let disagreements = probes
+        .iter()
+        .filter(|x| {
+            let a = net.forward(x, 1);
+            let b = bad.forward(x, 1);
+            argmax(&a) != argmax(&b)
+        })
+        .count();
+    assert!(disagreements > 6, "twin must disagree well past the 1% gate");
+
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), "good").unwrap());
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let cv = server
+        .start_canary(
+            Arc::clone(&bad),
+            "corrupted",
+            CanaryConfig {
+                pct: 30,
+                window: 16,
+                promote_after: 3,
+                min_agreement: 0.99,
+                max_latency_ratio: 1000.0,
+            },
+        )
+        .unwrap();
+    let handle = server.handle();
+    let mut resolved = false;
+    for _ in 0..800 {
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (v, _) = handle.infer_versioned(x).unwrap();
+        assert!(v == 1 || v == cv, "impossible version {v}");
+        assert_ne!(
+            registry.active_version(),
+            cv,
+            "corrupted canary must never become active"
+        );
+        if server.canary_status().is_some_and(|s| s.outcome.is_some()) {
+            resolved = true;
+            break;
+        }
+    }
+    assert!(resolved, "canary never resolved: {:?}", server.canary_status());
+    let status = server.canary_status().unwrap();
+    match &status.outcome {
+        Some(CanaryOutcome::RolledBack { version, reason }) => {
+            assert_eq!(*version, cv);
+            assert!(reason.contains("disagreement"), "unexpected reason: {reason}");
+        }
+        other => panic!("corrupted canary must roll back, got {other:?}"),
+    }
+    assert_eq!(registry.active_version(), 1);
+    assert_eq!(registry.canary_version(), None);
+    // Post-rollback: all traffic on the incumbent again.
+    for _ in 0..10 {
+        let (v, _) = handle.infer_versioned(vec![0.2; DIMS[0]]).unwrap();
+        assert_eq!(v, 1);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.promotions, 0);
+    assert_eq!(stats.rollbacks, 1);
+}
+
+#[test]
+fn latency_spiked_canary_rolls_back_on_tail_regression() {
+    // The canary is a bit-identical twin (agreement is perfect) but
+    // chaos injects a 2ms spike into every canary forward: the p99
+    // guard must catch it and roll back — a canary can fail on latency
+    // alone.
+    let seed = pinned_seed();
+    let net = fixture(seed);
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), "good").unwrap());
+    let chaos = Chaos::new(ChaosConfig {
+        spike_every: 1,
+        spike: Duration::from_millis(2),
+        spike_canary_only: true,
+        ..ChaosConfig::default()
+    });
+    let server = Server::start_chaos(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+        Arc::clone(&chaos),
+    )
+    .unwrap();
+    let cv = server
+        .start_canary(
+            Arc::clone(&net),
+            "slow-twin",
+            CanaryConfig {
+                pct: 50,
+                window: 8,
+                promote_after: 1000, // unreachable: latency must decide
+                min_agreement: 0.5,
+                max_latency_ratio: 3.0,
+            },
+        )
+        .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(seed ^ 0x1A7);
+    let mut resolved = false;
+    for _ in 0..600 {
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        handle.infer_versioned(x).unwrap();
+        if server.canary_status().is_some_and(|s| s.outcome.is_some()) {
+            resolved = true;
+            break;
+        }
+    }
+    assert!(resolved, "slow canary never resolved: {:?}", server.canary_status());
+    match &server.canary_status().unwrap().outcome {
+        Some(CanaryOutcome::RolledBack { version, reason }) => {
+            assert_eq!(*version, cv);
+            assert!(reason.contains("latency"), "unexpected reason: {reason}");
+        }
+        other => panic!("slow canary must roll back, got {other:?}"),
+    }
+    assert_eq!(registry.active_version(), 1);
+    assert!(chaos.injected_spikes() > 0);
+    let stats = server.shutdown();
+    assert_eq!(stats.promotions, 0);
+    assert_eq!(stats.rollbacks, 1);
+}
+
+fn argmax(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap()
+}

@@ -173,7 +173,7 @@ fn server_roundtrip_is_invariant_under_micro_batching() {
         .map(|s| handle.submit(s.clone()).unwrap())
         .collect();
     for (s, rx) in samples.iter().zip(pending) {
-        let got = rx.recv().unwrap();
+        let got = rx.recv().unwrap().expect("request served, not shed");
         let want = net.forward(s, 1);
         assert!(
             got.logits.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),

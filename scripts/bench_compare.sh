@@ -56,6 +56,8 @@ TRACKED = {
     "serve": [
         "serve/forward/mlp/bs64",
         "serve/server/8clients_x32req",
+        "serve/server/overload_shed",
+        "serve/server/swap_storm",
     ],
     "deploy": [
         "deploy/parse",
@@ -69,11 +71,13 @@ def medians(path):
     with open(path) as f:
         doc = json.load(f)
     med = {r["name"]: r.get("median_s") for r in doc.get("benches", [])}
-    return doc.get("suite", "?"), med, bool(doc.get("seed_estimate"))
+    return doc.get("suite", "?"), med, bool(doc.get("seed_estimate")), doc.get("blocker")
 
 
-suite, base, seeded = medians(base_path)
-cur_suite, cur, _ = medians(cur_path)
+suite, base, seeded, blocker = medians(base_path)
+cur_suite, cur, _, _ = medians(cur_path)
+if blocker:
+    print(f"NOTE: baseline carries a blocker: {blocker}")
 if suite != cur_suite:
     sys.exit(f"FAIL: comparing suite '{suite}' against '{cur_suite}'")
 tracked = TRACKED.get(suite)
