@@ -1,130 +1,311 @@
-//! End-to-end driver (DESIGN.md §7): train the ResNet-style CNN on the
-//! SynthCIFAR workload through the full three-layer stack, logging the
-//! loss curve, then validate the paper's headline shape:
+//! End-to-end conv workload, pure Rust: train on a synthetic
+//! CIFAR-like image set, quantize the conv stack to integer ops, and
+//! push the model through the whole deployment path.
 //!
-//!   1. a 16-bit (fp32-proxy) baseline and a BitPruning run train to
-//!      comparable accuracy,
-//!   2. BitPruning ends below 8 bits on average (aggressive quantization),
-//!   3. ceil+fine-tune recovers the integer-selection accuracy drop.
-//!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//!   1. synthesize a 10-class 3×8×8 (HWC) image workload,
+//!   2. extract features with a fixed random Conv2d stack (f32
+//!      reference forward) and train a softmax head with SGD,
+//!   3. build the integer net — `IntConv2d` × 2 + `IntDense` head —
+//!      at per-layer or per-output-kernel bitlengths, calibrate, and
+//!      compare integer vs f32 accuracy,
+//!   4. freeze to a `.bpma` artifact (CNV0 conv-geometry section),
+//!      save → load → instantiate, and prove the instantiated net is
+//!      bit-exact against the in-memory one.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example train_synthcifar [-- --steps 300]
+//! cargo run --release --example train_synthcifar \
+//!     [-- --steps 400 --wbits 6 --abits 7 --granularity channel --out reports]
 //! ```
 
 use anyhow::Result;
 
-use bitprune::baselines;
-use bitprune::config::RunConfig;
-use bitprune::coordinator::run_experiment;
+use bitprune::deploy::artifact::{freeze, Artifact};
+use bitprune::infer::{ConvGeom, IntConv2d, IntDense, IntNet};
 use bitprune::metrics::Table;
-use bitprune::model::ModelMeta;
-use bitprune::runtime::Runtime;
+use bitprune::quant;
 use bitprune::util::args::Args;
+use bitprune::util::rng::Rng;
+
+const CLASSES: usize = 10;
+const H: usize = 8;
+const W: usize = 8;
+const CIN: usize = 3;
+const IN_FEATURES: usize = H * W * CIN;
+
+/// Synthetic CIFAR-like set: each class is a fixed random 3×8×8
+/// template; a sample is its class template plus i.i.d. noise.  Images
+/// are HWC row-major — the layout `IntConv2d` consumes.
+fn make_dataset(n: usize, noise: f32, rng: &mut Rng) -> (Vec<f32>, Vec<usize>) {
+    let templates: Vec<Vec<f32>> = (0..CLASSES)
+        .map(|c| {
+            let mut tr = Rng::new(0x5EED_0000 + c as u64);
+            (0..IN_FEATURES).map(|_| tr.normal_f32(0.0, 1.0)).collect()
+        })
+        .collect();
+    let mut xs = Vec::with_capacity(n * IN_FEATURES);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below_usize(CLASSES);
+        ys.push(c);
+        for &t in &templates[c] {
+            xs.push(t + rng.normal_f32(0.0, noise));
+        }
+    }
+    (xs, ys)
+}
+
+/// f32 reference Conv2d forward: HWC input `[n, h, w, cin]`, flattened
+/// HWIO weights `[kh·kw·cin, cout]`, optional ReLU.  Element-at-a-time
+/// gather — the float twin of `IntConv2d::forward_ref`.
+fn conv2d_f32(x: &[f32], n: usize, w: &[f32], bias: &[f32], g: ConvGeom, relu: bool) -> Vec<f32> {
+    let (oh, ow) = (g.out_h(), g.out_w());
+    let mut out = vec![0.0f32; n * oh * ow * g.cout];
+    for s in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for co in 0..g.cout {
+                    let mut acc = bias[co];
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                            let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                            if iy < 0 || ix < 0 || iy as usize >= g.h || ix as usize >= g.w {
+                                continue; // zero padding
+                            }
+                            let (iy, ix) = (iy as usize, ix as usize);
+                            for c in 0..g.cin {
+                                let xv = x[((s * g.h + iy) * g.w + ix) * g.cin + c];
+                                let wv = w[((ky * g.kw + kx) * g.cin + c) * g.cout + co];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    if relu {
+                        acc = acc.max(0.0);
+                    }
+                    out[((s * oh + oy) * ow + ox) * g.cout + co] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn accuracy(logits: &[f32], ys: &[usize], k: usize) -> f64 {
+    let hits = logits
+        .chunks_exact(k)
+        .zip(ys)
+        .filter(|(row, &y)| argmax(row) == y)
+        .count();
+    hits as f64 / ys.len() as f64
+}
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["steps", "finetune", "gamma", "model", "out"])?;
-    let learn_steps = args.get_usize("steps", 300)?;
-    let finetune_steps = args.get_usize("finetune", 100)?;
-    let gamma = args.get_f64("gamma", 1.0)?;
-    let model = args.get_or("model", "resnet_s").to_string();
-
-    let base = RunConfig {
-        name: format!("e2e-{model}"),
-        model: model.clone(),
-        dataset: "synthcifar".into(),
-        gamma,
-        learn_steps,
-        finetune_steps,
-        eval_every: 25,
-        out_dir: args.get_or("out", "reports").to_string(),
-        ..Default::default()
+    let args = Args::from_env(&["steps", "wbits", "abits", "granularity", "out", "seed"])?;
+    let steps = args.get_usize("steps", 400)?;
+    let wbits = args.get_usize("wbits", 6)? as u32;
+    let abits = args.get_usize("abits", 7)? as u32;
+    let gran = args.get_or("granularity", "channel").to_string();
+    let out_dir = args.get_or("out", "reports").to_string();
+    let seed = args.get_usize("seed", 0x51F7)? as u64;
+    let per_kernel = match gran.as_str() {
+        "channel" => true,
+        "layer" => false,
+        other => anyhow::bail!("--granularity {other}: expected layer|channel"),
     };
-    let rt = Runtime::cpu(&base.artifact_dir)?;
-    let meta = ModelMeta::load(
-        rt.artifact_dir().join(format!("{model}_meta.json")),
-    )?;
+
+    // Conv stack: 3×8×8 → (k3 s1 p1) 4×8×8 → (k3 s2 p1) 16×4×4 → dense 256→10.
+    let g0 = ConvGeom { cin: CIN, h: H, w: W, cout: 4, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let g1 = ConvGeom {
+        cin: g0.cout, h: g0.out_h(), w: g0.out_w(), cout: 16, kh: 3, kw: 3, stride: 2, pad: 1,
+    };
+    let dflat = g1.out_features();
     println!(
-        "end-to-end: {} ({} quant layers, {} params tensors, {:.1}K MACs/sample) on synthcifar",
-        model,
-        meta.num_quant_layers,
-        meta.num_params,
-        meta.total_macs_per_sample() as f64 / 1e3,
+        "synthcifar-conv: {CLASSES} classes, {CIN}x{H}x{W} HWC -> conv{}/{} -> conv{}/{} -> dense {dflat}->{CLASSES}",
+        g0.cout, g0.out_h() * g0.out_w(), g1.cout, g1.out_h() * g1.out_w(),
     );
 
-    // 1. fp32-proxy baseline.
-    let bl_cfg = baselines::fp32_proxy_config(&base, &format!("e2e-{model}-baseline"));
-    println!("\n[1/2] baseline (16-bit proxy), {} steps...", bl_cfg.learn_steps + bl_cfg.finetune_steps);
-    let baseline = run_experiment(&rt, &bl_cfg)?;
-    println!(
-        "  baseline accuracy: {:.2}%",
-        baseline.final_.accuracy * 100.0
-    );
+    // 1. Data.
+    let mut rng = Rng::new(seed);
+    let (train_x, train_y) = make_dataset(512, 0.8, &mut rng);
+    let (test_x, test_y) = make_dataset(256, 0.8, &mut rng);
+    let n_train = train_y.len();
+    let n_test = test_y.len();
 
-    // 2. BitPruning.
-    println!("\n[2/2] bitpruning (gamma={gamma}), {} steps...", learn_steps + finetune_steps);
-    let bp = run_experiment(&rt, &base)?;
-    let names: Vec<String> = meta.layers.iter().map(|l| l.name.clone()).collect();
-    bp.recorder.write_csvs(&base.out_dir, &names)?;
-    baseline
-        .recorder
-        .write_csvs(&base.out_dir, &names)?;
+    // 2. Fixed random conv features (He-scaled), f32 reference forward.
+    let mut wr = rng.fork(1);
+    let he = |fan_in: usize, len: usize, r: &mut Rng| -> Vec<f32> {
+        let s = (2.0 / fan_in as f64).sqrt() as f32;
+        (0..len).map(|_| r.normal_f32(0.0, s)).collect()
+    };
+    let w0 = he(g0.patch_len(), g0.patch_len() * g0.cout, &mut wr);
+    let b0 = vec![0.0f32; g0.cout];
+    let w1 = he(g1.patch_len(), g1.patch_len() * g1.cout, &mut wr);
+    let b1 = vec![0.0f32; g1.cout];
+    let feat = |x: &[f32], n: usize| -> Vec<f32> {
+        let h0 = conv2d_f32(x, n, &w0, &b0, g0, true);
+        conv2d_f32(&h0, n, &w1, &b1, g1, true)
+    };
+    let train_f = feat(&train_x, n_train);
+    let test_f = feat(&test_x, n_test);
 
-    // Loss curve (logged).
-    println!("\nloss curve (every 25 steps):");
-    for r in bp.recorder.steps.iter().step_by(25) {
-        println!(
-            "  step {:4} [{}] loss {:.4} (task {:.4} + γ·bits {:.4}) acc {:.2}% bits W {:.2} A {:.2}",
-            r.step, r.phase, r.loss, r.task_loss, r.bit_loss,
-            r.train_acc * 100.0, r.mean_bits_w, r.mean_bits_a
-        );
+    // 3. Softmax head, minibatch SGD.
+    let mut wh = vec![0.0f32; dflat * CLASSES];
+    let mut bh = vec![0.0f32; CLASSES];
+    let (batch, lr) = (64usize, 0.05f32);
+    let mut order: Vec<usize> = (0..n_train).collect();
+    let mut br = rng.fork(2);
+    println!("training softmax head: {steps} steps, batch {batch}, lr {lr}");
+    for step in 0..steps {
+        if step * batch % n_train == 0 {
+            br.shuffle(&mut order);
+        }
+        let idx = &order[(step * batch) % n_train..];
+        let idx = &idx[..batch.min(idx.len())];
+        let m = idx.len();
+        let mut gw = vec![0.0f32; dflat * CLASSES];
+        let mut gb = vec![0.0f32; CLASSES];
+        let mut loss = 0.0f64;
+        for &s in idx {
+            let f = &train_f[s * dflat..(s + 1) * dflat];
+            let mut z: Vec<f32> = (0..CLASSES)
+                .map(|k| bh[k] + f.iter().zip(wh[k..].iter().step_by(CLASSES)).map(|(a, b)| a * b).sum::<f32>())
+                .collect();
+            let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut zsum = 0.0f32;
+            for v in z.iter_mut() {
+                *v = (*v - zmax).exp();
+                zsum += *v;
+            }
+            loss += -(f64::from(z[train_y[s]] / zsum)).ln();
+            for k in 0..CLASSES {
+                let p = z[k] / zsum - if k == train_y[s] { 1.0 } else { 0.0 };
+                gb[k] += p;
+                for (d, &fv) in f.iter().enumerate() {
+                    gw[d * CLASSES + k] += p * fv;
+                }
+            }
+        }
+        let scale = lr / m as f32;
+        for (w, g) in wh.iter_mut().zip(&gw) {
+            *w -= scale * g;
+        }
+        for (b, g) in bh.iter_mut().zip(&gb) {
+            *b -= scale * g;
+        }
+        if step % 100 == 0 || step + 1 == steps {
+            println!("  step {step:4} loss {:.4}", loss / m as f64);
+        }
     }
 
-    let mut t = Table::new(&["run", "stage", "accuracy", "W bits", "A bits"]);
-    t.row(vec![
-        "baseline".into(), "final".into(),
-        format!("{:.2}%", baseline.final_.accuracy * 100.0),
-        "16".into(), "16".into(),
-    ]);
-    if let Some(ni) = &bp.noninteger {
+    // f32 accuracy (reference pipeline end to end).
+    let head = |f: &[f32], n: usize| -> Vec<f32> {
+        let mut z = vec![0.0f32; n * CLASSES];
+        for s in 0..n {
+            for k in 0..CLASSES {
+                z[s * CLASSES + k] = bh[k]
+                    + f[s * dflat..(s + 1) * dflat]
+                        .iter()
+                        .zip(wh[k..].iter().step_by(CLASSES))
+                        .map(|(a, b)| a * b)
+                        .sum::<f32>();
+            }
+        }
+        z
+    };
+    let f32_acc = accuracy(&head(&test_f, n_test), &test_y, CLASSES);
+    println!("f32 reference accuracy: {:.2}%", f32_acc * 100.0);
+
+    // 4. Integer net at the requested granularity.
+    let lb = wbits as f32;
+    let mk_conv = |name: &str, w: &[f32], g: ConvGeom, b: &[f32]| -> Result<IntConv2d> {
+        if per_kernel {
+            let kb = quant::per_channel_bits(w, g.patch_len(), g.cout, lb);
+            IntConv2d::new_grouped(name, w, g, b, &kb, abits, true)
+        } else {
+            IntConv2d::new(name, w, g, b, wbits, abits, true)
+        }
+    };
+    let head_layer = if per_kernel {
+        let kb = quant::per_channel_bits(&wh, dflat, CLASSES, lb);
+        IntDense::new_grouped("head", &wh, dflat, CLASSES, &bh, &kb, abits, false)?
+    } else {
+        IntDense::new("head", &wh, dflat, CLASSES, &bh, wbits, abits, false)?
+    };
+    let mut net = IntNet {
+        layers: vec![
+            mk_conv("conv0", &w0, g0, &b0)?.into(),
+            mk_conv("conv1", &w1, g1, &b1)?.into(),
+            head_layer.into(),
+        ],
+        num_classes: CLASSES,
+    };
+    net.calibrate(&train_x, n_train)?;
+    let int_acc = accuracy(&net.forward(&test_x, n_test), &test_y, CLASSES);
+
+    // MAC + footprint accounting (quant::conv_macs = HLO convention).
+    let macs = [
+        quant::conv_macs(g0.cin, g0.kh, g0.kw, g0.out_h(), g0.out_w(), g0.cout),
+        quant::conv_macs(g1.cin, g1.kh, g1.kw, g1.out_h(), g1.out_w(), g1.cout),
+        dflat * CLASSES,
+    ];
+    let mut t = Table::new(&["layer", "shape", "MACs/sample", "packed B", "f32 B"]);
+    for (l, m) in net.layers.iter().zip(macs) {
         t.row(vec![
-            "bitpruning".into(), "non-integer".into(),
-            format!("{:.2}%", ni.accuracy * 100.0),
-            format!("{:.2}", ni.mean_bits_w()),
-            format!("{:.2}", ni.mean_bits_a()),
+            l.name().to_string(),
+            format!("{}->{}", l.in_features(), l.out_features()),
+            m.to_string(),
+            l.packed_bytes().to_string(),
+            l.f32_bytes().to_string(),
         ]);
     }
-    t.row(vec![
-        "bitpruning".into(), "final (int + finetune)".into(),
-        format!("{:.2}%", bp.final_.accuracy * 100.0),
-        format!("{:.2}", bp.final_.mean_bits_w()),
-        format!("{:.2}", bp.final_.mean_bits_a()),
-    ]);
     println!("\n{}", t.render());
+    println!(
+        "granularity {gran}: mean W bits {:.2} | int accuracy {:.2}% (f32 {:.2}%)",
+        net.mean_w_bits(),
+        int_acc * 100.0,
+        f32_acc * 100.0,
+    );
 
-    // Headline-shape checks.
-    let acc_gap = baseline.final_.accuracy - bp.final_.accuracy;
-    let avg_bits =
-        (bp.final_.mean_bits_w() + bp.final_.mean_bits_a()) / 2.0;
+    // 5. Freeze -> save -> load -> instantiate, bit-exact.
+    let art = freeze(&net, "synthcifar-conv");
+    std::fs::create_dir_all(&out_dir)?;
+    let path = std::path::Path::new(&out_dir).join("synthcifar_conv.bpma");
+    art.save(&path)?;
+    let rt = Artifact::load(&path)?.instantiate()?;
+    let (a, b) = (net.forward(&test_x, n_test), rt.forward(&test_x, n_test));
+    let bit_exact = a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits());
     println!(
-        "accuracy gap vs baseline: {:.2}pp | average bits: {:.2}",
-        acc_gap * 100.0,
-        avg_bits
+        "artifact: {} ({} bytes, conv={}) -> instantiate bit-exact: {bit_exact}",
+        path.display(),
+        std::fs::metadata(&path)?.len(),
+        art.is_conv(),
     );
-    println!(
-        "csv: {}/e2e-{}.steps.csv (loss curve), .curve.csv (eval curve), .layers.csv (fig3)",
-        base.out_dir, model
-    );
-    if avg_bits >= 8.0 {
-        anyhow::bail!("FAIL: learned bits not below 8 — regularizer ineffective");
+
+    // Headline checks.
+    if !bit_exact {
+        anyhow::bail!("FAIL: instantiated artifact diverges from the in-memory net");
     }
-    if acc_gap > 0.10 {
+    if f32_acc < 0.5 {
+        anyhow::bail!("FAIL: f32 head failed to learn ({:.2}%)", f32_acc * 100.0);
+    }
+    if int_acc < f32_acc - 0.10 {
         anyhow::bail!(
-            "FAIL: accuracy gap {:.1}pp exceeds 10pp — quantization destroyed accuracy",
-            acc_gap * 100.0
+            "FAIL: integer accuracy {:.2}% more than 10pp below f32 {:.2}%",
+            int_acc * 100.0,
+            f32_acc * 100.0
         );
     }
-    println!("END-TO-END OK");
+    println!("SYNTHCIFAR-CONV OK");
     Ok(())
 }

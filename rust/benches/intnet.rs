@@ -5,7 +5,7 @@
 //! pack+unpack >= 2x at 4 bits); each pair prints its measured speedup.
 
 use bitprune::bitpack;
-use bitprune::infer::IntDense;
+use bitprune::infer::{ConvGeom, IntConv2d, IntDense};
 use bitprune::util::bench::Bench;
 use bitprune::util::rng::Rng;
 
@@ -39,6 +39,31 @@ fn main() {
             layer.forward_ref(&x, n)
         });
         speedup(&b, &format!("intnet/forward/{tag}"), &format!("intnet/forward_ref/{tag}"));
+    }
+
+    // Conv2d via im2col: batch 16, 32ch 8x8 plane, 3x3/s1/p1, 64
+    // kernels — the packing stage plus the same blocked GEMM, vs the
+    // element-at-a-time gather reference.
+    {
+        let g = ConvGeom { cin: 32, h: 8, w: 8, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let n = 16usize;
+        let x = rand_vec(&mut rng, n * g.in_features());
+        let w = rand_vec(&mut rng, g.patch_len() * g.cout);
+        let bias = rand_vec(&mut rng, g.cout);
+        let layer = IntConv2d::new("bench-c", &w, g, &bias, 4, 4, true).unwrap();
+        let macs = (n * g.macs_per_sample()) as f64;
+        let tag = "16x32x8x8k3/4b";
+        b.run_elems(&format!("intnet/conv_forward/{tag}"), macs, || {
+            layer.forward(&x, n)
+        });
+        b.run_elems(&format!("intnet/conv_forward_ref/{tag}"), macs, || {
+            layer.forward_ref(&x, n)
+        });
+        speedup(
+            &b,
+            &format!("intnet/conv_forward/{tag}"),
+            &format!("intnet/conv_forward_ref/{tag}"),
+        );
     }
 
     // Per-output-channel GEMM: row-varying codes (bits cycling 2/4/8)

@@ -339,8 +339,8 @@ mod tests {
         let make = |bw0: u32, ba0: u32, bw1: u32, ba1: u32| -> Result<IntNet> {
             Ok(IntNet {
                 layers: vec![
-                    IntDense::new("l0", &w0, din, hidden, &b0, bw0, ba0, true)?,
-                    IntDense::new("l1", &w1, hidden, classes, &b1, bw1, ba1, false)?,
+                    IntDense::new("l0", &w0, din, hidden, &b0, bw0, ba0, true)?.into(),
+                    IntDense::new("l1", &w1, hidden, classes, &b1, bw1, ba1, false)?.into(),
                 ],
                 num_classes: classes,
             })

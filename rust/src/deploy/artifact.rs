@@ -29,6 +29,7 @@
 //! | `WCT0` | per layer: payload_len u64, bit-packed weight codes |
 //! | `BIA0` | per layer: dout f32 biases |
 //! | `GRP0` | written only when a layer is grouped: n_layers u32, then per layer a u8 grouped flag and, when set, n_groups u32 + per group (bits u32, lmin f32, scale f32) — the per-output-channel plan table; `WCT0` then carries that layer's group-boundary-aligned per-channel codes |
+//! | `CNV0` | written only when a layer is a convolution: n_layers u32, then per layer a u8 kind (0 dense, 1 conv) and, for conv, cin u64, h u64, w u64, kh u32, kw u32, stride u32, pad u32 — the im2col geometry (`cout` is the layer's LAY0 dout) |
 //!
 //! Per-layer artifacts never write `GRP0`, so their bytes are identical
 //! to pre-`GRP0` writers; readers that predate the tag skip it by the
@@ -36,6 +37,14 @@
 //! range check (grouped layers write the field as 0) with a clean
 //! error — the payload size alone can coincide with the per-layer
 //! expectation, so the poisoned field carries the rejection.
+//!
+//! `CNV0` follows the same pattern: dense-only artifacts never write
+//! it (their bytes stay identical to pre-`CNV0` writers), and conv
+//! layers **poison their LAY0 `din` as 0** — a pre-`CNV0` reader skips
+//! the unknown section and then fails its degenerate-shape check with
+//! a clean error instead of multiplying flattened activations through
+//! a dense layer whose real `din` is the im2col patch length.  The
+//! new reader derives `din = kh·kw·cin` from the geometry.
 //!
 //! The loader treats every byte as hostile: all reads go through the
 //! bounded [`crate::util::binio::Reader`] (shared with the checkpoint
@@ -48,7 +57,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::bitpack::{PackedGroups, PackedTensor, WeightCodes};
-use crate::infer::{IntDense, IntNet};
+use crate::infer::{ConvGeom, IntConv2d, IntDense, IntLayer, IntNet};
 use crate::quant::Granularity;
 use crate::util::binio::{self, Reader};
 
@@ -62,6 +71,9 @@ const TAG_BIASES: &[u8; 4] = b"BIA0";
 /// Per-output-channel group table (added after v1 shipped; readers that
 /// predate it skip the tag — see the forward-compat note below).
 const TAG_GROUPS: &[u8; 4] = b"GRP0";
+/// Conv-layer geometry table (same forward-compat pattern as `GRP0`;
+/// see the module docs for the poisoned-`din` rejection story).
+const TAG_CONV: &[u8; 4] = b"CNV0";
 
 const LAYER_FLAG_RELU: u8 = 1 << 0;
 const LAYER_FLAG_ACT_RANGE: u8 = 1 << 1;
@@ -72,13 +84,22 @@ const LAYER_FLAG_ACT_RANGE: u8 = 1 << 1;
 /// reject the artifact at the `[1,16]` range check — a clean error,
 /// never a silent mis-decode of channel-major codes.
 const LAYER_FLAG_GROUPED: u8 = 1 << 2;
+/// The layer is a convolution: its geometry lives in the `CNV0`
+/// section and its LAY0 `din` field is written as 0.  Pre-`CNV0`
+/// readers skip the section and reject the artifact at their
+/// degenerate-shape check — a clean error, never a dense mis-forward
+/// of an im2col layer.
+const LAYER_FLAG_CONV: u8 = 1 << 3;
 
 /// One frozen layer: geometry, learned bitlengths, quantization
 /// parameters, packed codes, bias, calibrated input range.
 #[derive(Debug, Clone)]
 pub struct LayerRecord {
     pub name: String,
+    /// GEMM input width: the dense `din`, or the im2col patch length
+    /// `kh·kw·cin` for a conv layer.
     pub din: usize,
+    /// GEMM output width: the dense `dout`, or the conv `cout`.
     pub dout: usize,
     /// Activation (input) bitlength.
     pub a_bits: u32,
@@ -87,12 +108,34 @@ pub struct LayerRecord {
     /// quantize against each batch's own min/max (batch-dependent).
     pub act_range: Option<(f32, f32)>,
     /// Packed weight codes at their stored granularity — one
-    /// `(bits, lmin, scale)` plan per layer or per output channel.
+    /// `(bits, lmin, scale)` plan per layer or per output channel
+    /// (per output *kernel* for conv layers).
     pub weights: WeightCodes,
     pub bias: Vec<f32>,
+    /// Conv geometry when this layer is a convolution (`CNV0`);
+    /// `None` for dense layers.
+    pub conv: Option<ConvGeom>,
 }
 
 impl LayerRecord {
+    /// Flattened input features per sample — what the previous layer
+    /// must emit (dense `din`; conv `cin·h·w`).
+    pub fn in_features(&self) -> usize {
+        match &self.conv {
+            Some(g) => g.in_features(),
+            None => self.din,
+        }
+    }
+
+    /// Flattened output features per sample (dense `dout`; conv
+    /// `cout·out_h·out_w`).
+    pub fn out_features(&self) -> usize {
+        match &self.conv {
+            Some(g) => g.out_features(),
+            None => self.dout,
+        }
+    }
+
     /// Largest weight bitlength this layer stores any code at (for a
     /// per-layer record, *the* bitlength).
     pub fn w_bits(&self) -> u32 {
@@ -132,15 +175,19 @@ pub fn freeze(net: &IntNet, model: &str) -> Artifact {
     let layers = net
         .layers
         .iter()
-        .map(|l| LayerRecord {
-            name: l.name.clone(),
-            din: l.din,
-            dout: l.dout,
-            a_bits: l.a_bits,
-            relu: l.relu,
-            act_range: l.act_range(),
-            weights: l.weights.clone(),
-            bias: l.bias.clone(),
+        .map(|l| {
+            let (din, dout) = l.core_dims();
+            LayerRecord {
+                name: l.name().to_string(),
+                din,
+                dout,
+                a_bits: l.a_bits(),
+                relu: l.relu(),
+                act_range: l.act_range(),
+                weights: l.weights().clone(),
+                bias: l.bias().to_vec(),
+                conv: l.conv_geom().copied(),
+            }
         })
         .collect();
     Artifact { model: model.to_string(), num_classes: net.num_classes, layers }
@@ -152,9 +199,9 @@ impl Artifact {
     /// are restored verbatim (`IntDense::from_packed`), so logits match
     /// to the last bit — pinned by `tests/deploy_artifact.rs`.
     pub fn instantiate(&self) -> Result<IntNet> {
-        let mut layers = Vec::with_capacity(self.layers.len());
+        let mut layers: Vec<IntLayer> = Vec::with_capacity(self.layers.len());
         for rec in &self.layers {
-            layers.push(match &rec.weights {
+            let core = match &rec.weights {
                 WeightCodes::PerLayer(p) => IntDense::from_packed(
                     &rec.name,
                     p.clone(),
@@ -175,6 +222,10 @@ impl Artifact {
                     rec.relu,
                     rec.act_range,
                 )?,
+            };
+            layers.push(match rec.conv {
+                None => core.into(),
+                Some(geom) => IntConv2d::from_core(geom, core)?.into(),
             });
         }
         Ok(IntNet { layers, num_classes: self.num_classes })
@@ -185,6 +236,12 @@ impl Artifact {
         self.layers
             .iter()
             .any(|l| l.granularity() == Granularity::PerOutputChannel)
+    }
+
+    /// Whether any layer is a convolution (the artifact then carries a
+    /// `CNV0` section).
+    pub fn is_conv(&self) -> bool {
+        self.layers.iter().any(|l| l.conv.is_some())
     }
 
     /// Aggregate per-channel weight-bit histogram (index = bitlength,
@@ -252,7 +309,13 @@ impl Artifact {
         let mut lay = Vec::new();
         for l in &self.layers {
             binio::put_str_u32(&mut lay, &l.name);
-            binio::put_u64(&mut lay, l.din as u64);
+            // Conv layers poison din as 0: their real GEMM din is
+            // derivable only from the CNV0 geometry, and a pre-CNV0
+            // reader must fail its degenerate-shape check rather than
+            // forward flattened activations through a dense layer of
+            // patch-length width.
+            let din_field = if l.conv.is_some() { 0 } else { l.din as u64 };
+            binio::put_u64(&mut lay, din_field);
             binio::put_u64(&mut lay, l.dout as u64);
             // Grouped layers store their real plans in GRP0; LAY0's
             // w_bits is **deliberately 0** for them.  A pre-GRP0
@@ -285,6 +348,9 @@ impl Artifact {
             }
             if l.granularity() == Granularity::PerOutputChannel {
                 flags |= LAYER_FLAG_GROUPED;
+            }
+            if l.conv.is_some() {
+                flags |= LAYER_FLAG_CONV;
             }
             binio::put_u8(&mut lay, flags);
             binio::put_f32(&mut lay, w_lmin);
@@ -334,6 +400,28 @@ impl Artifact {
             }
             sections.push((TAG_GROUPS, grp));
         }
+        // CNV0 rides along only when a layer actually is a conv, so
+        // dense artifacts stay byte-identical to pre-CNV0 writers.
+        if self.is_conv() {
+            let mut cnv = Vec::new();
+            binio::put_u32(&mut cnv, self.layers.len() as u32);
+            for l in &self.layers {
+                match &l.conv {
+                    None => binio::put_u8(&mut cnv, 0),
+                    Some(g) => {
+                        binio::put_u8(&mut cnv, 1);
+                        binio::put_u64(&mut cnv, g.cin as u64);
+                        binio::put_u64(&mut cnv, g.h as u64);
+                        binio::put_u64(&mut cnv, g.w as u64);
+                        binio::put_u32(&mut cnv, g.kh as u32);
+                        binio::put_u32(&mut cnv, g.kw as u32);
+                        binio::put_u32(&mut cnv, g.stride as u32);
+                        binio::put_u32(&mut cnv, g.pad as u32);
+                    }
+                }
+            }
+            sections.push((TAG_CONV, cnv));
+        }
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
         binio::put_u32(&mut out, VERSION);
@@ -356,6 +444,7 @@ impl Artifact {
         let mut wct_pl: Option<&[u8]> = None;
         let mut bia_pl: Option<&[u8]> = None;
         let mut grp_pl: Option<&[u8]> = None;
+        let mut cnv_pl: Option<&[u8]> = None;
         let mut r = parse_header(bytes)?;
         let n_sections = r.u32()? as usize;
         for _ in 0..n_sections {
@@ -366,6 +455,7 @@ impl Artifact {
                 t if t == TAG_WCODES => Some(&mut wct_pl),
                 t if t == TAG_BIASES => Some(&mut bia_pl),
                 t if t == TAG_GROUPS => Some(&mut grp_pl),
+                t if t == TAG_CONV => Some(&mut cnv_pl),
                 _ => None, // unknown section: checksummed, then skipped
             };
             if let Some(slot) = slot {
@@ -411,6 +501,7 @@ impl Artifact {
             a_bits: u32,
             relu: bool,
             grouped: bool,
+            conv: bool,
             w_lmin: f32,
             w_scale: f32,
             act_range: Option<(f32, f32)>,
@@ -433,8 +524,19 @@ impl Artifact {
             } else {
                 None
             };
-            if din == 0 || dout == 0 {
+            let conv = flags & LAYER_FLAG_CONV != 0;
+            // Conv layers poison din as 0 (the real GEMM width comes
+            // from CNV0); everything else with a zero dim is broken.
+            // This same check is what rejects a conv artifact on a
+            // pre-CNV0 reader, which does not know the flag.
+            if dout == 0 || (din == 0 && !conv) {
                 bail!("layer {i} ('{name}'): degenerate shape {din}x{dout}");
+            }
+            if conv && din != 0 {
+                bail!(
+                    "layer {i} ('{name}'): conv layers must write din as 0 \
+                     (the GEMM width comes from the 'CNV0' geometry), got {din}"
+                );
             }
             if let Some((lo, hi)) = act_range {
                 // The one per-layer field PackedTensor::from_raw does
@@ -453,6 +555,7 @@ impl Artifact {
                 a_bits,
                 relu: flags & LAYER_FLAG_RELU != 0,
                 grouped: flags & LAYER_FLAG_GROUPED != 0,
+                conv,
                 w_lmin,
                 w_scale,
                 act_range,
@@ -512,11 +615,79 @@ impl Artifact {
             }
         }
 
+        // CNV0 — conv geometries.  A layer flagged conv in LAY0 without
+        // a CNV0 entry (or vice versa) is unusable: the GEMM width is
+        // only derivable from the geometry — fail loudly.
+        let mut conv_geoms: Vec<Option<ConvGeom>> = vec![None; n_layers];
+        if let Some(pl) = cnv_pl {
+            let mut cr = Reader::new(pl);
+            let cn = cr.u32()? as usize;
+            if cn != n_layers {
+                bail!(
+                    "'{}' section declares {cn} layers, '{}' declares {n_layers}",
+                    tag_str(TAG_CONV),
+                    tag_str(TAG_META)
+                );
+            }
+            for (i, slot) in conv_geoms.iter_mut().enumerate() {
+                let kind = cr.u8()?;
+                if kind > 1 {
+                    bail!("layer {i}: bad conv kind {kind}");
+                }
+                if kind == 0 {
+                    continue;
+                }
+                let as_usize = |v: u64, what: &str| {
+                    usize::try_from(v).map_err(|_| {
+                        anyhow::anyhow!("layer {i}: conv {what} does not fit in usize")
+                    })
+                };
+                let cin = as_usize(cr.u64()?, "cin")?;
+                let h = as_usize(cr.u64()?, "h")?;
+                let w = as_usize(cr.u64()?, "w")?;
+                let kh = cr.u32()? as usize;
+                let kw = cr.u32()? as usize;
+                let stride = cr.u32()? as usize;
+                let pad = cr.u32()? as usize;
+                *slot = Some(ConvGeom {
+                    cin,
+                    h,
+                    w,
+                    cout: headers[i].dout,
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                });
+            }
+            if !cr.is_empty() {
+                bail!("trailing bytes in '{}' section", tag_str(TAG_CONV));
+            }
+        }
+        for (i, (h, cg)) in headers.iter_mut().zip(&conv_geoms).enumerate() {
+            if h.conv != cg.is_some() {
+                bail!(
+                    "layer {i} ('{}'): conv flag disagrees with the '{}' section \
+                     (conv artifacts need a reader that speaks CNV0)",
+                    h.name,
+                    tag_str(TAG_CONV)
+                );
+            }
+            if let Some(g) = cg {
+                g.validate(&h.name)?;
+                // The poisoned LAY0 din resolves to the im2col patch
+                // length — the GEMM width every payload check uses.
+                h.din = g.patch_len();
+            }
+        }
+
         // WCT0 + BIA0 — payloads, validated against the geometry.
         let mut wr = Reader::new(wct_pl);
         let mut br = Reader::new(bia_pl);
         let mut layers = Vec::new();
-        for (i, (h, gp)) in headers.into_iter().zip(group_params).enumerate() {
+        for (i, ((h, gp), cg)) in
+            headers.into_iter().zip(group_params).zip(conv_geoms).enumerate()
+        {
             let code_len = wr
                 .len_u64()
                 .with_context(|| format!("layer {i} ('{}') code length", h.name))?;
@@ -561,6 +732,7 @@ impl Artifact {
                 act_range: h.act_range,
                 weights,
                 bias,
+                conv: cg,
             });
         }
         if !wr.is_empty() {
@@ -570,21 +742,23 @@ impl Artifact {
             bail!("trailing bytes in '{}' section", tag_str(TAG_BIASES));
         }
 
-        // Cross-layer consistency: a dense classifier chain.
+        // Cross-layer consistency: flattened features chain layer to
+        // layer (a conv layer emits `cout·out_h·out_w`, consumes
+        // `cin·h·w` — layer-kind agnostic).
         for w in layers.windows(2) {
-            if w[0].dout != w[1].din {
+            if w[0].out_features() != w[1].in_features() {
                 bail!(
                     "layer chain broken: '{}' emits {} features, '{}' expects {}",
                     w[0].name,
-                    w[0].dout,
+                    w[0].out_features(),
                     w[1].name,
-                    w[1].din
+                    w[1].in_features()
                 );
             }
         }
-        let last_dout = layers.last().unwrap().dout;
-        if last_dout != num_classes {
-            bail!("final layer emits {last_dout} features but artifact declares {num_classes} classes");
+        let last_out = layers.last().unwrap().out_features();
+        if last_out != num_classes {
+            bail!("final layer emits {last_out} features but artifact declares {num_classes} classes");
         }
 
         Ok(Self { model, num_classes, layers })
@@ -713,7 +887,7 @@ pub fn section_table(bytes: &[u8]) -> Result<Vec<SectionInfo>> {
             payload_len: payload.len(),
             crc_stored,
             crc_ok: binio::crc32(payload) == crc_stored,
-            known: [TAG_META, TAG_LAYERS, TAG_WCODES, TAG_BIASES, TAG_GROUPS]
+            known: [TAG_META, TAG_LAYERS, TAG_WCODES, TAG_BIASES, TAG_GROUPS, TAG_CONV]
                 .iter()
                 .any(|t| **t == tag),
         });
@@ -834,23 +1008,64 @@ mod tests {
         let mut net = synthetic_net(&[4, 6, 2], 3, 4, 4);
         for l in &mut net.layers {
             // synthetic_net calibrates; strip it via a fresh layer.
+            let d = l.as_dense().unwrap();
             let stripped = IntDense::from_packed(
-                &l.name,
-                l.packed_per_layer().unwrap().clone(),
-                l.din,
-                l.dout,
-                l.bias.clone(),
-                l.a_bits,
-                l.relu,
+                &d.name,
+                d.packed_per_layer().unwrap().clone(),
+                d.din,
+                d.dout,
+                d.bias.clone(),
+                d.a_bits,
+                d.relu,
                 None,
             )
             .unwrap();
-            *l = stripped;
+            *l = stripped.into();
         }
         let art = freeze(&net, "uncal");
         assert!(!art.is_calibrated());
         let rt = Artifact::from_bytes(&art.to_bytes()).unwrap();
         assert!(!rt.is_calibrated());
         assert!(rt.layers.iter().all(|l| l.act_range.is_none()));
+    }
+
+    #[test]
+    fn conv_artifact_roundtrips_and_instantiates_bitwise() {
+        let net = crate::serve::synthetic_conv_net(0xC047, 4, 5);
+        let art = freeze(&net, "convy");
+        assert!(art.is_conv());
+        let bytes = art.to_bytes();
+        // The wire carries a CNV0 section, and conv LAY0 dins are
+        // poisoned to 0 on the wire while the decoded record resolves
+        // to the im2col patch length.
+        let table = section_table(&bytes).unwrap();
+        assert!(table.iter().any(|s| s.tag == "CNV0" && s.known && s.crc_ok));
+        let rt = Artifact::from_bytes(&bytes).unwrap();
+        assert_eq!(rt.layers.len(), art.layers.len());
+        for (x, y) in art.layers.iter().zip(&rt.layers) {
+            assert_eq!(x.conv, y.conv);
+            assert_eq!((x.din, x.dout), (y.din, y.dout));
+            assert_eq!(x.weights, y.weights);
+        }
+        let g0 = rt.layers[0].conv.unwrap();
+        assert_eq!(rt.layers[0].din, g0.patch_len());
+        // Instantiated net forwards bit-identically to the source.
+        let rebuilt = rt.instantiate().unwrap();
+        let mut rng = Rng::new(0x1C47);
+        let x: Vec<f32> =
+            (0..3 * net.in_features()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want = net.forward(&x, 3);
+        let got = rebuilt.forward(&x, 3);
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn dense_artifact_bytes_carry_no_conv_section() {
+        // Backward compat: dense models must stay byte-identical to
+        // pre-CNV0 writers — no CNV0 section, no poisoned dins.
+        let a = demo_artifact();
+        assert!(!a.is_conv());
+        let table = section_table(&a.to_bytes()).unwrap();
+        assert!(table.iter().all(|s| s.tag != "CNV0"));
     }
 }

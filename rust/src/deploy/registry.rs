@@ -370,13 +370,15 @@ impl ModelRegistry {
     }
 }
 
-/// Validate a servable net and return its `(din, out_dim)`.
+/// Validate a servable net and return its flattened
+/// `(in_features, out_features)` endpoint shape — layer-kind agnostic
+/// (a conv net keys on `cin·h·w` in, `num_classes` out like any other).
 fn endpoint_shape(net: &IntNet) -> Result<(usize, usize), RegistryError> {
-    let Some(first) = net.layers.first() else {
+    if net.layers.is_empty() {
         return Err(RegistryError::EmptyNet);
-    };
-    let din = first.din;
-    let out_dim = net.layers.last().unwrap().dout;
+    }
+    let din = net.in_features();
+    let out_dim = net.out_features();
     if din == 0 || out_dim == 0 {
         return Err(RegistryError::DegenerateShape { din, out_dim });
     }

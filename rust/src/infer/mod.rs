@@ -45,9 +45,26 @@
 //! available (and applies to both `forward` and `forward_ref`, which
 //! share `quantize_acts`, so fast/ref parity holds either way).
 //!
-//! Scope: dense (MLP-style) networks — the artifact family whose
-//! deployment story is pure GEMM.  Conv models deploy the same way via
-//! im2col; see DESIGN.md §future-work.
+//! ## Layer ops
+//!
+//! The network is a sequence of [`IntLayer`] ops — today
+//! `Dense(IntDense)` and `Conv2d(IntConv2d)`.  Every consumer
+//! ([`IntNet`], [`NetScratch`]/`forward_into`, the serve engine,
+//! `deploy::freeze`/`instantiate`) operates on the op enum, not on
+//! `IntDense` directly, so new layer kinds slot in behind one match.
+//!
+//! [`IntConv2d`] lowers to the *same* blocked/grouped integer GEMM via
+//! an im2col packing stage: the `[n, h, w, cin]` activation plane is
+//! expanded into `[n·out_h·out_w, kh·kw·cin]` patch rows and fed to an
+//! inner [`IntDense`] core whose `din` is the patch length and whose
+//! `dout` is the output-channel count.  Per-output-channel weight
+//! granularity therefore becomes **per-output-kernel** granularity for
+//! free (each group spans one kernel's `kh·kw·cin` taps).  The scratch
+//! path keeps a reusable im2col buffer in [`LayerScratch`], so serving
+//! does not allocate per forward after warm-up, and a scalar
+//! `forward_ref` gather is retained bit-exact against the fast packing
+//! (the expanded values are identical, and the core GEMM is already
+//! pinned fast-vs-ref).
 
 use anyhow::{bail, Result};
 
@@ -119,6 +136,9 @@ pub struct LayerScratch {
     t: Vec<f64>,
     u: Vec<f64>,
     gcols: GroupedCols,
+    /// im2col patch-row buffer for [`IntConv2d::forward_scratch`]
+    /// (empty for dense layers).
+    im2col: Vec<f32>,
 }
 
 /// Reusable whole-network buffers for [`IntNet::forward_into`]:
@@ -867,9 +887,509 @@ impl IntDense {
     }
 }
 
-/// An integer-quantized dense network.
+/// Geometry of one 2-D convolution over an `[h, w, cin]` HWC input
+/// plane: `cout` kernels of `kh x kw` taps, one stride for both axes,
+/// symmetric zero padding.  Weights are stored `[kh·kw·cin, cout]`
+/// row-major (the flattened `[kh, kw, cin, cout]` kernel), which is
+/// exactly the GEMM layout the im2col patch rows multiply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub cin: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvGeom {
+    /// Validate the geometry (artifact inputs are untrusted): nonzero
+    /// dims, stride >= 1, a padded plane the kernel fits inside, and
+    /// element counts that survive `checked_mul`.
+    pub fn validate(&self, name: &str) -> Result<()> {
+        let g = self;
+        if g.cin == 0 || g.h == 0 || g.w == 0 || g.cout == 0 || g.kh == 0 || g.kw == 0 {
+            bail!(
+                "{name}: degenerate conv geometry {}x{}x{} k{}x{} cout {}",
+                g.cin, g.h, g.w, g.kh, g.kw, g.cout
+            );
+        }
+        if g.stride == 0 {
+            bail!("{name}: conv stride must be >= 1");
+        }
+        let pad2 = g.pad.checked_mul(2);
+        let padded_h = pad2.and_then(|p| g.h.checked_add(p));
+        let padded_w = pad2.and_then(|p| g.w.checked_add(p));
+        match (padded_h, padded_w) {
+            (Some(ph), Some(pw)) if ph >= g.kh && pw >= g.kw => {}
+            _ => bail!(
+                "{name}: kernel {}x{} does not fit the padded {}x{} plane (pad {})",
+                g.kh, g.kw, g.h, g.w, g.pad
+            ),
+        }
+        for (what, prod) in [
+            ("patch", g.kh.checked_mul(g.kw).and_then(|p| p.checked_mul(g.cin))),
+            ("input plane", g.cin.checked_mul(g.h).and_then(|p| p.checked_mul(g.w))),
+            (
+                "output plane",
+                self.out_h()
+                    .checked_mul(self.out_w())
+                    .and_then(|p| p.checked_mul(g.cout)),
+            ),
+        ] {
+            if prod.is_none() {
+                bail!("{name}: conv {what} size overflows");
+            }
+        }
+        Ok(())
+    }
+
+    /// Output plane height: `(h + 2·pad - kh) / stride + 1`.
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Output plane width.
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Taps per kernel — the im2col patch row length and the GEMM `din`.
+    pub fn patch_len(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+
+    /// Flattened input features per sample (`cin·h·w`).
+    pub fn in_features(&self) -> usize {
+        self.cin * self.h * self.w
+    }
+
+    /// Flattened output features per sample (`cout·out_h·out_w`).
+    pub fn out_features(&self) -> usize {
+        self.cout * self.out_h() * self.out_w()
+    }
+
+    /// Per-sample MAC count: `out_h·out_w·cout·kh·kw·cin` — the same
+    /// convention as the HLO cost pass (`conv FLOPs = 2·MACs`).
+    pub fn macs_per_sample(&self) -> usize {
+        self.out_features() * self.kh * self.kw * self.cin
+    }
+}
+
+/// One integer-quantized 2-D convolution layer, lowered onto the dense
+/// integer GEMM via im2col.
+///
+/// The inner [`IntDense`] `core` has `din = kh·kw·cin` (one im2col
+/// patch row) and `dout = cout`; its bitlengths, dequantization plans,
+/// calibrated activation range, bias and ReLU all apply unchanged.  At
+/// [`Granularity::PerOutputChannel`] each *output kernel* is its own
+/// quantization group (the `kernel_wise` granularity), reusing the
+/// group-size-generic [`PackedGroups`] machinery.
+///
+/// Activations are `[n, h, w, cin]` HWC row-major; outputs are
+/// `[n, out_h, out_w, cout]` — the next conv's input layout, so conv
+/// stacks compose without transposes.
+pub struct IntConv2d {
+    geom: ConvGeom,
+    core: IntDense,
+}
+
+impl IntConv2d {
+    /// Quantize + pack a conv layer at one weight bitlength.  `w` is
+    /// `[kh·kw·cin, cout]` row-major (the flattened HWIO kernel).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        name: &str,
+        w: &[f32],
+        geom: ConvGeom,
+        bias: &[f32],
+        w_bits: u32,
+        a_bits: u32,
+        relu: bool,
+    ) -> Result<Self> {
+        geom.validate(name)?;
+        let core =
+            IntDense::new(name, w, geom.patch_len(), geom.cout, bias, w_bits, a_bits, relu)?;
+        Ok(Self { geom, core })
+    }
+
+    /// Per-output-kernel construction: each kernel (output channel)
+    /// packs at its own learned bitlength against its own range.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_grouped(
+        name: &str,
+        w: &[f32],
+        geom: ConvGeom,
+        bias: &[f32],
+        w_bits: &[f32],
+        a_bits: u32,
+        relu: bool,
+    ) -> Result<Self> {
+        geom.validate(name)?;
+        let core = IntDense::new_grouped(
+            name,
+            w,
+            geom.patch_len(),
+            geom.cout,
+            bias,
+            w_bits,
+            a_bits,
+            relu,
+        )?;
+        Ok(Self { geom, core })
+    }
+
+    /// Wrap an already-built GEMM core (the deploy `instantiate` path:
+    /// the core is rebuilt bit-identically from stored codes, then this
+    /// just attaches the geometry).  Validates the core/geometry
+    /// agreement — artifact bytes are untrusted.
+    pub fn from_core(geom: ConvGeom, core: IntDense) -> Result<Self> {
+        geom.validate(&core.name)?;
+        if core.din != geom.patch_len() {
+            bail!(
+                "{}: core din {} != conv patch len {} (k{}x{} x {} in-channels)",
+                core.name, core.din, geom.patch_len(), geom.kh, geom.kw, geom.cin
+            );
+        }
+        if core.dout != geom.cout {
+            bail!(
+                "{}: core dout {} != conv cout {}",
+                core.name, core.dout, geom.cout
+            );
+        }
+        Ok(Self { geom, core })
+    }
+
+    pub fn geom(&self) -> &ConvGeom {
+        &self.geom
+    }
+
+    /// The inner GEMM core (weights `[patch_len, cout]`).
+    pub fn core(&self) -> &IntDense {
+        &self.core
+    }
+
+    pub fn set_act_range(&mut self, lo: f32, hi: f32) {
+        self.core.set_act_range(lo, hi);
+    }
+
+    /// im2col patch-row count for an `n`-sample batch.
+    fn gemm_rows(&self, n: usize) -> usize {
+        n * self.geom.out_h() * self.geom.out_w()
+    }
+
+    /// Fast im2col: expand `[n, h, w, cin]` into `[n·oh·ow, kh·kw·cin]`
+    /// patch rows.  Interior rows copy whole `kw·cin` spans (HWC rows
+    /// are contiguous); out-of-plane taps are zero-filled, which is
+    /// exactly the zero-padding semantics.  Every element of `col` is
+    /// written.
+    fn im2col_into(&self, x: &[f32], n: usize, col: &mut [f32]) {
+        let g = &self.geom;
+        let (h, w, cin) = (g.h, g.w, g.cin);
+        let (oh, ow) = (g.out_h(), g.out_w());
+        let pl = g.patch_len();
+        let pad = g.pad as isize;
+        debug_assert_eq!(col.len(), n * oh * ow * pl);
+        for s in 0..n {
+            let xs = &x[s * g.in_features()..][..g.in_features()];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = &mut col[((s * oh + oy) * ow + ox) * pl..][..pl];
+                    let ix0 = (ox * g.stride) as isize - pad;
+                    for ky in 0..g.kh {
+                        let iy = (oy * g.stride + ky) as isize - pad;
+                        let dst = &mut row[ky * g.kw * cin..][..g.kw * cin];
+                        if iy < 0 || iy >= h as isize {
+                            dst.fill(0.0);
+                            continue;
+                        }
+                        let iy = iy as usize;
+                        if ix0 >= 0 && ix0 as usize + g.kw <= w {
+                            // Whole kernel row inside the plane: one
+                            // contiguous kw·cin copy.
+                            let src = &xs[(iy * w + ix0 as usize) * cin..][..g.kw * cin];
+                            dst.copy_from_slice(src);
+                        } else {
+                            for kx in 0..g.kw {
+                                let ix = ix0 + kx as isize;
+                                let d = &mut dst[kx * cin..][..cin];
+                                if ix < 0 || ix >= w as isize {
+                                    d.fill(0.0);
+                                } else {
+                                    let src = &xs[(iy * w + ix as usize) * cin..][..cin];
+                                    d.copy_from_slice(src);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Forward one batch `[n, h, w, cin]` -> `[n, out_h, out_w, cout]`
+    /// (allocating).  Bit-identical to [`Self::forward_ref`]: the two
+    /// im2col expansions produce the same values (copies and literal
+    /// zeros), and the core GEMM is pinned fast-vs-ref.
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(
+            x.len(),
+            n * self.geom.in_features(),
+            "{}: bad conv input",
+            self.core.name
+        );
+        let rows = self.gemm_rows(n);
+        let mut col = vec![0.0f32; rows * self.geom.patch_len()];
+        self.im2col_into(x, n, &mut col);
+        self.core.forward(&col, rows)
+    }
+
+    /// Serving-path forward: the im2col buffer lives in `sc` and is
+    /// reused across calls (no per-forward allocation after warm-up),
+    /// and the GEMM dispatches onto the persistent pool.  Bit-identical
+    /// to [`Self::forward`].
+    pub fn forward_scratch(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &mut LayerScratch,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) {
+        assert_eq!(
+            x.len(),
+            n * self.geom.in_features(),
+            "{}: bad conv input",
+            self.core.name
+        );
+        let rows = self.gemm_rows(n);
+        assert_eq!(out.len(), rows * self.geom.cout, "{}: bad conv output", self.core.name);
+        // Take the buffer out of the scratch so the core can borrow the
+        // scratch mutably alongside it; put it back for the next call.
+        let mut col = std::mem::take(&mut sc.im2col);
+        col.resize(rows * self.geom.patch_len(), 0.0);
+        self.im2col_into(x, n, &mut col);
+        self.core.forward_scratch(&col, rows, sc, out, pool);
+        sc.im2col = col;
+    }
+
+    /// Retained scalar reference: an independent element-at-a-time
+    /// im2col gather (no slice copies, no span fast path) feeding the
+    /// scalar core.  See `tests/fastpath_parity.rs`.
+    pub fn forward_ref(&self, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(
+            x.len(),
+            n * self.geom.in_features(),
+            "{}: bad conv input",
+            self.core.name
+        );
+        let g = &self.geom;
+        let (oh, ow) = (g.out_h(), g.out_w());
+        let pl = g.patch_len();
+        let rows = self.gemm_rows(n);
+        let mut col = vec![0.0f32; rows * pl];
+        for s in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ky in 0..g.kh {
+                        for kx in 0..g.kw {
+                            for c in 0..g.cin {
+                                let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                                let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                                let v = if iy >= 0
+                                    && (iy as usize) < g.h
+                                    && ix >= 0
+                                    && (ix as usize) < g.w
+                                {
+                                    x[((s * g.h + iy as usize) * g.w + ix as usize)
+                                        * g.cin
+                                        + c]
+                                } else {
+                                    0.0
+                                };
+                                col[((s * oh + oy) * ow + ox) * pl
+                                    + (ky * g.kw + kx) * g.cin
+                                    + c] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.core.forward_ref(&col, rows)
+    }
+
+    /// Packed storage (bytes): the core's packed codes + bias.
+    pub fn packed_bytes(&self) -> usize {
+        self.core.packed_bytes()
+    }
+}
+
+/// One network layer op.  Everything downstream of construction —
+/// [`IntNet`], the serve engine, `deploy::freeze`/`instantiate` — works
+/// on this enum, so the inference/serving/artifact stack is layer-kind
+/// agnostic.
+pub enum IntLayer {
+    Dense(IntDense),
+    Conv2d(IntConv2d),
+}
+
+impl From<IntDense> for IntLayer {
+    fn from(l: IntDense) -> Self {
+        IntLayer::Dense(l)
+    }
+}
+
+impl From<IntConv2d> for IntLayer {
+    fn from(l: IntConv2d) -> Self {
+        IntLayer::Conv2d(l)
+    }
+}
+
+impl IntLayer {
+    fn core(&self) -> &IntDense {
+        match self {
+            IntLayer::Dense(l) => l,
+            IntLayer::Conv2d(c) => &c.core,
+        }
+    }
+
+    fn core_mut(&mut self) -> &mut IntDense {
+        match self {
+            IntLayer::Dense(l) => l,
+            IntLayer::Conv2d(c) => &mut c.core,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.core().name
+    }
+
+    /// Flattened input features per sample (dense `din`; conv
+    /// `cin·h·w`) — what the previous layer must emit.
+    pub fn in_features(&self) -> usize {
+        match self {
+            IntLayer::Dense(l) => l.din,
+            IntLayer::Conv2d(c) => c.geom.in_features(),
+        }
+    }
+
+    /// Flattened output features per sample (dense `dout`; conv
+    /// `cout·out_h·out_w`).
+    pub fn out_features(&self) -> usize {
+        match self {
+            IntLayer::Dense(l) => l.dout,
+            IntLayer::Conv2d(c) => c.geom.out_features(),
+        }
+    }
+
+    /// Shape of the underlying GEMM: `(din, dout)` for dense,
+    /// `(patch_len, cout)` for conv — the weight-tensor shape every
+    /// storage path (`WCT0`, footprint accounting) uses.
+    pub fn core_dims(&self) -> (usize, usize) {
+        let c = self.core();
+        (c.din, c.dout)
+    }
+
+    /// Conv geometry, when this op is a convolution.
+    pub fn conv_geom(&self) -> Option<&ConvGeom> {
+        match self {
+            IntLayer::Dense(_) => None,
+            IntLayer::Conv2d(c) => Some(&c.geom),
+        }
+    }
+
+    pub fn as_dense(&self) -> Option<&IntDense> {
+        match self {
+            IntLayer::Dense(l) => Some(l),
+            IntLayer::Conv2d(_) => None,
+        }
+    }
+
+    pub fn as_conv(&self) -> Option<&IntConv2d> {
+        match self {
+            IntLayer::Dense(_) => None,
+            IntLayer::Conv2d(c) => Some(c),
+        }
+    }
+
+    /// Packed weight codes at their stored granularity.
+    pub fn weights(&self) -> &WeightCodes {
+        &self.core().weights
+    }
+
+    pub fn bias(&self) -> &[f32] {
+        &self.core().bias
+    }
+
+    pub fn a_bits(&self) -> u32 {
+        self.core().a_bits
+    }
+
+    pub fn relu(&self) -> bool {
+        self.core().relu
+    }
+
+    pub fn granularity(&self) -> Granularity {
+        self.core().granularity()
+    }
+
+    pub fn act_range(&self) -> Option<(f32, f32)> {
+        self.core().act_range()
+    }
+
+    pub fn set_act_range(&mut self, lo: f32, hi: f32) {
+        self.core_mut().set_act_range(lo, hi);
+    }
+
+    /// Forward one batch of `in_features()`-wide rows (allocating).
+    pub fn forward(&self, x: &[f32], n: usize) -> Vec<f32> {
+        match self {
+            IntLayer::Dense(l) => l.forward(x, n),
+            IntLayer::Conv2d(c) => c.forward(x, n),
+        }
+    }
+
+    /// Serving-path forward into a caller slice of
+    /// `n * out_features()`, reusing `sc`.
+    pub fn forward_scratch(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &mut LayerScratch,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) {
+        match self {
+            IntLayer::Dense(l) => l.forward_scratch(x, n, sc, out, pool),
+            IntLayer::Conv2d(c) => c.forward_scratch(x, n, sc, out, pool),
+        }
+    }
+
+    /// Retained scalar reference path.
+    pub fn forward_ref(&self, x: &[f32], n: usize) -> Vec<f32> {
+        match self {
+            IntLayer::Dense(l) => l.forward_ref(x, n),
+            IntLayer::Conv2d(c) => c.forward_ref(x, n),
+        }
+    }
+
+    pub fn packed_bytes(&self) -> usize {
+        self.core().packed_bytes()
+    }
+
+    /// f32 footprint of the same parameters (weights + bias).
+    pub fn f32_bytes(&self) -> usize {
+        let (din, dout) = self.core_dims();
+        (din * dout + dout) * 4
+    }
+}
+
+/// An integer-quantized network: a sequence of [`IntLayer`] ops.
 pub struct IntNet {
-    pub layers: Vec<IntDense>,
+    pub layers: Vec<IntLayer>,
     pub num_classes: usize,
 }
 
@@ -984,9 +1504,21 @@ impl IntNet {
             if let Some((lo, hi)) = act_ranges {
                 layer.set_act_range(lo[i], hi[i]);
             }
-            layers.push(layer);
+            layers.push(IntLayer::from(layer));
         }
         Ok(Self { layers, num_classes: meta.num_classes })
+    }
+
+    /// Flattened input width the net consumes (first layer's
+    /// `in_features`; 0 for an empty net).
+    pub fn in_features(&self) -> usize {
+        self.layers.first().map(|l| l.in_features()).unwrap_or(0)
+    }
+
+    /// Flattened output width the net emits (last layer's
+    /// `out_features`; 0 for an empty net).
+    pub fn out_features(&self) -> usize {
+        self.layers.last().map(|l| l.out_features()).unwrap_or(0)
     }
 
     /// Attach calibrated per-layer activation ranges to an existing net
@@ -1021,16 +1553,23 @@ impl IntNet {
         if self.layers.is_empty() {
             return Ok(());
         }
-        if n == 0 || x.len() != n * self.layers[0].din {
+        if n == 0 || x.len() != n * self.in_features() {
             bail!(
                 "calibrate: {} values is not a [{n}, {}] batch",
                 x.len(),
-                self.layers[0].din
+                self.in_features()
             );
         }
         let mut h = x.to_vec();
         for layer in &mut self.layers {
-            let (lo, hi) = quant::group_minmax(&h);
+            let (mut lo, mut hi) = quant::group_minmax(&h);
+            // A padded conv injects literal zeros into the im2col rows,
+            // so the quantization grid must cover 0 even when the batch
+            // itself doesn't.
+            if layer.conv_geom().is_some_and(|g| g.pad > 0) {
+                lo = lo.min(0.0);
+                hi = hi.max(0.0);
+            }
             layer.set_act_range(lo, hi);
             h = layer.forward(&h, n);
         }
@@ -1062,7 +1601,7 @@ impl IntNet {
         sc.ping.clear();
         sc.ping.extend_from_slice(x);
         for layer in &self.layers {
-            sc.pong.resize(n * layer.dout, 0.0);
+            sc.pong.resize(n * layer.out_features(), 0.0);
             layer.forward_scratch(&sc.ping, n, &mut sc.layer, &mut sc.pong, pool);
             std::mem::swap(&mut sc.ping, &mut sc.pong);
         }
@@ -1081,10 +1620,7 @@ impl IntNet {
 
     /// f32 model size in bytes.
     pub fn f32_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .map(|l| (l.din * l.dout + l.dout) * 4)
-            .sum()
+        self.layers.iter().map(|l| l.f32_bytes()).sum()
     }
 
     /// Mean stored weight bitlength over every group of every layer
@@ -1093,7 +1629,7 @@ impl IntNet {
     pub fn mean_w_bits(&self) -> f64 {
         let (mut sum, mut n) = (0.0f64, 0usize);
         for l in &self.layers {
-            let h = l.weights.bits_histogram();
+            let h = l.weights().bits_histogram();
             for (bits, &count) in h.iter().enumerate() {
                 sum += (bits * count) as f64;
                 n += count;
@@ -1111,7 +1647,7 @@ impl IntNet {
     pub fn w_bits_histogram(&self) -> [usize; 17] {
         let mut h = [0usize; 17];
         for l in &self.layers {
-            for (i, c) in l.weights.bits_histogram().iter().enumerate() {
+            for (i, c) in l.weights().bits_histogram().iter().enumerate() {
                 h[i] += c;
             }
         }
@@ -1469,7 +2005,7 @@ mod tests {
         let h = grouped.weights.bits_histogram();
         assert_eq!((h[2], h[4], h[8]), (4, 2, 2));
         assert!((grouped.weights.mean_bits() - 4.0).abs() < 1e-12);
-        let net = IntNet { layers: vec![grouped], num_classes: dout };
+        let net = IntNet { layers: vec![grouped.into()], num_classes: dout };
         assert!((net.mean_w_bits() - 4.0).abs() < 1e-12);
         assert_eq!(net.w_bits_histogram()[2], 4);
     }
@@ -1577,7 +2113,7 @@ mod tests {
             "fc1", &rand_vec(&mut rng, 10 * 4), 10, 4, &vec![0.0; 4], 4, 4, false,
         )
         .unwrap();
-        let mut net = IntNet { layers: vec![l0, l1], num_classes: 4 };
+        let mut net = IntNet { layers: vec![l0.into(), l1.into()], num_classes: 4 };
         assert!(!net.is_calibrated());
         let calib = rand_vec(&mut rng, 32 * 6);
         net.calibrate(&calib, 32).unwrap();
@@ -1641,11 +2177,219 @@ mod tests {
             "fc1", &rand_vec(&mut rng, 16 * 3), 16, 3, &vec![0.0; 3], 4, 4, false,
         )
         .unwrap();
-        let net = IntNet { layers: vec![l0, l1], num_classes: 3 };
+        let net = IntNet { layers: vec![l0.into(), l1.into()], num_classes: 3 };
         let x = rand_vec(&mut rng, 4 * 8);
         let preds = net.predict(&x, 4);
         assert_eq!(preds.len(), 4);
         assert!(preds.iter().all(|&p| p < 3));
         assert!(net.packed_bytes() < net.f32_bytes());
+    }
+
+    fn geom(
+        cin: usize, h: usize, w: usize, cout: usize,
+        kh: usize, kw: usize, stride: usize, pad: usize,
+    ) -> ConvGeom {
+        ConvGeom { cin, h, w, cout, kh, kw, stride, pad }
+    }
+
+    #[test]
+    fn conv_fast_matches_ref_bitwise() {
+        // Span-copying im2col + blocked GEMM vs the element-at-a-time
+        // gather + scalar GEMM, across stride/pad combinations that
+        // exercise every padding branch (full rows out of plane,
+        // partial kernel rows, interior fast copies).
+        let mut rng = Rng::new(0xC2D0);
+        for &(n, g) in &[
+            (2usize, geom(3, 6, 6, 4, 3, 3, 1, 1)),
+            (1, geom(1, 5, 7, 3, 3, 3, 2, 0)),
+            (3, geom(2, 4, 4, 5, 1, 1, 1, 0)),
+            (2, geom(4, 7, 5, 2, 5, 3, 2, 2)),
+            (1, geom(2, 3, 3, 2, 3, 3, 1, 2)), // pad > interior reach
+        ] {
+            let x = rand_vec(&mut rng, n * g.in_features());
+            let w = rand_vec(&mut rng, g.patch_len() * g.cout);
+            let b = rand_vec(&mut rng, g.cout);
+            let conv = IntConv2d::new("cv", &w, g, &b, 4, 5, true).unwrap();
+            let fast = conv.forward(&x, n);
+            let slow = conv.forward_ref(&x, n);
+            assert_eq!(fast.len(), n * g.out_features());
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(
+                    f.to_bits(),
+                    s.to_bits(),
+                    "{g:?} n={n} elem {i}: {f} vs {s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_grouped_fast_matches_ref_bitwise() {
+        // Per-output-kernel bitlengths through the same im2col lowering.
+        let mut rng = Rng::new(0xC2D1);
+        let g = geom(3, 6, 6, 5, 3, 3, 1, 1);
+        let x = rand_vec(&mut rng, 2 * g.in_features());
+        let w = rand_vec(&mut rng, g.patch_len() * g.cout);
+        let b = rand_vec(&mut rng, g.cout);
+        let bits: Vec<f32> = (0..g.cout).map(|j| (2 + (j * 5) % 9) as f32).collect();
+        let mut conv = IntConv2d::new_grouped("cvg", &w, g, &b, &bits, 4, true).unwrap();
+        conv.set_act_range(-2.0, 2.0);
+        assert_eq!(conv.core().granularity(), Granularity::PerOutputChannel);
+        let fast = conv.forward(&x, 2);
+        let slow = conv.forward_ref(&x, 2);
+        assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn conv_forward_scratch_matches_forward_bitwise() {
+        // The serving path: im2col buffer reused across calls (and
+        // across layers of different size), pooled and inline dispatch.
+        let pool = crate::util::pool::WorkerPool::new(3);
+        let mut sc = LayerScratch::default();
+        let mut rng = Rng::new(0xC2D2);
+        for &(n, g) in &[
+            (2usize, geom(3, 6, 6, 4, 3, 3, 1, 1)),
+            (4, geom(2, 5, 5, 3, 3, 3, 2, 1)),
+            (1, geom(1, 4, 4, 2, 1, 1, 1, 0)),
+            (6, geom(8, 16, 16, 16, 3, 3, 1, 1)), // crosses PAR_MIN_MACS
+        ] {
+            let x = rand_vec(&mut rng, n * g.in_features());
+            let w = rand_vec(&mut rng, g.patch_len() * g.cout);
+            let b = rand_vec(&mut rng, g.cout);
+            let mut conv = IntConv2d::new("cvs", &w, g, &b, 4, 4, true).unwrap();
+            conv.set_act_range(-2.5, 2.5);
+            let want = conv.forward(&x, n);
+            let mut got = vec![0.0f32; n * g.out_features()];
+            conv.forward_scratch(&x, n, &mut sc, &mut got, Some(&pool));
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "pooled conv scratch diverged at {g:?}"
+            );
+            let mut inline = vec![0.0f32; n * g.out_features()];
+            conv.forward_scratch(&x, n, &mut sc, &mut inline, None);
+            assert!(inline.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        // The scratch retained its im2col buffer for reuse.
+        assert!(!sc.im2col.is_empty());
+    }
+
+    #[test]
+    fn conv_1x1_stride1_matches_dense_bitwise() {
+        // A 1x1/stride-1/pad-0 conv is a dense layer applied per pixel:
+        // the im2col expansion is the identity, the patch rows are the
+        // pixel vectors, and the dynamic activation range sees the same
+        // value multiset — so the lowering must be *bitwise* the dense
+        // forward over [n·h·w, cin] rows, at both granularities.
+        let mut rng = Rng::new(0xC2D3);
+        let g = geom(6, 4, 5, 7, 1, 1, 1, 0);
+        let n = 3usize;
+        let x = rand_vec(&mut rng, n * g.in_features());
+        let w = rand_vec(&mut rng, g.cin * g.cout);
+        let b = rand_vec(&mut rng, g.cout);
+        let rows = n * g.h * g.w;
+
+        let conv = IntConv2d::new("c1", &w, g, &b, 4, 5, true).unwrap();
+        let dense = IntDense::new("d1", &w, g.cin, g.cout, &b, 4, 5, true).unwrap();
+        let cv = conv.forward(&x, n);
+        let dn = dense.forward(&x, rows);
+        assert_eq!(cv.len(), dn.len());
+        assert!(cv.iter().zip(&dn).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let bits: Vec<f32> = (0..g.cout).map(|j| (1 + (j * 3) % 8) as f32).collect();
+        let conv_g =
+            IntConv2d::new_grouped("c1g", &w, g, &b, &bits, 5, false).unwrap();
+        let dense_g =
+            IntDense::new_grouped("d1g", &w, g.cin, g.cout, &b, &bits, 5, false).unwrap();
+        let cvg = conv_g.forward(&x, n);
+        let dng = dense_g.forward(&x, rows);
+        assert!(cvg.iter().zip(&dng).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn conv_geom_validation() {
+        let ok = geom(3, 8, 8, 4, 3, 3, 1, 1);
+        assert!(ok.validate("t").is_ok());
+        assert_eq!(ok.out_h(), 8);
+        assert_eq!(ok.patch_len(), 27);
+        // Degenerate dims, zero stride, kernel larger than padded plane.
+        assert!(geom(0, 8, 8, 4, 3, 3, 1, 1).validate("t").is_err());
+        assert!(geom(3, 8, 8, 0, 3, 3, 1, 1).validate("t").is_err());
+        assert!(geom(3, 8, 8, 4, 3, 3, 0, 1).validate("t").is_err());
+        assert!(geom(3, 2, 2, 4, 5, 5, 1, 1).validate("t").is_err());
+        // new() rejects a weight slice that disagrees with the geometry.
+        let g = geom(2, 4, 4, 3, 3, 3, 1, 1);
+        assert!(IntConv2d::new("t", &[0.0; 10], g, &[0.0; 3], 4, 4, true).is_err());
+        // from_core() rejects a core whose GEMM shape mismatches.
+        let w = vec![0.1f32; g.patch_len() * g.cout];
+        let core_bad =
+            IntDense::new("t", &vec![0.1f32; 5 * g.cout], 5, g.cout, &[0.0; 3], 4, 4, true)
+                .unwrap();
+        assert!(IntConv2d::from_core(g, core_bad).is_err());
+        let core_ok =
+            IntDense::new("t", &w, g.patch_len(), g.cout, &[0.0; 3], 4, 4, true).unwrap();
+        assert!(IntConv2d::from_core(g, core_ok).is_ok());
+    }
+
+    #[test]
+    fn conv_net_forward_into_matches_forward_bitwise() {
+        // A conv->conv->dense IntNet through the serving entry point:
+        // calibrate (padded convs must cover 0), then forward_into on a
+        // reused scratch must match the allocating forward bitwise.
+        let mut rng = Rng::new(0xC2D4);
+        let g0 = geom(3, 8, 8, 4, 3, 3, 1, 1); // -> 8x8x4 = 256
+        let g1 = geom(4, 8, 8, 6, 3, 3, 2, 1); // -> 4x4x6 = 96
+        let c0 = IntConv2d::new(
+            "c0",
+            &rand_vec(&mut rng, g0.patch_len() * g0.cout),
+            g0,
+            &rand_vec(&mut rng, g0.cout),
+            4,
+            4,
+            true,
+        )
+        .unwrap();
+        let c1 = IntConv2d::new(
+            "c1",
+            &rand_vec(&mut rng, g1.patch_len() * g1.cout),
+            g1,
+            &rand_vec(&mut rng, g1.cout),
+            4,
+            4,
+            true,
+        )
+        .unwrap();
+        let fc = IntDense::new(
+            "fc",
+            &rand_vec(&mut rng, 96 * 5),
+            96,
+            5,
+            &rand_vec(&mut rng, 5),
+            4,
+            4,
+            false,
+        )
+        .unwrap();
+        let mut net =
+            IntNet { layers: vec![c0.into(), c1.into(), fc.into()], num_classes: 5 };
+        assert_eq!(net.in_features(), 192);
+        assert_eq!(net.out_features(), 5);
+        let calib = rand_vec(&mut rng, 16 * 192);
+        net.calibrate(&calib, 16).unwrap();
+        assert!(net.is_calibrated());
+        // Padded conv layers must have pulled 0 into their pinned range.
+        for l in &net.layers {
+            if l.conv_geom().is_some_and(|g| g.pad > 0) {
+                let (lo, hi) = l.act_range().unwrap();
+                assert!(lo <= 0.0 && hi >= 0.0);
+            }
+        }
+        let x = rand_vec(&mut rng, 4 * 192);
+        let want = net.forward(&x, 4);
+        let mut sc = NetScratch::default();
+        let got = net.forward_into(&x, 4, &mut sc, None).to_vec();
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // Second call on the same scratch (warm path) stays identical.
+        let again = net.forward_into(&x, 4, &mut sc, None).to_vec();
+        assert!(want.iter().zip(&again).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 }

@@ -115,9 +115,11 @@ OPTIONS (common):
 OPTIONS (deploy):
   export:  --out FILE.bpma  --synthetic | --ckpt FILE.bpck  --bits B
            --granularity layer|channel   (per-output-channel weight bits)
-  inspect: <FILE.bpma>                   (reports per-channel bit histograms)
+           --arch mlp|conv               (synthetic fixture: dense or conv/im2col)
+  inspect: <FILE.bpma>                   (reports per-channel bit histograms,
+                                          conv geometry via the CNV0 section)
   serve:   --model FILE.bpma  --swap-to B.bpma  --swap-after N
-           --granularity layer|channel   (for --synthetic / trained models)
+           --granularity layer|channel  --arch mlp|conv  (for --synthetic)
            --deadline-ms N  --shed-policy reject-newest|drop-expired
            --canary B.bpma --canary-pct P --canary-window N --canary-promote K
 ";
@@ -515,7 +517,13 @@ fn artifact_summary(art: &bitprune::deploy::Artifact) -> String {
     for l in &art.layers {
         t.row(vec![
             l.name.clone(),
-            format!("{}x{}", l.din, l.dout),
+            match &l.conv {
+                Some(g) => format!(
+                    "{}x{}x{} k{}x{}s{}p{} ->{}",
+                    g.cin, g.h, g.w, g.kh, g.kw, g.stride, g.pad, g.cout
+                ),
+                None => format!("{}x{}", l.din, l.dout),
+            },
             match l.granularity() {
                 quant::Granularity::PerLayer => format!("{}", l.w_bits()),
                 quant::Granularity::PerOutputChannel => {
@@ -568,12 +576,14 @@ fn cmd_export(args: &Args) -> Result<()> {
     let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
     let gran = arg_granularity(args)?;
 
+    let arch = arg_arch(args)?;
     let (net, model_name) = if args.flag("synthetic") {
+        let tag = if arch == SynthArch::Conv { "conv" } else { "mlp" };
         eprintln!(
-            "freezing the synthetic calibrated mlp fixture ({bits}-bit, {} granularity)",
+            "freezing the synthetic calibrated {tag} fixture ({bits}-bit, {} granularity)",
             gran.name()
         );
-        (synthetic_for(gran, cfg.seed, bits), "synthetic-mlp".to_string())
+        (synthetic_for(arch, gran, cfg.seed, bits), format!("synthetic-{tag}"))
     } else if let Some(ckpt) = args.get("ckpt") {
         eprintln!("freezing checkpoint '{ckpt}' ({})", cfg.model);
         (net_from_checkpoint(&cfg, ckpt, gran)?, cfg.model.clone())
@@ -635,16 +645,46 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// The synthetic calibrated mlp fixture at the requested granularity.
-/// Per-channel weights cycle through `{bits/2, bits, 2·bits}` (clamped
-/// to [1,16]) so `--bits` steers the grouped fixture too — the default
-/// `--bits 4` yields the canonical 2/4/8 mix.
-fn synthetic_for(gran: quant::Granularity, seed: u64, bits: u32) -> bitprune::infer::IntNet {
-    match gran {
-        quant::Granularity::PerLayer => bitprune::serve::synthetic_mlp(seed, bits, bits),
-        quant::Granularity::PerOutputChannel => {
-            let cycle = [(bits / 2).max(1), bits, (bits * 2).min(16)];
+/// The synthetic architecture behind `--synthetic`: the calibrated mlp
+/// fixture (default) or the conv fixture (`--arch conv`).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SynthArch {
+    Mlp,
+    Conv,
+}
+
+fn arg_arch(args: &Args) -> Result<SynthArch> {
+    match args.get("arch") {
+        None | Some("mlp") => Ok(SynthArch::Mlp),
+        Some("conv") => Ok(SynthArch::Conv),
+        Some(a) => bail!("unknown arch '{a}' — expected 'mlp' or 'conv'"),
+    }
+}
+
+/// The synthetic calibrated fixture at the requested architecture and
+/// granularity.  Per-channel (mlp) / per-kernel (conv) weights cycle
+/// through `{bits/2, bits, 2·bits}` (clamped to [1,16]) so `--bits`
+/// steers the grouped fixtures too — the default `--bits 4` yields the
+/// canonical 2/4/8 mix.
+fn synthetic_for(
+    arch: SynthArch,
+    gran: quant::Granularity,
+    seed: u64,
+    bits: u32,
+) -> bitprune::infer::IntNet {
+    let cycle = [(bits / 2).max(1), bits, (bits * 2).min(16)];
+    match (arch, gran) {
+        (SynthArch::Mlp, quant::Granularity::PerLayer) => {
+            bitprune::serve::synthetic_mlp(seed, bits, bits)
+        }
+        (SynthArch::Mlp, quant::Granularity::PerOutputChannel) => {
             bitprune::serve::synthetic_net_grouped(&[32, 256, 128, 10], seed, &cycle, bits)
+        }
+        (SynthArch::Conv, quant::Granularity::PerLayer) => {
+            bitprune::serve::synthetic_conv_net(seed, bits, bits)
+        }
+        (SynthArch::Conv, quant::Granularity::PerOutputChannel) => {
+            bitprune::serve::synthetic_conv_net_grouped(seed, &cycle, bits)
         }
     }
 }
@@ -733,11 +773,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         (art.instantiate()?, path.to_string())
     } else if args.flag("synthetic") {
+        let arch = arg_arch(args)?;
+        let tag = if arch == SynthArch::Conv { "conv" } else { "mlp" };
         eprintln!(
-            "serving the synthetic calibrated mlp fixture ({bits}-bit, {} granularity)",
+            "serving the synthetic calibrated {tag} fixture ({bits}-bit, {} granularity)",
             gran.name()
         );
-        (synthetic_for(gran, cfg.seed, bits), "synthetic-mlp".into())
+        (synthetic_for(arch, gran, cfg.seed, bits), format!("synthetic-{tag}"))
     } else {
         match trained_calibrated_net(&cfg, gran) {
             Ok(net) => (net, cfg.model.clone()),
@@ -750,7 +792,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
                      bitprune serve --model model.bpma\n  \
                      falling back to the synthetic calibrated mlp fixture"
                 );
-                (synthetic_for(gran, cfg.seed, bits), "synthetic-mlp".into())
+                (
+                    synthetic_for(SynthArch::Mlp, gran, cfg.seed, bits),
+                    "synthetic-mlp".into(),
+                )
             }
         }
     };
@@ -766,7 +811,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     let net = Arc::new(net);
-    let din = net.layers.first().map(|l| l.din).unwrap_or(0);
+    let din = net.in_features();
 
     // Load the swap target up front so a bad file fails before traffic.
     let swap_to: Option<(Arc<bitprune::infer::IntNet>, String)> =
@@ -1075,6 +1120,8 @@ impl CliOpts for RunConfig {
             "canary-promote",
             // weight-quantization granularity (export / serve)
             "granularity",
+            // synthetic fixture architecture (export / serve --synthetic)
+            "arch",
         ]);
         v
     }

@@ -424,6 +424,26 @@ pub fn mac_cost(meta: &ModelMeta, bits_w: &[f32], bits_a: &[f32]) -> f64 {
         .sum()
 }
 
+/// Per-sample MACs of a Conv2d layer: one multiply-accumulate per
+/// output element per kernel tap — `out_h · out_w · cout · kh · kw ·
+/// cin`.  This is the HLO analyzer's convolution convention
+/// ([`crate::hlo::analyze_text`] scores a convolution at
+/// `2 · output elems · kernel spatial · cin`, i.e. FLOPs = 2 · MACs),
+/// so `macs` entries in a model meta built from conv geometry
+/// cost-account consistently with the static HLO reports.  A 1×1
+/// kernel over a 1×1 output plane degenerates to the dense count
+/// `din · dout`.
+pub fn conv_macs(
+    cin: usize,
+    kh: usize,
+    kw: usize,
+    out_h: usize,
+    out_w: usize,
+    cout: usize,
+) -> usize {
+    out_h * out_w * cout * kh * kw * cin
+}
+
 /// A layer's regularizer weight split evenly over its groups, so the
 /// Σ(λ·8) == 1 normalization of [`Criterion::lambdas`] is preserved at
 /// any granularity (an all-8-bit network still scores bit-loss 1.0).
@@ -1051,6 +1071,38 @@ mod tests {
         let meta = tiny_meta();
         let bad: Vec<Vec<f32>> = vec![vec![4.0; 1], vec![4.0; 1]];
         weight_footprint_bits_grouped(&meta, &bad);
+    }
+
+    #[test]
+    fn conv_macs_pin_dense_and_hlo_conventions() {
+        // Dense equivalence: a 1×1 kernel over a 1×1 output plane is
+        // exactly a dense layer of din·dout MACs.
+        assert_eq!(conv_macs(64, 1, 1, 1, 1, 10), 64 * 10);
+        // The HLO analyzer's pinned convolution case: output
+        // f32[32,16,16,32], kernel f32[3,3,3,32].  Per-sample MACs =
+        // 16·16·32 · 3·3·3 = 221184; the analyzer scores the whole
+        // batch at 2·MACs FLOPs.
+        let per_sample = conv_macs(3, 3, 3, 16, 16, 32);
+        assert_eq!(per_sample, 221_184);
+        let batch = 32;
+        let hlo = crate::hlo::analyze_text(
+            "ENTRY %main {\n  %conv = f32[32,16,16,32]{3,2,1,0} \
+             convolution(f32[32,16,16,3]{3,2,1,0} %x, \
+             f32[3,3,3,32]{3,2,1,0} %w), window={size=3x3 pad=1_1x1_1}\n}",
+        );
+        assert_eq!(hlo.matmul_flops, 2.0 * (batch * per_sample) as f64);
+        // The integer conv op's own accounting agrees.
+        let g = crate::infer::ConvGeom {
+            cin: 3,
+            h: 16,
+            w: 16,
+            cout: 32,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        assert_eq!(g.macs_per_sample(), conv_macs(3, 3, 3, g.out_h(), g.out_w(), 32));
     }
 
     #[test]

@@ -179,13 +179,15 @@ pub fn pinned_seed() -> u64 {
         .unwrap_or(0x20260807)
 }
 
-/// A same-shape, differently-seeded twin of `net`: passes every
-/// registry shape check, serves finite logits — and disagrees with the
-/// original on most argmaxes.  The fixture for "corrupted-logit canary
-/// must be auto-rolled-back".
+/// A same-endpoint-shape, differently-seeded twin of `net`: passes
+/// every registry shape check (the registry keys on flattened
+/// in/out features, so a dense twin stands in for a conv net too),
+/// serves finite logits — and disagrees with the original on most
+/// argmaxes.  The fixture for "corrupted-logit canary must be
+/// auto-rolled-back".
 pub fn corrupted_twin(net: &IntNet, seed: u64) -> IntNet {
     let mut dims = Vec::with_capacity(net.layers.len() + 1);
-    dims.push(net.layers[0].din);
-    dims.extend(net.layers.iter().map(|l| l.dout));
+    dims.push(net.in_features());
+    dims.extend(net.layers.iter().map(|l| l.out_features()));
     super::synthetic_net(&dims, seed, 4, 6)
 }

@@ -59,7 +59,7 @@ pub use server::{
     ServerHandle, ShedPolicy,
 };
 
-use crate::infer::{IntDense, IntNet};
+use crate::infer::{ConvGeom, IntConv2d, IntDense, IntNet};
 use crate::util::rng::Rng;
 
 /// Build a random dense network over `dims` (e.g. `[32, 256, 128, 10]`:
@@ -79,7 +79,8 @@ pub fn synthetic_net(dims: &[usize], seed: u64, w_bits: u32, a_bits: u32) -> Int
         let relu = i + 2 < dims.len();
         layers.push(
             IntDense::new(&format!("fc{i}"), &w, din, dout, &b, w_bits, a_bits, relu)
-                .expect("synthetic layer shapes are consistent"),
+                .expect("synthetic layer shapes are consistent")
+                .into(),
         );
     }
     let num_classes = *dims.last().unwrap();
@@ -132,7 +133,8 @@ pub fn synthetic_net_grouped(
                 a_bits,
                 relu,
             )
-            .expect("synthetic grouped layer shapes are consistent"),
+            .expect("synthetic grouped layer shapes are consistent")
+            .into(),
         );
     }
     let num_classes = *dims.last().unwrap();
@@ -142,6 +144,87 @@ pub fn synthetic_net_grouped(
         (0..calib_n * dims[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
     net.calibrate(&calib, calib_n).expect("calibration batch is well-formed");
     net
+}
+
+/// The synthetic conv fixture topology: a 3×8×8 HWC input through two
+/// 3×3 convolutions (stride 1 then stride 2, both padded) into a dense
+/// classifier head — 192 → 256 → 256 → 10 flattened features.
+fn conv_fixture_geoms() -> (ConvGeom, ConvGeom) {
+    (
+        ConvGeom { cin: 3, h: 8, w: 8, cout: 4, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ConvGeom { cin: 4, h: 8, w: 8, cout: 16, kh: 3, kw: 3, stride: 2, pad: 1 },
+    )
+}
+
+/// Shared builder for the conv fixtures: `kernel_bits(cout)` returns
+/// `None` for a per-layer build at `w_bits`, or the per-output-kernel
+/// bitlength vector for a grouped build.
+fn synthetic_conv_with(
+    seed: u64,
+    w_bits: u32,
+    a_bits: u32,
+    kernel_bits: impl Fn(usize) -> Option<Vec<f32>>,
+) -> IntNet {
+    let (g0, g1) = conv_fixture_geoms();
+    let mut rng = Rng::new(seed);
+    let mut rand = |n: usize, std: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, std)).collect()
+    };
+    let mut layers: Vec<crate::infer::IntLayer> = Vec::with_capacity(3);
+    for (name, g) in [("conv0", g0), ("conv1", g1)] {
+        let w = rand(g.patch_len() * g.cout, (1.0 / g.patch_len() as f32).sqrt());
+        let b = rand(g.cout, 0.01);
+        let conv = match kernel_bits(g.cout) {
+            None => IntConv2d::new(name, &w, g, &b, w_bits, a_bits, true),
+            Some(bits) => IntConv2d::new_grouped(name, &w, g, &b, &bits, a_bits, true),
+        }
+        .expect("synthetic conv shapes are consistent");
+        layers.push(conv.into());
+    }
+    let dflat = g1.out_features();
+    let w = rand(dflat * 10, (1.0 / dflat as f32).sqrt());
+    let b = rand(10, 0.01);
+    let head = match kernel_bits(10) {
+        None => IntDense::new("fc", &w, dflat, 10, &b, w_bits, a_bits, false),
+        Some(bits) => {
+            IntDense::new_grouped("fc", &w, dflat, 10, &b, &bits, a_bits, false)
+        }
+    }
+    .expect("synthetic head shapes are consistent");
+    layers.push(head.into());
+    let mut net = IntNet { layers, num_classes: 10 };
+    let calib_n = 256;
+    let calib: Vec<f32> =
+        (0..calib_n * net.in_features()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    net.calibrate(&calib, calib_n).expect("calibration batch is well-formed");
+    net
+}
+
+/// A random **convolutional** network (conv 3×3/s1 → conv 3×3/s2 →
+/// dense head over a 3×8×8 HWC input), quantized at `w_bits`/`a_bits`
+/// and calibrated like [`synthetic_net`] — the conv-artifact fixture
+/// for `bitprune export --synthetic --arch conv`, the serve suites and
+/// the benches.
+pub fn synthetic_conv_net(seed: u64, w_bits: u32, a_bits: u32) -> IntNet {
+    synthetic_conv_with(seed, w_bits, a_bits, |_| None)
+}
+
+/// [`synthetic_conv_net`] at **per-output-kernel** weight granularity:
+/// each conv kernel (and each head channel) packs at its own bitlength,
+/// cycling through `w_bits_cycle`.
+pub fn synthetic_conv_net_grouped(
+    seed: u64,
+    w_bits_cycle: &[u32],
+    a_bits: u32,
+) -> IntNet {
+    assert!(!w_bits_cycle.is_empty(), "empty bitlength cycle");
+    synthetic_conv_with(seed, w_bits_cycle[0], a_bits, |dout| {
+        Some(
+            (0..dout)
+                .map(|j| w_bits_cycle[j % w_bits_cycle.len()] as f32)
+                .collect(),
+        )
+    })
 }
 
 #[cfg(test)]
@@ -177,10 +260,57 @@ mod tests {
     fn synthetic_mlp_is_calibrated_and_shaped() {
         let net = synthetic_mlp(7, 4, 8);
         assert_eq!(net.layers.len(), 3);
-        assert_eq!(net.layers[0].din, 32);
-        assert_eq!(net.layers[2].dout, 10);
+        assert_eq!(net.in_features(), 32);
+        assert_eq!(net.out_features(), 10);
         assert_eq!(net.num_classes, 10);
         assert!(net.is_calibrated());
-        assert!(net.layers[0].relu && !net.layers[2].relu);
+        assert!(net.layers[0].relu() && !net.layers[2].relu());
+    }
+
+    #[test]
+    fn synthetic_conv_net_is_calibrated_and_shaped() {
+        let net = synthetic_conv_net(9, 4, 6);
+        assert_eq!(net.layers.len(), 3);
+        assert_eq!(net.in_features(), 3 * 8 * 8);
+        assert_eq!(net.out_features(), 10);
+        assert!(net.is_calibrated());
+        assert!(net.layers[0].conv_geom().is_some());
+        assert!(net.layers[1].conv_geom().is_some());
+        assert!(net.layers[2].conv_geom().is_none());
+        // Padded convs cover 0 in their calibrated range.
+        let (lo, hi) = net.layers[0].act_range().unwrap();
+        assert!(lo <= 0.0 && hi >= 0.0);
+        // Calibrated ⇒ batch-invariant through the conv stack.
+        let solo = net.forward(&[0.25; 192], 1);
+        let mut batch = vec![0.25f32; 192];
+        batch.extend(vec![6.0f32; 192]);
+        let pair = net.forward(&batch, 2);
+        assert!(solo
+            .iter()
+            .zip(&pair[..10])
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn synthetic_conv_grouped_is_per_kernel_and_mixed() {
+        let net = synthetic_conv_net_grouped(9, &[2, 4, 8], 6);
+        assert!(net.is_calibrated());
+        for l in &net.layers {
+            assert_eq!(
+                l.granularity(),
+                crate::quant::Granularity::PerOutputChannel
+            );
+        }
+        let h = net.w_bits_histogram();
+        assert!(h[2] > 0 && h[4] > 0 && h[8] > 0);
+        // Each conv group spans one kernel's kh·kw·cin taps.
+        let g = net.layers[0].conv_geom().unwrap();
+        match net.layers[0].weights() {
+            crate::bitpack::WeightCodes::PerChannel(p) => {
+                assert_eq!(p.group_size, g.patch_len());
+                assert_eq!(p.n_groups(), g.cout);
+            }
+            _ => panic!("grouped conv fixture must carry per-kernel codes"),
+        }
     }
 }

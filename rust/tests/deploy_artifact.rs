@@ -14,7 +14,9 @@
 //!    no OOM-scale allocation.  Pure rust — runs without AOT artifacts.
 
 use bitprune::deploy::{freeze, section_table, Artifact};
-use bitprune::serve::{synthetic_net, synthetic_net_grouped};
+use bitprune::serve::{
+    synthetic_conv_net, synthetic_conv_net_grouped, synthetic_net, synthetic_net_grouped,
+};
 use bitprune::util::proptest::check;
 use bitprune::util::rng::Rng;
 
@@ -199,6 +201,95 @@ fn grouped_flag_without_grp0_is_rejected() {
     spliced[12..16].copy_from_slice(&(count - 1).to_le_bytes());
     let err = Artifact::from_bytes(&spliced).unwrap_err();
     assert!(format!("{err:#}").contains("GRP0"), "{err:#}");
+}
+
+#[test]
+fn conv_roundtrip_instantiate_is_bit_identical() {
+    // The CNV0 contract: conv artifacts (per-layer and per-kernel)
+    // roundtrip freeze → bytes → parse → instantiate() bit-identically,
+    // and the wire image carries a checksummed, known CNV0 section
+    // (after GRP0 for grouped models).
+    for (net, name, want_tags) in [
+        (
+            synthetic_conv_net(0xC0417, 4, 5),
+            "conv-flat",
+            vec!["MET0", "LAY0", "WCT0", "BIA0", "CNV0"],
+        ),
+        (
+            synthetic_conv_net_grouped(0xC0418, &[2, 4, 8], 5),
+            "conv-grouped",
+            vec!["MET0", "LAY0", "WCT0", "BIA0", "GRP0", "CNV0"],
+        ),
+    ] {
+        let art = freeze(&net, name);
+        assert!(art.is_conv(), "{name}: conv fixture must freeze as conv");
+        let bytes = art.to_bytes();
+        let table = section_table(&bytes).unwrap();
+        let tags: Vec<&str> = table.iter().map(|s| s.tag.as_str()).collect();
+        assert_eq!(tags, want_tags, "{name}");
+        assert!(table.iter().all(|s| s.crc_ok && s.known), "{name}");
+
+        let rebuilt = Artifact::from_bytes(&bytes).unwrap().instantiate().unwrap();
+        let mut rng = Rng::new(0xF00D);
+        let x = rand_batch(&mut rng, 5, net.in_features());
+        let want = net.forward(&x, 5);
+        let got = rebuilt.forward(&x, 5);
+        assert_eq!(want.len(), got.len(), "{name}");
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{name}: instantiated conv net diverges from source"
+        );
+    }
+}
+
+#[test]
+fn conv_truncation_and_corruption_fuzz() {
+    // Truncation at every byte and a flipped byte in every section
+    // (CNV0 included) must fail cleanly for a conv artifact too.
+    let art = freeze(&synthetic_conv_net(0xC0FF, 3, 4), "cfuzz");
+    let bytes = art.to_bytes();
+    assert!(Artifact::from_bytes(&bytes).is_ok());
+    for cut in 0..bytes.len() {
+        assert!(
+            Artifact::from_bytes(&bytes[..cut]).is_err(),
+            "conv prefix of {cut}/{} bytes parsed successfully",
+            bytes.len()
+        );
+    }
+    for s in &section_table(&bytes).unwrap() {
+        for probe in [0, s.payload_len / 2, s.payload_len.saturating_sub(1)] {
+            let mut corrupt = bytes.clone();
+            corrupt[s.payload_offset + probe] ^= 0x20;
+            assert!(
+                Artifact::from_bytes(&corrupt).is_err(),
+                "flipping byte {probe} of conv section {} went unnoticed",
+                s.tag
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_flag_without_cnv0_is_rejected() {
+    // Splice the CNV0 section out of a conv artifact: the LAY0 conv
+    // flags (and poisoned din=0 fields) survive, so the loader must
+    // refuse loudly — a pre-CNV0 reader must never quietly build a
+    // degenerate dense net from a conv artifact.
+    let art = freeze(&synthetic_conv_net(0xC0DE, 4, 4), "nocnv");
+    let bytes = art.to_bytes();
+    let table = section_table(&bytes).unwrap();
+    let cnv = table.iter().find(|s| s.tag == "CNV0").unwrap();
+    // A section frame is tag(4) + len(8) + payload + crc(4).
+    let frame_start = cnv.payload_offset - 12;
+    let frame_end = cnv.payload_offset + cnv.payload_len + 4;
+    let mut spliced = Vec::new();
+    spliced.extend_from_slice(&bytes[..frame_start]);
+    spliced.extend_from_slice(&bytes[frame_end..]);
+    // Fix the section count (offset 12).
+    let count = u32::from_le_bytes(spliced[12..16].try_into().unwrap());
+    spliced[12..16].copy_from_slice(&(count - 1).to_le_bytes());
+    let err = Artifact::from_bytes(&spliced).unwrap_err();
+    assert!(format!("{err:#}").contains("CNV0"), "{err:#}");
 }
 
 #[test]

@@ -4,7 +4,7 @@
 //! at unaligned lengths.  Pure rust — runs without artifacts.
 
 use bitprune::bitpack;
-use bitprune::infer::IntDense;
+use bitprune::infer::{ConvGeom, IntConv2d, IntDense};
 use bitprune::quant;
 use bitprune::util::proptest::check;
 use bitprune::util::rng::Rng;
@@ -242,6 +242,115 @@ fn grouped_packer_matches_scalar_ref() {
             for g in 0..fast.n_groups() {
                 if fast.group_codes(g) != fast.group_codes_ref(g) {
                     return Err(format!("group {g} code unpack differs"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn conv_im2col_matches_scalar_ref() {
+    // The im2col fast path (span-copying packer + blocked GEMM) vs the
+    // element-at-a-time gather reference: random geometries — strides,
+    // pads (including pad deeper than the kernel's interior reach),
+    // kernels larger than the padded plane are regenerated away by
+    // construction below.
+    check(
+        "fastpath-conv-parity",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(4);
+            let cin = 1 + rng.below_usize(4);
+            let h = 3 + rng.below_usize(8);
+            let w = 3 + rng.below_usize(8);
+            let cout = 1 + rng.below_usize(8);
+            let kh = 1 + rng.below_usize(h.min(3));
+            let kw = 1 + rng.below_usize(w.min(3));
+            let stride = 1 + rng.below_usize(2);
+            let pad = rng.below_usize(3);
+            let g = ConvGeom { cin, h, w, cout, kh, kw, stride, pad };
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let relu = rng.below(2) == 0;
+            let x = rand_vec(rng, n * g.in_features());
+            let wt = rand_vec(rng, g.patch_len() * cout);
+            let b = rand_vec(rng, cout);
+            (n, g, wb, ab, relu, x, wt, b)
+        },
+        |(n, g, wb, ab, relu, x, wt, b)| {
+            let layer = IntConv2d::new("c", wt, *g, b, *wb, *ab, *relu)
+                .map_err(|e| e.to_string())?;
+            let fast = layer.forward(x, *n);
+            let slow = layer.forward_ref(x, *n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                if f.to_bits() != s.to_bits() {
+                    return Err(format!("{g:?} bits ({wb},{ab}) elem {i}: {f} vs {s}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn conv_1x1_stride1_matches_dense_bitwise() {
+    // A 1×1/stride-1/pad-0 convolution is a dense layer applied at
+    // every pixel: im2col is the identity, so the conv over [n,h,w,cin]
+    // must be bit-identical to the dense layer over [n·h·w, cin] rows —
+    // at per-layer AND per-output-kernel granularity (the dynamic-range
+    // plans see the same value multiset, hence the same min/max).
+    check(
+        "fastpath-conv-1x1-dense",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(4);
+            let cin = 1 + rng.below_usize(12);
+            let h = 1 + rng.below_usize(6);
+            let w = 1 + rng.below_usize(6);
+            let cout = 1 + rng.below_usize(10);
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let grouped = rng.below(2) == 0;
+            let relu = rng.below(2) == 0;
+            let x = rand_vec(rng, n * h * w * cin);
+            let wt = rand_vec(rng, cin * cout);
+            let b = rand_vec(rng, cout);
+            let ch_bits: Vec<f32> =
+                (0..cout).map(|_| (1 + rng.below(16)) as f32).collect();
+            (n, cin, h, w, cout, wb, ab, grouped, relu, x, wt, b, ch_bits)
+        },
+        |(n, cin, h, w, cout, wb, ab, grouped, relu, x, wt, b, ch_bits)| {
+            let g = ConvGeom {
+                cin: *cin, h: *h, w: *w, cout: *cout,
+                kh: 1, kw: 1, stride: 1, pad: 0,
+            };
+            let (conv, dense) = if *grouped {
+                (
+                    IntConv2d::new_grouped("c", wt, g, b, ch_bits, *ab, *relu)
+                        .map_err(|e| e.to_string())?,
+                    IntDense::new_grouped("d", wt, *cin, *cout, b, ch_bits, *ab, *relu)
+                        .map_err(|e| e.to_string())?,
+                )
+            } else {
+                (
+                    IntConv2d::new("c", wt, g, b, *wb, *ab, *relu)
+                        .map_err(|e| e.to_string())?,
+                    IntDense::new("d", wt, *cin, *cout, b, *wb, *ab, *relu)
+                        .map_err(|e| e.to_string())?,
+                )
+            };
+            let rows = n * h * w;
+            let cv = conv.forward(x, *n);
+            let dv = dense.forward(x, rows);
+            if cv.len() != dv.len() {
+                return Err("length mismatch".into());
+            }
+            for (i, (c, d)) in cv.iter().zip(&dv).enumerate() {
+                if c.to_bits() != d.to_bits() {
+                    return Err(format!(
+                        "grouped={grouped} ({n},{cin},{h}x{w},{cout}) elem {i}: conv {c} vs dense {d}"
+                    ));
                 }
             }
             Ok(())

@@ -49,6 +49,7 @@ base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
 TRACKED = {
     "infer-fastpath": [
         "intnet/forward/64x256x256/4b",
+        "intnet/conv_forward/16x32x8x8k3/4b",
         "intnet/forward_grouped/64x256x256/ch248",
         "rust/fake_quant/16384",
         "bitpack/pack/65536/4b",
