@@ -6,6 +6,7 @@
 
 use bitprune::bitpack;
 use bitprune::infer::{ConvGeom, IntConv2d, IntDense};
+use bitprune::quant::Codebook;
 use bitprune::util::bench::Bench;
 use bitprune::util::rng::Rng;
 
@@ -92,6 +93,57 @@ fn main() {
             &b,
             &format!("intnet/forward_grouped/{tag}"),
             &format!("intnet/forward_grouped_ref/{tag}"),
+        );
+    }
+
+    // Shift-add GEMM (non-uniform codebooks: the inner multiply
+    // replaced by shifts/adds over (sign, exponent) codes) vs the
+    // retained scalar multiply reference — per-layer PoT and grouped
+    // APoT at the headline shape.
+    {
+        let (n, din, dout) = (64usize, 256usize, 256usize);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let bias = rand_vec(&mut rng, dout);
+        let macs = (n * din * dout) as f64;
+
+        let pot = IntDense::new_cbk(
+            "bench-s", &w, din, dout, &bias, 4, 4, true, Codebook::PowerOfTwo,
+        )
+        .unwrap();
+        assert!(pot.uses_shift_gemm());
+        let tag = format!("{n}x{din}x{dout}/pot4b");
+        b.run_elems(&format!("intnet/forward_shift/{tag}"), macs, || {
+            pot.forward(&x, n)
+        });
+        b.run_elems(&format!("intnet/forward_shift_ref/{tag}"), macs, || {
+            pot.forward_ref(&x, n)
+        });
+        speedup(
+            &b,
+            &format!("intnet/forward_shift/{tag}"),
+            &format!("intnet/forward_shift_ref/{tag}"),
+        );
+
+        let ch_bits: Vec<f32> =
+            (0..dout).map(|j| [2.0f32, 4.0, 8.0][j % 3]).collect();
+        let apot = IntDense::new_grouped_cbk(
+            "bench-sg", &w, din, dout, &bias, &ch_bits, 4, true,
+            Codebook::AdditivePot2,
+        )
+        .unwrap();
+        assert!(apot.uses_shift_gemm());
+        let tag = format!("{n}x{din}x{dout}/apot-ch248");
+        b.run_elems(&format!("intnet/forward_shift_grouped/{tag}"), macs, || {
+            apot.forward(&x, n)
+        });
+        b.run_elems(&format!("intnet/forward_shift_grouped_ref/{tag}"), macs, || {
+            apot.forward_ref(&x, n)
+        });
+        speedup(
+            &b,
+            &format!("intnet/forward_shift_grouped/{tag}"),
+            &format!("intnet/forward_shift_grouped_ref/{tag}"),
         );
     }
 

@@ -26,18 +26,27 @@
 use anyhow::{bail, Result};
 
 use crate::quant;
+use crate::quant::Codebook;
 
 /// A bit-packed quantized tensor.
+///
+/// With a non-uniform [`Codebook`] the payload stores **(sign,
+/// exponent) fields** instead of raw grid codes — see [`field_bits`] —
+/// but `bits`, `lmin`, `scale` keep their grid meaning: decoding a
+/// field always yields an unsigned grid code `c ∈ [0, 2^bits − 1]`
+/// with `value = lmin + c·scale`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedTensor {
-    /// Bitlength (1..=16).
+    /// Grid bitlength (1..=16) — the code range, not the stored width.
     pub bits: u32,
+    /// Code restriction; decides the stored field encoding.
+    pub codebook: Codebook,
     /// Number of encoded values.
     pub len: usize,
     /// Dequantization: value = lmin + code * scale.
     pub lmin: f32,
     pub scale: f32,
-    /// LSB-first packed codes.
+    /// LSB-first packed codes (uniform) or codebook fields.
     pub data: Vec<u8>,
 }
 
@@ -45,6 +54,114 @@ pub struct PackedTensor {
 /// (4 × 4 bytes).  Every footprint number in the crate uses the same
 /// convention: payload **plus** this header ([`PackedTensor::stored_bytes`]).
 pub const HEADER_BYTES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// codebook field encoding: (sign, exponent) / (sign, exp1, exp2)
+// ---------------------------------------------------------------------------
+
+/// Bits of one exponent index at grid bitlength `bits`: indices run
+/// `0` (magnitude 0) through `emax + 1` (magnitude `2^emax`), so
+/// `ceil(log2(emax + 2))` bits.
+pub fn idx_bits(bits: u32) -> u32 {
+    let values = quant::codebook_emax(bits) + 2;
+    32 - (values - 1).leading_zeros()
+}
+
+/// Stored width of one value under a codebook: raw grid codes for
+/// [`Codebook::Uniform`], `[sign | idx]` for PoT, `[sign | idx1 |
+/// idx2]` for APoT.  At 8 grid bits a PoT field is 4 bits (2× denser
+/// than uniform); an APoT field at 4 grid bits is 5 (> 4 — APoT is a
+/// *compute* win, not always a storage win).
+pub fn field_bits(cbk: Codebook, bits: u32) -> u32 {
+    match cbk {
+        Codebook::Uniform => bits,
+        Codebook::PowerOfTwo => 1 + idx_bits(bits),
+        Codebook::AdditivePot2 => 1 + 2 * idx_bits(bits),
+    }
+}
+
+/// Magnitude of one exponent index (`0 → 0`, `k → 2^(k−1)`).
+#[inline]
+fn idx_mag(idx: u32) -> u32 {
+    if idx == 0 {
+        0
+    } else {
+        1 << (idx - 1)
+    }
+}
+
+/// Encode a **codebook-admissible** grid code as a storage field.
+/// Layout (LSB-first): PoT `[idx | sign]`→ `(sign << ib) | idx`; APoT
+/// `(sign << 2·ib) | (idx1 << ib) | idx2` with the canonical form
+/// `idx2 == 0 || idx2 < idx1` (a single power never encodes as a
+/// doubled smaller one).  Callers must project first; debug-asserted.
+fn encode_field(cbk: Codebook, bits: u32, code: u32) -> u64 {
+    let half = 1u32 << (bits - 1);
+    let c_s = code as i64 - half as i64;
+    let sign = (c_s < 0) as u64;
+    let m = c_s.unsigned_abs() as u32;
+    let ib = idx_bits(bits);
+    match cbk {
+        Codebook::Uniform => code as u64,
+        Codebook::PowerOfTwo => {
+            debug_assert!(m == 0 || m.is_power_of_two(), "non-PoT magnitude {m}");
+            let idx = if m == 0 { 0 } else { m.trailing_zeros() + 1 } as u64;
+            (sign << ib) | idx
+        }
+        Codebook::AdditivePot2 => {
+            debug_assert!(m.count_ones() <= 2, "non-APoT magnitude {m}");
+            let (i1, i2) = if m == 0 {
+                (0u64, 0u64)
+            } else {
+                let hi = 31 - m.leading_zeros();
+                let rest = m - (1 << hi);
+                let lo = if rest == 0 { 0 } else { rest.trailing_zeros() + 1 };
+                ((hi + 1) as u64, lo as u64)
+            };
+            (sign << (2 * ib)) | (i1 << ib) | i2
+        }
+    }
+}
+
+/// Decode one storage field back to an unsigned grid code, validating
+/// every invariant (index ranges, canonical APoT form, sign-of-zero,
+/// code range) — `None` marks a hostile or corrupt field.
+fn decode_field(cbk: Codebook, bits: u32, field: u64) -> Option<u32> {
+    let half = 1i64 << (bits - 1);
+    let emax = quant::codebook_emax(bits);
+    let ib = idx_bits(bits);
+    let (sign, mag) = match cbk {
+        Codebook::Uniform => return Some(field as u32),
+        Codebook::PowerOfTwo => {
+            let idx = (field & ((1 << ib) - 1)) as u32;
+            if idx > emax + 1 {
+                return None;
+            }
+            ((field >> ib) & 1, idx_mag(idx))
+        }
+        Codebook::AdditivePot2 => {
+            let i2 = (field & ((1 << ib) - 1)) as u32;
+            let i1 = ((field >> ib) & ((1 << ib) - 1)) as u32;
+            if i1 > emax + 1 || i2 > emax + 1 {
+                return None;
+            }
+            // Canonical: a second exponent must be strictly smaller
+            // (i1 == i2 would alias the doubled power 2^(i1−1+1)).
+            if i2 != 0 && i2 >= i1 {
+                return None;
+            }
+            ((field >> (2 * ib)) & 1, idx_mag(i1) + idx_mag(i2))
+        }
+    };
+    if mag == 0 && sign != 0 {
+        return None; // negative zero is non-canonical
+    }
+    let c_s = if sign != 0 { -(mag as i64) } else { mag as i64 };
+    if c_s < -half || c_s > half - 1 {
+        return None; // would fall outside the grid (n = 1 positive edge)
+    }
+    Some((half + c_s) as u32)
+}
 
 impl PackedTensor {
     /// Reassemble a packed tensor from **untrusted** stored parts (the
@@ -55,6 +172,22 @@ impl PackedTensor {
     /// and that the dequantization header is finite with positive step.
     pub fn from_raw(
         bits: u32,
+        len: usize,
+        lmin: f32,
+        scale: f32,
+        data: Vec<u8>,
+    ) -> Result<Self> {
+        Self::from_raw_cbk(bits, Codebook::Uniform, len, lmin, scale, data)
+    }
+
+    /// [`Self::from_raw`] under a codebook: the payload is sized in
+    /// [`field_bits`]-wide fields, and for a non-uniform codebook
+    /// **every field is walked and validated** (index ranges, canonical
+    /// APoT form, sign-of-zero, grid range) — a spliced or bit-flipped
+    /// payload is rejected here, not decoded into silent garbage.
+    pub fn from_raw_cbk(
+        bits: u32,
+        codebook: Codebook,
         len: usize,
         lmin: f32,
         scale: f32,
@@ -73,19 +206,40 @@ impl PackedTensor {
             if !data.is_empty() {
                 bail!("packed tensor: empty tensor with {} payload bytes", data.len());
             }
-            return Ok(Self { bits, len, lmin, scale, data });
+            return Ok(Self { bits, codebook, len, lmin, scale, data });
         }
+        let fb = field_bits(codebook, bits);
         let total_bits = len
-            .checked_mul(bits as usize)
-            .ok_or_else(|| anyhow::anyhow!("packed tensor: {len} x {bits} bits overflows"))?;
+            .checked_mul(fb as usize)
+            .ok_or_else(|| anyhow::anyhow!("packed tensor: {len} x {fb} bits overflows"))?;
         let want = total_bits.div_ceil(8);
         if data.len() != want {
             bail!(
-                "packed tensor: payload is {} bytes, {len} x {bits}-bit codes need {want}",
+                "packed tensor: payload is {} bytes, {len} x {fb}-bit fields need {want}",
                 data.len()
             );
         }
-        Ok(Self { bits, len, lmin, scale, data })
+        if codebook != Codebook::Uniform {
+            let mask = (1u64 << fb) - 1;
+            for i in 0..len {
+                let bitpos = i * fb as usize;
+                let field = (load_word(&data, bitpos >> 3) >> (bitpos & 7)) & mask;
+                if decode_field(codebook, bits, field).is_none() {
+                    bail!(
+                        "packed tensor: field {i} ({field:#x}) is not a valid \
+                         {} code at {bits} bits",
+                        codebook.name()
+                    );
+                }
+            }
+            // Trailing pad bits past the last field must be zero — a
+            // corrupted tail is corruption even when unused.
+            let used = total_bits % 8;
+            if used != 0 && data[want - 1] >> used != 0 {
+                bail!("packed tensor: nonzero pad bits after the last field");
+            }
+        }
+        Ok(Self { bits, codebook, len, lmin, scale, data })
     }
 
     /// Packed payload size in bytes (excluding the fixed header).
@@ -124,8 +278,9 @@ pub fn pack(xs: &[f32], bits: u32) -> Result<PackedTensor> {
     if !(1..=16).contains(&bits) {
         bail!("pack: bits must be in [1,16], got {bits}");
     }
+    let cbk = Codebook::Uniform;
     if xs.is_empty() {
-        return Ok(PackedTensor { bits, len: 0, lmin: 0.0, scale: 1.0, data: vec![] });
+        return Ok(PackedTensor { bits, codebook: cbk, len: 0, lmin: 0.0, scale: 1.0, data: vec![] });
     }
     let (lmin, lmax) = quant::group_minmax(xs);
     let plan = quant::QuantPlan::new(lmin, lmax, bits as f32);
@@ -151,7 +306,51 @@ pub fn pack(xs: &[f32], bits: u32) -> Result<PackedTensor> {
         let nbytes = fill.div_ceil(8) as usize;
         data[out..out + nbytes].copy_from_slice(&acc.to_le_bytes()[..nbytes]);
     }
-    Ok(PackedTensor { bits, len: xs.len(), lmin: plan.lmin, scale: plan.s_lo, data })
+    Ok(PackedTensor { bits, codebook: cbk, len: xs.len(), lmin: plan.lmin, scale: plan.s_lo, data })
+}
+
+/// Codebook-aware fused pack: quantize to the grid, **project** each
+/// code onto the codebook, encode it as a (sign, exponent) field and
+/// stream the fields through the same word-level accumulator as
+/// [`pack`].  `Uniform` delegates to [`pack`] — byte-identical output.
+pub fn pack_cbk(xs: &[f32], bits: u32, cbk: Codebook) -> Result<PackedTensor> {
+    if cbk == Codebook::Uniform {
+        return pack(xs, bits);
+    }
+    if !(1..=16).contains(&bits) {
+        bail!("pack: bits must be in [1,16], got {bits}");
+    }
+    if xs.is_empty() {
+        return Ok(PackedTensor { bits, codebook: cbk, len: 0, lmin: 0.0, scale: 1.0, data: vec![] });
+    }
+    let (lmin, lmax) = quant::group_minmax(xs);
+    let plan = quant::QuantPlan::new_cbk(lmin, lmax, bits as f32, cbk);
+    let proj = plan.projector();
+    let levels = ((1u32 << bits) - 1) as i64;
+    let fb = field_bits(cbk, bits);
+
+    let total_bits = xs.len() * fb as usize;
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
+    let mut acc = 0u64;
+    let mut fill = 0u32;
+    let mut out = 0usize;
+    for &x in xs {
+        let code = proj.project_code(plan.code(x, levels));
+        let field = encode_field(cbk, bits, code);
+        acc |= field << fill;
+        fill += fb;
+        if fill >= 64 {
+            data[out..out + 8].copy_from_slice(&acc.to_le_bytes());
+            out += 8;
+            fill -= 64;
+            acc = if fill > 0 { field >> (fb - fill) } else { 0 };
+        }
+    }
+    if fill > 0 {
+        let nbytes = fill.div_ceil(8) as usize;
+        data[out..out + nbytes].copy_from_slice(&acc.to_le_bytes()[..nbytes]);
+    }
+    Ok(PackedTensor { bits, codebook: cbk, len: xs.len(), lmin: plan.lmin, scale: plan.s_lo, data })
 }
 
 /// Load up to 8 bytes at `byte` as a little-endian u64, zero-padding
@@ -169,31 +368,40 @@ fn load_word(data: &[u8], byte: usize) -> u64 {
 }
 
 /// Unpack to dequantized f32 values (word-level, branchless extract:
-/// with `bits <= 16` every value sits inside one 64-bit load).
+/// every field width `<= 16` sits inside one 64-bit load).  Codebook
+/// fields decode to grid codes first; the affine map is unchanged.
 pub fn unpack(p: &PackedTensor) -> Vec<f32> {
-    debug_assert!((1..=16).contains(&p.bits) || p.len == 0);
-    let bits = p.bits as usize;
-    let mask = (1u64 << p.bits) - 1;
-    let mut out = Vec::with_capacity(p.len);
-    for i in 0..p.len {
-        let bitpos = i * bits;
-        let word = load_word(&p.data, bitpos >> 3);
-        let code = (word >> (bitpos & 7)) & mask;
-        out.push(p.lmin + code as f32 * p.scale);
-    }
-    out
+    unpack_codes(p)
+        .into_iter()
+        .map(|code| p.lmin + code as f32 * p.scale)
+        .collect()
 }
 
-/// Unpack the raw integer codes (what integer inference consumes).
+/// Unpack the raw integer **grid codes** (what integer inference
+/// consumes), whatever the stored encoding.  Fields were validated at
+/// construction ([`PackedTensor::from_raw_cbk`] or the packer), so
+/// decoding here cannot fail.
 pub fn unpack_codes(p: &PackedTensor) -> Vec<u32> {
     debug_assert!((1..=16).contains(&p.bits) || p.len == 0);
-    let bits = p.bits as usize;
-    let mask = (1u64 << p.bits) - 1;
+    let fb = field_bits(p.codebook, p.bits) as usize;
+    let mask = if fb == 0 { 0 } else { (1u64 << fb) - 1 };
     let mut out = Vec::with_capacity(p.len);
-    for i in 0..p.len {
-        let bitpos = i * bits;
-        let word = load_word(&p.data, bitpos >> 3);
-        out.push(((word >> (bitpos & 7)) & mask) as u32);
+    if p.codebook == Codebook::Uniform {
+        for i in 0..p.len {
+            let bitpos = i * fb;
+            let word = load_word(&p.data, bitpos >> 3);
+            out.push(((word >> (bitpos & 7)) & mask) as u32);
+        }
+    } else {
+        for i in 0..p.len {
+            let bitpos = i * fb;
+            let word = load_word(&p.data, bitpos >> 3);
+            let field = (word >> (bitpos & 7)) & mask;
+            out.push(
+                decode_field(p.codebook, p.bits, field)
+                    .expect("packed tensor field validated at construction"),
+            );
+        }
     }
     out
 }
@@ -210,7 +418,14 @@ pub fn pack_ref(xs: &[f32], bits: u32) -> Result<PackedTensor> {
         bail!("pack: bits must be in [1,16], got {bits}");
     }
     if xs.is_empty() {
-        return Ok(PackedTensor { bits, len: 0, lmin: 0.0, scale: 1.0, data: vec![] });
+        return Ok(PackedTensor {
+            bits,
+            codebook: Codebook::Uniform,
+            len: 0,
+            lmin: 0.0,
+            scale: 1.0,
+            data: vec![],
+        });
     }
     let (lmin, lmax) = quant::group_minmax(xs);
     let levels = (1u32 << bits) - 1;
@@ -225,28 +440,66 @@ pub fn pack_ref(xs: &[f32], bits: u32) -> Result<PackedTensor> {
         write_bits_ref(&mut data, bitpos, bits, code);
         bitpos += bits as usize;
     }
-    Ok(PackedTensor { bits, len: xs.len(), lmin, scale, data })
+    Ok(PackedTensor { bits, codebook: Codebook::Uniform, len: xs.len(), lmin, scale, data })
+}
+
+/// Scalar reference for [`pack_cbk`]: per-value min/max fold, explicit
+/// projection and byte-at-a-time field writes — the semantic baseline
+/// the fused codebook packer must match bit-for-bit.
+pub fn pack_cbk_ref(xs: &[f32], bits: u32, cbk: Codebook) -> Result<PackedTensor> {
+    if cbk == Codebook::Uniform {
+        return pack_ref(xs, bits);
+    }
+    if !(1..=16).contains(&bits) {
+        bail!("pack: bits must be in [1,16], got {bits}");
+    }
+    if xs.is_empty() {
+        return Ok(PackedTensor { bits, codebook: cbk, len: 0, lmin: 0.0, scale: 1.0, data: vec![] });
+    }
+    let mut lmin = f32::INFINITY;
+    let mut lmax = f32::NEG_INFINITY;
+    for &x in xs {
+        lmin = lmin.min(x);
+        lmax = lmax.max(x);
+    }
+    let levels = ((1u32 << bits) - 1) as i64;
+    let scale = quant::scale(lmin, lmax, bits as f32);
+    let proj = quant::CodeProjector::new(cbk, bits);
+    let fb = field_bits(cbk, bits);
+
+    let total_bits = xs.len() * fb as usize;
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &x in xs {
+        let code = (((x - lmin) / scale).round_ties_even() as i64).clamp(0, levels) as u32;
+        let field = encode_field(cbk, bits, proj.project_code(code));
+        write_bits_ref(&mut data, bitpos, fb, field as u32);
+        bitpos += fb as usize;
+    }
+    Ok(PackedTensor { bits, codebook: cbk, len: xs.len(), lmin, scale, data })
 }
 
 /// Scalar reference for [`unpack`].
 pub fn unpack_ref(p: &PackedTensor) -> Vec<f32> {
-    let mut out = Vec::with_capacity(p.len);
-    let mut bitpos = 0usize;
-    for _ in 0..p.len {
-        let code = read_bits_ref(&p.data, bitpos, p.bits);
-        out.push(p.lmin + code as f32 * p.scale);
-        bitpos += p.bits as usize;
-    }
-    out
+    unpack_codes_ref(p)
+        .into_iter()
+        .map(|code| p.lmin + code as f32 * p.scale)
+        .collect()
 }
 
-/// Scalar reference for [`unpack_codes`].
+/// Scalar reference for [`unpack_codes`] (byte-at-a-time field reads +
+/// the same validated decode).
 pub fn unpack_codes_ref(p: &PackedTensor) -> Vec<u32> {
+    let fb = field_bits(p.codebook, p.bits);
     let mut out = Vec::with_capacity(p.len);
     let mut bitpos = 0usize;
     for _ in 0..p.len {
-        out.push(read_bits_ref(&p.data, bitpos, p.bits));
-        bitpos += p.bits as usize;
+        let field = read_bits_ref(&p.data, bitpos, fb);
+        out.push(
+            decode_field(p.codebook, p.bits, field as u64)
+                .expect("packed tensor field validated at construction"),
+        );
+        bitpos += fb as usize;
     }
     out
 }
@@ -317,15 +570,18 @@ pub struct GroupSpan {
 pub struct PackedGroups {
     /// Values per group.
     pub group_size: usize,
+    /// Code restriction shared by every group (ranges and bitlengths
+    /// stay per-group; the codebook is a layer-level axis).
+    pub codebook: Codebook,
     /// One span per group, in group order (`start` strictly increasing).
     pub spans: Vec<GroupSpan>,
     /// All groups' packed codes, concatenated at byte-aligned starts.
     pub data: Vec<u8>,
 }
 
-/// Packed payload bytes one group occupies.
-fn group_bytes(group_size: usize, bits: u32) -> usize {
-    (group_size * bits as usize).div_ceil(8)
+/// Packed payload bytes one group occupies at a stored field width.
+fn group_bytes(group_size: usize, fb: u32) -> usize {
+    (group_size * fb as usize).div_ceil(8)
 }
 
 impl PackedGroups {
@@ -336,6 +592,19 @@ impl PackedGroups {
     /// total size.
     pub fn from_raw(
         group_size: usize,
+        params: &[(u32, f32, f32)],
+        data: Vec<u8>,
+    ) -> Result<Self> {
+        Self::from_raw_cbk(group_size, Codebook::Uniform, params, data)
+    }
+
+    /// [`Self::from_raw`] under a codebook: span sizes are computed at
+    /// the stored [`field_bits`] width and every group's fields are
+    /// walked and validated, exactly like
+    /// [`PackedTensor::from_raw_cbk`].
+    pub fn from_raw_cbk(
+        group_size: usize,
+        codebook: Codebook,
         params: &[(u32, f32, f32)],
         data: Vec<u8>,
     ) -> Result<Self> {
@@ -355,7 +624,7 @@ impl PackedGroups {
             }
             spans.push(GroupSpan { bits, lmin, scale, start });
             start = start
-                .checked_add(group_bytes(group_size, bits))
+                .checked_add(group_bytes(group_size, field_bits(codebook, bits)))
                 .ok_or_else(|| anyhow::anyhow!("packed groups: payload size overflows"))?;
         }
         if data.len() != start {
@@ -365,7 +634,31 @@ impl PackedGroups {
                 params.len()
             );
         }
-        Ok(Self { group_size, spans, data })
+        if codebook != Codebook::Uniform {
+            for (g, span) in spans.iter().enumerate() {
+                let fb = field_bits(codebook, span.bits);
+                let mask = (1u64 << fb) - 1;
+                for i in 0..group_size {
+                    let bitpos = i * fb as usize;
+                    let word = load_word(&data, span.start + (bitpos >> 3));
+                    let field = (word >> (bitpos & 7)) & mask;
+                    if decode_field(codebook, span.bits, field).is_none() {
+                        bail!(
+                            "packed groups: group {g} field {i} ({field:#x}) is not \
+                             a valid {} code at {} bits",
+                            codebook.name(),
+                            span.bits
+                        );
+                    }
+                }
+                let used = (group_size * fb as usize) % 8;
+                let last = span.start + group_bytes(group_size, fb) - 1;
+                if used != 0 && data[last] >> used != 0 {
+                    bail!("packed groups: group {g} has nonzero pad bits");
+                }
+            }
+        }
+        Ok(Self { group_size, codebook, spans, data })
     }
 
     pub fn n_groups(&self) -> usize {
@@ -411,17 +704,30 @@ impl PackedGroups {
         self.spans.iter().map(|s| s.bits as f64).sum::<f64>() / self.spans.len() as f64
     }
 
-    /// Unpack one group's raw integer codes (word-level single-load
-    /// extract — the byte-aligned span makes the group independent).
+    /// Unpack one group's raw integer **grid codes** (word-level
+    /// single-load extract — the byte-aligned span makes the group
+    /// independent), decoding codebook fields when present.
     pub fn group_codes(&self, g: usize) -> Vec<u32> {
         let span = self.spans[g];
-        let bits = span.bits as usize;
-        let mask = (1u64 << span.bits) - 1;
+        let fb = field_bits(self.codebook, span.bits) as usize;
+        let mask = (1u64 << fb) - 1;
         let mut out = Vec::with_capacity(self.group_size);
-        for i in 0..self.group_size {
-            let bitpos = i * bits;
-            let word = load_word(&self.data, span.start + (bitpos >> 3));
-            out.push(((word >> (bitpos & 7)) & mask) as u32);
+        if self.codebook == Codebook::Uniform {
+            for i in 0..self.group_size {
+                let bitpos = i * fb;
+                let word = load_word(&self.data, span.start + (bitpos >> 3));
+                out.push(((word >> (bitpos & 7)) & mask) as u32);
+            }
+        } else {
+            for i in 0..self.group_size {
+                let bitpos = i * fb;
+                let word = load_word(&self.data, span.start + (bitpos >> 3));
+                let field = (word >> (bitpos & 7)) & mask;
+                out.push(
+                    decode_field(self.codebook, span.bits, field)
+                        .expect("packed groups field validated at construction"),
+                );
+            }
         }
         out
     }
@@ -429,11 +735,16 @@ impl PackedGroups {
     /// Scalar reference for [`Self::group_codes`] (byte-at-a-time).
     pub fn group_codes_ref(&self, g: usize) -> Vec<u32> {
         let span = self.spans[g];
+        let fb = field_bits(self.codebook, span.bits);
         let mut out = Vec::with_capacity(self.group_size);
         let mut bitpos = span.start * 8;
         for _ in 0..self.group_size {
-            out.push(read_bits_ref(&self.data, bitpos, span.bits));
-            bitpos += span.bits as usize;
+            let field = read_bits_ref(&self.data, bitpos, fb);
+            out.push(
+                decode_field(self.codebook, span.bits, field as u64)
+                    .expect("packed groups field validated at construction"),
+            );
+            bitpos += fb as usize;
         }
         out
     }
@@ -458,6 +769,19 @@ impl PackedGroups {
 /// byte-aligned: each group's stream starts on a fresh byte, so the
 /// per-group word accumulator logic is exactly [`pack`]'s.
 pub fn pack_groups(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<PackedGroups> {
+    pack_groups_cbk(xs, group_size, bits, Codebook::Uniform)
+}
+
+/// Codebook-aware grouped fused pack: each group quantizes against its
+/// own min/max at its own bitlength, projects onto the shared codebook
+/// and streams (sign, exponent) fields word-level.  `Uniform` output
+/// is byte-identical to the pre-codebook [`pack_groups`].
+pub fn pack_groups_cbk(
+    xs: &[f32],
+    group_size: usize,
+    bits: &[u32],
+    cbk: Codebook,
+) -> Result<PackedGroups> {
     if group_size == 0 {
         bail!("pack_groups: group_size must be positive");
     }
@@ -475,24 +799,30 @@ pub fn pack_groups(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<Packed
             bail!("pack_groups: group {g} bits must be in [1,16], got {b}");
         }
         spans.push(GroupSpan { bits: b, lmin: 0.0, scale: 1.0, start: total });
-        total += group_bytes(group_size, b);
+        total += group_bytes(group_size, field_bits(cbk, b));
     }
     let mut data = vec![0u8; total];
     for ((row, &b), span) in xs.chunks_exact(group_size).zip(bits).zip(&mut spans) {
-        let plan = quant::QuantPlan::from_slice(row, b as f32);
+        let plan = quant::QuantPlan::from_slice_cbk(row, b as f32, cbk);
+        let proj = plan.projector();
         let levels = ((1u32 << b) - 1) as i64;
+        let fb = field_bits(cbk, b);
         let mut acc = 0u64;
         let mut fill = 0u32;
         let mut out = span.start;
         for &x in row {
-            let code = plan.code(x, levels) as u64;
-            acc |= code << fill;
-            fill += b;
+            let field = if cbk == Codebook::Uniform {
+                plan.code(x, levels) as u64
+            } else {
+                encode_field(cbk, b, proj.project_code(plan.code(x, levels)))
+            };
+            acc |= field << fill;
+            fill += fb;
             if fill >= 64 {
                 data[out..out + 8].copy_from_slice(&acc.to_le_bytes());
                 out += 8;
                 fill -= 64;
-                acc = if fill > 0 { code >> (b - fill) } else { 0 };
+                acc = if fill > 0 { field >> (fb - fill) } else { 0 };
             }
         }
         if fill > 0 {
@@ -502,13 +832,26 @@ pub fn pack_groups(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<Packed
         span.lmin = plan.lmin;
         span.scale = plan.s_lo;
     }
-    Ok(PackedGroups { group_size, spans, data })
+    Ok(PackedGroups { group_size, codebook: cbk, spans, data })
 }
 
 /// Scalar reference for [`pack_groups`]: per-group min/max fold and
 /// byte-at-a-time bit writes, the semantic baseline the fused packer
 /// must match bit-for-bit (pinned by the parity tests).
 pub fn pack_groups_ref(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<PackedGroups> {
+    pack_groups_cbk_ref(xs, group_size, bits, Codebook::Uniform)
+}
+
+/// Scalar reference for [`pack_groups_cbk`] (and, at `Uniform`, for
+/// [`pack_groups`]): per-group min/max fold, explicit projection and
+/// byte-at-a-time field writes — pinned bit-for-bit by the parity
+/// tests.
+pub fn pack_groups_cbk_ref(
+    xs: &[f32],
+    group_size: usize,
+    bits: &[u32],
+    cbk: Codebook,
+) -> Result<PackedGroups> {
     if group_size == 0 {
         bail!("pack_groups: group_size must be positive");
     }
@@ -526,7 +869,7 @@ pub fn pack_groups_ref(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<Pa
             bail!("pack_groups: group {g} bits must be in [1,16], got {b}");
         }
         spans.push(GroupSpan { bits: b, lmin: 0.0, scale: 1.0, start: total });
-        total += group_bytes(group_size, b);
+        total += group_bytes(group_size, field_bits(cbk, b));
     }
     let mut data = vec![0u8; total];
     for ((row, &b), span) in xs.chunks_exact(group_size).zip(bits).zip(&mut spans) {
@@ -538,17 +881,24 @@ pub fn pack_groups_ref(xs: &[f32], group_size: usize, bits: &[u32]) -> Result<Pa
         }
         let levels = (1u32 << b) - 1;
         let scale = quant::scale(lmin, lmax, b as f32);
+        let proj = quant::CodeProjector::new(cbk, b);
+        let fb = field_bits(cbk, b);
         let mut bitpos = span.start * 8;
         for &x in row {
             let code = (((x - lmin) / scale).round_ties_even() as i64)
                 .clamp(0, levels as i64) as u32;
-            write_bits_ref(&mut data, bitpos, b, code);
-            bitpos += b as usize;
+            let field = if cbk == Codebook::Uniform {
+                code as u64
+            } else {
+                encode_field(cbk, b, proj.project_code(code))
+            };
+            write_bits_ref(&mut data, bitpos, fb, field as u32);
+            bitpos += fb as usize;
         }
         span.lmin = lmin;
         span.scale = scale;
     }
-    Ok(PackedGroups { group_size, spans, data })
+    Ok(PackedGroups { group_size, codebook: cbk, spans, data })
 }
 
 /// Packed weight codes at either granularity — what `infer::IntDense`
@@ -568,6 +918,14 @@ impl WeightCodes {
         match self {
             WeightCodes::PerLayer(_) => quant::Granularity::PerLayer,
             WeightCodes::PerChannel(_) => quant::Granularity::PerOutputChannel,
+        }
+    }
+
+    /// The code restriction the payload is stored under.
+    pub fn codebook(&self) -> Codebook {
+        match self {
+            WeightCodes::PerLayer(p) => p.codebook,
+            WeightCodes::PerChannel(g) => g.codebook,
         }
     }
 
@@ -1181,5 +1539,274 @@ mod tests {
         let a = vec![0.0f32; 8];
         let tensors = vec![("x".to_string(), a.as_slice())];
         assert!(pack_network(&tensors, &[4.0, 4.0]).is_err());
+    }
+
+    #[test]
+    fn cbk_field_widths_pinned() {
+        // idx space: emax + 2 values → ceil(log2) bits.
+        assert_eq!(idx_bits(8), 3); // 8 index values
+        assert_eq!(idx_bits(4), 2);
+        assert_eq!(idx_bits(1), 1);
+        assert_eq!(idx_bits(16), 4);
+        assert_eq!(field_bits(Codebook::Uniform, 8), 8);
+        assert_eq!(field_bits(Codebook::PowerOfTwo, 8), 4); // 2x denser
+        assert_eq!(field_bits(Codebook::AdditivePot2, 8), 7);
+        assert_eq!(field_bits(Codebook::AdditivePot2, 4), 5); // > 4: compute win, not storage
+        assert_eq!(field_bits(Codebook::PowerOfTwo, 1), 2);
+        // Every width fits one 64-bit load like the uniform path.
+        for bits in 1..=16u32 {
+            for cbk in [Codebook::Uniform, Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+                assert!(field_bits(cbk, bits) <= 16, "{cbk:?} {bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn cbk_field_roundtrips_every_admissible_code() {
+        // encode → decode is the identity on exactly the projected
+        // code set, for every bitlength.
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            for bits in 1..=16u32 {
+                let proj = quant::CodeProjector::new(cbk, bits);
+                let max_code = (1u64 << bits) - 1;
+                let probes = [0u64, 1, max_code / 3, max_code / 2, max_code - 1, max_code];
+                for &c in &probes {
+                    let code = proj.project_code(c as u32);
+                    let field = encode_field(cbk, bits, code);
+                    assert!(field < 1 << field_bits(cbk, bits));
+                    assert_eq!(
+                        decode_field(cbk, bits, field),
+                        Some(code),
+                        "{cbk:?} bits={bits} code={code}"
+                    );
+                }
+            }
+        }
+        // Exhaustive at 8 bits.
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            let proj = quant::CodeProjector::new(cbk, 8);
+            for c in 0..=255u32 {
+                let code = proj.project_code(c);
+                assert_eq!(decode_field(cbk, 8, encode_field(cbk, 8, code)), Some(code));
+            }
+        }
+    }
+
+    #[test]
+    fn cbk_pack_uniform_delegates_byte_identical() {
+        let mut rng = Rng::new(0xCBC0);
+        for _ in 0..16 {
+            let bits = 1 + rng.below(16) as u32;
+            let xs: Vec<f32> =
+                (0..1 + rng.below_usize(150)).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            assert_eq!(pack_cbk(&xs, bits, Codebook::Uniform).unwrap(), pack(&xs, bits).unwrap());
+            assert_eq!(
+                pack_cbk_ref(&xs, bits, Codebook::Uniform).unwrap(),
+                pack_ref(&xs, bits).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn cbk_word_packer_matches_ref_bitstream() {
+        // Fused codebook packer vs scalar reference, bit-for-bit, over
+        // random bitlengths / lengths / codebooks — and both unpackers
+        // agree on the decoded grid codes.
+        check(
+            "bitpack-cbk-parity",
+            256,
+            |rng: &mut Rng| {
+                let bits = 1 + rng.below(16) as u32;
+                let len = 1 + rng.below_usize(130);
+                let cbk = if rng.below(2) == 0 {
+                    Codebook::PowerOfTwo
+                } else {
+                    Codebook::AdditivePot2
+                };
+                let xs: Vec<f32> =
+                    (0..len).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                (xs, bits, cbk)
+            },
+            |(xs, bits, cbk)| {
+                let fast = pack_cbk(xs, *bits, *cbk).map_err(|e| e.to_string())?;
+                let slow = pack_cbk_ref(xs, *bits, *cbk).map_err(|e| e.to_string())?;
+                if fast != slow {
+                    return Err(format!("packed tensors differ at {bits} bits {cbk:?}"));
+                }
+                let codes = unpack_codes(&fast);
+                if codes != unpack_codes_ref(&fast) {
+                    return Err("code unpack differs".into());
+                }
+                // Every decoded code is codebook-admissible and in grid
+                // range.
+                let proj = quant::CodeProjector::new(*cbk, *bits);
+                let max_code = (1u64 << bits) - 1;
+                for &c in &codes {
+                    if c as u64 > max_code || !proj.admits(c) {
+                        return Err(format!("code {c} inadmissible at {bits}b {cbk:?}"));
+                    }
+                }
+                let (f, r) = (unpack(&fast), unpack_ref(&fast));
+                if f.iter().zip(&r).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err("value unpack differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cbk_from_raw_roundtrips_and_rejects_hostile() {
+        let mut rng = Rng::new(0xCBC1);
+        let xs: Vec<f32> = (0..53).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            let p = pack_cbk(&xs, 8, cbk).unwrap();
+            let re = PackedTensor::from_raw_cbk(
+                p.bits, p.codebook, p.len, p.lmin, p.scale, p.data.clone(),
+            )
+            .unwrap();
+            assert_eq!(re, p);
+            // Wrong codebook: payload sized for cbk fields never fits
+            // uniform 8-bit codes (4- or 7-bit fields vs 8).
+            assert!(PackedTensor::from_raw(p.bits, p.len, p.lmin, p.scale, p.data.clone())
+                .is_err());
+            // Truncated / extended payloads.
+            let short = p.data[..p.data.len() - 1].to_vec();
+            assert!(PackedTensor::from_raw_cbk(8, cbk, p.len, p.lmin, p.scale, short).is_err());
+            let mut long = p.data.clone();
+            long.push(0);
+            assert!(PackedTensor::from_raw_cbk(8, cbk, p.len, p.lmin, p.scale, long).is_err());
+        }
+        // Hostile field contents, PoT at 8 bits (fb = 4): sign = 1 with
+        // idx = 0 is non-canonical negative zero.
+        let neg_zero = vec![0x88u8]; // two fields, both 0b1000
+        assert!(
+            PackedTensor::from_raw_cbk(8, Codebook::PowerOfTwo, 2, 0.0, 1.0, neg_zero).is_err()
+        );
+        // APoT at 8 bits (fb = 7): i1 == i2 != 0 aliases a single power.
+        let alias = (1u64 << 3) | 1; // i1 = 1, i2 = 1
+        assert!(decode_field(Codebook::AdditivePot2, 8, alias).is_none());
+        // i2 > i1 is non-canonical too.
+        assert!(decode_field(Codebook::AdditivePot2, 8, (1 << 3) | 2).is_none());
+        // n = 1: +1 falls off the grid (half = 1), and the packer never
+        // emits it — but a hostile payload might.
+        assert!(decode_field(Codebook::PowerOfTwo, 1, 0b01).is_none());
+        assert!(decode_field(Codebook::PowerOfTwo, 1, 0b10).is_none()); // negative zero
+        assert_eq!(decode_field(Codebook::PowerOfTwo, 1, 0b00), Some(1));
+        assert_eq!(decode_field(Codebook::PowerOfTwo, 1, 0b11), Some(0));
+        // Out-of-range exponent index: at 5 grid bits emax = 3, so the
+        // 3-bit index space holds 0..=4 — raw indices 5..7 are hostile.
+        assert_eq!(idx_bits(5), 3);
+        for idx in 5..=7u64 {
+            assert!(decode_field(Codebook::PowerOfTwo, 5, idx).is_none(), "idx {idx}");
+        }
+        assert_eq!(decode_field(Codebook::PowerOfTwo, 5, 4), Some(16 + 8)); // 2^3 + half
+        // Nonzero pad bits after the last field are corruption.
+        let p = pack_cbk(&xs[..3], 8, Codebook::PowerOfTwo).unwrap(); // 12 bits → 2 bytes
+        let mut padded = p.data.clone();
+        *padded.last_mut().unwrap() |= 0xF0;
+        assert!(
+            PackedTensor::from_raw_cbk(8, Codebook::PowerOfTwo, 3, p.lmin, p.scale, padded)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn cbk_grouped_packer_matches_ref_and_roundtrips() {
+        check(
+            "bitpack-cbk-group-parity",
+            128,
+            |rng: &mut Rng| {
+                let groups = 1 + rng.below_usize(8);
+                let size = 1 + rng.below_usize(70);
+                let cbk = if rng.below(2) == 0 {
+                    Codebook::PowerOfTwo
+                } else {
+                    Codebook::AdditivePot2
+                };
+                let xs: Vec<f32> =
+                    (0..groups * size).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+                let bits: Vec<u32> =
+                    (0..groups).map(|_| 1 + rng.below(16) as u32).collect();
+                (xs, size, bits, cbk)
+            },
+            |(xs, size, bits, cbk)| {
+                let fast =
+                    pack_groups_cbk(xs, *size, bits, *cbk).map_err(|e| e.to_string())?;
+                let slow =
+                    pack_groups_cbk_ref(xs, *size, bits, *cbk).map_err(|e| e.to_string())?;
+                if fast != slow {
+                    return Err("grouped byte streams differ".into());
+                }
+                for g in 0..fast.n_groups() {
+                    let codes = fast.group_codes(g);
+                    if codes != fast.group_codes_ref(g) {
+                        return Err(format!("group {g} unpack differs"));
+                    }
+                    let proj = quant::CodeProjector::new(*cbk, bits[g]);
+                    if codes.iter().any(|&c| !proj.admits(c)) {
+                        return Err(format!("group {g} has inadmissible codes"));
+                    }
+                }
+                // Wire roundtrip through the untrusted loader.
+                let params: Vec<(u32, f32, f32)> =
+                    fast.spans.iter().map(|s| (s.bits, s.lmin, s.scale)).collect();
+                let re =
+                    PackedGroups::from_raw_cbk(*size, *cbk, &params, fast.data.clone())
+                        .map_err(|e| e.to_string())?;
+                if re != fast {
+                    return Err("from_raw_cbk roundtrip differs".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cbk_grouped_from_raw_rejects_hostile() {
+        let mut rng = Rng::new(0xCBC2);
+        let xs: Vec<f32> = (0..3 * 21).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bits = [8u32, 4, 8];
+        let p = pack_groups_cbk(&xs, 21, &bits, Codebook::PowerOfTwo).unwrap();
+        let params: Vec<(u32, f32, f32)> =
+            p.spans.iter().map(|s| (s.bits, s.lmin, s.scale)).collect();
+        // Mismatched codebook: span sizing changes, payload length fails.
+        assert!(PackedGroups::from_raw(21, &params, p.data.clone()).is_err());
+        // Corrupt one field of group 0 into negative zero (0b1000).
+        let mut bad = p.data.clone();
+        bad[0] = 0x88;
+        assert!(
+            PackedGroups::from_raw_cbk(21, Codebook::PowerOfTwo, &params, bad).is_err()
+        );
+        // Pad-bit corruption inside a group span: size 21 at fb 4 →
+        // 84 bits → 11 bytes, 4 pad bits in the last byte of group 0.
+        let mut pad = p.data.clone();
+        pad[p.spans[1].start - 1] |= 0xF0;
+        assert!(
+            PackedGroups::from_raw_cbk(21, Codebook::PowerOfTwo, &params, pad).is_err()
+        );
+        // Faithful parts still load.
+        assert_eq!(
+            PackedGroups::from_raw_cbk(21, Codebook::PowerOfTwo, &params, p.data.clone())
+                .unwrap(),
+            p
+        );
+    }
+
+    #[test]
+    fn cbk_weightcodes_surface() {
+        let mut rng = Rng::new(0xCBC3);
+        let xs: Vec<f32> = (0..4 * 32).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let pl = WeightCodes::PerLayer(pack_cbk(&xs, 8, Codebook::PowerOfTwo).unwrap());
+        assert_eq!(pl.codebook(), Codebook::PowerOfTwo);
+        assert_eq!(pl.max_bits(), 8); // grid bits, not field bits
+        let pc = WeightCodes::PerChannel(
+            pack_groups_cbk(&xs, 32, &[4, 8, 2, 8], Codebook::AdditivePot2).unwrap(),
+        );
+        assert_eq!(pc.codebook(), Codebook::AdditivePot2);
+        let uni = WeightCodes::PerLayer(pack(&xs, 8).unwrap());
+        assert_eq!(uni.codebook(), Codebook::Uniform);
+        // PoT per-layer payload is half the uniform one at 8 bits.
+        assert_eq!(pl.payload().len(), uni.payload().len().div_ceil(2));
     }
 }

@@ -30,6 +30,7 @@
 //! | `BIA0` | per layer: dout f32 biases |
 //! | `GRP0` | written only when a layer is grouped: n_layers u32, then per layer a u8 grouped flag and, when set, n_groups u32 + per group (bits u32, lmin f32, scale f32) — the per-output-channel plan table; `WCT0` then carries that layer's group-boundary-aligned per-channel codes |
 //! | `CNV0` | written only when a layer is a convolution: n_layers u32, then per layer a u8 kind (0 dense, 1 conv) and, for conv, cin u64, h u64, w u64, kh u32, kw u32, stride u32, pad u32 — the im2col geometry (`cout` is the layer's LAY0 dout) |
+//! | `CBK0` | written only when a layer has a non-uniform weight codebook: n_layers u32, then per layer a u8 codebook tag (0 uniform, 1 power-of-two, 2 additive-PoT) and, for a non-uniform layer, its true bitlengths — one u32 for a per-layer layer, or n_groups u32 + per group bits u32 for a grouped layer (the poisoned LAY0/GRP0 bits fields resolve from here) |
 //!
 //! Per-layer artifacts never write `GRP0`, so their bytes are identical
 //! to pre-`GRP0` writers; readers that predate the tag skip it by the
@@ -46,6 +47,18 @@
 //! a dense layer whose real `din` is the im2col patch length.  The
 //! new reader derives `din = kh·kw·cin` from the geometry.
 //!
+//! `CBK0` is the third instance of the pattern: uniform-codebook
+//! artifacts never write it (bytes identical to pre-`CBK0` writers),
+//! and a non-uniform layer **poisons its bits fields as 0** — LAY0
+//! `w_bits` for a per-layer layer, every GRP0 span `bits` for a
+//! grouped layer — with the true bitlengths riding in `CBK0`.  A
+//! pre-`CBK0` reader skips the section and fails its `[1,16]` bits
+//! range check with a clean error instead of mis-decoding
+//! (sign, exponent) fields as uniform codes; the new reader
+//! cross-checks the per-layer codebook flag against the section both
+//! ways and restores the bits before handing the payload to the
+//! codebook-aware `from_raw_cbk` validators.
+//!
 //! The loader treats every byte as hostile: all reads go through the
 //! bounded [`crate::util::binio::Reader`] (shared with the checkpoint
 //! loader), counts never pre-allocate, element products use
@@ -58,7 +71,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::bitpack::{PackedGroups, PackedTensor, WeightCodes};
 use crate::infer::{ConvGeom, IntConv2d, IntDense, IntLayer, IntNet};
-use crate::quant::Granularity;
+use crate::quant::{Codebook, Granularity};
 use crate::util::binio::{self, Reader};
 
 pub const MAGIC: &[u8; 4] = b"BPMA";
@@ -74,6 +87,9 @@ const TAG_GROUPS: &[u8; 4] = b"GRP0";
 /// Conv-layer geometry table (same forward-compat pattern as `GRP0`;
 /// see the module docs for the poisoned-`din` rejection story).
 const TAG_CONV: &[u8; 4] = b"CNV0";
+/// Per-layer weight-codebook table (same forward-compat pattern; see
+/// the module docs for the poisoned-bits rejection story).
+const TAG_CODEBOOK: &[u8; 4] = b"CBK0";
 
 const LAYER_FLAG_RELU: u8 = 1 << 0;
 const LAYER_FLAG_ACT_RANGE: u8 = 1 << 1;
@@ -90,6 +106,13 @@ const LAYER_FLAG_GROUPED: u8 = 1 << 2;
 /// degenerate-shape check — a clean error, never a dense mis-forward
 /// of an im2col layer.
 const LAYER_FLAG_CONV: u8 = 1 << 3;
+/// The layer's weight codes are stored under a non-uniform codebook:
+/// its true bitlengths live in the `CBK0` section and its LAY0
+/// `w_bits` (per-layer) or GRP0 span `bits` (grouped) fields are
+/// written as 0.  Pre-`CBK0` readers skip the section and reject the
+/// artifact at their `[1,16]` bits range check — a clean error, never
+/// a uniform mis-decode of (sign, exponent) fields.
+const LAYER_FLAG_CODEBOOK: u8 = 1 << 4;
 
 /// One frozen layer: geometry, learned bitlengths, quantization
 /// parameters, packed codes, bias, calibrated input range.
@@ -150,6 +173,12 @@ impl LayerRecord {
     /// Weight-quantization granularity of this layer.
     pub fn granularity(&self) -> Granularity {
         self.weights.granularity()
+    }
+
+    /// Weight codebook of this layer (`CBK0`; uniform layers carry no
+    /// section entry beyond the zero tag).
+    pub fn codebook(&self) -> Codebook {
+        self.weights.codebook()
     }
 
     /// Stored footprint (packed payload + plan headers + f32 bias) —
@@ -244,6 +273,12 @@ impl Artifact {
         self.layers.iter().any(|l| l.conv.is_some())
     }
 
+    /// Whether any layer stores codes under a non-uniform codebook
+    /// (the artifact then carries a `CBK0` section).
+    pub fn has_codebook(&self) -> bool {
+        self.layers.iter().any(|l| !l.codebook().is_uniform())
+    }
+
     /// Aggregate per-channel weight-bit histogram (index = bitlength,
     /// 1..=16; per-layer records count as one group).
     pub fn w_bits_histogram(&self) -> [usize; 17] {
@@ -326,8 +361,16 @@ impl Artifact {
             // is what guarantees it fails its [1,16] range check
             // instead of silently mis-decoding channel-major codes as
             // row-major ones.
+            // Non-uniform-codebook layers extend the poisoning to the
+            // bits field itself: the stored payload is (sign, exponent)
+            // fields, so a reader that would decode it at `bits` wide
+            // uniform codes must be stopped at the [1,16] range check.
+            // The true bitlength rides in CBK0.
+            let poison_cbk = !l.codebook().is_uniform();
             let (w_bits, w_lmin, w_scale) = match &l.weights {
-                WeightCodes::PerLayer(p) => (p.bits, p.lmin, p.scale),
+                WeightCodes::PerLayer(p) => {
+                    (if poison_cbk { 0 } else { p.bits }, p.lmin, p.scale)
+                }
                 WeightCodes::PerChannel(g) => match g.spans.first() {
                     Some(s0) => (0, s0.lmin, s0.scale),
                     // Zero-channel groups can't come from the grouped
@@ -351,6 +394,9 @@ impl Artifact {
             }
             if l.conv.is_some() {
                 flags |= LAYER_FLAG_CONV;
+            }
+            if poison_cbk {
+                flags |= LAYER_FLAG_CODEBOOK;
             }
             binio::put_u8(&mut lay, flags);
             binio::put_f32(&mut lay, w_lmin);
@@ -390,8 +436,12 @@ impl Artifact {
                     WeightCodes::PerChannel(g) => {
                         binio::put_u8(&mut grp, 1);
                         binio::put_u32(&mut grp, g.n_groups() as u32);
+                        // Non-uniform grouped layers poison every span
+                        // bits field (the grouped analogue of the LAY0
+                        // w_bits poison); CBK0 carries the real values.
+                        let poison = !g.codebook.is_uniform();
                         for s in &g.spans {
-                            binio::put_u32(&mut grp, s.bits);
+                            binio::put_u32(&mut grp, if poison { 0 } else { s.bits });
                             binio::put_f32(&mut grp, s.lmin);
                             binio::put_f32(&mut grp, s.scale);
                         }
@@ -422,6 +472,30 @@ impl Artifact {
             }
             sections.push((TAG_CONV, cnv));
         }
+        // CBK0 rides along only when a layer actually stores codes
+        // under a non-uniform codebook, so uniform artifacts stay
+        // byte-identical to pre-CBK0 writers.
+        if self.has_codebook() {
+            let mut cbk = Vec::new();
+            binio::put_u32(&mut cbk, self.layers.len() as u32);
+            for l in &self.layers {
+                let cb = l.codebook();
+                binio::put_u8(&mut cbk, cb.tag());
+                if cb.is_uniform() {
+                    continue;
+                }
+                match &l.weights {
+                    WeightCodes::PerLayer(p) => binio::put_u32(&mut cbk, p.bits),
+                    WeightCodes::PerChannel(g) => {
+                        binio::put_u32(&mut cbk, g.n_groups() as u32);
+                        for s in &g.spans {
+                            binio::put_u32(&mut cbk, s.bits);
+                        }
+                    }
+                }
+            }
+            sections.push((TAG_CODEBOOK, cbk));
+        }
         let mut out = Vec::new();
         out.extend_from_slice(MAGIC);
         binio::put_u32(&mut out, VERSION);
@@ -445,6 +519,7 @@ impl Artifact {
         let mut bia_pl: Option<&[u8]> = None;
         let mut grp_pl: Option<&[u8]> = None;
         let mut cnv_pl: Option<&[u8]> = None;
+        let mut cbk_pl: Option<&[u8]> = None;
         let mut r = parse_header(bytes)?;
         let n_sections = r.u32()? as usize;
         for _ in 0..n_sections {
@@ -456,6 +531,7 @@ impl Artifact {
                 t if t == TAG_BIASES => Some(&mut bia_pl),
                 t if t == TAG_GROUPS => Some(&mut grp_pl),
                 t if t == TAG_CONV => Some(&mut cnv_pl),
+                t if t == TAG_CODEBOOK => Some(&mut cbk_pl),
                 _ => None, // unknown section: checksummed, then skipped
             };
             if let Some(slot) = slot {
@@ -502,6 +578,7 @@ impl Artifact {
             relu: bool,
             grouped: bool,
             conv: bool,
+            cbk: bool,
             w_lmin: f32,
             w_scale: f32,
             act_range: Option<(f32, f32)>,
@@ -556,6 +633,7 @@ impl Artifact {
                 relu: flags & LAYER_FLAG_RELU != 0,
                 grouped: flags & LAYER_FLAG_GROUPED != 0,
                 conv,
+                cbk: flags & LAYER_FLAG_CODEBOOK != 0,
                 w_lmin,
                 w_scale,
                 act_range,
@@ -611,6 +689,71 @@ impl Artifact {
                      (grouped artifacts need a reader that speaks GRP0)",
                     h.name,
                     tag_str(TAG_GROUPS)
+                );
+            }
+        }
+
+        // CBK0 — per-layer weight codebooks + the true bitlengths the
+        // poisoned LAY0/GRP0 fields defer to.  The codebook flag and
+        // the section must agree both ways: a flagged layer without an
+        // entry (or a non-uniform entry on an unflagged layer) would
+        // mis-decode the packed fields — fail loudly.
+        let mut codebooks: Vec<(Codebook, Vec<u32>)> =
+            vec![(Codebook::Uniform, Vec::new()); n_layers];
+        if let Some(pl) = cbk_pl {
+            let mut kr = Reader::new(pl);
+            let kn = kr.u32()? as usize;
+            if kn != n_layers {
+                bail!(
+                    "'{}' section declares {kn} layers, '{}' declares {n_layers}",
+                    tag_str(TAG_CODEBOOK),
+                    tag_str(TAG_META)
+                );
+            }
+            let mut any = false;
+            for (i, slot) in codebooks.iter_mut().enumerate() {
+                let tag = kr.u8()?;
+                let cb = Codebook::from_tag(tag)
+                    .ok_or_else(|| anyhow::anyhow!("layer {i}: unknown codebook tag {tag}"))?;
+                if cb.is_uniform() {
+                    continue;
+                }
+                any = true;
+                // Per-layer entries carry one bitlength; grouped
+                // entries a count + one per group.  No pre-allocation
+                // from the untrusted count (each record consumes 4
+                // bytes, so a hostile count fails on the first missing
+                // one); values are range-checked by from_raw_cbk.
+                let bits = if headers[i].grouped {
+                    let ng = kr.u32()? as usize;
+                    let mut v = Vec::new();
+                    for _ in 0..ng {
+                        v.push(kr.u32()?);
+                    }
+                    v
+                } else {
+                    vec![kr.u32()?]
+                };
+                *slot = (cb, bits);
+            }
+            if !kr.is_empty() {
+                bail!("trailing bytes in '{}' section", tag_str(TAG_CODEBOOK));
+            }
+            if !any {
+                bail!(
+                    "'{}' section present but every layer is uniform \
+                     (writers omit the section entirely)",
+                    tag_str(TAG_CODEBOOK)
+                );
+            }
+        }
+        for (i, (h, (cb, _))) in headers.iter().zip(&codebooks).enumerate() {
+            if h.cbk == cb.is_uniform() {
+                bail!(
+                    "layer {i} ('{}'): codebook flag disagrees with the '{}' section \
+                     (codebook artifacts need a reader that speaks CBK0)",
+                    h.name,
+                    tag_str(TAG_CODEBOOK)
                 );
             }
         }
@@ -685,8 +828,12 @@ impl Artifact {
         let mut wr = Reader::new(wct_pl);
         let mut br = Reader::new(bia_pl);
         let mut layers = Vec::new();
-        for (i, ((h, gp), cg)) in
-            headers.into_iter().zip(group_params).zip(conv_geoms).enumerate()
+        for (i, (((h, gp), cg), (cb, cb_bits))) in headers
+            .into_iter()
+            .zip(group_params)
+            .zip(conv_geoms)
+            .zip(codebooks)
+            .enumerate()
         {
             let code_len = wr
                 .len_u64()
@@ -695,14 +842,33 @@ impl Artifact {
             let weights = match gp {
                 None => {
                     let elems = binio::checked_product(&[h.din, h.dout])?;
+                    // A non-uniform layer must have poisoned its LAY0
+                    // bits field; the true bitlength comes from CBK0.
+                    let w_bits = if cb.is_uniform() {
+                        h.w_bits
+                    } else {
+                        if h.w_bits != 0 {
+                            bail!(
+                                "layer {i} ('{}'): non-uniform-codebook layers must \
+                                 write LAY0 w_bits as 0 (the bitlength comes from \
+                                 '{}'), got {}",
+                                h.name,
+                                tag_str(TAG_CODEBOOK),
+                                h.w_bits
+                            );
+                        }
+                        cb_bits[0]
+                    };
                     WeightCodes::PerLayer(
-                        PackedTensor::from_raw(h.w_bits, elems, h.w_lmin, h.w_scale, data)
-                            .with_context(|| {
-                                format!("layer {i} ('{}') weight codes", h.name)
-                            })?,
+                        PackedTensor::from_raw_cbk(
+                            w_bits, cb, elems, h.w_lmin, h.w_scale, data,
+                        )
+                        .with_context(|| {
+                            format!("layer {i} ('{}') weight codes", h.name)
+                        })?,
                     )
                 }
-                Some(params) => {
+                Some(mut params) => {
                     if params.len() != h.dout {
                         bail!(
                             "layer {i} ('{}'): {} channel plans for {} output channels",
@@ -711,7 +877,33 @@ impl Artifact {
                             h.dout
                         );
                     }
-                    let groups = PackedGroups::from_raw(h.din, &params, data)
+                    if !cb.is_uniform() {
+                        if cb_bits.len() != params.len() {
+                            bail!(
+                                "layer {i} ('{}'): '{}' declares {} group bitlengths, \
+                                 '{}' declares {} groups",
+                                h.name,
+                                tag_str(TAG_CODEBOOK),
+                                cb_bits.len(),
+                                tag_str(TAG_GROUPS),
+                                params.len()
+                            );
+                        }
+                        for (g, (p, &b)) in params.iter_mut().zip(&cb_bits).enumerate() {
+                            if p.0 != 0 {
+                                bail!(
+                                    "layer {i} ('{}') group {g}: non-uniform-codebook \
+                                     layers must write GRP0 bits as 0 (the bitlengths \
+                                     come from '{}'), got {}",
+                                    h.name,
+                                    tag_str(TAG_CODEBOOK),
+                                    p.0
+                                );
+                            }
+                            p.0 = b;
+                        }
+                    }
+                    let groups = PackedGroups::from_raw_cbk(h.din, cb, &params, data)
                         .with_context(|| {
                             format!("layer {i} ('{}') grouped weight codes", h.name)
                         })?;
@@ -887,9 +1079,17 @@ pub fn section_table(bytes: &[u8]) -> Result<Vec<SectionInfo>> {
             payload_len: payload.len(),
             crc_stored,
             crc_ok: binio::crc32(payload) == crc_stored,
-            known: [TAG_META, TAG_LAYERS, TAG_WCODES, TAG_BIASES, TAG_GROUPS, TAG_CONV]
-                .iter()
-                .any(|t| **t == tag),
+            known: [
+                TAG_META,
+                TAG_LAYERS,
+                TAG_WCODES,
+                TAG_BIASES,
+                TAG_GROUPS,
+                TAG_CONV,
+                TAG_CODEBOOK,
+            ]
+            .iter()
+            .any(|t| **t == tag),
         });
     }
     if !r.is_empty() {
@@ -1067,5 +1267,182 @@ mod tests {
         assert!(!a.is_conv());
         let table = section_table(&a.to_bytes()).unwrap();
         assert!(table.iter().all(|s| s.tag != "CNV0"));
+    }
+
+    /// Locate a section's table entry by tag.
+    fn find_section(bytes: &[u8], tag: &str) -> SectionInfo {
+        section_table(bytes)
+            .unwrap()
+            .into_iter()
+            .find(|s| s.tag == tag)
+            .unwrap_or_else(|| panic!("no '{tag}' section"))
+    }
+
+    /// Overwrite one payload byte and recompute the section CRC, so
+    /// the tamper reaches the structural validation behind it.
+    fn patch_payload(bytes: &mut [u8], tag: &str, off: usize, val: u8) {
+        let s = find_section(bytes, tag);
+        bytes[s.payload_offset + off] = val;
+        let crc = crc32(&bytes[s.payload_offset..s.payload_offset + s.payload_len]);
+        let crc_off = s.payload_offset + s.payload_len;
+        bytes[crc_off..crc_off + 4].copy_from_slice(&crc.to_le_bytes());
+    }
+
+    /// Remove a whole section frame (tag | len | payload | crc) and
+    /// decrement the header's section count.
+    fn splice_out(bytes: &mut Vec<u8>, tag: &str) {
+        let s = find_section(bytes, tag);
+        bytes.drain(s.payload_offset - 12..s.payload_offset + s.payload_len + 4);
+        let count_off = 12;
+        let old =
+            u32::from_le_bytes(bytes[count_off..count_off + 4].try_into().unwrap());
+        bytes[count_off..count_off + 4].copy_from_slice(&(old - 1).to_le_bytes());
+    }
+
+    fn cbk_artifact(cbk: Codebook) -> (crate::infer::IntNet, Vec<u8>) {
+        // Even layers per-layer, odd layers grouped — both shift-plan
+        // shapes cross the wire.
+        let net = crate::serve::synthetic_net_cbk(&[6, 10, 8, 4], 0xCB8, 3, 5, cbk);
+        let bytes = freeze(&net, "cbk").to_bytes();
+        (net, bytes)
+    }
+
+    #[test]
+    fn codebook_artifact_roundtrips_and_instantiates_bitwise() {
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            let (net, bytes) = cbk_artifact(cbk);
+            let table = section_table(&bytes).unwrap();
+            assert!(table.iter().any(|s| s.tag == "CBK0" && s.known && s.crc_ok));
+            let rt = Artifact::from_bytes(&bytes).unwrap();
+            assert_eq!(rt.layers.len(), net.layers.len());
+            for (l, src) in rt.layers.iter().zip(&net.layers) {
+                assert_eq!(l.codebook(), cbk);
+                assert_eq!(l.weights, *src.weights());
+            }
+            // The instantiated net re-engages the shift-add GEMM and
+            // forwards bit-identically to the source.
+            let rebuilt = rt.instantiate().unwrap();
+            for l in &rebuilt.layers {
+                assert_eq!(l.codebook(), cbk);
+                assert!(l.as_dense().unwrap().uses_shift_gemm());
+            }
+            let mut rng = Rng::new(0x2CB8);
+            let x: Vec<f32> = (0..4 * 6).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let want = net.forward(&x, 4);
+            let got = rebuilt.forward(&x, 4);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "codebook {cbk:?} instantiation diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn conv_codebook_artifact_carries_both_sections() {
+        // CNV0 and CBK0 compose: a PoT conv net roundtrips bitwise with
+        // both poisoning schemes (din = 0 and w_bits = 0) in play.
+        let net =
+            crate::serve::synthetic_conv_net_cbk(0xC0DE, 4, 5, Codebook::PowerOfTwo);
+        let bytes = freeze(&net, "convcbk").to_bytes();
+        let table = section_table(&bytes).unwrap();
+        assert!(table.iter().any(|s| s.tag == "CNV0" && s.known && s.crc_ok));
+        assert!(table.iter().any(|s| s.tag == "CBK0" && s.known && s.crc_ok));
+        let rebuilt = Artifact::from_bytes(&bytes).unwrap().instantiate().unwrap();
+        let mut rng = Rng::new(0x3C0);
+        let x: Vec<f32> =
+            (0..2 * net.in_features()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want = net.forward(&x, 2);
+        let got = rebuilt.forward(&x, 2);
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn uniform_artifact_bytes_carry_no_codebook_section() {
+        // Backward compat: uniform models must stay byte-identical to
+        // pre-CBK0 writers — no CBK0 section, no poisoned bits.
+        let a = demo_artifact();
+        let table = section_table(&a.to_bytes()).unwrap();
+        assert!(table.iter().all(|s| s.tag != "CBK0"));
+        // And routing a uniform build through the codebook constructors
+        // changes nothing on the wire.
+        let plain = freeze(&crate::serve::synthetic_conv_net(0xC047, 4, 5), "m");
+        let uni = freeze(
+            &crate::serve::synthetic_conv_net_cbk(0xC047, 4, 5, Codebook::Uniform),
+            "m",
+        );
+        assert_eq!(plain.to_bytes(), uni.to_bytes());
+    }
+
+    #[test]
+    fn codebook_section_tampering_is_rejected() {
+        let (_, good) = cbk_artifact(Codebook::PowerOfTwo);
+
+        // Corrupted CBK0 payload byte (stale CRC) fails the checksum.
+        let mut bad = good.clone();
+        let s = find_section(&bad, "CBK0");
+        bad[s.payload_offset + 4] ^= 0x40;
+        let err = Artifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+
+        // Spliced-out CBK0: the LAY0 flag bit survives, so the loader
+        // refuses rather than decoding shift fields as uniform codes.
+        let mut bad = good.clone();
+        splice_out(&mut bad, "CBK0");
+        let err = Artifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(
+            err.contains("codebook flag disagrees"),
+            "unexpected error: {err}"
+        );
+
+        // Unknown codebook tag (layer 0's tag byte, after n_layers u32).
+        let mut bad = good.clone();
+        patch_payload(&mut bad, "CBK0", 4, 3);
+        let err = Artifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown codebook tag 3"), "unexpected error: {err}");
+
+        // Un-poisoned LAY0 w_bits on a non-uniform layer.  Layer 0
+        // ("fc0", per-layer PoT) stores w_bits at payload offset
+        // 4+3 (name) + 8 (din) + 8 (dout) = 23.
+        let mut bad = good.clone();
+        patch_payload(&mut bad, "LAY0", 23, 3);
+        let err = Artifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(
+            err.contains("must write LAY0 w_bits as 0"),
+            "unexpected error: {err}"
+        );
+
+        // Cleared codebook flag with the CBK0 entry still present — the
+        // cross-check fires in the other direction.  Layer 0's flags
+        // byte sits after w_bits + a_bits, at offset 31.
+        let mut bad = good.clone();
+        let s = find_section(&bad, "LAY0");
+        let flags = bad[s.payload_offset + 31];
+        patch_payload(&mut bad, "LAY0", 31, flags & !LAYER_FLAG_CODEBOOK);
+        let err = Artifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(
+            err.contains("codebook flag disagrees"),
+            "unexpected error: {err}"
+        );
+
+        // An all-uniform CBK0 forged onto a uniform artifact: writers
+        // never emit it, so readers reject it outright.
+        let mut bad = demo_artifact().to_bytes();
+        let count_off = 12;
+        let old =
+            u32::from_le_bytes(bad[count_off..count_off + 4].try_into().unwrap());
+        bad[count_off..count_off + 4].copy_from_slice(&(old + 1).to_le_bytes());
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 2); // demo net has two layers
+        payload.push(0);
+        payload.push(0);
+        bad.extend_from_slice(b"CBK0");
+        put_u64(&mut bad, payload.len() as u64);
+        bad.extend_from_slice(&payload);
+        put_u32(&mut bad, crc32(&payload));
+        let err = Artifact::from_bytes(&bad).unwrap_err().to_string();
+        assert!(
+            err.contains("every layer is uniform"),
+            "unexpected error: {err}"
+        );
     }
 }

@@ -68,9 +68,12 @@
 
 use anyhow::{bail, Result};
 
-use crate::bitpack::{pack, pack_groups, unpack_codes, PackedGroups, PackedTensor, WeightCodes};
+use crate::bitpack::{
+    pack, pack_cbk, pack_groups, pack_groups_cbk, unpack_codes, PackedGroups, PackedTensor,
+    WeightCodes,
+};
 use crate::model::ModelMeta;
-use crate::quant::{self, Granularity};
+use crate::quant::{self, Codebook, Granularity};
 use crate::tensor::HostTensor;
 use crate::util::pool::WorkerPool;
 
@@ -108,6 +111,100 @@ pub struct IntDense {
     /// Calibrated activation range for this layer's input.  `None`
     /// falls back to each batch's own min/max (batch-dependent logits).
     act_range: Option<(f32, f32)>,
+    /// Shift-add execution plan, present iff the weight codebook is
+    /// non-uniform.  Built once at construction from the tiled codes;
+    /// the GEMM dispatch prefers it over the multiply kernels.
+    shift: Option<ShiftPlan>,
+}
+
+/// Shift-add execution plan for a non-uniform-codebook layer.
+///
+/// Under a sparse-bit codebook every stored code is `half + c_s` with
+/// `half = 2^(bits-1)` and `c_s` a signed magnitude whose absolute
+/// value has at most two set bits (one for [`Codebook::PowerOfTwo`],
+/// two for [`Codebook::AdditivePot2`]).  The i64 GEMM core therefore
+/// decomposes exactly:
+///
+/// ```text
+/// Σ_i a[i]·code[i,j] = half_j·(Σ_i a[i])  +  Σ ±(a[i] << e)
+/// ```
+///
+/// — the per-row activation code sum (already computed by the
+/// quantizer for the affine terms) carries the `half` offset, and the
+/// residual is a short CSR list of shift-adds with **no multiplies**.
+/// Since i64 addition is exact under reassociation, the shift kernels
+/// produce the *same integer accumulator* as the multiply kernels, so
+/// fast-vs-ref stays bit-identical (pinned by the parity tests).
+#[derive(Debug, Default)]
+struct ShiftPlan {
+    /// Per output column: `(start, mid, end)` into `entries` —
+    /// `entries[start..mid]` add, `entries[mid..end]` subtract.
+    col: Vec<(u32, u32, u32)>,
+    /// `(input index, shift)` terms; an APoT weight contributes up to
+    /// two entries, a PoT weight at most one, a zero weight none.
+    entries: Vec<(u32, u8)>,
+    /// Per output column: `bits_j - 1`, the shift applying the `half`
+    /// offset (`half_j·rsum = rsum << (bits_j - 1)` — row code sums are
+    /// non-negative, so even this term is multiply-free).
+    half_sh: Vec<u8>,
+}
+
+impl ShiftPlan {
+    /// Build from the tiled `[dout, din]` codes; `bits_of(j)` is
+    /// output column j's stored bitlength.  Decomposing each code's
+    /// signed part bit-by-bit is codebook-agnostic (correct for any
+    /// codes), but only sparse-bit codebooks keep the entry list short
+    /// enough to beat the multiply kernel.
+    fn build(codes_t: &[u16], din: usize, dout: usize, bits_of: impl Fn(usize) -> u32) -> Self {
+        let mut col = Vec::with_capacity(dout);
+        let mut entries = Vec::new();
+        let mut half_sh = Vec::with_capacity(dout);
+        for j in 0..dout {
+            let b = bits_of(j);
+            let hu = 1u16 << (b - 1);
+            half_sh.push((b - 1) as u8);
+            let codes = &codes_t[j * din..(j + 1) * din];
+            let start = entries.len() as u32;
+            for (i, &c) in codes.iter().enumerate() {
+                if c > hu {
+                    let mut m = (c - hu) as u32;
+                    while m != 0 {
+                        entries.push((i as u32, m.trailing_zeros() as u8));
+                        m &= m - 1;
+                    }
+                }
+            }
+            let mid = entries.len() as u32;
+            for (i, &c) in codes.iter().enumerate() {
+                if c < hu {
+                    let mut m = (hu - c) as u32;
+                    while m != 0 {
+                        entries.push((i as u32, m.trailing_zeros() as u8));
+                        m &= m - 1;
+                    }
+                }
+            }
+            let end = entries.len() as u32;
+            col.push((start, mid, end));
+        }
+        Self { col, entries, half_sh }
+    }
+
+    /// One column's shift-add accumulation over one activation row:
+    /// exactly `Σ_i a_row[i]·code[i,j]` as the multiply kernel computes
+    /// it, with zero multiplies.
+    #[inline]
+    fn col_acc(&self, j: usize, a_row: &[u16], row_code_sum: i64) -> i64 {
+        let (start, mid, end) = self.col[j];
+        let mut acc = row_code_sum << self.half_sh[j];
+        for &(idx, sh) in &self.entries[start as usize..mid as usize] {
+            acc += (a_row[idx as usize] as i64) << sh;
+        }
+        for &(idx, sh) in &self.entries[mid as usize..end as usize] {
+            acc -= (a_row[idx as usize] as i64) << sh;
+        }
+        acc
+    }
 }
 
 /// Hoisted per-output-channel affine tables for the grouped GEMM, all
@@ -173,6 +270,29 @@ impl IntDense {
         Self::from_packed(name, packed, din, dout, bias.to_vec(), a_bits, relu, None)
     }
 
+    /// [`Self::new`] with an explicit weight [`Codebook`]: codes are
+    /// projected onto the codebook at pack time and a non-uniform layer
+    /// gets a [`ShiftPlan`] so its GEMM runs multiply-free.
+    /// `Codebook::Uniform` is byte- and bit-identical to [`Self::new`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_cbk(
+        name: &str,
+        w: &[f32],
+        din: usize,
+        dout: usize,
+        bias: &[f32],
+        w_bits: u32,
+        a_bits: u32,
+        relu: bool,
+        codebook: Codebook,
+    ) -> Result<Self> {
+        if w.len() != din * dout {
+            bail!("{name}: weight len {} != {din}x{dout}", w.len());
+        }
+        let packed = pack_cbk(w, w_bits, codebook)?;
+        Self::from_packed(name, packed, din, dout, bias.to_vec(), a_bits, relu, None)
+    }
+
     /// Reconstruct a layer from its **stored** packed codes and
     /// dequantization parameters, without touching f32 weights or the
     /// quantizer — the deployment path (`deploy::artifact`).  Because
@@ -224,6 +344,8 @@ impl IntDense {
                 col_code_sum[j] += c as i64;
             }
         }
+        let shift = (!packed.codebook.is_uniform())
+            .then(|| ShiftPlan::build(&codes_t, din, dout, |_| packed.bits));
         Ok(Self {
             name: name.to_string(),
             din,
@@ -235,6 +357,7 @@ impl IntDense {
             a_bits,
             relu,
             act_range,
+            shift,
         })
     }
 
@@ -274,6 +397,41 @@ impl IntDense {
         }
         let bits: Vec<u32> = w_bits.iter().map(|&b| quant::int_bits(b)).collect();
         let groups = pack_groups(&wt, din, &bits)?;
+        Self::from_packed_groups(name, groups, din, dout, bias.to_vec(), a_bits, relu, None)
+    }
+
+    /// [`Self::new_grouped`] with an explicit weight [`Codebook`]
+    /// shared by every channel (the codebook is a layer-level axis;
+    /// bitlengths and ranges stay per-channel).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_grouped_cbk(
+        name: &str,
+        w: &[f32],
+        din: usize,
+        dout: usize,
+        bias: &[f32],
+        w_bits: &[f32],
+        a_bits: u32,
+        relu: bool,
+        codebook: Codebook,
+    ) -> Result<Self> {
+        if w.len() != din * dout {
+            bail!("{name}: weight len {} != {din}x{dout}", w.len());
+        }
+        if w_bits.len() != dout {
+            bail!(
+                "{name}: {} channel bitlengths for {dout} output channels",
+                w_bits.len()
+            );
+        }
+        let mut wt = vec![0.0f32; din * dout];
+        for i in 0..din {
+            for j in 0..dout {
+                wt[j * din + i] = w[i * dout + j];
+            }
+        }
+        let bits: Vec<u32> = w_bits.iter().map(|&b| quant::int_bits(b)).collect();
+        let groups = pack_groups_cbk(&wt, din, &bits, codebook)?;
         Self::from_packed_groups(name, groups, din, dout, bias.to_vec(), a_bits, relu, None)
     }
 
@@ -336,6 +494,8 @@ impl IntDense {
             }
             col_code_sum[j] = sum;
         }
+        let shift = (!groups.codebook.is_uniform())
+            .then(|| ShiftPlan::build(&codes_t, din, dout, |j| groups.spans[j].bits));
         Ok(Self {
             name: name.to_string(),
             din,
@@ -347,12 +507,27 @@ impl IntDense {
             a_bits,
             relu,
             act_range,
+            shift,
         })
     }
 
     /// Weight-quantization granularity of this layer.
     pub fn granularity(&self) -> Granularity {
         self.weights.granularity()
+    }
+
+    /// Weight codebook of this layer (layer-level axis; uniform layers
+    /// run the multiply kernels, non-uniform layers the shift-add
+    /// kernels).
+    pub fn codebook(&self) -> Codebook {
+        self.weights.codebook()
+    }
+
+    /// Whether the fast path runs the shift-add GEMM (iff the codebook
+    /// is non-uniform; the scalar `forward_ref` stays multiply-based
+    /// either way, which is what makes parity a real cross-check).
+    pub fn uses_shift_gemm(&self) -> bool {
+        self.shift.is_some()
     }
 
     /// The per-layer packed tensor, when this layer is PerLayer.
@@ -589,18 +764,118 @@ impl IntDense {
         }
     }
 
-    /// Split matching rows of (activation codes, per-row affine terms,
-    /// output) into per-worker blocks.  Both parallel dispatchers
-    /// (`forward`'s scoped threads, `forward_scratch`'s pool) consume
-    /// this, so the boundary invariant — each output chunk lines up
-    /// with its codes/t rows — lives in exactly one place.
+    /// Shift-add analogue of [`Self::gemm_block`]: same affine
+    /// reconstruction (`s·acc + t[r] + u[j]`), but the i64 accumulator
+    /// comes from the [`ShiftPlan`] — `rs` holds the block's per-row
+    /// activation code sums, which carry the `half` offset.  The
+    /// integer accumulator is exactly the multiply kernel's, so the
+    /// two paths are bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_block_shift(
+        &self,
+        plan: &ShiftPlan,
+        a: &[u16],
+        rs: &[i64],
+        t: &[f64],
+        u: &[f64],
+        s: f64,
+        out: &mut [f32],
+    ) {
+        let din = self.din;
+        let dout = self.dout;
+        let relu = self.relu;
+        for (((a_row, &rsum), tr), out_row) in a
+            .chunks_exact(din)
+            .zip(rs)
+            .zip(t)
+            .zip(out.chunks_exact_mut(dout))
+        {
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let acc = plan.col_acc(j, a_row, rsum);
+                let v = (s * acc as f64 + *tr + u[j]) as f32;
+                *o = if relu { v.max(0.0) } else { v };
+            }
+        }
+    }
+
+    /// Shift-add analogue of [`Self::gemm_block_grouped`]: per-column
+    /// affine tables, shift-add accumulator.
+    fn gemm_block_shift_grouped(
+        &self,
+        plan: &ShiftPlan,
+        a: &[u16],
+        rs: &[i64],
+        rsf: &[f64],
+        cols: &GroupedCols,
+        out: &mut [f32],
+    ) {
+        let din = self.din;
+        let dout = self.dout;
+        let relu = self.relu;
+        for (((a_row, &rsum), rf), out_row) in a
+            .chunks_exact(din)
+            .zip(rs)
+            .zip(rsf)
+            .zip(out.chunks_exact_mut(dout))
+        {
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let acc = plan.col_acc(j, a_row, rsum);
+                let t = cols.awmin[j] * *rf + cols.kwmin[j];
+                let v = (cols.s[j] * acc as f64 + t + cols.u[j]) as f32;
+                *o = if relu { v.max(0.0) } else { v };
+            }
+        }
+    }
+
+    /// Per-layer GEMM over one row block: shift-add kernel when a
+    /// [`ShiftPlan`] exists, multiply kernel otherwise.  Every
+    /// dispatcher (inline, scoped threads, worker pool) goes through
+    /// here, so kernel selection lives in exactly one place.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_dispatch(
+        &self,
+        a: &[u16],
+        rs: &[i64],
+        t: &[f64],
+        u: &[f64],
+        s: f64,
+        out: &mut [f32],
+    ) {
+        match &self.shift {
+            Some(plan) => self.gemm_block_shift(plan, a, rs, t, u, s, out),
+            None => self.gemm_block(a, t, u, s, out),
+        }
+    }
+
+    /// Grouped GEMM dispatch — see [`Self::gemm_dispatch`].
+    fn gemm_dispatch_grouped(
+        &self,
+        a: &[u16],
+        rs: &[i64],
+        rsf: &[f64],
+        cols: &GroupedCols,
+        out: &mut [f32],
+    ) {
+        match &self.shift {
+            Some(plan) => self.gemm_block_shift_grouped(plan, a, rs, rsf, cols, out),
+            None => self.gemm_block_grouped(a, rsf, cols, out),
+        }
+    }
+
+    /// Split matching rows of (activation codes, per-row code sums,
+    /// per-row affine terms, output) into per-worker blocks.  Both
+    /// parallel dispatchers (`forward`'s scoped threads,
+    /// `forward_scratch`'s pool) consume this, so the boundary
+    /// invariant — each output chunk lines up with its codes/sum/t
+    /// rows — lives in exactly one place.
     fn row_blocks<'a>(
         &self,
         a: &'a [u16],
+        rs: &'a [i64],
         t: &'a [f64],
         out: &'a mut [f32],
         threads: usize,
-    ) -> Vec<(&'a [u16], &'a [f64], &'a mut [f32])> {
+    ) -> Vec<(&'a [u16], &'a [i64], &'a [f64], &'a mut [f32])> {
         let rows_per = t.len().div_ceil(threads);
         let mut blocks = Vec::with_capacity(threads);
         for (idx, out_chunk) in out.chunks_mut(rows_per * self.dout).enumerate() {
@@ -608,6 +883,7 @@ impl IntDense {
             let rows = out_chunk.len() / self.dout;
             blocks.push((
                 &a[r0 * self.din..(r0 + rows) * self.din],
+                &rs[r0..r0 + rows],
                 &t[r0..r0 + rows],
                 out_chunk,
             ));
@@ -692,14 +968,14 @@ impl IntDense {
             WeightCodes::PerLayer(_) => {
                 let (s, t, u) = self.affine_terms(a_scale, a_min, &row_code_sum);
                 if threads <= 1 {
-                    self.gemm_block(&a_codes, &t, &u, s, &mut out);
+                    self.gemm_dispatch(&a_codes, &row_code_sum, &t, &u, s, &mut out);
                 } else {
                     let u = &u;
                     std::thread::scope(|scope| {
-                        for (a, tb, out_chunk) in
-                            self.row_blocks(&a_codes, &t, &mut out, threads)
+                        for (a, rb, tb, out_chunk) in
+                            self.row_blocks(&a_codes, &row_code_sum, &t, &mut out, threads)
                         {
-                            scope.spawn(move || self.gemm_block(a, tb, u, s, out_chunk));
+                            scope.spawn(move || self.gemm_dispatch(a, rb, tb, u, s, out_chunk));
                         }
                     });
                 }
@@ -709,15 +985,15 @@ impl IntDense {
                 let mut cols = GroupedCols::default();
                 self.grouped_terms_into(a_scale, a_min, &row_code_sum, &mut rsf, &mut cols);
                 if threads <= 1 {
-                    self.gemm_block_grouped(&a_codes, &rsf, &cols, &mut out);
+                    self.gemm_dispatch_grouped(&a_codes, &row_code_sum, &rsf, &cols, &mut out);
                 } else {
                     let cols = &cols;
                     std::thread::scope(|scope| {
-                        for (a, rb, out_chunk) in
-                            self.row_blocks(&a_codes, &rsf, &mut out, threads)
+                        for (a, rb, rf, out_chunk) in
+                            self.row_blocks(&a_codes, &row_code_sum, &rsf, &mut out, threads)
                         {
                             scope.spawn(move || {
-                                self.gemm_block_grouped(a, rb, cols, out_chunk)
+                                self.gemm_dispatch_grouped(a, rb, rf, cols, out_chunk)
                             });
                         }
                     });
@@ -759,16 +1035,18 @@ impl IntDense {
                 let s = self
                     .affine_terms_into(a_scale, a_min, &sc.row_sum, &mut sc.t, &mut sc.u);
                 if threads <= 1 {
-                    self.gemm_block(&sc.codes, &sc.t, &sc.u, s, out);
+                    self.gemm_dispatch(&sc.codes, &sc.row_sum, &sc.t, &sc.u, s, out);
                 } else {
                     let pool = pool.unwrap();
                     let u = &sc.u;
                     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
                         Vec::with_capacity(threads);
-                    for (a, tb, out_chunk) in
-                        self.row_blocks(&sc.codes, &sc.t, out, threads)
+                    for (a, rb, tb, out_chunk) in
+                        self.row_blocks(&sc.codes, &sc.row_sum, &sc.t, out, threads)
                     {
-                        jobs.push(Box::new(move || self.gemm_block(a, tb, u, s, out_chunk)));
+                        jobs.push(Box::new(move || {
+                            self.gemm_dispatch(a, rb, tb, u, s, out_chunk)
+                        }));
                     }
                     pool.run_scoped(jobs);
                 }
@@ -782,17 +1060,17 @@ impl IntDense {
                     &mut sc.gcols,
                 );
                 if threads <= 1 {
-                    self.gemm_block_grouped(&sc.codes, &sc.t, &sc.gcols, out);
+                    self.gemm_dispatch_grouped(&sc.codes, &sc.row_sum, &sc.t, &sc.gcols, out);
                 } else {
                     let pool = pool.unwrap();
                     let cols = &sc.gcols;
                     let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
                         Vec::with_capacity(threads);
-                    for (a, rb, out_chunk) in
-                        self.row_blocks(&sc.codes, &sc.t, out, threads)
+                    for (a, rb, rf, out_chunk) in
+                        self.row_blocks(&sc.codes, &sc.row_sum, &sc.t, out, threads)
                     {
                         jobs.push(Box::new(move || {
-                            self.gemm_block_grouped(a, rb, cols, out_chunk)
+                            self.gemm_dispatch_grouped(a, rb, rf, cols, out_chunk)
                         }));
                     }
                     pool.run_scoped(jobs);
@@ -1037,6 +1315,62 @@ impl IntConv2d {
             w_bits,
             a_bits,
             relu,
+        )?;
+        Ok(Self { geom, core })
+    }
+
+    /// [`Self::new`] with an explicit weight [`Codebook`] — the conv
+    /// lowers to the dense shift-add core via the same im2col stage.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_cbk(
+        name: &str,
+        w: &[f32],
+        geom: ConvGeom,
+        bias: &[f32],
+        w_bits: u32,
+        a_bits: u32,
+        relu: bool,
+        codebook: Codebook,
+    ) -> Result<Self> {
+        geom.validate(name)?;
+        let core = IntDense::new_cbk(
+            name,
+            w,
+            geom.patch_len(),
+            geom.cout,
+            bias,
+            w_bits,
+            a_bits,
+            relu,
+            codebook,
+        )?;
+        Ok(Self { geom, core })
+    }
+
+    /// [`Self::new_grouped`] with an explicit weight [`Codebook`]
+    /// shared by every output kernel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_grouped_cbk(
+        name: &str,
+        w: &[f32],
+        geom: ConvGeom,
+        bias: &[f32],
+        w_bits: &[f32],
+        a_bits: u32,
+        relu: bool,
+        codebook: Codebook,
+    ) -> Result<Self> {
+        geom.validate(name)?;
+        let core = IntDense::new_grouped_cbk(
+            name,
+            w,
+            geom.patch_len(),
+            geom.cout,
+            bias,
+            w_bits,
+            a_bits,
+            relu,
+            codebook,
         )?;
         Ok(Self { geom, core })
     }
@@ -1334,6 +1668,11 @@ impl IntLayer {
 
     pub fn granularity(&self) -> Granularity {
         self.core().granularity()
+    }
+
+    /// Weight codebook of this op's GEMM core.
+    pub fn codebook(&self) -> Codebook {
+        self.core().codebook()
     }
 
     pub fn act_range(&self) -> Option<(f32, f32)> {
@@ -2391,5 +2730,208 @@ mod tests {
         // Second call on the same scratch (warm path) stays identical.
         let again = net.forward_into(&x, 4, &mut sc, None).to_vec();
         assert!(want.iter().zip(&again).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn shift_gemm_matches_multiply_ref_bitwise() {
+        // The tentpole parity pin: a non-uniform-codebook layer runs
+        // the shift-add kernel on the fast path while forward_ref stays
+        // the multiply baseline — an actual cross-kernel check.  Odd
+        // shapes, both codebooks, edge bitlengths, calibrated and
+        // dynamic ranges.
+        let mut rng = Rng::new(0x5817);
+        for &cbk in &[Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            for &(n, din, dout, wb, ab, calibrated) in &[
+                (1usize, 1usize, 1usize, 4u32, 4u32, false),
+                (3, 5, 7, 2, 3, true),
+                (8, 17, 13, 8, 6, false),
+                (5, 33, 9, 16, 16, true),
+                (6, 24, 10, 1, 2, false), // 1-bit: max_pos clamp binds
+            ] {
+                let x = rand_vec(&mut rng, n * din);
+                let w = rand_vec(&mut rng, din * dout);
+                let b = rand_vec(&mut rng, dout);
+                let mut layer =
+                    IntDense::new_cbk("sh", &w, din, dout, &b, wb, ab, true, cbk).unwrap();
+                if calibrated {
+                    layer.set_act_range(-2.0, 2.0);
+                }
+                assert!(layer.uses_shift_gemm());
+                assert_eq!(layer.codebook(), cbk);
+                let fast = layer.forward(&x, n);
+                let slow = layer.forward_ref(&x, n);
+                for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                    assert_eq!(
+                        f.to_bits(),
+                        s.to_bits(),
+                        "{cbk:?} ({n},{din},{dout}) bits ({wb},{ab}) elem {i}: {f} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_uniform_codebook_is_identical_to_default() {
+        // Uniform through new_cbk must be the exact layer new() builds:
+        // no shift plan, same packed bytes, bitwise-identical forward.
+        let mut rng = Rng::new(0x5818);
+        let (n, din, dout) = (4usize, 19usize, 11usize);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let plain = IntDense::new("u", &w, din, dout, &b, 5, 4, true).unwrap();
+        let cbk =
+            IntDense::new_cbk("u", &w, din, dout, &b, 5, 4, true, Codebook::Uniform).unwrap();
+        assert!(!cbk.uses_shift_gemm());
+        assert_eq!(cbk.codebook(), Codebook::Uniform);
+        assert_eq!(
+            plain.packed_per_layer().unwrap().data,
+            cbk.packed_per_layer().unwrap().data
+        );
+        let a = plain.forward(&x, n);
+        let c = cbk.forward(&x, n);
+        assert!(a.iter().zip(&c).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+
+    #[test]
+    fn shift_grouped_matches_ref_bitwise() {
+        // Per-channel bitlengths under one shared codebook: the shift
+        // plan reads each span's bits for its half offset.
+        let mut rng = Rng::new(0x5819);
+        for &cbk in &[Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            for &(n, din, dout) in &[(1usize, 1usize, 1usize), (3, 5, 7), (8, 17, 13)] {
+                let x = rand_vec(&mut rng, n * din);
+                let w = rand_vec(&mut rng, din * dout);
+                let b = rand_vec(&mut rng, dout);
+                let bits: Vec<f32> =
+                    (0..dout).map(|j| (1 + (j * 5) % 16) as f32).collect();
+                let mut layer =
+                    IntDense::new_grouped_cbk("shg", &w, din, dout, &b, &bits, 4, true, cbk)
+                        .unwrap();
+                layer.set_act_range(-2.0, 2.0);
+                assert!(layer.uses_shift_gemm());
+                assert_eq!(layer.granularity(), Granularity::PerOutputChannel);
+                let fast = layer.forward(&x, n);
+                let slow = layer.forward_ref(&x, n);
+                for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                    assert_eq!(
+                        f.to_bits(),
+                        s.to_bits(),
+                        "{cbk:?} ({n},{din},{dout}) elem {i}: {f} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shift_threaded_and_scratch_match_bitwise() {
+        // Above PAR_MIN_MACS the shift kernel must survive both
+        // parallel dispatchers (scoped threads and the worker pool)
+        // with the row-sum blocks lining up against the code blocks.
+        let pool = crate::util::pool::WorkerPool::new(3);
+        let mut sc = LayerScratch::default();
+        let mut rng = Rng::new(0x581A);
+        let (n, din, dout) = (67usize, 128usize, 128usize);
+        assert!(n * din * dout >= super::PAR_MIN_MACS);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let layer = IntDense::new_cbk(
+            "sht", &w, din, dout, &b, 4, 4, true, Codebook::AdditivePot2,
+        )
+        .unwrap();
+        let want = layer.forward_ref(&x, n);
+        let fast = layer.forward(&x, n);
+        assert!(fast.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let mut got = vec![0.0f32; n * dout];
+        layer.forward_scratch(&x, n, &mut sc, &mut got, Some(&pool));
+        assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let mut inline = vec![0.0f32; n * dout];
+        layer.forward_scratch(&x, n, &mut sc, &mut inline, None);
+        assert!(inline.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn conv_cbk_shift_matches_ref_bitwise() {
+        // The im2col lowering feeds the shift core unchanged: conv at
+        // both granularities under a non-uniform codebook, fast vs the
+        // element-at-a-time gather + multiply reference.
+        let mut rng = Rng::new(0x581B);
+        let g = geom(3, 6, 6, 5, 3, 3, 1, 1);
+        let x = rand_vec(&mut rng, 2 * g.in_features());
+        let w = rand_vec(&mut rng, g.patch_len() * g.cout);
+        let b = rand_vec(&mut rng, g.cout);
+        let conv =
+            IntConv2d::new_cbk("cs", &w, g, &b, 4, 5, true, Codebook::PowerOfTwo).unwrap();
+        assert!(conv.core().uses_shift_gemm());
+        let fast = conv.forward(&x, 2);
+        let slow = conv.forward_ref(&x, 2);
+        assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        let bits: Vec<f32> = (0..g.cout).map(|j| (2 + (j * 5) % 9) as f32).collect();
+        let mut cg = IntConv2d::new_grouped_cbk(
+            "csg", &w, g, &b, &bits, 4, true, Codebook::AdditivePot2,
+        )
+        .unwrap();
+        cg.set_act_range(-2.0, 2.0);
+        let l = IntLayer::from(cg);
+        assert_eq!(l.codebook(), Codebook::AdditivePot2);
+        let fast = l.forward(&x, 2);
+        let slow = l.forward_ref(&x, 2);
+        assert!(fast.iter().zip(&slow).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn shift_rebuild_from_packed_is_bit_identical() {
+        // Deploy path: rebuilding a codebook layer from its stored
+        // packed codes must restore the shift plan and forward
+        // bit-identically — per-layer and grouped.
+        let mut rng = Rng::new(0x581C);
+        let (n, din, dout) = (5usize, 11usize, 9usize);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let b = rand_vec(&mut rng, dout);
+        let mut src =
+            IntDense::new_cbk("rz", &w, din, dout, &b, 3, 5, true, Codebook::PowerOfTwo)
+                .unwrap();
+        src.set_act_range(-2.0, 2.0);
+        let rebuilt = IntDense::from_packed(
+            "rz",
+            src.packed_per_layer().unwrap().clone(),
+            din,
+            dout,
+            src.bias.clone(),
+            src.a_bits,
+            src.relu,
+            src.act_range(),
+        )
+        .unwrap();
+        assert!(rebuilt.uses_shift_gemm());
+        let want = src.forward(&x, n);
+        let got = rebuilt.forward(&x, n);
+        assert!(want.iter().zip(&got).all(|(p, q)| p.to_bits() == q.to_bits()));
+
+        let bits = [1.0f32, 4.0, 7.5, 16.0, 2.0, 3.0, 5.0, 6.0, 2.0];
+        let gsrc = IntDense::new_grouped_cbk(
+            "rzg", &w, din, dout, &b, &bits, 4, false, Codebook::AdditivePot2,
+        )
+        .unwrap();
+        let grebuilt = IntDense::from_packed_groups(
+            "rzg",
+            gsrc.packed_groups().unwrap().clone(),
+            din,
+            dout,
+            gsrc.bias.clone(),
+            gsrc.a_bits,
+            gsrc.relu,
+            None,
+        )
+        .unwrap();
+        assert!(grebuilt.uses_shift_gemm());
+        let want = gsrc.forward(&x, n);
+        let got = grebuilt.forward(&x, n);
+        assert!(want.iter().zip(&got).all(|(p, q)| p.to_bits() == q.to_bits()));
     }
 }

@@ -116,10 +116,16 @@ OPTIONS (deploy):
   export:  --out FILE.bpma  --synthetic | --ckpt FILE.bpck  --bits B
            --granularity layer|channel   (per-output-channel weight bits)
            --arch mlp|conv               (synthetic fixture: dense or conv/im2col)
+           --codebook uniform|pot|apot   (weight codes: uniform grid, powers of
+                                          two, or 2-term PoT sums; non-uniform
+                                          artifacts carry a CBK0 section and
+                                          serve on the shift-add GEMM)
   inspect: <FILE.bpma>                   (reports per-channel bit histograms,
-                                          conv geometry via the CNV0 section)
+                                          per-layer codebooks, conv geometry
+                                          via the CNV0/CBK0 sections)
   serve:   --model FILE.bpma  --swap-to B.bpma  --swap-after N
-           --granularity layer|channel  --arch mlp|conv  (for --synthetic)
+           --granularity layer|channel  --arch mlp|conv
+           --codebook uniform|pot|apot  (for --synthetic)
            --deadline-ms N  --shed-policy reject-newest|drop-expired
            --canary B.bpma --canary-pct P --canary-window N --canary-promote K
 ";
@@ -446,6 +452,18 @@ fn arg_granularity(args: &Args) -> Result<quant::Granularity> {
     }
 }
 
+/// Parse the `--codebook uniform|pot|apot` option (default uniform).
+fn arg_codebook(args: &Args) -> Result<quant::Codebook> {
+    match args.get("codebook") {
+        None => Ok(quant::Codebook::Uniform),
+        Some(c) => quant::Codebook::parse(c).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown codebook '{c}' — expected 'uniform', 'pot' or 'apot'"
+            )
+        }),
+    }
+}
+
 /// `[bitlength]: channel count` histogram line for grouped models.
 fn bits_histogram_line(h: &[usize; 17]) -> String {
     (1..=16usize)
@@ -513,7 +531,9 @@ fn net_from_checkpoint(
 
 /// Human-readable per-layer summary of a frozen artifact.
 fn artifact_summary(art: &bitprune::deploy::Artifact) -> String {
-    let mut t = Table::new(&["layer", "shape", "W bits", "A bits", "act range", "packed KiB"]);
+    let mut t = Table::new(&[
+        "layer", "shape", "W bits", "codebook", "A bits", "act range", "packed KiB",
+    ]);
     for l in &art.layers {
         t.row(vec![
             l.name.clone(),
@@ -530,6 +550,7 @@ fn artifact_summary(art: &bitprune::deploy::Artifact) -> String {
                     format!("{:.2} mean/ch (max {})", l.w_bits_mean(), l.w_bits())
                 }
             },
+            l.codebook().name().to_string(),
             format!("{}", l.a_bits),
             match l.act_range {
                 Some((lo, hi)) => format!("[{lo:.3}, {hi:.3}]"),
@@ -557,6 +578,12 @@ fn artifact_summary(art: &bitprune::deploy::Artifact) -> String {
             bits_histogram_line(&art.w_bits_histogram())
         ));
     }
+    if art.has_codebook() {
+        out.push_str(
+            "\ncodebook: non-uniform weight codes (CBK0 section; \
+             serves on the shift-add GEMM)",
+        );
+    }
     out
 }
 
@@ -575,15 +602,24 @@ fn cmd_export(args: &Args) -> Result<()> {
     let out_path = args.get_or("out", "model.bpma").to_string();
     let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
     let gran = arg_granularity(args)?;
+    let cbk = arg_codebook(args)?;
+    if !cbk.is_uniform() && !args.flag("synthetic") {
+        bail!(
+            "export: --codebook {} is only wired to the synthetic fixtures for now \
+             (trained/checkpoint exports quantize uniform) — add --synthetic",
+            cbk.name()
+        );
+    }
 
     let arch = arg_arch(args)?;
     let (net, model_name) = if args.flag("synthetic") {
         let tag = if arch == SynthArch::Conv { "conv" } else { "mlp" };
         eprintln!(
-            "freezing the synthetic calibrated {tag} fixture ({bits}-bit, {} granularity)",
-            gran.name()
+            "freezing the synthetic calibrated {tag} fixture ({bits}-bit, {} granularity, {} codebook)",
+            gran.name(),
+            cbk.name()
         );
-        (synthetic_for(arch, gran, cfg.seed, bits), format!("synthetic-{tag}"))
+        (synthetic_for(arch, gran, cfg.seed, bits, cbk), format!("synthetic-{tag}"))
     } else if let Some(ckpt) = args.get("ckpt") {
         eprintln!("freezing checkpoint '{ckpt}' ({})", cfg.model);
         (net_from_checkpoint(&cfg, ckpt, gran)?, cfg.model.clone())
@@ -671,7 +707,25 @@ fn synthetic_for(
     gran: quant::Granularity,
     seed: u64,
     bits: u32,
+    cbk: quant::Codebook,
 ) -> bitprune::infer::IntNet {
+    // Non-uniform codebooks select the codebook fixtures: the mlp one
+    // deliberately mixes per-layer and per-channel layers (both
+    // shift-plan shapes), so --granularity applies to uniform builds.
+    if !cbk.is_uniform() {
+        return match arch {
+            SynthArch::Mlp => bitprune::serve::synthetic_net_cbk(
+                &[32, 256, 128, 10],
+                seed,
+                bits,
+                bits,
+                cbk,
+            ),
+            SynthArch::Conv => {
+                bitprune::serve::synthetic_conv_net_cbk(seed, bits, bits, cbk)
+            }
+        };
+    }
     let cycle = [(bits / 2).max(1), bits, (bits * 2).min(16)];
     match (arch, gran) {
         (SynthArch::Mlp, quant::Granularity::PerLayer) => {
@@ -745,6 +799,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let threads = args.get_usize("threads", 0)?;
     let bits = quant::int_bits(args.get_f64("bits", 4.0)? as f32);
     let gran = arg_granularity(args)?;
+    let cbk = arg_codebook(args)?;
     let deadline_ms = args.get_u64("deadline-ms", 0)?;
     let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
     let shed_policy = match args.get("shed-policy") {
@@ -776,10 +831,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let arch = arg_arch(args)?;
         let tag = if arch == SynthArch::Conv { "conv" } else { "mlp" };
         eprintln!(
-            "serving the synthetic calibrated {tag} fixture ({bits}-bit, {} granularity)",
-            gran.name()
+            "serving the synthetic calibrated {tag} fixture ({bits}-bit, {} granularity, {} codebook)",
+            gran.name(),
+            cbk.name()
         );
-        (synthetic_for(arch, gran, cfg.seed, bits), format!("synthetic-{tag}"))
+        (synthetic_for(arch, gran, cfg.seed, bits, cbk), format!("synthetic-{tag}"))
     } else {
         match trained_calibrated_net(&cfg, gran) {
             Ok(net) => (net, cfg.model.clone()),
@@ -793,7 +849,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                      falling back to the synthetic calibrated mlp fixture"
                 );
                 (
-                    synthetic_for(SynthArch::Mlp, gran, cfg.seed, bits),
+                    synthetic_for(SynthArch::Mlp, gran, cfg.seed, bits, cbk),
                     "synthetic-mlp".into(),
                 )
             }
@@ -809,6 +865,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             net.mean_w_bits(),
             bits_histogram_line(&net.w_bits_histogram())
         );
+    }
+    if net.layers.iter().any(|l| !l.codebook().is_uniform()) {
+        eprintln!("non-uniform weight codebooks: serving on the shift-add GEMM");
     }
     let net = Arc::new(net);
     let din = net.in_features();
@@ -1120,6 +1179,8 @@ impl CliOpts for RunConfig {
             "canary-promote",
             // weight-quantization granularity (export / serve)
             "granularity",
+            // weight codebook (export / serve --synthetic)
+            "codebook",
             // synthetic fixture architecture (export / serve --synthetic)
             "arch",
         ]);

@@ -87,10 +87,22 @@ pub struct QuantPlan {
     pub s_hi: f32,
     /// Interpolation weight `n - floor(n)` in [0, 1).
     pub alpha: f32,
+    /// Integer bitlength of the floor grid (what `code()` targets).
+    pub bits_lo: u8,
+    /// Code-value restriction on the floor grid ([`Codebook::Uniform`]
+    /// admits every code — today's behavior, bit-identical).
+    pub codebook: Codebook,
 }
 
 impl QuantPlan {
     pub fn new(lmin: f32, lmax: f32, n: f32) -> Self {
+        Self::new_cbk(lmin, lmax, n, Codebook::Uniform)
+    }
+
+    /// Plan with a code restriction.  The grid (origin, steps, alpha)
+    /// is exactly [`Self::new`]'s — a codebook never changes the grid,
+    /// only which of its codes are representable.
+    pub fn new_cbk(lmin: f32, lmax: f32, n: f32, codebook: Codebook) -> Self {
         let n = clip_bits(n);
         let b = n.floor();
         Self {
@@ -98,6 +110,8 @@ impl QuantPlan {
             s_lo: scale(lmin, lmax, b),
             s_hi: scale(lmin, lmax, b + 1.0),
             alpha: n - b,
+            bits_lo: b as u8,
+            codebook,
         }
     }
 
@@ -107,9 +121,27 @@ impl QuantPlan {
         Self::new(lmin, lmax, n)
     }
 
-    /// Quantize one value.
+    /// [`Self::from_slice`] with a code restriction.
+    pub fn from_slice_cbk(xs: &[f32], n: f32, codebook: Codebook) -> Self {
+        let (lmin, lmax) = group_minmax(xs);
+        Self::new_cbk(lmin, lmax, n, codebook)
+    }
+
+    /// Projector onto this plan's codebook at its floor bitlength.
+    pub fn projector(&self) -> CodeProjector {
+        CodeProjector::new(self.codebook, self.bits_lo as u32)
+    }
+
+    /// Quantize one value.  Non-uniform codebooks quantize on the floor
+    /// grid only (codebooks are a deployment-side restriction; the
+    /// interpolated fractional-bit path is a training construct).
     #[inline]
     pub fn quantize(&self, x: f32) -> f32 {
+        if self.codebook != Codebook::Uniform {
+            let levels = ((1u32 << self.bits_lo) - 1) as i64;
+            let code = self.projector().project_code(self.code(x, levels));
+            return self.lmin + code as f32 * self.s_lo;
+        }
         let c = x - self.lmin;
         let qb = self.lmin + (c / self.s_lo).round_ties_even() * self.s_lo;
         if self.alpha == 0.0 {
@@ -120,7 +152,9 @@ impl QuantPlan {
     }
 
     /// Integer code of `x` on the floor-bitlength grid, clamped to
-    /// `[0, levels]` — the packing / integer-inference path.
+    /// `[0, levels]` — the packing / integer-inference path.  Codebook
+    /// projection is a separate explicit step ([`CodeProjector`]) so
+    /// the uniform hot loop stays branch-free.
     #[inline]
     pub fn code(&self, x: f32, levels: i64) -> u32 {
         (((x - self.lmin) / self.s_lo).round_ties_even() as i64).clamp(0, levels) as u32
@@ -131,7 +165,14 @@ impl QuantPlan {
     pub fn apply(&self, xs: &mut [f32]) {
         let lmin = self.lmin;
         let s_lo = self.s_lo;
-        if self.alpha == 0.0 {
+        if self.codebook != Codebook::Uniform {
+            let proj = self.projector();
+            let levels = ((1u32 << self.bits_lo) - 1) as i64;
+            for x in xs.iter_mut() {
+                let code = proj.project_code(self.code(*x, levels));
+                *x = lmin + code as f32 * s_lo;
+            }
+        } else if self.alpha == 0.0 {
             for x in xs.iter_mut() {
                 *x = lmin + ((*x - lmin) / s_lo).round_ties_even() * s_lo;
             }
@@ -215,6 +256,225 @@ impl Granularity {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Codebooks: sparse-bit code restrictions (shift-add operating point)
+// ---------------------------------------------------------------------------
+
+/// Which codes of an n-bit grid a weight group may use — the second
+/// axis (after [`Granularity`]) the whole stack is threaded on.
+///
+/// Codes stay **unsigned grid codes** `c ∈ [0, 2^n − 1]` with
+/// `value = lmin + c·scale` whatever the codebook; a non-uniform
+/// codebook only restricts `c` to `half + c_s` where `half = 2^(n−1)`
+/// and the *signed* part `c_s` has sparse binary magnitude.  That makes
+/// every MAC `a·c = a·half + a·c_s` — a shared shift plus at most one
+/// (PoT) or two (APoT) shifted adds — while all reconstruction math
+/// (affine GEMM terms, dequantization, footprints) is untouched.
+///
+/// Magnitude sets (mirroring BWN_Shift's `bit_code1`/`bit_code2`): with
+/// `emax = max(n,2) − 2`,
+/// * [`Codebook::PowerOfTwo`]: `{0} ∪ {2^e : 0 ≤ e ≤ emax}`
+///   (at n = 8: `[0,1,2,4,8,16,32,64]` = `bit_code1`),
+/// * [`Codebook::AdditivePot2`]: all magnitudes with ≤ 2 set bits whose
+///   top bit is ≤ `2^emax` (at n = 8: 29 codes = `bit_code2`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Codebook {
+    /// Every grid code — today's uniform quantization, bit-identical.
+    Uniform,
+    /// Signed magnitudes restricted to powers of two: one shift per MAC.
+    PowerOfTwo,
+    /// Signed magnitudes with at most two set bits: two shifted adds.
+    AdditivePot2,
+}
+
+impl Codebook {
+    pub fn name(self) -> &'static str {
+        match self {
+            Codebook::Uniform => "uniform",
+            Codebook::PowerOfTwo => "pot",
+            Codebook::AdditivePot2 => "apot",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "uniform" => Some(Codebook::Uniform),
+            "pot" | "power-of-two" => Some(Codebook::PowerOfTwo),
+            "apot" | "additive-pot" => Some(Codebook::AdditivePot2),
+            _ => None,
+        }
+    }
+
+    /// Wire tag (BPMA `CBK0` section).  Stable: never renumber.
+    pub fn tag(self) -> u8 {
+        match self {
+            Codebook::Uniform => 0,
+            Codebook::PowerOfTwo => 1,
+            Codebook::AdditivePot2 => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Option<Self> {
+        match t {
+            0 => Some(Codebook::Uniform),
+            1 => Some(Codebook::PowerOfTwo),
+            2 => Some(Codebook::AdditivePot2),
+            _ => None,
+        }
+    }
+
+    pub fn is_uniform(self) -> bool {
+        self == Codebook::Uniform
+    }
+}
+
+/// Largest magnitude exponent a codebook uses at integer bitlength
+/// `bits`: `max(bits, 2) − 2`, so the largest single power `2^emax`
+/// stays within the signed range `[−half, half−1]` of the grid.
+pub fn codebook_emax(bits: u32) -> u32 {
+    bits.max(2) - 2
+}
+
+/// Sorted signed-magnitude set of a codebook at integer bitlength
+/// `bits` (always starts at 0).  Empty for [`Codebook::Uniform`], which
+/// admits every magnitude.
+pub fn codebook_magnitudes(cbk: Codebook, bits: u32) -> Vec<u32> {
+    assert!((1..=16).contains(&bits), "codebook_magnitudes: bits {bits} outside [1,16]");
+    let emax = codebook_emax(bits);
+    let mut mags = match cbk {
+        Codebook::Uniform => return Vec::new(),
+        Codebook::PowerOfTwo => {
+            let mut m = vec![0u32];
+            m.extend((0..=emax).map(|e| 1u32 << e));
+            m
+        }
+        Codebook::AdditivePot2 => {
+            let mut m = vec![0u32];
+            m.extend((0..=emax).map(|e| 1u32 << e));
+            for hi in 1..=emax {
+                for lo in 0..hi {
+                    m.push((1u32 << hi) | (1u32 << lo));
+                }
+            }
+            m
+        }
+    };
+    mags.sort_unstable();
+    mags.dedup();
+    mags
+}
+
+/// Worst-case shifted **addends per MAC** a codebook costs at learned
+/// weight bitlength `n`: a uniform n-bit multiply is n partial sums, a
+/// PoT weight is a single shift, an APoT weight at most two.  This is
+/// the per-operand compute weight [`mac_cost_cbk`] and
+/// [`bit_sparsity_loss`] charge.
+pub fn max_addends(cbk: Codebook, n: f32) -> f32 {
+    match cbk {
+        Codebook::Uniform => clip_bits(n),
+        Codebook::PowerOfTwo => 1.0,
+        Codebook::AdditivePot2 => clip_bits(n).min(2.0),
+    }
+}
+
+/// Projection of unsigned grid codes onto a codebook: nearest signed
+/// magnitude with **midpoint-up** thresholds (an exactly-between value
+/// takes the larger magnitude, matching BWN_Shift's `thr[i] <= q <
+/// thr[i+1]` table semantics), sign preserved, positive side clamped so
+/// the projected code stays within `[0, 2^n − 1]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodeProjector {
+    cbk: Codebook,
+    bits: u32,
+    half: u32,
+    /// Sorted magnitudes (empty ⇒ uniform identity).
+    mags: Vec<u32>,
+    /// Largest magnitude usable on the positive side (`≤ half − 1`).
+    max_pos: u32,
+}
+
+impl CodeProjector {
+    pub fn new(cbk: Codebook, bits: u32) -> Self {
+        assert!((1..=16).contains(&bits), "CodeProjector: bits {bits} outside [1,16]");
+        let half = 1u32 << (bits - 1);
+        let mags = codebook_magnitudes(cbk, bits);
+        let max_pos = mags
+            .iter()
+            .rev()
+            .find(|&&m| m <= half - 1)
+            .copied()
+            .unwrap_or(0);
+        Self { cbk, bits, half, mags, max_pos }
+    }
+
+    pub fn codebook(&self) -> Codebook {
+        self.cbk
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// The grid code of signed magnitude 0 (`2^(n−1)`).
+    pub fn half(&self) -> u32 {
+        self.half
+    }
+
+    /// Nearest codebook magnitude to `m`, midpoint rounding up.
+    fn nearest_mag(&self, m: u32) -> u32 {
+        let i = self.mags.partition_point(|&x| x < m);
+        if i == self.mags.len() {
+            return self.mags[i - 1];
+        }
+        if self.mags[i] == m || i == 0 {
+            return self.mags[i];
+        }
+        let (lo, hi) = (self.mags[i - 1] as u64, self.mags[i] as u64);
+        if 2 * m as u64 >= lo + hi {
+            hi as u32
+        } else {
+            lo as u32
+        }
+    }
+
+    /// Project one unsigned grid code onto the codebook (identity for
+    /// [`Codebook::Uniform`]).
+    #[inline]
+    pub fn project_code(&self, code: u32) -> u32 {
+        if self.mags.is_empty() {
+            return code;
+        }
+        let c_s = code as i64 - self.half as i64;
+        if c_s >= 0 {
+            self.half + self.nearest_mag(c_s as u32).min(self.max_pos)
+        } else {
+            self.half - self.nearest_mag((-c_s) as u32)
+        }
+    }
+
+    /// Signed sparse part of a (projected) grid code: `c_s = c − half`.
+    #[inline]
+    pub fn signed_part(&self, code: u32) -> i64 {
+        code as i64 - self.half as i64
+    }
+
+    /// Is this exact grid code representable under the codebook?
+    pub fn admits(&self, code: u32) -> bool {
+        self.project_code(code) == code
+    }
+}
+
+/// Fake-quantize a slice as one group under a codebook (in place):
+/// project every value's grid code and reconstruct on the floor grid.
+/// With [`Codebook::Uniform`] this is exactly [`fake_quant_slice`]
+/// (same plan, same apply — bit-identical).
+pub fn fake_quant_slice_cbk(xs: &mut [f32], n: f32, cbk: Codebook) {
+    if xs.is_empty() {
+        return;
+    }
+    QuantPlan::from_slice_cbk(xs, n, cbk).apply(xs);
+}
+
 /// Per-group quantization plans: one [`QuantPlan`] per group, each over
 /// its own min/max and bitlength — the per-channel generalization of
 /// the single-plan path.  Every plan keeps the `alpha == 0`
@@ -232,6 +492,18 @@ impl GroupQuantPlan {
     /// Build plans for `[groups x group_size]` row-major data, each row
     /// against its own min/max at its own bitlength.
     pub fn from_groups(xs: &[f32], group_size: usize, bits: &[f32]) -> Self {
+        Self::from_groups_cbk(xs, group_size, bits, Codebook::Uniform)
+    }
+
+    /// [`Self::from_groups`] with one shared codebook across the
+    /// groups (a layer's channels share the code restriction; only
+    /// range and bitlength vary per channel).
+    pub fn from_groups_cbk(
+        xs: &[f32],
+        group_size: usize,
+        bits: &[f32],
+        codebook: Codebook,
+    ) -> Self {
         assert!(group_size > 0, "group_size must be positive");
         assert_eq!(
             xs.len(),
@@ -244,13 +516,19 @@ impl GroupQuantPlan {
         let plans = xs
             .chunks(group_size)
             .zip(bits)
-            .map(|(row, &n)| QuantPlan::from_slice(row, n))
+            .map(|(row, &n)| QuantPlan::from_slice_cbk(row, n, codebook))
             .collect();
         Self { group_size, plans }
     }
 
     pub fn n_groups(&self) -> usize {
         self.plans.len()
+    }
+
+    /// The codebook shared by every group ([`Codebook::Uniform`] for an
+    /// empty plan).
+    pub fn codebook(&self) -> Codebook {
+        self.plans.first().map(|p| p.codebook).unwrap_or(Codebook::Uniform)
     }
 
     /// Apply every group's plan to its row in place.
@@ -424,6 +702,31 @@ pub fn mac_cost(meta: &ModelMeta, bits_w: &[f32], bits_a: &[f32]) -> f64 {
         .sum()
 }
 
+/// Codebook-aware bit-MACs: the weight operand of each MAC is charged
+/// its worst-case shifted addends ([`max_addends`]) instead of its full
+/// bitlength — a PoT weight costs one shift whatever its bitlength, an
+/// APoT weight at most two.  With every layer at
+/// [`Codebook::Uniform`] this is exactly [`mac_cost`] (pinned by
+/// tests): `max_addends(Uniform, n) == clip_bits(n)`.
+pub fn mac_cost_cbk(
+    meta: &ModelMeta,
+    bits_w: &[f32],
+    bits_a: &[f32],
+    codebooks: &[Codebook],
+) -> f64 {
+    assert_per_layer("mac_cost_cbk (weights)", bits_w.len(), meta);
+    assert_per_layer("mac_cost_cbk (activations)", bits_a.len(), meta);
+    assert_per_layer("mac_cost_cbk (codebooks)", codebooks.len(), meta);
+    meta.layers
+        .iter()
+        .zip(bits_w.iter().zip(bits_a))
+        .zip(codebooks)
+        .map(|((l, (&bw, &ba)), &cbk)| {
+            l.macs as f64 * (max_addends(cbk, bw) + clip_bits(ba)) as f64
+        })
+        .sum()
+}
+
 /// Per-sample MACs of a Conv2d layer: one multiply-accumulate per
 /// output element per kernel tap — `out_h · out_w · cout · kh · kw ·
 /// cin`.  This is the HLO analyzer's convolution convention
@@ -492,6 +795,46 @@ pub fn grouped_bit_loss(
         .map(|(&lam, &n)| lam as f64 * clip_bits(n) as f64)
         .sum();
     w + a
+}
+
+/// Bit-**sparsity** regularizer — the codebook companion of the weight
+/// term of [`grouped_bit_loss`].  Each weight group is charged its
+/// worst-case shifted addends under the layer's codebook
+/// ([`max_addends`]) instead of its raw bitlength, with the layer λ
+/// split over groups exactly as [`split_lambda`] does.  With every
+/// layer at [`Codebook::Uniform`] this equals the weight term of
+/// [`grouped_bit_loss`] (pinned by tests), so the optimizer sees the
+/// same landscape until a codebook is switched on; under PoT/APoT the
+/// penalty saturates, steering spend toward activations and ranges —
+/// the paper's "other quantifiable criteria" hook.
+pub fn bit_sparsity_loss(
+    lam_w: &[f32],
+    bits_w: &[Vec<f32>],
+    codebooks: &[Codebook],
+) -> f64 {
+    assert_eq!(
+        lam_w.len(),
+        bits_w.len(),
+        "bit_sparsity_loss: {} weight λ for {} layers",
+        lam_w.len(),
+        bits_w.len()
+    );
+    assert_eq!(
+        codebooks.len(),
+        bits_w.len(),
+        "bit_sparsity_loss: {} codebooks for {} layers",
+        codebooks.len(),
+        bits_w.len()
+    );
+    lam_w
+        .iter()
+        .zip(bits_w)
+        .zip(codebooks)
+        .map(|((&lam, g), &cbk)| {
+            let lg = split_lambda(lam, g.len()) as f64;
+            g.iter().map(|&n| lg * max_addends(cbk, n) as f64).sum::<f64>()
+        })
+        .sum()
 }
 
 /// λ vectors for the regularizer criteria (paper §II-B / §III-A5).
@@ -1116,5 +1459,283 @@ mod tests {
             assert_eq!(Criterion::parse(c.name()), Some(c));
         }
         assert_eq!(Criterion::parse("bogus"), None);
+    }
+
+    #[test]
+    fn codebook_parse_and_tag_roundtrip() {
+        for c in [Codebook::Uniform, Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            assert_eq!(Codebook::parse(c.name()), Some(c));
+            assert_eq!(Codebook::from_tag(c.tag()), Some(c));
+        }
+        assert_eq!(Codebook::parse("power-of-two"), Some(Codebook::PowerOfTwo));
+        assert_eq!(Codebook::parse("additive-pot"), Some(Codebook::AdditivePot2));
+        assert_eq!(Codebook::parse("ternary"), None);
+        assert_eq!(Codebook::from_tag(3), None);
+        assert!(Codebook::Uniform.is_uniform());
+        assert!(!Codebook::PowerOfTwo.is_uniform());
+    }
+
+    #[test]
+    fn codebook_magnitudes_match_bwn_shift_tables() {
+        // At 8 bits the sets are exactly BWN_Shift's bit_code1 /
+        // bit_code2 (SNIPPETS.md Snippet 1).
+        assert_eq!(
+            codebook_magnitudes(Codebook::PowerOfTwo, 8),
+            vec![0, 1, 2, 4, 8, 16, 32, 64]
+        );
+        let apot8 = codebook_magnitudes(Codebook::AdditivePot2, 8);
+        assert_eq!(apot8.len(), 29); // zero + 7 singles + C(7,2) pairs
+        for &m in &apot8 {
+            assert!(m.count_ones() <= 2 && m <= 64 + 32, "mag {m}");
+        }
+        // Every PoT magnitude is an APoT magnitude.
+        for &m in &codebook_magnitudes(Codebook::PowerOfTwo, 8) {
+            assert!(apot8.contains(&m));
+        }
+        // Uniform admits everything — no restriction table.
+        assert!(codebook_magnitudes(Codebook::Uniform, 8).is_empty());
+        // Low-bit edge: 1- and 2-bit share emax = 0 → mags {0, 1}.
+        for bits in [1u32, 2] {
+            assert_eq!(codebook_magnitudes(Codebook::PowerOfTwo, bits), vec![0, 1]);
+            assert_eq!(codebook_magnitudes(Codebook::AdditivePot2, bits), vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn projector_midpoint_up_and_range() {
+        let p = CodeProjector::new(Codebook::PowerOfTwo, 8);
+        let half = 128i64;
+        // Exact codebook codes are fixed points.
+        for &m in &codebook_magnitudes(Codebook::PowerOfTwo, 8) {
+            assert!(p.admits((half + m as i64) as u32));
+            assert!(p.admits((half - m as i64) as u32));
+        }
+        // Midpoint between 4 and 8 is 6 → up to 8; 5 → down to 4.
+        assert_eq!(p.project_code((half + 6) as u32), (half + 8) as u32);
+        assert_eq!(p.project_code((half + 5) as u32), (half + 4) as u32);
+        // Same on the negative side (magnitude midpoints, sign kept).
+        assert_eq!(p.project_code((half - 6) as u32), (half - 8) as u32);
+        assert_eq!(p.project_code((half - 5) as u32), (half - 4) as u32);
+        // Saturation: |c_s| beyond the top magnitude clamps to it.
+        assert_eq!(p.project_code(255), (half + 64) as u32);
+        assert_eq!(p.project_code(0), (half - 64) as u32);
+        // Uniform projector is the identity.
+        let u = CodeProjector::new(Codebook::Uniform, 8);
+        for c in 0..=255u32 {
+            assert_eq!(u.project_code(c), c);
+        }
+    }
+
+    #[test]
+    fn projector_output_always_in_grid_range() {
+        // Property: projected codes stay in [0, 2^n − 1] for every
+        // bitlength (the n = 1 positive clamp is the sharp edge:
+        // half = 1 admits +0 but not +1).
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            for bits in 1..=16u32 {
+                let p = CodeProjector::new(cbk, bits);
+                let max_code = (1u64 << bits) - 1;
+                for code in [0u64, 1, max_code / 2, max_code - 1, max_code] {
+                    let got = p.project_code(code as u32) as u64;
+                    assert!(got <= max_code, "{cbk:?} bits={bits} code={code} -> {got}");
+                    // Projection is idempotent.
+                    assert_eq!(p.project_code(got as u32) as u64, got);
+                }
+            }
+        }
+        // n = 1 pinned: codes {0, 1} both survive (0 → mag −1, 1 → mag 0).
+        let p1 = CodeProjector::new(Codebook::PowerOfTwo, 1);
+        assert_eq!(p1.project_code(0), 0);
+        assert_eq!(p1.project_code(1), 1);
+    }
+
+    #[test]
+    fn projector_nearest_is_exact_over_all_codes() {
+        // Exhaustive at 8 bits: the projected magnitude must be a true
+        // nearest element of the table (ties to the larger).
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            let p = CodeProjector::new(cbk, 8);
+            let mags = codebook_magnitudes(cbk, 8);
+            for code in 0..=255u32 {
+                let c_s = code as i64 - 128;
+                let m = c_s.unsigned_abs() as u32;
+                let got = p.project_code(code);
+                let got_mag = (got as i64 - 128).unsigned_abs() as u32;
+                let best = mags
+                    .iter()
+                    .copied()
+                    .min_by_key(|&t| {
+                        let d = (t as i64 - m as i64).unsigned_abs();
+                        (d, u32::MAX - t) // ties prefer larger magnitude
+                    })
+                    .unwrap();
+                if c_s >= 0 {
+                    assert_eq!(got_mag, best.min(127), "{cbk:?} code {code}");
+                } else {
+                    assert_eq!(got_mag, best, "{cbk:?} code {code}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fake_quant_cbk_uniform_is_bit_identical() {
+        let mut rng = Rng::new(0xCB0);
+        for _ in 0..20 {
+            let xs = rand_vec(&mut rng, 1 + rng.below_usize(120));
+            let n = (1 + rng.below(16)) as f32;
+            let mut a = xs.clone();
+            fake_quant_slice(&mut a, n);
+            let mut b = xs.clone();
+            fake_quant_slice_cbk(&mut b, n, Codebook::Uniform);
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
+    fn fake_quant_cbk_lands_on_codebook_codes() {
+        let mut rng = Rng::new(0xCB1);
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            for bits in [2u32, 4, 8] {
+                let xs = rand_vec(&mut rng, 200);
+                let mut q = xs.clone();
+                fake_quant_slice_cbk(&mut q, bits as f32, cbk);
+                let plan = QuantPlan::from_slice_cbk(&xs, bits as f32, cbk);
+                let proj = plan.projector();
+                let levels = ((1u32 << bits) - 1) as i64;
+                for (&x, &v) in xs.iter().zip(&q) {
+                    let code = proj.project_code(plan.code(x, levels));
+                    let want = plan.lmin + code as f32 * plan.s_lo;
+                    assert_eq!(v.to_bits(), want.to_bits());
+                    assert!(proj.admits(code));
+                }
+                // Restriction costs accuracy vs uniform, never gains.
+                let mut u = xs.clone();
+                fake_quant_slice(&mut u, bits as f32);
+                let sse = |q: &[f32]| -> f64 {
+                    xs.iter().zip(q).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+                };
+                assert!(sse(&u) <= sse(&q) + 1e-9, "{cbk:?} {bits}b");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_cbk_plans_share_codebook() {
+        let mut rng = Rng::new(0xCB2);
+        let xs = rand_vec(&mut rng, 4 * 16);
+        let plan =
+            GroupQuantPlan::from_groups_cbk(&xs, 16, &[2.0, 4.0, 8.0, 3.0], Codebook::PowerOfTwo);
+        assert_eq!(plan.codebook(), Codebook::PowerOfTwo);
+        assert!(plan.plans.iter().all(|p| p.codebook == Codebook::PowerOfTwo));
+        // Uniform constructor keeps today's behavior.
+        let u = GroupQuantPlan::from_groups(&xs, 16, &[2.0, 4.0, 8.0, 3.0]);
+        assert_eq!(u.codebook(), Codebook::Uniform);
+        // Per-plan projection applies independently per group.
+        let mut got = xs.clone();
+        plan.apply(&mut got);
+        for (g, row) in xs.chunks(16).enumerate() {
+            let mut want = row.to_vec();
+            fake_quant_slice_cbk(&mut want, [2.0, 4.0, 8.0, 3.0][g], Codebook::PowerOfTwo);
+            let got_row = &got[g * 16..(g + 1) * 16];
+            assert!(
+                got_row.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "group {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn mac_cost_cbk_pins_uniform_and_orders_codebooks() {
+        let meta = tiny_meta();
+        let bw = vec![6.0f32, 4.0];
+        let ba = vec![8.0f32, 8.0];
+        // Uniform everywhere == the existing convention, exactly.
+        let u2 = vec![Codebook::Uniform; 2];
+        assert_eq!(mac_cost_cbk(&meta, &bw, &ba, &u2), mac_cost(&meta, &bw, &ba));
+        // PoT < APoT < Uniform at equal bits (> 2).
+        let pot = mac_cost_cbk(&meta, &bw, &ba, &[Codebook::PowerOfTwo; 2]);
+        let apot = mac_cost_cbk(&meta, &bw, &ba, &[Codebook::AdditivePot2; 2]);
+        let uni = mac_cost_cbk(&meta, &bw, &ba, &u2);
+        assert!(pot < apot && apot < uni, "{pot} {apot} {uni}");
+        // max_addends pins: the per-operand model itself.
+        assert_eq!(max_addends(Codebook::Uniform, 6.0), 6.0);
+        assert_eq!(max_addends(Codebook::PowerOfTwo, 6.0), 1.0);
+        assert_eq!(max_addends(Codebook::AdditivePot2, 6.0), 2.0);
+        // At 1 bit APoT can't use two addends.
+        assert_eq!(max_addends(Codebook::AdditivePot2, 1.0), 1.0);
+    }
+
+    #[test]
+    fn bit_sparsity_loss_reduces_to_bit_loss_weight_term() {
+        let meta = tiny_meta();
+        let (lw, la) = Criterion::MacOps.lambdas(&meta);
+        let bits: Vec<Vec<f32>> = vec![vec![6.0, 4.0, 8.0], vec![3.0]];
+        let u2 = vec![Codebook::Uniform; 2];
+        // All-uniform: exactly grouped_bit_loss with a zeroed act term.
+        let want = grouped_bit_loss(&lw, &bits, &la, &[0.0; 2])
+            - la.iter().map(|&l| l as f64 * 1.0).sum::<f64>();
+        let got = bit_sparsity_loss(&lw, &bits, &u2);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        // PoT saturates the penalty below uniform.
+        let pot = bit_sparsity_loss(&lw, &bits, &[Codebook::PowerOfTwo; 2]);
+        assert!(pot < got);
+        // And is flat in bits: more bits cost no more addends.
+        let more: Vec<Vec<f32>> = vec![vec![16.0, 16.0, 16.0], vec![16.0]];
+        let pot_more = bit_sparsity_loss(&lw, &more, &[Codebook::PowerOfTwo; 2]);
+        assert!((pot - pot_more).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_channel_bits_monotone_in_channel_range() {
+        // Widening one channel's range (all else fixed) never lowers
+        // its bitlength, and never changes by more than the log2 of
+        // the widening factor suggests.
+        let (din, dout) = (16usize, 3usize);
+        let mut prev = 0.0f32;
+        for &spread in &[0.125f32, 0.25, 0.5, 1.0] {
+            let mut w = vec![0.0f32; din * dout];
+            for i in 0..din {
+                let t = i as f32 / (din - 1) as f32;
+                w[i * dout] = -2.0 + 4.0 * t; // channel 0 pins layer range
+                w[i * dout + 1] = (-2.0 + 4.0 * t) * spread; // scaled copy
+                w[i * dout + 2] = 0.25; // constant (degenerate)
+            }
+            let bits = per_channel_bits(&w, din, dout, 6.0);
+            assert!(bits[1] >= prev, "spread {spread}: {} < {prev}", bits[1]);
+            prev = bits[1];
+        }
+        // Full-range channel matches the layer ceiling.
+        assert_eq!(prev, 6.0);
+    }
+
+    #[test]
+    fn per_channel_bits_stable_on_degenerate_channels() {
+        // Zero-range channels (constant, including all-zero) must get a
+        // finite, clipped bitlength — the RANGE_EPS guard — and be
+        // deterministic across calls.
+        let (din, dout) = (8usize, 4usize);
+        let mut w = vec![0.0f32; din * dout];
+        for i in 0..din {
+            let t = i as f32 / (din - 1) as f32;
+            w[i * dout] = -1.0 + 2.0 * t; // real channel
+            w[i * dout + 1] = 0.0; // all-zero
+            w[i * dout + 2] = 3.5; // constant nonzero
+            w[i * dout + 3] = f32::MIN_POSITIVE * t; // near-degenerate
+        }
+        let bits = per_channel_bits(&w, din, dout, 8.0);
+        assert_eq!(bits, per_channel_bits(&w, din, dout, 8.0));
+        for (j, &b) in bits.iter().enumerate() {
+            assert!(b.is_finite(), "channel {j}");
+            assert!((N_MIN..=N_MAX).contains(&b), "channel {j}: {b}");
+        }
+        // Degenerate channels bottom out at N_MIN.
+        assert_eq!(bits[1], N_MIN);
+        assert_eq!(bits[2], N_MIN);
+        // An entirely-degenerate layer (range eps / range eps = 1) keeps
+        // the layer bitlength rather than exploding.
+        let flat = vec![1.0f32; din * 2];
+        let fb = per_channel_bits(&flat, din, 2, 5.0);
+        assert_eq!(fb, vec![5.0, 5.0]);
     }
 }

@@ -60,6 +60,7 @@ pub use server::{
 };
 
 use crate::infer::{ConvGeom, IntConv2d, IntDense, IntNet};
+use crate::quant::Codebook;
 use crate::util::rng::Rng;
 
 /// Build a random dense network over `dims` (e.g. `[32, 256, 128, 10]`:
@@ -95,6 +96,52 @@ pub fn synthetic_net(dims: &[usize], seed: u64, w_bits: u32, a_bits: u32) -> Int
 /// [`synthetic_net`] on the mlp artifact shapes (32→256→128→10).
 pub fn synthetic_mlp(seed: u64, w_bits: u32, a_bits: u32) -> IntNet {
     synthetic_net(&[32, 256, 128, 10], seed, w_bits, a_bits)
+}
+
+/// [`synthetic_net`] under a weight [`Codebook`]: every layer projects
+/// its codes onto `codebook` (shift-add GEMM engaged when non-uniform).
+/// Granularities are deliberately mixed — even layers pack per-layer,
+/// odd layers per-output-channel with a small bitlength cycle — so one
+/// fixture exercises both shift-plan shapes through the serve and
+/// deploy suites.  `Codebook::Uniform` reproduces [`synthetic_net`]'s
+/// multiply path bit-for-bit on the even layers.
+pub fn synthetic_net_cbk(
+    dims: &[usize],
+    seed: u64,
+    w_bits: u32,
+    a_bits: u32,
+    codebook: Codebook,
+) -> IntNet {
+    assert!(dims.len() >= 2, "synthetic_net_cbk needs at least one layer");
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for (i, pair) in dims.windows(2).enumerate() {
+        let (din, dout) = (pair[0], pair[1]);
+        let std = (1.0 / din as f32).sqrt();
+        let w: Vec<f32> = (0..din * dout).map(|_| rng.normal_f32(0.0, std)).collect();
+        let b: Vec<f32> = (0..dout).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+        let relu = i + 2 < dims.len();
+        let name = format!("fc{i}");
+        let layer = if i % 2 == 0 {
+            IntDense::new_cbk(&name, &w, din, dout, &b, w_bits, a_bits, relu, codebook)
+        } else {
+            let cycle = [w_bits.max(2), (w_bits + 2).min(8)];
+            let bits: Vec<f32> =
+                (0..dout).map(|j| cycle[j % cycle.len()] as f32).collect();
+            IntDense::new_grouped_cbk(
+                &name, &w, din, dout, &b, &bits, a_bits, relu, codebook,
+            )
+        }
+        .expect("synthetic codebook layer shapes are consistent");
+        layers.push(layer.into());
+    }
+    let num_classes = *dims.last().unwrap();
+    let mut net = IntNet { layers, num_classes };
+    let calib_n = 256;
+    let calib: Vec<f32> =
+        (0..calib_n * dims[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    net.calibrate(&calib, calib_n).expect("calibration batch is well-formed");
+    net
 }
 
 /// [`synthetic_net`] at **per-output-channel** weight granularity:
@@ -163,6 +210,7 @@ fn synthetic_conv_with(
     seed: u64,
     w_bits: u32,
     a_bits: u32,
+    codebook: Codebook,
     kernel_bits: impl Fn(usize) -> Option<Vec<f32>>,
 ) -> IntNet {
     let (g0, g1) = conv_fixture_geoms();
@@ -175,8 +223,12 @@ fn synthetic_conv_with(
         let w = rand(g.patch_len() * g.cout, (1.0 / g.patch_len() as f32).sqrt());
         let b = rand(g.cout, 0.01);
         let conv = match kernel_bits(g.cout) {
-            None => IntConv2d::new(name, &w, g, &b, w_bits, a_bits, true),
-            Some(bits) => IntConv2d::new_grouped(name, &w, g, &b, &bits, a_bits, true),
+            None => {
+                IntConv2d::new_cbk(name, &w, g, &b, w_bits, a_bits, true, codebook)
+            }
+            Some(bits) => IntConv2d::new_grouped_cbk(
+                name, &w, g, &b, &bits, a_bits, true, codebook,
+            ),
         }
         .expect("synthetic conv shapes are consistent");
         layers.push(conv.into());
@@ -185,10 +237,12 @@ fn synthetic_conv_with(
     let w = rand(dflat * 10, (1.0 / dflat as f32).sqrt());
     let b = rand(10, 0.01);
     let head = match kernel_bits(10) {
-        None => IntDense::new("fc", &w, dflat, 10, &b, w_bits, a_bits, false),
-        Some(bits) => {
-            IntDense::new_grouped("fc", &w, dflat, 10, &b, &bits, a_bits, false)
-        }
+        None => IntDense::new_cbk(
+            "fc", &w, dflat, 10, &b, w_bits, a_bits, false, codebook,
+        ),
+        Some(bits) => IntDense::new_grouped_cbk(
+            "fc", &w, dflat, 10, &b, &bits, a_bits, false, codebook,
+        ),
     }
     .expect("synthetic head shapes are consistent");
     layers.push(head.into());
@@ -206,7 +260,20 @@ fn synthetic_conv_with(
 /// for `bitprune export --synthetic --arch conv`, the serve suites and
 /// the benches.
 pub fn synthetic_conv_net(seed: u64, w_bits: u32, a_bits: u32) -> IntNet {
-    synthetic_conv_with(seed, w_bits, a_bits, |_| None)
+    synthetic_conv_with(seed, w_bits, a_bits, Codebook::Uniform, |_| None)
+}
+
+/// [`synthetic_conv_net`] under a weight [`Codebook`]: both convs and
+/// the dense head project onto `codebook` at per-layer granularity —
+/// the conv shift-add fixture for the deploy/serve suites and
+/// `bitprune export --synthetic --arch conv --codebook pot`.
+pub fn synthetic_conv_net_cbk(
+    seed: u64,
+    w_bits: u32,
+    a_bits: u32,
+    codebook: Codebook,
+) -> IntNet {
+    synthetic_conv_with(seed, w_bits, a_bits, codebook, |_| None)
 }
 
 /// [`synthetic_conv_net`] at **per-output-kernel** weight granularity:
@@ -218,7 +285,7 @@ pub fn synthetic_conv_net_grouped(
     a_bits: u32,
 ) -> IntNet {
     assert!(!w_bits_cycle.is_empty(), "empty bitlength cycle");
-    synthetic_conv_with(seed, w_bits_cycle[0], a_bits, |dout| {
+    synthetic_conv_with(seed, w_bits_cycle[0], a_bits, Codebook::Uniform, |dout| {
         Some(
             (0..dout)
                 .map(|j| w_bits_cycle[j % w_bits_cycle.len()] as f32)
@@ -289,6 +356,50 @@ mod tests {
             .iter()
             .zip(&pair[..10])
             .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn synthetic_cbk_fixtures_carry_codebooks_and_stay_invariant() {
+        for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+            let net = synthetic_net_cbk(&[12, 20, 14, 6], 11, 4, 6, cbk);
+            assert!(net.is_calibrated());
+            assert_eq!(net.layers.len(), 3);
+            // Mixed granularities, all on the requested codebook.
+            assert_eq!(
+                net.layers[0].granularity(),
+                crate::quant::Granularity::PerLayer
+            );
+            assert_eq!(
+                net.layers[1].granularity(),
+                crate::quant::Granularity::PerOutputChannel
+            );
+            for l in &net.layers {
+                assert_eq!(l.codebook(), cbk);
+            }
+            // Batch-invariance survives the shift-add path.
+            let solo = net.forward(&[0.3; 12], 1);
+            let mut batch = vec![0.3f32; 12];
+            batch.extend(vec![5.0f32; 12]);
+            let pair = net.forward(&batch, 2);
+            assert!(solo
+                .iter()
+                .zip(&pair[..6])
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+            let conv = synthetic_conv_net_cbk(13, 4, 6, cbk);
+            assert!(conv.is_calibrated());
+            for l in &conv.layers {
+                assert_eq!(l.codebook(), cbk);
+            }
+        }
+        // Uniform codebook reproduces the plain fixture bit-for-bit on
+        // per-layer layers (odd layers switch granularity, so compare
+        // the conv fixture, which is per-layer throughout).
+        let plain = synthetic_conv_net(13, 4, 6);
+        let uni = synthetic_conv_net_cbk(13, 4, 6, Codebook::Uniform);
+        let x = vec![0.2f32; plain.in_features()];
+        let (a, b) = (plain.forward(&x, 1), uni.forward(&x, 1));
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
     }
 
     #[test]

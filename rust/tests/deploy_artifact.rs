@@ -14,8 +14,10 @@
 //!    no OOM-scale allocation.  Pure rust — runs without AOT artifacts.
 
 use bitprune::deploy::{freeze, section_table, Artifact};
+use bitprune::quant::Codebook;
 use bitprune::serve::{
-    synthetic_conv_net, synthetic_conv_net_grouped, synthetic_net, synthetic_net_grouped,
+    synthetic_conv_net, synthetic_conv_net_cbk, synthetic_conv_net_grouped,
+    synthetic_net, synthetic_net_cbk, synthetic_net_grouped,
 };
 use bitprune::util::proptest::check;
 use bitprune::util::rng::Rng;
@@ -290,6 +292,106 @@ fn conv_flag_without_cnv0_is_rejected() {
     spliced[12..16].copy_from_slice(&(count - 1).to_le_bytes());
     let err = Artifact::from_bytes(&spliced).unwrap_err();
     assert!(format!("{err:#}").contains("CNV0"), "{err:#}");
+}
+
+#[test]
+fn codebook_roundtrip_instantiate_is_bit_identical() {
+    // The CBK0 contract: codebook artifacts (dense mixed-granularity
+    // and conv per-layer) roundtrip freeze → bytes → parse →
+    // instantiate() bit-identically, with a checksummed, known CBK0
+    // section in the expected position.
+    for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+        for (net, name, want_tags) in [
+            (
+                synthetic_net_cbk(&[7, 12, 10, 4], 0xCB41, 3, 5, cbk),
+                "cbk-dense",
+                vec!["MET0", "LAY0", "WCT0", "BIA0", "GRP0", "CBK0"],
+            ),
+            (
+                synthetic_conv_net_cbk(0xCB42, 4, 5, cbk),
+                "cbk-conv",
+                vec!["MET0", "LAY0", "WCT0", "BIA0", "CNV0", "CBK0"],
+            ),
+        ] {
+            let art = freeze(&net, name);
+            assert!(art.has_codebook(), "{name}: fixture must carry a codebook");
+            let bytes = art.to_bytes();
+            let table = section_table(&bytes).unwrap();
+            let tags: Vec<&str> = table.iter().map(|s| s.tag.as_str()).collect();
+            assert_eq!(tags, want_tags, "{name}");
+            assert!(table.iter().all(|s| s.crc_ok && s.known), "{name}");
+
+            let parsed = Artifact::from_bytes(&bytes).unwrap();
+            assert!(parsed.layers.iter().all(|l| l.codebook() == cbk), "{name}");
+            let rebuilt = parsed.instantiate().unwrap();
+            assert!(rebuilt.layers.iter().all(|l| l.codebook() == cbk), "{name}");
+            let mut rng = Rng::new(0xF00E);
+            let x = rand_batch(&mut rng, 5, net.in_features());
+            let want = net.forward(&x, 5);
+            let got = rebuilt.forward(&x, 5);
+            assert_eq!(want.len(), got.len(), "{name}");
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{name} ({cbk:?}): instantiated codebook net diverges from source"
+            );
+        }
+    }
+}
+
+#[test]
+fn codebook_truncation_and_corruption_fuzz() {
+    // Truncation at every byte and a flipped byte in every section
+    // (CBK0 included) must fail cleanly for a codebook artifact too.
+    let art = freeze(
+        &synthetic_net_cbk(&[5, 7, 6, 3], 0xCBF, 3, 4, Codebook::AdditivePot2),
+        "kfuzz",
+    );
+    let bytes = art.to_bytes();
+    assert!(Artifact::from_bytes(&bytes).is_ok());
+    for cut in 0..bytes.len() {
+        assert!(
+            Artifact::from_bytes(&bytes[..cut]).is_err(),
+            "codebook prefix of {cut}/{} bytes parsed successfully",
+            bytes.len()
+        );
+    }
+    for s in &section_table(&bytes).unwrap() {
+        for probe in [0, s.payload_len / 2, s.payload_len.saturating_sub(1)] {
+            let mut corrupt = bytes.clone();
+            corrupt[s.payload_offset + probe] ^= 0x20;
+            assert!(
+                Artifact::from_bytes(&corrupt).is_err(),
+                "flipping byte {probe} of codebook section {} went unnoticed",
+                s.tag
+            );
+        }
+    }
+}
+
+#[test]
+fn codebook_flag_without_cbk0_is_rejected() {
+    // Splice the CBK0 section out of a codebook artifact: the LAY0
+    // codebook flags (and poisoned bits fields) survive, so the loader
+    // must refuse loudly — a reader must never decode (sign, exponent)
+    // shift fields as uniform grid codes.
+    let art = freeze(
+        &synthetic_net_cbk(&[4, 6, 8, 2], 0xCB5, 4, 3, Codebook::PowerOfTwo),
+        "nocbk",
+    );
+    let bytes = art.to_bytes();
+    let table = section_table(&bytes).unwrap();
+    let cbk = table.iter().find(|s| s.tag == "CBK0").unwrap();
+    // A section frame is tag(4) + len(8) + payload + crc(4).
+    let frame_start = cbk.payload_offset - 12;
+    let frame_end = cbk.payload_offset + cbk.payload_len + 4;
+    let mut spliced = Vec::new();
+    spliced.extend_from_slice(&bytes[..frame_start]);
+    spliced.extend_from_slice(&bytes[frame_end..]);
+    // Fix the section count (offset 12).
+    let count = u32::from_le_bytes(spliced[12..16].try_into().unwrap());
+    spliced[12..16].copy_from_slice(&(count - 1).to_le_bytes());
+    let err = Artifact::from_bytes(&spliced).unwrap_err();
+    assert!(format!("{err:#}").contains("CBK0"), "{err:#}");
 }
 
 #[test]

@@ -18,7 +18,10 @@ use std::time::Duration;
 
 use bitprune::deploy::{ModelRegistry, RegistryError};
 use bitprune::infer::IntNet;
-use bitprune::serve::{synthetic_net, CanaryConfig, CanaryOutcome, ServeConfig, Server};
+use bitprune::quant::Codebook;
+use bitprune::serve::{
+    synthetic_net, synthetic_net_cbk, CanaryConfig, CanaryOutcome, ServeConfig, Server,
+};
 use bitprune::util::rng::Rng;
 
 const DIMS: &[usize] = &[10, 22, 4];
@@ -216,6 +219,110 @@ fn repeated_swaps_stay_consistent() {
     let stats = server.shutdown();
     assert_eq!(stats.requests, 60);
     assert!(stats.swaps >= 1);
+}
+
+#[test]
+fn swap_from_multiply_to_shift_add_codebook_net() {
+    // Hot-swap a uniform (multiply-GEMM) incumbent for a PoT
+    // (shift-add GEMM) replacement rebuilt from its frozen artifact:
+    // every response must still match exactly one version's solo
+    // forward, across the kernel change.
+    let net_a = fixture(0xA);
+    let cbk_src = synthetic_net_cbk(DIMS, 0xCB, 4, 5, Codebook::PowerOfTwo);
+    let art = bitprune::deploy::freeze(&cbk_src, "pot");
+    let net_b: Arc<IntNet> = Arc::new(
+        bitprune::deploy::Artifact::from_bytes(&art.to_bytes())
+            .unwrap()
+            .instantiate()
+            .unwrap(),
+    );
+    assert!(net_b.layers.iter().all(|l| l.codebook() == Codebook::PowerOfTwo));
+
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net_a), "a").unwrap());
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 2,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(0x5CB);
+    let mut swapped = false;
+    for i in 0..60 {
+        if i == 30 {
+            registry.publish(Arc::clone(&net_b), "pot").unwrap();
+            swapped = true;
+        }
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (version, logits) = handle.infer_versioned(x.clone()).unwrap();
+        let want = match version {
+            1 => net_a.forward(&x, 1),
+            2 => net_b.forward(&x, 1),
+            v => panic!("impossible version {v}"),
+        };
+        assert!(
+            same(&logits, &want),
+            "request {i}: logits disagree with tagged version {version}"
+        );
+        if swapped && i > 40 {
+            assert_eq!(version, 2, "post-drain traffic must run on the codebook net");
+        }
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 60);
+    assert!(stats.swaps >= 1);
+}
+
+#[test]
+fn codebook_twin_canary_promotes_on_live_traffic() {
+    // A codebook net canaried against itself: the shift-add kernel is
+    // bit-identical to the multiply reference, so the twin agrees 100%
+    // and must promote — the canary loop holds on the new GEMM.
+    let net = Arc::new(synthetic_net_cbk(DIMS, 0x7CB, 4, 5, Codebook::AdditivePot2));
+    let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), "apot").unwrap());
+    let server = Server::start_registry(
+        Arc::clone(&registry),
+        ServeConfig {
+            threads: 1,
+            max_batch: 8,
+            batch_window: Duration::from_micros(200),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let cv = server
+        .start_canary(
+            Arc::clone(&net),
+            "twin",
+            CanaryConfig {
+                pct: 50,
+                window: 8,
+                promote_after: 2,
+                min_agreement: 0.95,
+                max_latency_ratio: 1000.0,
+            },
+        )
+        .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(0x9CB);
+    let mut promoted = false;
+    for _ in 0..400 {
+        let x: Vec<f32> = (0..DIMS[0]).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let (_, logits) = handle.infer_versioned(x.clone()).unwrap();
+        assert!(same(&logits, &net.forward(&x, 1)), "twin must answer identically");
+        if registry.active_version() == cv {
+            promoted = true;
+            break;
+        }
+    }
+    assert!(promoted, "codebook canary never promoted: {:?}", server.canary_status());
+    let status = server.canary_status().unwrap();
+    assert_eq!(status.outcome, Some(CanaryOutcome::Promoted { version: cv }));
+    server.shutdown();
 }
 
 #[test]

@@ -359,6 +359,167 @@ fn conv_1x1_stride1_matches_dense_bitwise() {
 }
 
 #[test]
+fn shift_add_gemm_matches_multiply_ref_dense() {
+    // The codebook tentpole pin: the shift-add GEMM (multiply-free
+    // inner loop over (sign, exponent) codes) vs the retained multiply
+    // reference, bit for bit — random shapes, both non-uniform
+    // codebooks, per-layer and grouped, calibrated and not.
+    check(
+        "fastpath-shift-gemm-parity",
+        128,
+        |rng| {
+            let n = 1 + rng.below_usize(10);
+            let din = 1 + rng.below_usize(48);
+            let dout = 1 + rng.below_usize(40);
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let cbk = if rng.below(2) == 0 {
+                quant::Codebook::PowerOfTwo
+            } else {
+                quant::Codebook::AdditivePot2
+            };
+            let grouped = rng.below(2) == 0;
+            let relu = rng.below(2) == 0;
+            let calibrated = rng.below(2) == 0;
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            let ch_bits: Vec<f32> =
+                (0..dout).map(|_| (1 + rng.below(16)) as f32).collect();
+            (n, din, dout, wb, ab, cbk, grouped, relu, calibrated, x, w, b, ch_bits)
+        },
+        |(n, din, dout, wb, ab, cbk, grouped, relu, calibrated, x, w, b, ch_bits)| {
+            let mut layer = if *grouped {
+                IntDense::new_grouped_cbk(
+                    "sg", w, *din, *dout, b, ch_bits, *ab, *relu, *cbk,
+                )
+            } else {
+                IntDense::new_cbk("s", w, *din, *dout, b, *wb, *ab, *relu, *cbk)
+            }
+            .map_err(|e| e.to_string())?;
+            if !layer.uses_shift_gemm() {
+                return Err("non-uniform codebook layer must build a shift plan".into());
+            }
+            if *calibrated {
+                layer.set_act_range(-2.0, 2.0);
+            }
+            let fast = layer.forward(x, *n);
+            let slow = layer.forward_ref(x, *n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                if f.to_bits() != s.to_bits() {
+                    return Err(format!(
+                        "{cbk:?} grouped={grouped} ({n},{din},{dout}) bits \
+                         ({wb},{ab}) elem {i}: {f} vs {s}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shift_add_gemm_matches_multiply_ref_conv() {
+    // Same pin through the im2col lowering: random conv geometries on
+    // both codebooks, per-layer and per-output-kernel.
+    check(
+        "fastpath-shift-conv-parity",
+        96,
+        |rng| {
+            let n = 1 + rng.below_usize(3);
+            let cin = 1 + rng.below_usize(4);
+            let h = 3 + rng.below_usize(6);
+            let w = 3 + rng.below_usize(6);
+            let cout = 1 + rng.below_usize(8);
+            let kh = 1 + rng.below_usize(h.min(3));
+            let kw = 1 + rng.below_usize(w.min(3));
+            let stride = 1 + rng.below_usize(2);
+            let pad = rng.below_usize(2);
+            let g = ConvGeom { cin, h, w, cout, kh, kw, stride, pad };
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let cbk = if rng.below(2) == 0 {
+                quant::Codebook::PowerOfTwo
+            } else {
+                quant::Codebook::AdditivePot2
+            };
+            let grouped = rng.below(2) == 0;
+            let relu = rng.below(2) == 0;
+            let x = rand_vec(rng, n * g.in_features());
+            let wt = rand_vec(rng, g.patch_len() * cout);
+            let b = rand_vec(rng, cout);
+            let ch_bits: Vec<f32> =
+                (0..cout).map(|_| (1 + rng.below(16)) as f32).collect();
+            (n, g, wb, ab, cbk, grouped, relu, x, wt, b, ch_bits)
+        },
+        |(n, g, wb, ab, cbk, grouped, relu, x, wt, b, ch_bits)| {
+            let layer = if *grouped {
+                IntConv2d::new_grouped_cbk("cg", wt, *g, b, ch_bits, *ab, *relu, *cbk)
+            } else {
+                IntConv2d::new_cbk("c", wt, *g, b, *wb, *ab, *relu, *cbk)
+            }
+            .map_err(|e| e.to_string())?;
+            let fast = layer.forward(x, *n);
+            let slow = layer.forward_ref(x, *n);
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                if f.to_bits() != s.to_bits() {
+                    return Err(format!(
+                        "{cbk:?} grouped={grouped} {g:?} bits ({wb},{ab}) \
+                         elem {i}: {f} vs {s}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn uniform_codebook_constructors_are_identity() {
+    // Routing a uniform build through the codebook constructors must
+    // change nothing: same packed bytes, no shift plan, bit-identical
+    // forwards — the byte/bit-compat half of the acceptance criterion.
+    check(
+        "fastpath-uniform-cbk-identity",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(6);
+            let din = 1 + rng.below_usize(32);
+            let dout = 1 + rng.below_usize(24);
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            (n, din, dout, wb, ab, x, w, b)
+        },
+        |(n, din, dout, wb, ab, x, w, b)| {
+            let plain = IntDense::new("p", w, *din, *dout, b, *wb, *ab, true)
+                .map_err(|e| e.to_string())?;
+            let uni = IntDense::new_cbk(
+                "p", w, *din, *dout, b, *wb, *ab, true,
+                quant::Codebook::Uniform,
+            )
+            .map_err(|e| e.to_string())?;
+            if uni.uses_shift_gemm() {
+                return Err("uniform codebook must not build a shift plan".into());
+            }
+            if plain.packed_per_layer().map(|p| &p.data)
+                != uni.packed_per_layer().map(|p| &p.data)
+            {
+                return Err("uniform codebook changed the packed bytes".into());
+            }
+            let a = plain.forward(x, *n);
+            let c = uni.forward(x, *n);
+            if a.iter().zip(&c).any(|(p, q)| p.to_bits() != q.to_bits()) {
+                return Err("uniform codebook changed the forward".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn blocked_gemm_matches_scalar_ref() {
     check(
         "fastpath-gemm-parity",

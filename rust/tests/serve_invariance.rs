@@ -9,7 +9,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use bitprune::infer::NetScratch;
-use bitprune::serve::{synthetic_mlp, synthetic_net, ServeConfig, Server};
+use bitprune::quant::Codebook;
+use bitprune::serve::{synthetic_mlp, synthetic_net, synthetic_net_cbk, ServeConfig, Server};
 use bitprune::util::rng::Rng;
 
 fn rand_batch(rng: &mut Rng, n: usize, din: usize) -> Vec<f32> {
@@ -145,6 +146,71 @@ fn degenerate_serving_inputs() {
                 .all(|(a, b)| a.to_bits() == b.to_bits()));
         }
     }
+}
+
+#[test]
+fn invariance_holds_on_the_shift_add_codebook_path() {
+    // The shift-add GEMM replaces the inner multiply but reproduces the
+    // identical i64 accumulator — calibrated invariance and the
+    // scratch/pooled/reference agreement must survive on both
+    // non-uniform codebooks (mixed per-layer/grouped fixture).
+    for cbk in [Codebook::PowerOfTwo, Codebook::AdditivePot2] {
+        let net = synthetic_net_cbk(&[12, 40, 24, 5], 7, 4, 4, cbk);
+        assert!(net.layers.iter().all(|l| l.codebook() == cbk));
+        let pool = bitprune::util::pool::WorkerPool::new(3);
+        let mut sc = NetScratch::default();
+        let mut rng = Rng::new(23);
+        let samples = rand_batch(&mut rng, 13, 12);
+        let alloc = net.forward(&samples, 13);
+        let scratch = net.forward_into(&samples, 13, &mut sc, Some(&pool));
+        assert!(alloc.iter().zip(scratch).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let mut h = samples.clone();
+        for layer in &net.layers {
+            h = layer.forward_ref(&h, 13);
+        }
+        assert!(
+            alloc.iter().zip(&h).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{cbk:?}: shift-add path diverged from the multiply reference"
+        );
+        // Batch-invariant like every calibrated net.
+        let solo = net.forward(&samples[..12], 1);
+        assert!(solo.iter().zip(&alloc[..5]).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+}
+
+#[test]
+fn server_roundtrip_is_invariant_under_micro_batching_codebook() {
+    // End to end through the queue on the PoT fixture: micro-batched
+    // answers equal solo forwards on the shift-add path too.
+    let net = Arc::new(synthetic_net_cbk(&[8, 20, 12, 3], 99, 4, 5, Codebook::PowerOfTwo));
+    let server = Server::start(
+        Arc::clone(&net),
+        ServeConfig {
+            threads: 2,
+            max_batch: 16,
+            batch_window: Duration::from_millis(3),
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap();
+    let handle = server.handle();
+    let mut rng = Rng::new(0x78);
+    let samples: Vec<Vec<f32>> = (0..32)
+        .map(|_| (0..8).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+        .collect();
+    let pending: Vec<_> = samples
+        .iter()
+        .map(|s| handle.submit(s.clone()).unwrap())
+        .collect();
+    for (s, rx) in samples.iter().zip(pending) {
+        let got = rx.recv().unwrap().expect("request served, not shed");
+        let want = net.forward(s, 1);
+        assert!(
+            got.logits.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "micro-batched codebook answer differs from solo forward"
+        );
+    }
+    server.shutdown();
 }
 
 #[test]

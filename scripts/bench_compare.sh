@@ -10,12 +10,24 @@
 #       coverage); keys missing from the baseline only warn, so new
 #       benches can land before their baseline is refreshed.
 #
+#   scripts/bench_compare.sh arm CURRENT.json [DEST.json]
+#       Promote a freshly measured run to the committed baseline for
+#       its suite: refuses a file carrying "seed_estimate": true (that
+#       is a placeholder, not a measurement), refuses a run missing
+#       any tracked key, then strips the seed_estimate/blocker markers
+#       and writes DEST (default: the suite's committed BENCH_*.json
+#       at the repo root).  After arming, `compare` hard-FAILs on
+#       regressions instead of warning.
+#
 #   scripts/bench_compare.sh self-test
 #       Prove the gate trips: for each committed BENCH_*.json, an
 #       identity comparison must PASS and a synthetic copy with every
 #       tracked median inflated 1.5x (a 50% slowdown) must FAIL.
-#       Runs without cargo or benches — this is the CI sanity check
-#       that the gate itself works.
+#       Also proves the arming path: a simulated real run arms
+#       cleanly (markers stripped, identity compare passes), while a
+#       seed-estimate file and a run with dropped benches are both
+#       refused.  Runs without cargo or benches — this is the CI
+#       sanity check that the gate itself works.
 #
 # Baselines live at the repo root (BENCH_infer.json / BENCH_serve.json /
 # BENCH_deploy.json — the committed perf trajectory).  `scripts/bench.sh`
@@ -23,26 +35,27 @@
 # aside before benching (see .github/workflows/ci.yml bench-smoke).
 #
 # Medians are hardware-dependent: refresh the committed baselines
-# (run scripts/bench.sh on the CI runner class and commit the result)
-# whenever a PR intentionally changes performance.
+# (run scripts/bench.sh on the CI runner class, then
+# `scripts/bench_compare.sh arm` the result and commit it) whenever a
+# PR intentionally changes performance.
 
 set -euo pipefail
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 THRESHOLD="${BENCH_MAX_SLOWDOWN:-0.30}"
 
-compare() { # <baseline.json> <current.json>
-    python3 - "$1" "$2" "$THRESHOLD" <<'PY'
+gate_py() { # <mode> <args...> — one python, one TRACKED table, two modes
+    python3 - "$@" <<'PY'
 import json
 import sys
 
-base_path, cur_path, threshold = sys.argv[1], sys.argv[2], float(sys.argv[3])
+mode = sys.argv[1]
 
 # Baselines generated without a measured run carry "seed_estimate": true
 # (see the committed seed trajectory).  Against such a baseline the
 # comparison still runs and reports, but regressions only warn — the
 # numbers are placeholders, not measurements.  scripts/bench.sh never
-# writes the marker, so the first committed real run arms the gate
-# automatically.
+# writes the marker, so arming the first committed real run flips the
+# gate to hard-fail.
 
 # The gated hot-path keys per suite.  Keep this list small and stable:
 # every key here must exist in quick-mode runs.
@@ -51,6 +64,8 @@ TRACKED = {
         "intnet/forward/64x256x256/4b",
         "intnet/conv_forward/16x32x8x8k3/4b",
         "intnet/forward_grouped/64x256x256/ch248",
+        "intnet/forward_shift/64x256x256/pot4b",
+        "intnet/forward_shift_grouped/64x256x256/apot-ch248",
         "rust/fake_quant/16384",
         "bitpack/pack/65536/4b",
     ],
@@ -68,58 +83,113 @@ TRACKED = {
 }
 
 
-def medians(path):
+def load(path):
     with open(path) as f:
         doc = json.load(f)
     med = {r["name"]: r.get("median_s") for r in doc.get("benches", [])}
-    return doc.get("suite", "?"), med, bool(doc.get("seed_estimate")), doc.get("blocker")
+    return doc, doc.get("suite", "?"), med
 
 
-suite, base, seeded, blocker = medians(base_path)
-cur_suite, cur, _, _ = medians(cur_path)
-if blocker:
-    print(f"NOTE: baseline carries a blocker: {blocker}")
-if suite != cur_suite:
-    sys.exit(f"FAIL: comparing suite '{suite}' against '{cur_suite}'")
-tracked = TRACKED.get(suite)
-if tracked is None:
-    sys.exit(f"FAIL: unknown suite '{suite}' (no tracked keys)")
+if mode == "compare":
+    base_path, cur_path, threshold = sys.argv[2], sys.argv[3], float(sys.argv[4])
+    base_doc, suite, base = load(base_path)
+    _, cur_suite, cur = load(cur_path)
+    seeded = bool(base_doc.get("seed_estimate"))
+    blocker = base_doc.get("blocker")
+    if blocker:
+        print(f"NOTE: baseline carries a blocker: {blocker}")
+    if suite != cur_suite:
+        sys.exit(f"FAIL: comparing suite '{suite}' against '{cur_suite}'")
+    tracked = TRACKED.get(suite)
+    if tracked is None:
+        sys.exit(f"FAIL: unknown suite '{suite}' (no tracked keys)")
 
-failures, rows = [], []
-for key in tracked:
-    b = base.get(key)
-    c = cur.get(key)
-    if b is None:
-        rows.append((key, "-", "-", "SKIP (no baseline yet)"))
-        continue
-    if c is None:
-        rows.append((key, f"{b:.6f}", "-", "FAIL (missing from current run)"))
-        failures.append(key)
-        continue
-    slowdown = c / b - 1.0
-    status = "ok" if slowdown <= threshold else "FAIL"
-    if status == "FAIL":
-        failures.append(key)
-    rows.append((key, f"{b:.6f}", f"{c:.6f}", f"{status} ({slowdown:+.1%})"))
+    failures, rows = [], []
+    for key in tracked:
+        b = base.get(key)
+        c = cur.get(key)
+        if b is None:
+            rows.append((key, "-", "-", "SKIP (no baseline yet)"))
+            continue
+        if c is None:
+            rows.append((key, f"{b:.6f}", "-", "FAIL (missing from current run)"))
+            failures.append(key)
+            continue
+        slowdown = c / b - 1.0
+        status = "ok" if slowdown <= threshold else "FAIL"
+        if status == "FAIL":
+            failures.append(key)
+        rows.append((key, f"{b:.6f}", f"{c:.6f}", f"{status} ({slowdown:+.1%})"))
 
-width = max(len(r[0]) for r in rows)
-print(f"suite '{suite}' vs baseline (gate: >{threshold:.0%} median slowdown fails)")
-for key, b, c, status in rows:
-    print(f"  {key:<{width}}  base {b:>12}  cur {c:>12}  {status}")
+    width = max(len(r[0]) for r in rows)
+    print(f"suite '{suite}' vs baseline (gate: >{threshold:.0%} median slowdown fails)")
+    for key, b, c, status in rows:
+        print(f"  {key:<{width}}  base {b:>12}  cur {c:>12}  {status}")
 
-if failures:
-    msg = f"{len(failures)} tracked key(s) regressed: {', '.join(failures)}"
-    if seeded:
-        print(
-            f"WARN (gate disarmed): {msg}\n"
-            "baseline is a seed estimate (\"seed_estimate\": true) — refresh it\n"
-            "with a real scripts/bench.sh run to arm the gate"
-        )
+    if failures:
+        msg = f"{len(failures)} tracked key(s) regressed: {', '.join(failures)}"
+        if seeded:
+            print(
+                f"WARN (gate disarmed): {msg}\n"
+                "baseline is a seed estimate (\"seed_estimate\": true) — refresh it\n"
+                "with a real scripts/bench.sh run and scripts/bench_compare.sh arm"
+            )
+        else:
+            sys.exit(f"FAIL: {msg}")
     else:
-        sys.exit(f"FAIL: {msg}")
+        print("PASS")
+
+elif mode == "arm":
+    cur_path, dest = sys.argv[2], sys.argv[3]
+    doc, suite, med = load(cur_path)
+    tracked = TRACKED.get(suite)
+    if tracked is None:
+        sys.exit(f"FAIL: unknown suite '{suite}' (no tracked keys) in {cur_path}")
+    if doc.get("seed_estimate"):
+        sys.exit(
+            f"FAIL: refusing to arm from {cur_path} — it carries "
+            '"seed_estimate": true (a placeholder, not a measurement); '
+            "run scripts/bench.sh and arm its output instead"
+        )
+    missing = [k for k in tracked if med.get(k) is None]
+    if missing:
+        sys.exit(
+            f"FAIL: refusing to arm suite '{suite}' — tracked key(s) "
+            f"missing from the run: {', '.join(missing)}"
+        )
+    doc.pop("seed_estimate", None)
+    doc.pop("blocker", None)
+    with open(dest, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(
+        f"armed suite '{suite}': wrote {len(doc.get('benches', []))} bench "
+        f"records to {dest} ({len(tracked)} tracked keys verified, "
+        "seed_estimate/blocker stripped — the gate now hard-fails on regressions)"
+    )
+
 else:
-    print("PASS")
+    sys.exit(f"error: unknown gate_py mode '{mode}'")
 PY
+}
+
+compare() { # <baseline.json> <current.json>
+    gate_py compare "$1" "$2" "$THRESHOLD"
+}
+
+arm() { # <current.json> [dest.json]
+    local cur="$1" dest="${2:-}"
+    if [ -z "$dest" ]; then
+        local suite
+        suite="$(python3 -c 'import json, sys; print(json.load(open(sys.argv[1])).get("suite", "?"))' "$cur")"
+        case "$suite" in
+            infer-fastpath) dest="$ROOT/BENCH_infer.json" ;;
+            serve)          dest="$ROOT/BENCH_serve.json" ;;
+            deploy)         dest="$ROOT/BENCH_deploy.json" ;;
+            *) echo "error: unknown suite '$suite' in $cur — pass DEST.json explicitly" >&2; exit 1 ;;
+        esac
+    fi
+    gate_py arm "$cur" "$dest"
 }
 
 self_test() {
@@ -131,21 +201,43 @@ self_test() {
         local name
         name="$(basename "$base")"
 
-        # The self-test proves the *armed* gate semantics, so it strips
-        # any seed_estimate marker from its working copies.
-        python3 - "$base" "$tmpdir/armed_$name" "$tmpdir/slow_$name" <<'PY'
+        # The self-test proves the *armed* gate semantics, so it builds
+        # working copies: "fresh" simulates a real scripts/bench.sh run
+        # (no markers), "slow" inflates every median 1.5x, "seeded"
+        # forces the marker on, "empty" drops every bench record.
+        python3 - "$base" "$tmpdir" "$name" <<'PY'
 import json
 import sys
 
-src, armed, slow = sys.argv[1], sys.argv[2], sys.argv[3]
+src, tmpdir, name = sys.argv[1], sys.argv[2], sys.argv[3]
 doc = json.load(open(src))
 doc.pop("seed_estimate", None)
-json.dump(doc, open(armed, "w"))
-for r in doc.get("benches", []):
+doc.pop("blocker", None)
+json.dump(doc, open(f"{tmpdir}/fresh_{name}", "w"))
+slow = dict(doc)
+slow["benches"] = [dict(r) for r in doc.get("benches", [])]
+for r in slow["benches"]:
     if r.get("median_s") is not None:
         r["median_s"] = r["median_s"] * 1.5
-json.dump(doc, open(slow, "w"))
+json.dump(slow, open(f"{tmpdir}/slow_{name}", "w"))
+seeded = dict(doc)
+seeded["seed_estimate"] = True
+json.dump(seeded, open(f"{tmpdir}/seeded_{name}", "w"))
+empty = dict(doc)
+empty["benches"] = []
+json.dump(empty, open(f"{tmpdir}/empty_{name}", "w"))
 PY
+        echo "== self-test ($name): arming a simulated real run must succeed =="
+        arm "$tmpdir/fresh_$name" "$tmpdir/armed_$name"
+        python3 - "$tmpdir/armed_$name" <<'PY'
+import json
+import sys
+
+doc = json.load(open(sys.argv[1]))
+assert "seed_estimate" not in doc, "arm left the seed_estimate marker in place"
+assert "blocker" not in doc, "arm left the blocker marker in place"
+PY
+
         echo "== self-test ($name): identity comparison must pass =="
         compare "$tmpdir/armed_$name" "$tmpdir/armed_$name"
 
@@ -155,6 +247,20 @@ PY
             exit 1
         fi
         echo "(gate tripped as expected)"
+
+        echo "== self-test ($name): arming a seed-estimate file must be refused =="
+        if arm "$tmpdir/seeded_$name" "$tmpdir/never_$name"; then
+            echo "self-test FAILED: arm accepted a seed-estimate file on $name" >&2
+            exit 1
+        fi
+        echo "(arm refused as expected)"
+
+        echo "== self-test ($name): arming a run with dropped benches must be refused =="
+        if arm "$tmpdir/empty_$name" "$tmpdir/never_$name"; then
+            echo "self-test FAILED: arm accepted a run missing tracked keys on $name" >&2
+            exit 1
+        fi
+        echo "(arm refused as expected)"
         pass=$((pass + 1))
     done
     echo "self-test PASSED on $pass suites"
@@ -165,11 +271,15 @@ case "${1:-}" in
         [ $# -eq 3 ] || { echo "usage: $0 compare BASELINE.json CURRENT.json" >&2; exit 2; }
         compare "$2" "$3"
         ;;
+    arm)
+        [ $# -eq 2 ] || [ $# -eq 3 ] || { echo "usage: $0 arm CURRENT.json [DEST.json]" >&2; exit 2; }
+        arm "$2" "${3:-}"
+        ;;
     self-test)
         self_test
         ;;
     *)
-        echo "usage: $0 compare BASELINE.json CURRENT.json | $0 self-test" >&2
+        echo "usage: $0 compare BASELINE.json CURRENT.json | $0 arm CURRENT.json [DEST.json] | $0 self-test" >&2
         exit 2
         ;;
 esac
