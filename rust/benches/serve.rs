@@ -208,10 +208,12 @@ fn main() {
     let stats = storm_server.shutdown();
     let storm = BenchResult::from_samples("serve/server/swap_storm", lats, None);
     println!("{}", storm.report());
+    // p99 via the shared telemetry histogram — the same implementation
+    // (and bucket resolution) a scrape of the serve endpoint reports.
     println!(
         "  -> swap storm: {} swaps crossed the batcher, p99 {:.0}us",
         stats.swaps,
-        storm.percentile(99.0) * 1e6
+        storm.latency_histogram().quantile(0.99) * 1e6
     );
 
     b.flush_jsonl();

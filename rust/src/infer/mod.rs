@@ -66,6 +66,8 @@
 //! (the expanded values are identical, and the core GEMM is already
 //! pinned fast-vs-ref).
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
 use crate::bitpack::{
@@ -249,6 +251,99 @@ pub struct NetScratch {
     ping: Vec<f32>,
     pong: Vec<f32>,
     layer: LayerScratch,
+}
+
+/// Where one layer's forward time went, plus its static cost pricing.
+///
+/// Filled by [`IntNet::forward_into_profiled`]. Times are wall-clock
+/// seconds; `macs` uses the same per-layer pricing as the training
+/// regularizer ([`crate::quant::conv_macs`] for convs, `din·dout` for
+/// dense), and `bytes` is the traffic a forward actually touches:
+/// packed weight codes + f32 input and output planes.
+#[derive(Debug, Clone, Default)]
+pub struct LayerProfile {
+    pub name: String,
+    /// Total wall time of this layer's `forward_scratch`.
+    pub total_s: f64,
+    /// im2col patch expansion time (0 for dense layers).
+    pub im2col_s: f64,
+    /// Integer-GEMM core time (quantize + GEMM + reconstruction).
+    pub gemm_s: f64,
+    /// Integer multiply-accumulates for the profiled batch.
+    pub macs: u64,
+    /// Bytes touched: packed codes + f32 activations in/out.
+    pub bytes: u64,
+}
+
+/// Per-layer timing + cost attribution for one profiled forward.
+///
+/// Produced by [`IntNet::forward_into_profiled`]; the buffer is reused
+/// across calls (`layers` keeps its capacity). The non-profiled
+/// [`IntNet::forward_into`] never constructs one and never calls
+/// `Instant::now` — the hot path stays allocation-free and
+/// bit-identical (pinned by `profiled_forward_is_bit_identical`).
+#[derive(Debug, Clone, Default)]
+pub struct ForwardProfile {
+    /// Batch size of the profiled call.
+    pub batch: usize,
+    /// End-to-end wall time of the whole forward.
+    pub total_s: f64,
+    pub layers: Vec<LayerProfile>,
+}
+
+impl ForwardProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn reset(&mut self, batch: usize) {
+        self.batch = batch;
+        self.total_s = 0.0;
+        self.layers.clear();
+    }
+
+    /// Total MACs across layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total bytes touched across layers.
+    pub fn total_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Human-readable per-layer attribution table.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "forward profile: batch {}, {:.3} ms, {} MACs, {} bytes",
+            self.batch,
+            self.total_s * 1e3,
+            self.total_macs(),
+            self.total_bytes()
+        );
+        for l in &self.layers {
+            let gmacs_s = if l.total_s > 0.0 {
+                l.macs as f64 / l.total_s / 1e9
+            } else {
+                0.0
+            };
+            let _ = writeln!(
+                out,
+                "  {:<12} {:>9.3} ms (im2col {:>7.3} ms, gemm {:>7.3} ms) | {:>12} MACs {:>6.2} GMAC/s | {:>10} bytes",
+                l.name,
+                l.total_s * 1e3,
+                l.im2col_s * 1e3,
+                l.gemm_s * 1e3,
+                l.macs,
+                gmacs_s,
+                l.bytes
+            );
+        }
+        out
+    }
 }
 
 impl IntDense {
@@ -1492,6 +1587,22 @@ impl IntConv2d {
         out: &mut [f32],
         pool: Option<&WorkerPool>,
     ) {
+        self.forward_scratch_timed(x, n, sc, out, pool, None);
+    }
+
+    /// [`Self::forward_scratch`] with an optional im2col/GEMM wall-time
+    /// split for the profiler. With `timing == None` (the serve hot
+    /// path) no clock is read — the compute is the same either way, so
+    /// profiled and unprofiled forwards stay bit-identical.
+    pub(crate) fn forward_scratch_timed(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &mut LayerScratch,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+        timing: Option<&mut (f64, f64)>,
+    ) {
         assert_eq!(
             x.len(),
             n * self.geom.in_features(),
@@ -1504,8 +1615,20 @@ impl IntConv2d {
         // scratch mutably alongside it; put it back for the next call.
         let mut col = std::mem::take(&mut sc.im2col);
         col.resize(rows * self.geom.patch_len(), 0.0);
-        self.im2col_into(x, n, &mut col);
-        self.core.forward_scratch(&col, rows, sc, out, pool);
+        match timing {
+            None => {
+                self.im2col_into(x, n, &mut col);
+                self.core.forward_scratch(&col, rows, sc, out, pool);
+            }
+            Some(t) => {
+                let t0 = Instant::now();
+                self.im2col_into(x, n, &mut col);
+                t.0 = t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                self.core.forward_scratch(&col, rows, sc, out, pool);
+                t.1 = t1.elapsed().as_secs_f64();
+            }
+        }
         sc.im2col = col;
     }
 
@@ -1705,6 +1828,51 @@ impl IntLayer {
             IntLayer::Dense(l) => l.forward_scratch(x, n, sc, out, pool),
             IntLayer::Conv2d(c) => c.forward_scratch(x, n, sc, out, pool),
         }
+    }
+
+    /// [`Self::forward_scratch`] returning the `(im2col_s, gemm_s)`
+    /// wall-time split for the profiler (dense layers report a zero
+    /// im2col share). Same computation as the unprofiled path.
+    pub(crate) fn forward_scratch_profiled(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &mut LayerScratch,
+        out: &mut [f32],
+        pool: Option<&WorkerPool>,
+    ) -> (f64, f64) {
+        match self {
+            IntLayer::Dense(l) => {
+                let t0 = Instant::now();
+                l.forward_scratch(x, n, sc, out, pool);
+                (0.0, t0.elapsed().as_secs_f64())
+            }
+            IntLayer::Conv2d(c) => {
+                let mut split = (0.0, 0.0);
+                c.forward_scratch_timed(x, n, sc, out, pool, Some(&mut split));
+                split
+            }
+        }
+    }
+
+    /// Integer multiply-accumulates for an `n`-sample forward, priced
+    /// with the regularizer's conventions: `n·din·dout` for dense,
+    /// `n · `[`crate::quant::conv_macs`] for conv (equal to the lowered
+    /// GEMM's `rows·patch_len·cout`).
+    pub fn macs(&self, n: usize) -> u64 {
+        match self {
+            IntLayer::Dense(l) => (n * l.din * l.dout) as u64,
+            IntLayer::Conv2d(c) => {
+                let g = &c.geom;
+                (n * quant::conv_macs(g.cin, g.kh, g.kw, g.out_h(), g.out_w(), g.cout)) as u64
+            }
+        }
+    }
+
+    /// Bytes a forward touches at batch `n`: the packed weight codes
+    /// plus the f32 input and output activation planes.
+    pub fn bytes_touched(&self, n: usize) -> u64 {
+        (self.packed_bytes() + n * (self.in_features() + self.out_features()) * 4) as u64
     }
 
     /// Retained scalar reference path.
@@ -1937,11 +2105,58 @@ impl IntNet {
         sc: &'s mut NetScratch,
         pool: Option<&WorkerPool>,
     ) -> &'s [f32] {
+        self.forward_into_impl(x, n, sc, pool, None)
+    }
+
+    /// [`Self::forward_into`] with per-layer wall-time / MAC / byte
+    /// attribution recorded into `prof` (see [`ForwardProfile`]). The
+    /// computation is identical — profiling only adds clock reads around
+    /// each layer — so logits are bit-identical to the unprofiled path.
+    pub fn forward_into_profiled<'s>(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &'s mut NetScratch,
+        pool: Option<&WorkerPool>,
+        prof: &mut ForwardProfile,
+    ) -> &'s [f32] {
+        prof.reset(n);
+        let t0 = Instant::now();
+        let out = self.forward_into_impl(x, n, sc, pool, Some(prof));
+        prof.total_s = t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn forward_into_impl<'s>(
+        &self,
+        x: &[f32],
+        n: usize,
+        sc: &'s mut NetScratch,
+        pool: Option<&WorkerPool>,
+        mut prof: Option<&mut ForwardProfile>,
+    ) -> &'s [f32] {
         sc.ping.clear();
         sc.ping.extend_from_slice(x);
         for layer in &self.layers {
             sc.pong.resize(n * layer.out_features(), 0.0);
-            layer.forward_scratch(&sc.ping, n, &mut sc.layer, &mut sc.pong, pool);
+            match prof.as_deref_mut() {
+                None => {
+                    layer.forward_scratch(&sc.ping, n, &mut sc.layer, &mut sc.pong, pool);
+                }
+                Some(p) => {
+                    let t0 = Instant::now();
+                    let (im2col_s, gemm_s) = layer
+                        .forward_scratch_profiled(&sc.ping, n, &mut sc.layer, &mut sc.pong, pool);
+                    p.layers.push(LayerProfile {
+                        name: layer.name().to_string(),
+                        total_s: t0.elapsed().as_secs_f64(),
+                        im2col_s,
+                        gemm_s,
+                        macs: layer.macs(n),
+                        bytes: layer.bytes_touched(n),
+                    });
+                }
+            }
             std::mem::swap(&mut sc.ping, &mut sc.pong);
         }
         &sc.ping
@@ -2730,6 +2945,72 @@ mod tests {
         // Second call on the same scratch (warm path) stays identical.
         let again = net.forward_into(&x, 4, &mut sc, None).to_vec();
         assert!(want.iter().zip(&again).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn profiled_forward_is_bit_identical_and_attributes_every_layer() {
+        // Conv fixture (conv0 -> conv1 -> fc) through the profiled
+        // entry point: logits must match the unprofiled path bitwise,
+        // and the profile must carry time + MAC + byte attribution for
+        // every layer with the regularizer's MAC pricing.
+        let net = crate::serve::synthetic_conv_net(0xBEEF, 4, 4);
+        let n = 6;
+        let mut rng = Rng::new(0xF00D);
+        let x = rand_vec(&mut rng, n * net.in_features());
+        let mut sc = NetScratch::default();
+        let want = net.forward_into(&x, n, &mut sc, None).to_vec();
+        let mut prof = ForwardProfile::new();
+        let got = net
+            .forward_into_profiled(&x, n, &mut sc, None, &mut prof)
+            .to_vec();
+        assert!(want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(prof.batch, n);
+        assert_eq!(prof.layers.len(), net.layers.len());
+        assert!(prof.total_s > 0.0);
+        for (lp, layer) in prof.layers.iter().zip(&net.layers) {
+            assert_eq!(lp.name, layer.name());
+            assert!(lp.total_s > 0.0, "{}: zero wall time", lp.name);
+            assert!(lp.gemm_s > 0.0, "{}: zero gemm time", lp.name);
+            assert!(
+                lp.total_s + 1e-9 >= lp.im2col_s + lp.gemm_s,
+                "{}: split exceeds total",
+                lp.name
+            );
+            assert_eq!(lp.macs, layer.macs(n), "{}: MAC pricing", lp.name);
+            assert_eq!(lp.bytes, layer.bytes_touched(n), "{}", lp.name);
+            match layer {
+                IntLayer::Dense(d) => {
+                    assert_eq!(lp.im2col_s, 0.0);
+                    assert_eq!(lp.macs, (n * d.din * d.dout) as u64);
+                }
+                IntLayer::Conv2d(c) => {
+                    assert!(lp.im2col_s > 0.0, "{}: zero im2col time", lp.name);
+                    let g = &c.geom;
+                    assert_eq!(
+                        lp.macs,
+                        (n * quant::conv_macs(
+                            g.cin,
+                            g.kh,
+                            g.kw,
+                            g.out_h(),
+                            g.out_w(),
+                            g.cout
+                        )) as u64
+                    );
+                }
+            }
+        }
+        // Profile buffer is reused across calls without growing.
+        let layers_cap = prof.layers.capacity();
+        net.forward_into_profiled(&x, n, &mut sc, None, &mut prof);
+        assert_eq!(prof.layers.len(), net.layers.len());
+        assert_eq!(prof.layers.capacity(), layers_cap);
+        // report() renders one line per layer plus a header.
+        let rep = prof.report();
+        assert_eq!(rep.lines().count(), 1 + net.layers.len());
+        for layer in &net.layers {
+            assert!(rep.contains(layer.name()), "{rep}");
+        }
     }
 
     #[test]

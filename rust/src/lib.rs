@@ -32,5 +32,6 @@ pub mod report;
 pub mod runtime;
 pub mod schedule;
 pub mod serve;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;

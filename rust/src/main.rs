@@ -64,6 +64,7 @@ fn run() -> Result<()> {
         "export" => cmd_export(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "fig" => cmd_fig(&args),
         "help" | "--help" => {
             print!("{}", HELP);
@@ -102,7 +103,13 @@ COMMANDS:
                 --deadline-ms N --shed-policy reject-newest|drop-expired
                 sheds overload with typed errors; --canary B.bpma
                 --canary-pct P splits traffic and auto-promotes or
-                rolls back on online agreement/latency
+                rolls back on online agreement/latency;
+                --metrics-addr H:P exposes a live Prometheus-text +
+                JSON scrape endpoint; --trace-out FILE.jsonl writes a
+                structured lifecycle event trace; --profile prints a
+                per-layer time/MAC/byte profile of the served net
+  metrics     pretty-print a running server's telemetry snapshot
+                (--addr H:P, the address passed to serve --metrics-addr)
   fig         render figure 1/3 ASCII charts from a reports/<run>.json
 
 OPTIONS (common):
@@ -128,6 +135,8 @@ OPTIONS (deploy):
            --codebook uniform|pot|apot  (for --synthetic)
            --deadline-ms N  --shed-policy reject-newest|drop-expired
            --canary B.bpma --canary-pct P --canary-window N --canary-promote K
+           --metrics-addr HOST:PORT  --trace-out FILE.jsonl  --profile
+  metrics: --addr HOST:PORT              (scrapes /metrics.json and renders it)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -776,6 +785,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     use bitprune::serve::{
         CanaryConfig, CanaryOutcome, RetryPolicy, ServeConfig, Server, ShedPolicy,
     };
+    use bitprune::telemetry::{MetricsServer, Registry, SampleValue, TraceWriter};
     use bitprune::util::bench::{append_jsonl, BenchResult};
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
@@ -869,6 +879,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if net.layers.iter().any(|l| !l.codebook().is_uniform()) {
         eprintln!("non-uniform weight codebooks: serving on the shift-add GEMM");
     }
+    if args.flag("profile") {
+        let mut prof = bitprune::infer::ForwardProfile::new();
+        let mut scratch = bitprune::infer::NetScratch::default();
+        let n = 16usize;
+        let mut rng = Rng::new(0xF11E);
+        let x: Vec<f32> =
+            (0..n * net.in_features()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // Warm the scratch once so the profiled pass reports steady-state
+        // time, not first-touch allocation.
+        net.forward_into(&x, n, &mut scratch, None);
+        net.forward_into_profiled(&x, n, &mut scratch, None, &mut prof);
+        println!("{}", prof.report());
+    }
     let net = Arc::new(net);
     let din = net.in_features();
 
@@ -890,8 +913,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!("serve: --canary and --swap-to are mutually exclusive (publish is refused while a canary is in flight)");
     }
 
+    // Observability: the server publishes every counter/gauge/histogram
+    // into this registry (the handles *are* the ServeStats ledger);
+    // --metrics-addr exposes it over HTTP, --trace-out records the
+    // typed lifecycle event stream.
+    let telemetry = Arc::new(Registry::new());
+    let trace: Option<Arc<TraceWriter>> = match args.get("trace-out") {
+        Some(path) => {
+            let tw = TraceWriter::create(std::path::Path::new(path))?;
+            eprintln!("tracing lifecycle events to {path}");
+            Some(Arc::new(tw))
+        }
+        None => None,
+    };
+    let mut metrics_http: Option<MetricsServer> = match args.get("metrics-addr") {
+        Some(addr) => {
+            let srv = MetricsServer::start(addr, Arc::clone(&telemetry))?;
+            eprintln!(
+                "metrics endpoint live at http://{0}/metrics (text) and \
+                 http://{0}/metrics.json (json)",
+                srv.addr()
+            );
+            Some(srv)
+        }
+        None => None,
+    };
+
     let registry = Arc::new(ModelRegistry::new(Arc::clone(&net), &label)?);
-    let server = Server::start_registry(
+    let server = Server::start_observed(
         Arc::clone(&registry),
         ServeConfig {
             threads,
@@ -901,6 +950,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             deadline,
             shed_policy,
         },
+        Arc::clone(&telemetry),
+        trace,
     )?;
     if let Some(path) = &canary_arg {
         let art = Artifact::load(path)?;
@@ -1007,44 +1058,95 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let canary_status = server.canary_status();
     let stats = server.shutdown();
+    if let Some(m) = &mut metrics_http {
+        m.shutdown();
+    }
+
+    // One formatting path: everything below renders the telemetry
+    // snapshot.  `ServeStats` stays the exact ledger — the two cannot
+    // disagree because the registry handles *are* the stats atomics,
+    // which the asserts here make literal.
+    let snap = telemetry.snapshot();
+    let counter = |name: &str, label: Option<(&str, &str)>| -> u64 {
+        snap.iter()
+            .find(|s| {
+                s.name == name
+                    && label.map_or(true, |(k, v)| {
+                        s.labels.iter().any(|(lk, lv)| lk == k && lv == v)
+                    })
+            })
+            .and_then(|s| match s.value {
+                SampleValue::Counter(v) => Some(v),
+                _ => None,
+            })
+            .unwrap_or(0)
+    };
+    let hist = |name: &str| -> Option<(u64, f64, f64, f64, f64)> {
+        snap.iter().find(|s| s.name == name).and_then(|s| match s.value {
+            SampleValue::Histogram { count, sum, p50, p95, p99 } => {
+                Some((count, sum, p50, p95, p99))
+            }
+            _ => None,
+        })
+    };
+    let requests_total = counter("serve_requests_total", None);
+    let shed_queue_full = counter("serve_shed_total", Some(("reason", "queue_full")));
+    let shed_expired = counter("serve_shed_total", Some(("reason", "expired")));
+    let failed_total = counter("serve_failed_total", None);
+    assert_eq!(requests_total, stats.requests, "registry is the ServeStats ledger");
+    assert_eq!(shed_queue_full, stats.shed_queue_full);
+    assert_eq!(shed_expired, stats.shed_expired);
+    assert_eq!(failed_total, stats.failed);
 
     let latencies: Vec<f64> = samples.iter().map(|(_, l)| *l).collect();
     if latencies.is_empty() {
         println!(
             "served 0 requests — every request was shed \
-             ({} queue-full, {} deadline-expired, policy {})",
-            stats.shed_queue_full,
-            stats.shed_expired,
+             ({shed_queue_full} queue-full, {shed_expired} deadline-expired, \
+             policy {})",
             shed_policy.name()
         );
         return Ok(());
     }
     let lat = BenchResult::from_samples("serve/request_latency", latencies, None);
     println!("{}", lat.report());
+    let (p50, p95, p99) = hist("serve_request_latency_seconds")
+        .map(|(_, _, p50, p95, p99)| (p50, p95, p99))
+        .unwrap_or((0.0, 0.0, 0.0));
+    let batches_total = counter("serve_batches_total", None);
+    let mean_batch = hist("serve_batch_size")
+        .map(|(count, sum, _, _, _)| if count > 0 { sum / count as f64 } else { 0.0 })
+        .unwrap_or(0.0);
     println!(
         "served {} requests in {:.3}s -> {:.0} req/s | \
          p50 {:.0}us p95 {:.0}us p99 {:.0}us | \
          {} batches, mean batch {:.1}, {} swap(s)",
-        stats.requests,
+        requests_total,
         wall,
-        stats.requests as f64 / wall,
-        lat.median * 1e6,
-        lat.p95 * 1e6,
-        lat.percentile(99.0) * 1e6,
-        stats.batches,
-        stats.mean_batch(),
-        stats.swaps,
+        requests_total as f64 / wall,
+        p50 * 1e6,
+        p95 * 1e6,
+        p99 * 1e6,
+        batches_total,
+        mean_batch,
+        counter("serve_swaps_total", None),
     );
-    if stats.shed() > 0 || stats.failed > 0 || shed.load(Ordering::Relaxed) > 0 {
+    let shed_total = shed_queue_full + shed_expired;
+    if shed_total > 0 || failed_total > 0 || shed.load(Ordering::Relaxed) > 0 {
         println!(
-            "shed {} requests ({} queue-full, {} deadline-expired; policy {}) | \
-             {} failed on panicked batches | {} gave up after retries",
-            stats.shed(),
-            stats.shed_queue_full,
-            stats.shed_expired,
+            "shed {shed_total} requests ({shed_queue_full} queue-full, \
+             {shed_expired} deadline-expired; policy {}) | \
+             {failed_total} failed on panicked batches | {} gave up after retries \
+             ({} retry attempts)",
             shed_policy.name(),
-            stats.failed,
             shed.load(Ordering::Relaxed),
+            counter("serve_retries_total", None),
+        );
+    }
+    if counter("pool_respawns_total", None) > 0 {
+        println!(
+            "worker pool respawned {} dead worker(s)",
+            counter("pool_respawns_total", None)
         );
     }
     if let Some(status) = &canary_status {
@@ -1101,6 +1203,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let base = BenchResult::from_samples("serve/percall_forward_bs1", base_lats, None);
     println!("{}", base.report());
     append_jsonl(&[lat, base]);
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    // Scrape a running server's `--metrics-addr` endpoint and render
+    // the JSON snapshot as a table (histograms show count/sum and the
+    // shared-implementation p50/p95/p99).
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("usage: bitprune metrics --addr HOST:PORT"))?;
+    let body = bitprune::telemetry::http_get(addr, "/metrics.json")?;
+    let v = bitprune::util::json::parse(&body)?;
+    let metrics = v.get("metrics")?.as_arr()?;
+    let mut t = Table::new(&["metric", "type", "value"]);
+    for m in metrics {
+        let name = m.get("name")?.as_str()?;
+        let labels = m.get("labels")?.as_obj()?;
+        let series = if labels.is_empty() {
+            name.to_string()
+        } else {
+            let parts: Vec<String> = labels
+                .iter()
+                .map(|(k, v)| Ok(format!("{k}=\"{}\"", v.as_str()?)))
+                .collect::<Result<_>>()?;
+            format!("{name}{{{}}}", parts.join(","))
+        };
+        let ty = m.get("type")?.as_str()?;
+        let value = match ty {
+            "histogram" => format!(
+                "count {} | sum {:.6} | p50 {:.6} p95 {:.6} p99 {:.6}",
+                m.get("count")?.as_f64()?,
+                m.get("sum")?.as_f64()?,
+                m.get("p50")?.as_f64()?,
+                m.get("p95")?.as_f64()?,
+                m.get("p99")?.as_f64()?,
+            ),
+            _ => format!("{}", m.get("value")?.as_f64()?),
+        };
+        t.row(vec![series, ty.to_string(), value]);
+    }
+    println!("scraped http://{addr}/metrics.json — {} series", metrics.len());
+    println!("{}", t.render());
     Ok(())
 }
 
@@ -1183,6 +1327,10 @@ impl CliOpts for RunConfig {
             "codebook",
             // synthetic fixture architecture (export / serve --synthetic)
             "arch",
+            // observability (serve / metrics)
+            "metrics-addr",
+            "trace-out",
+            "addr",
         ]);
         v
     }

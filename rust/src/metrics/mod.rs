@@ -3,6 +3,10 @@
 //!
 //! Figure 1 / Figure 2 (accuracy + average bitlength vs training
 //! progress) are emitted as CSV series directly from [`RunRecorder`].
+//!
+//! This module is *offline* training metrics.  Live serving telemetry
+//! (lock-free counters/gauges/histograms, the Prometheus/JSON scrape
+//! endpoint, the lifecycle event trace) lives in [`crate::telemetry`].
 
 use std::fmt::Write as _;
 use std::path::Path;

@@ -296,6 +296,15 @@ impl CanaryController {
         self.outcome.as_ref()
     }
 
+    /// Cumulative argmax agreement fraction without materialising a
+    /// full [`CanaryStatus`] (the batcher refreshes the
+    /// `canary_agreement` telemetry gauge per batch, and
+    /// [`Self::status`] sorts both latency reservoirs — too heavy for
+    /// that cadence).
+    pub fn agreement(&self) -> Option<f64> {
+        (self.compared > 0).then(|| self.agreements as f64 / self.compared as f64)
+    }
+
     fn canary_p99(&self) -> Option<f64> {
         p99_of(&self.canary_lat)
     }

@@ -22,6 +22,12 @@
 //! probabilistic ones.  The seed ([`pinned_seed`], `CHAOS_SEED` env)
 //! feeds fixture construction ([`corrupted_twin`]), keeping the whole
 //! suite reproducible from one number.
+//!
+//! The `injected_*` counters here are the *test-facing* ledger of what
+//! chaos did; the *serve-visible* consequences (sheds, failed batches,
+//! pool respawns, rollbacks) land in the [`crate::telemetry`] registry
+//! the server publishes, and `tests/serve_chaos.rs` cross-checks the
+//! two ledgers against [`crate::serve::ServeStats`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;

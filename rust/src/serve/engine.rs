@@ -1,6 +1,6 @@
 //! The serving forward executor: persistent threads + reusable buffers.
 
-use crate::infer::{IntNet, NetScratch};
+use crate::infer::{ForwardProfile, IntNet, NetScratch};
 use crate::util::pool::WorkerPool;
 
 /// Owns everything repeated forwards need so the hot loop spawns no
@@ -61,6 +61,21 @@ impl ServeEngine {
     pub fn forward(&mut self, net: &IntNet, x: &[f32], n: usize) -> &[f32] {
         let Self { pool, scratch } = self;
         net.forward_into(x, n, scratch, Some(&*pool))
+    }
+
+    /// [`Self::forward`] with per-layer wall-time/MAC/byte attribution
+    /// recorded into `prof` (see [`ForwardProfile`]).  Same buffers,
+    /// same pool, bit-identical logits — profiling only adds clock
+    /// reads, so it is safe to sample on live traffic.
+    pub fn forward_profiled(
+        &mut self,
+        net: &IntNet,
+        x: &[f32],
+        n: usize,
+        prof: &mut ForwardProfile,
+    ) -> &[f32] {
+        let Self { pool, scratch } = self;
+        net.forward_into_profiled(x, n, scratch, Some(&*pool), prof)
     }
 
     /// Classify a batch (same argmax rule as [`IntNet::predict`]).

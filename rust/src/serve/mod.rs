@@ -36,6 +36,14 @@
 //!   deterministic fault-injection layer (`serve::chaos`, feature
 //!   `chaos`)
 //!   proves the invariants in `tests/serve_chaos.rs`.
+//! * **Observability** — every server publishes its counters, gauges
+//!   and latency/batch-size histograms into a [`crate::telemetry`]
+//!   registry ([`Server::telemetry`]); the registry handles *are* the
+//!   [`ServeStats`] ledger (one set of atomics behind both views), so
+//!   a scrape can never disagree with the stats.  [`Server::start_observed`]
+//!   additionally accepts a [`crate::telemetry::TraceWriter`] for a
+//!   JSONL lifecycle trace (admit/shed/batch/swap/promote/rollback);
+//!   `bitprune serve --metrics-addr` exposes the registry over HTTP.
 //! * Synthetic fixtures ([`synthetic_net`] / [`synthetic_mlp`]) — a
 //!   calibrated random network on the mlp artifact shapes
 //!   (32→256→128→10, python/compile/models.py), so `bitprune serve`,

@@ -62,6 +62,7 @@ use super::canary::{
 use super::engine::ServeEngine;
 use crate::deploy::ModelRegistry;
 use crate::infer::{argmax_rows, IntNet};
+use crate::telemetry::{Counter, Gauge, Histogram, Registry as TelemetryRegistry, TraceWriter, Tv};
 use crate::util::rng::Rng;
 
 /// Why a request was not served.  Every failed submit or response
@@ -297,6 +298,59 @@ struct Request {
     deadline: Option<Instant>,
 }
 
+/// The server's handles into its [`TelemetryRegistry`].
+///
+/// The [`ServeStats`] ledger counters *are* these registry counters —
+/// one set of atomics behind both surfaces — so the metrics endpoint
+/// and `Server::stats()` cannot disagree (asserted under full chaos in
+/// `tests/serve_chaos.rs`). Histogram/gauge handles are cloned `Arc`s;
+/// recording is a relaxed atomic RMW on the batcher's path.
+struct ServeMetrics {
+    registry: Arc<TelemetryRegistry>,
+    batches: Arc<Counter>,
+    requests: Arc<Counter>,
+    swaps: Arc<Counter>,
+    shed_queue_full: Arc<Counter>,
+    shed_expired: Arc<Counter>,
+    failed: Arc<Counter>,
+    canary_requests: Arc<Counter>,
+    promotions: Arc<Counter>,
+    rollbacks: Arc<Counter>,
+    /// Client-side retry attempts (`infer_with_retry` backoffs).
+    retries: Arc<Counter>,
+    /// Queue length, updated at admission and batch drain.
+    queue_depth: Arc<Gauge>,
+    /// Coalesced batch sizes.
+    batch_size: Arc<Histogram>,
+    /// Enqueue-to-delivery latency (seconds) of answered requests.
+    e2e_latency: Arc<Histogram>,
+    /// Worker-pool thread respawns (published by the pool itself).
+    respawns: Arc<Counter>,
+}
+
+impl ServeMetrics {
+    fn new(registry: Arc<TelemetryRegistry>) -> Self {
+        ServeMetrics {
+            batches: registry.counter("serve_batches_total", &[]),
+            requests: registry.counter("serve_requests_total", &[]),
+            swaps: registry.counter("serve_swaps_total", &[]),
+            shed_queue_full: registry
+                .counter("serve_shed_total", &[("reason", "queue_full")]),
+            shed_expired: registry.counter("serve_shed_total", &[("reason", "expired")]),
+            failed: registry.counter("serve_failed_total", &[]),
+            canary_requests: registry.counter("serve_canary_requests_total", &[]),
+            promotions: registry.counter("serve_promotions_total", &[]),
+            rollbacks: registry.counter("serve_rollbacks_total", &[]),
+            retries: registry.counter("serve_retries_total", &[]),
+            queue_depth: registry.gauge("serve_queue_depth", &[]),
+            batch_size: registry.histogram("serve_batch_size", &[], 1.0),
+            e2e_latency: registry.histogram("serve_request_latency_seconds", &[], 1e-9),
+            respawns: registry.counter("pool_respawns_total", &[]),
+            registry,
+        }
+    }
+}
+
 struct Shared {
     queue: Mutex<VecDeque<Request>>,
     cv: Condvar,
@@ -308,15 +362,11 @@ struct Shared {
     shed_policy: ShedPolicy,
     /// Request id sequence (canary routing key).
     seq: AtomicU64,
-    batches: AtomicU64,
-    requests: AtomicU64,
-    swaps: AtomicU64,
-    shed_queue_full: AtomicU64,
-    shed_expired: AtomicU64,
-    failed: AtomicU64,
-    canary_requests: AtomicU64,
-    promotions: AtomicU64,
-    rollbacks: AtomicU64,
+    /// Registry-backed counters — the single source of truth behind
+    /// both [`ServeStats`] and the metrics endpoint.
+    metrics: ServeMetrics,
+    /// Lifecycle event trace (`--trace-out`), if enabled.
+    trace: Option<Arc<TraceWriter>>,
     /// The in-flight canary experiment, if any.  Locked briefly by the
     /// batcher (routing + observation) and by status snapshots; never
     /// held across a forward.
@@ -334,7 +384,17 @@ impl Shared {
                 Some(d) if now >= d => {
                     let waited = now.saturating_duration_since(r.enqueued);
                     let _ = r.resp.send(Err(ServeError::DeadlineExpired { waited }));
-                    self.shed_expired.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.shed_expired.inc();
+                    if let Some(t) = &self.trace {
+                        t.emit(
+                            "shed",
+                            &[
+                                ("id", Tv::U(r.id)),
+                                ("reason", Tv::S("expired")),
+                                ("waited_us", Tv::U(waited.as_micros() as u64)),
+                            ],
+                        );
+                    }
                 }
                 _ => q.push_back(r),
             }
@@ -411,7 +471,25 @@ impl Server {
     /// stays shared: publishing to it while this server runs hot-swaps
     /// the model between batches with zero downtime.
     pub fn start_registry(registry: Arc<ModelRegistry>, cfg: ServeConfig) -> Result<Self> {
-        Self::start_inner(registry, cfg, Injectors::default())
+        Self::start_inner(
+            registry,
+            cfg,
+            Injectors::default(),
+            Arc::new(TelemetryRegistry::new()),
+            None,
+        )
+    }
+
+    /// [`Self::start_registry`] publishing into a caller-owned
+    /// [`TelemetryRegistry`] (for sharing one scrape endpoint across
+    /// servers) and optionally emitting lifecycle events into `trace`.
+    pub fn start_observed(
+        registry: Arc<ModelRegistry>,
+        cfg: ServeConfig,
+        telemetry: Arc<TelemetryRegistry>,
+        trace: Option<Arc<TraceWriter>>,
+    ) -> Result<Self> {
+        Self::start_inner(registry, cfg, Injectors::default(), telemetry, trace)
     }
 
     /// [`Self::start_registry`] with a fault injector wired into the
@@ -422,13 +500,21 @@ impl Server {
         cfg: ServeConfig,
         chaos: Arc<super::chaos::Chaos>,
     ) -> Result<Self> {
-        Self::start_inner(registry, cfg, Injectors { chaos: Some(chaos) })
+        Self::start_inner(
+            registry,
+            cfg,
+            Injectors { chaos: Some(chaos) },
+            Arc::new(TelemetryRegistry::new()),
+            None,
+        )
     }
 
     fn start_inner(
         registry: Arc<ModelRegistry>,
         cfg: ServeConfig,
         inj: Injectors,
+        telemetry: Arc<TelemetryRegistry>,
+        trace: Option<Arc<TraceWriter>>,
     ) -> Result<Self> {
         if cfg.max_batch == 0 || cfg.max_queue == 0 {
             bail!("serve: max_batch and max_queue must be at least 1");
@@ -439,6 +525,8 @@ impl Server {
         let engine = ServeEngine::with_chaos(cfg.threads, inj.chaos.clone());
         #[cfg(not(feature = "chaos"))]
         let engine = ServeEngine::new(cfg.threads);
+        let metrics = ServeMetrics::new(telemetry);
+        engine.pool().publish_respawns(Arc::clone(&metrics.respawns));
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
@@ -447,15 +535,8 @@ impl Server {
             default_deadline: cfg.deadline,
             shed_policy: cfg.shed_policy,
             seq: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            requests: AtomicU64::new(0),
-            swaps: AtomicU64::new(0),
-            shed_queue_full: AtomicU64::new(0),
-            shed_expired: AtomicU64::new(0),
-            failed: AtomicU64::new(0),
-            canary_requests: AtomicU64::new(0),
-            promotions: AtomicU64::new(0),
-            rollbacks: AtomicU64::new(0),
+            metrics,
+            trace,
             canary: Mutex::new(None),
         });
         let shared2 = Arc::clone(&shared);
@@ -520,17 +601,26 @@ impl Server {
     }
 
     pub fn stats(&self) -> ServeStats {
+        let m = &self.shared.metrics;
         ServeStats {
-            batches: self.shared.batches.load(Ordering::Relaxed),
-            requests: self.shared.requests.load(Ordering::Relaxed),
-            swaps: self.shared.swaps.load(Ordering::Relaxed),
-            shed_queue_full: self.shared.shed_queue_full.load(Ordering::Relaxed),
-            shed_expired: self.shared.shed_expired.load(Ordering::Relaxed),
-            failed: self.shared.failed.load(Ordering::Relaxed),
-            canary_requests: self.shared.canary_requests.load(Ordering::Relaxed),
-            promotions: self.shared.promotions.load(Ordering::Relaxed),
-            rollbacks: self.shared.rollbacks.load(Ordering::Relaxed),
+            batches: m.batches.get(),
+            requests: m.requests.get(),
+            swaps: m.swaps.get(),
+            shed_queue_full: m.shed_queue_full.get(),
+            shed_expired: m.shed_expired.get(),
+            failed: m.failed.get(),
+            canary_requests: m.canary_requests.get(),
+            promotions: m.promotions.get(),
+            rollbacks: m.rollbacks.get(),
         }
+    }
+
+    /// The telemetry registry this server publishes into — hand it to a
+    /// [`crate::telemetry::MetricsServer`] to expose `/metrics`, or
+    /// snapshot it directly.  The [`ServeStats`] counters and the
+    /// registry counters are the same atomics.
+    pub fn telemetry(&self) -> Arc<TelemetryRegistry> {
+        Arc::clone(&self.shared.metrics.registry)
     }
 
     /// Stop accepting work, serve what is queued, join the batcher.
@@ -612,7 +702,16 @@ impl ServerHandle {
                     self.shared.shed_expired_requests(&mut q, now);
                 }
                 if q.len() >= self.shared.max_queue {
-                    self.shared.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                    self.shared.metrics.shed_queue_full.inc();
+                    if let Some(t) = &self.shared.trace {
+                        t.emit(
+                            "shed",
+                            &[
+                                ("reason", Tv::S("queue_full")),
+                                ("queued", Tv::U(q.len() as u64)),
+                            ],
+                        );
+                    }
                     return Err(ServeError::QueueFull { queued: q.len() });
                 }
             }
@@ -620,6 +719,10 @@ impl ServerHandle {
                 .or_else(|| self.shared.default_deadline.map(|d| now + d));
             let id = self.shared.seq.fetch_add(1, Ordering::Relaxed);
             q.push_back(Request { id, x, resp: tx, enqueued: now, deadline });
+            self.shared.metrics.queue_depth.set(q.len() as f64);
+            if let Some(t) = &self.shared.trace {
+                t.emit("admit", &[("id", Tv::U(id)), ("queued", Tv::U(q.len() as u64))]);
+            }
         }
         self.shared.cv.notify_all();
         Ok(rx)
@@ -659,6 +762,7 @@ impl ServerHandle {
             match self.infer_versioned(x.clone()) {
                 Ok(r) => return Ok(r),
                 Err(e) if e.is_retryable() && attempt + 1 < attempts => {
+                    self.shared.metrics.retries.inc();
                     std::thread::sleep(policy.backoff(attempt));
                     attempt += 1;
                 }
@@ -718,20 +822,22 @@ fn run_leg(
 }
 
 /// Send `logits` rows back to the requests at `idxs`, tagged
-/// `version`; returns how many were delivered.
+/// `version`; returns how many were delivered.  Each delivery records
+/// its enqueue-to-answer latency into the e2e histogram.
 fn deliver(
     batch: &[Request],
     idxs: &[usize],
     logits: &[f32],
     out_dim: usize,
     version: u64,
+    metrics: &ServeMetrics,
 ) -> u64 {
     for (row, &i) in logits.chunks_exact(out_dim).zip(idxs) {
+        let r = &batch[i];
+        metrics.e2e_latency.observe_secs(r.enqueued.elapsed().as_secs_f64());
         // A client that gave up (dropped its Receiver) is not an
         // error for the batch.
-        let _ = batch[i]
-            .resp
-            .send(Ok(Response { version, logits: row.to_vec() }));
+        let _ = r.resp.send(Ok(Response { version, logits: row.to_vec() }));
     }
     idxs.len() as u64
 }
@@ -755,6 +861,9 @@ fn batcher_loop(
     let mut gather: Vec<f32> = Vec::new();
     let mut batch: Vec<Request> = Vec::new();
     let mut last_version = 0u64;
+    // Cached per-version canary agreement gauge (re-resolved on version
+    // change only, so the steady state never locks the registry).
+    let mut agree_gauge: Option<(u64, Arc<Gauge>)> = None;
     loop {
         batch.clear();
         // Chaos: a wedged batcher — requests age (and deadlines
@@ -809,16 +918,24 @@ fn batcher_loop(
             shared.shed_expired_requests(&mut q, Instant::now());
             let take = q.len().min(cfg.max_batch);
             batch.extend(q.drain(..take));
+            shared.metrics.queue_depth.set(q.len() as f64);
         } // queue unlocked before the forward: submitters never block on compute
         if batch.is_empty() {
             continue; // everything shed while coalescing
         }
+        shared.metrics.batch_size.observe(batch.len() as u64);
         // Resolve the model once per batch: the whole batch runs on one
         // version, and holding the Arc is what gives a concurrent
         // publish its drain semantics.
         let active = registry.current();
         if last_version != 0 && active.version != last_version {
-            shared.swaps.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.swaps.inc();
+            if let Some(t) = &shared.trace {
+                t.emit(
+                    "swap",
+                    &[("from", Tv::U(last_version)), ("to", Tv::U(active.version))],
+                );
+            }
         }
         last_version = active.version;
 
@@ -859,15 +976,19 @@ fn batcher_loop(
                 false,
             ) {
                 Some((logits, dur)) => {
-                    served +=
-                        deliver(&batch, &incumbent_idx, &logits, out_dim, active.version);
+                    served += deliver(
+                        &batch,
+                        &incumbent_idx,
+                        &logits,
+                        out_dim,
+                        active.version,
+                        &shared.metrics,
+                    );
                     incumbent_lat = per_sample_secs(dur, incumbent_idx.len());
                 }
                 None => {
                     fail(&batch, &incumbent_idx, ServeError::WorkerPanic);
-                    shared
-                        .failed
-                        .fetch_add(incumbent_idx.len() as u64, Ordering::Relaxed);
+                    shared.metrics.failed.add(incumbent_idx.len() as u64);
                 }
             }
         }
@@ -882,12 +1003,16 @@ fn batcher_loop(
                 match run_leg(&mut engine, cnet, &batch, &canary_idx, &mut gather, &inj, true)
                 {
                     Some((clogits, cdur)) => {
-                        canary_served =
-                            deliver(&batch, &canary_idx, &clogits, out_dim, cv);
+                        canary_served = deliver(
+                            &batch,
+                            &canary_idx,
+                            &clogits,
+                            out_dim,
+                            cv,
+                            &shared.metrics,
+                        );
                         served += canary_served;
-                        shared
-                            .canary_requests
-                            .fetch_add(canary_served, Ordering::Relaxed);
+                        shared.metrics.canary_requests.add(canary_served);
                         canary_lat = per_sample_secs(cdur, canary_idx.len());
                         // Shadow the same rows on the incumbent for
                         // online agreement.  Its latency feeds the
@@ -917,9 +1042,7 @@ fn batcher_loop(
                     }
                     None => {
                         fail(&batch, &canary_idx, ServeError::WorkerPanic);
-                        shared
-                            .failed
-                            .fetch_add(canary_idx.len() as u64, Ordering::Relaxed);
+                        shared.metrics.failed.add(canary_idx.len() as u64);
                     }
                 }
             }
@@ -939,10 +1062,30 @@ fn batcher_loop(
                     compared,
                 );
                 let version = ctrl.canary_version();
+                // Publish the running argmax agreement as a per-version
+                // gauge; the handle is cached while the version is
+                // stable so the registry lock is only taken on change.
+                if let Some(agreement) = ctrl.agreement() {
+                    if agree_gauge.as_ref().map(|(v, _)| *v) != Some(version) {
+                        agree_gauge = Some((
+                            version,
+                            shared.metrics.registry.gauge(
+                                "canary_agreement",
+                                &[("version", &version.to_string())],
+                            ),
+                        ));
+                    }
+                    if let Some((_, g)) = &agree_gauge {
+                        g.set(agreement);
+                    }
+                }
                 match ctrl.evaluate() {
                     Some(CanaryDecision::Promote) => match registry.promote_canary(version) {
                         Ok(()) => {
-                            shared.promotions.fetch_add(1, Ordering::Relaxed);
+                            shared.metrics.promotions.inc();
+                            if let Some(t) = &shared.trace {
+                                t.emit("promote", &[("version", Tv::U(version))]);
+                            }
                             ctrl.resolve(CanaryOutcome::Promoted { version });
                         }
                         Err(e) => {
@@ -950,24 +1093,45 @@ fn batcher_loop(
                             // action): end the experiment safely on
                             // the incumbent.
                             let _ = registry.end_canary(version);
-                            shared.rollbacks.fetch_add(1, Ordering::Relaxed);
-                            ctrl.resolve(CanaryOutcome::RolledBack {
-                                version,
-                                reason: format!("promotion refused: {e}"),
-                            });
+                            let reason = format!("promotion refused: {e}");
+                            shared.metrics.rollbacks.inc();
+                            if let Some(t) = &shared.trace {
+                                t.emit(
+                                    "rollback",
+                                    &[("version", Tv::U(version)), ("reason", Tv::S(&reason))],
+                                );
+                            }
+                            ctrl.resolve(CanaryOutcome::RolledBack { version, reason });
                         }
                     },
                     Some(CanaryDecision::Rollback { reason }) => {
                         let _ = registry.end_canary(version);
-                        shared.rollbacks.fetch_add(1, Ordering::Relaxed);
+                        shared.metrics.rollbacks.inc();
+                        if let Some(t) = &shared.trace {
+                            t.emit(
+                                "rollback",
+                                &[("version", Tv::U(version)), ("reason", Tv::S(&reason))],
+                            );
+                        }
                         ctrl.resolve(CanaryOutcome::RolledBack { version, reason });
                     }
                     None => {}
                 }
             }
         }
-        shared.batches.fetch_add(1, Ordering::Relaxed);
-        shared.requests.fetch_add(served, Ordering::Relaxed);
+        shared.metrics.batches.inc();
+        shared.metrics.requests.add(served);
+        if let Some(t) = &shared.trace {
+            t.emit(
+                "batch",
+                &[
+                    ("size", Tv::U(batch.len() as u64)),
+                    ("served", Tv::U(served)),
+                    ("version", Tv::U(active.version)),
+                    ("canary_served", Tv::U(canary_served)),
+                ],
+            );
+        }
     }
 }
 

@@ -1,0 +1,981 @@
+//! Live telemetry: lock-free metrics core, a named-metric registry, a
+//! Prometheus-style scrape endpoint, and a structured JSONL event trace.
+//!
+//! The paper's argument is that quantization cost must be *quantified*
+//! (bits, MACs, footprint) to be traded against accuracy; this module is
+//! the serving-side analogue — you cannot steer a low-bit fleet you cannot
+//! measure. Three primitives, all safe to hammer from many threads:
+//!
+//! * [`Counter`] — monotonically increasing `AtomicU64`.
+//! * [`Gauge`] — last-write-wins `f64` (bit-cast into an `AtomicU64`).
+//! * [`Histogram`] — fixed log-bucket histogram over `u64` units with
+//!   exact-by-construction bucket placement and interpolated p50/p95/p99
+//!   extraction. Latency histograms record nanoseconds and carry a
+//!   `scale` (1e-9) so rendered quantiles read in seconds.
+//!
+//! A [`Registry`] names metrics (with `{key="value"}` labels), renders a
+//! Prometheus text exposition and a JSON snapshot (via [`crate::util::json`]),
+//! and is served over HTTP by [`MetricsServer`] (`GET /metrics`,
+//! `GET /metrics.json`) on a plain `std::net::TcpListener` — no external
+//! dependencies. [`TraceWriter`] appends typed lifecycle events
+//! (admit/shed/batch/swap/promote/rollback) as JSONL with monotonic
+//! microsecond timestamps; `scripts/trace_summarize.py` consumes them.
+//!
+//! Recording is wait-free (a handful of `Relaxed` atomic RMWs); rendering
+//! and quantile extraction allocate and are meant for scrape paths only.
+
+use std::fmt::Write as _;
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonically increasing event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (queue depth, agreement ratio, ...).
+///
+/// Stores the `f64` bit pattern in an `AtomicU64` so readers never see a
+/// torn value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of histogram buckets: 4 exact unit buckets (0..4) plus 4
+/// sub-buckets per power of two up to `u64::MAX` (exponents 2..=63).
+pub const HIST_BUCKETS: usize = 252;
+
+/// Bucket index for a raw value. Values below 4 get exact unit buckets;
+/// above that each power-of-two octave is split into 4 sub-buckets keyed
+/// by the two bits below the leading one, so relative bucket width is at
+/// most 25% everywhere.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let exp = 63 - v.leading_zeros() as usize; // >= 2
+    let sub = ((v >> (exp - 2)) & 3) as usize;
+    exp * 4 + sub - 4
+}
+
+/// Half-open raw-unit range `[lo, hi)` covered by bucket `idx`. The top
+/// bucket saturates `hi` at `u64::MAX`.
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    assert!(idx < HIST_BUCKETS, "bucket index {idx} out of range");
+    if idx < 4 {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let exp = (idx + 4) / 4;
+    let sub = (idx + 4) % 4;
+    let width = 1u64 << (exp - 2);
+    let lo = ((4 + sub) as u64) << (exp - 2);
+    (lo, lo.saturating_add(width))
+}
+
+/// Fixed log-bucket histogram over `u64` units.
+///
+/// Recording is a pair of relaxed `fetch_add`s — no locks, no allocation.
+/// `scale` converts raw units to display units at read time (latency
+/// histograms record nanoseconds with `scale = 1e-9` so quantiles and
+/// sums render in seconds; size histograms use the default scale of 1).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    scale: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::with_scale(1.0)
+    }
+
+    pub fn with_scale(scale: f64) -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            scale,
+        }
+    }
+
+    /// Record one raw-unit observation.
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in seconds as integer nanoseconds. Pair with
+    /// `with_scale(1e-9)` so rendered values read back in seconds.
+    #[inline]
+    pub fn observe_secs(&self, secs: f64) {
+        self.observe((secs.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations in display units (`raw_sum * scale`).
+    pub fn sum(&self) -> f64 {
+        self.sum.load(Ordering::Relaxed) as f64 * self.scale
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() / n as f64
+        }
+    }
+
+    /// Quantile `q` in `[0, 1]`, in display units. Walks cumulative bucket
+    /// counts to the target rank `max(1, ceil... q*n)` and interpolates
+    /// linearly inside the landing bucket; exact for values < 4 raw units
+    /// and within one sub-bucket (<= 25% relative) everywhere else.
+    /// Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.quantile_raw(q) * self.scale
+    }
+
+    fn quantile_raw(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).max(1.0);
+        let mut cum = 0u64;
+        for idx in 0..HIST_BUCKETS {
+            let c = self.buckets[idx].load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= target {
+                let (lo, hi) = bucket_bounds(idx);
+                let frac = (target - cum as f64) / c as f64;
+                return lo as f64 + (hi - lo) as f64 * frac;
+            }
+            cum += c;
+        }
+        // Rounding pushed the target past the last populated bucket.
+        bucket_bounds(HIST_BUCKETS - 1).1 as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum Kind {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Kind {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Kind::Counter(_) => "counter",
+            Kind::Gauge(_) => "gauge",
+            Kind::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    kind: Kind,
+}
+
+/// Point-in-time value of one registered metric.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SampleValue {
+    Counter(u64),
+    Gauge(f64),
+    /// Histogram summary in display units (`sum`, quantiles scaled).
+    Histogram {
+        count: u64,
+        sum: f64,
+        p50: f64,
+        p95: f64,
+        p99: f64,
+    },
+}
+
+/// One metric in a [`Registry::snapshot`].
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: SampleValue,
+}
+
+/// Named metrics with optional `{key="value"}` labels.
+///
+/// `counter`/`gauge`/`histogram` are get-or-register: the same
+/// (name, labels) pair always returns the same `Arc` handle, so callers
+/// keep cheap clones on their hot paths and the registry is only locked
+/// at registration and scrape time. Registering the same (name, labels)
+/// under a different metric type panics — that is always a bug.
+#[derive(Debug, Default)]
+pub struct Registry {
+    inner: Mutex<Vec<Entry>>,
+}
+
+fn labels_eq(have: &[(String, String)], want: &[(&str, &str)]) -> bool {
+    have.len() == want.len()
+        && have
+            .iter()
+            .zip(want)
+            .all(|((hk, hv), (wk, wv))| hk == wk && hv == wv)
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.get_or_register(name, labels, || Kind::Counter(Arc::new(Counter::new()))) {
+            Kind::Counter(c) => c,
+            other => panic!(
+                "telemetry: '{name}' already registered as {}",
+                other.type_name()
+            ),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.get_or_register(name, labels, || Kind::Gauge(Arc::new(Gauge::new()))) {
+            Kind::Gauge(g) => g,
+            other => panic!(
+                "telemetry: '{name}' already registered as {}",
+                other.type_name()
+            ),
+        }
+    }
+
+    /// Register (or fetch) a histogram. `scale` applies on the *first*
+    /// registration; later fetches reuse the existing histogram.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)], scale: f64) -> Arc<Histogram> {
+        match self.get_or_register(name, labels, || {
+            Kind::Histogram(Arc::new(Histogram::with_scale(scale)))
+        }) {
+            Kind::Histogram(h) => h,
+            other => panic!(
+                "telemetry: '{name}' already registered as {}",
+                other.type_name()
+            ),
+        }
+    }
+
+    fn get_or_register(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Kind,
+    ) -> Kind {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner
+            .iter()
+            .find(|e| e.name == name && labels_eq(&e.labels, labels))
+        {
+            return e.kind.clone();
+        }
+        let kind = make();
+        inner.push(Entry {
+            name: name.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            kind: kind.clone(),
+        });
+        kind
+    }
+
+    /// Point-in-time snapshot of every registered metric, sorted by
+    /// (name, labels) for deterministic rendering.
+    pub fn snapshot(&self) -> Vec<Sample> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<Sample> = inner
+            .iter()
+            .map(|e| Sample {
+                name: e.name.clone(),
+                labels: e.labels.clone(),
+                value: match &e.kind {
+                    Kind::Counter(c) => SampleValue::Counter(c.get()),
+                    Kind::Gauge(g) => SampleValue::Gauge(g.get()),
+                    Kind::Histogram(h) => SampleValue::Histogram {
+                        count: h.count(),
+                        sum: h.sum(),
+                        p50: h.quantile(0.50),
+                        p95: h.quantile(0.95),
+                        p99: h.quantile(0.99),
+                    },
+                },
+            })
+            .collect();
+        out.sort_by(|a, b| (&a.name, &a.labels).cmp(&(&b.name, &b.labels)));
+        out
+    }
+
+    /// Prometheus text exposition. Histograms render as summaries
+    /// (`{quantile="0.5"}` series plus `_sum`/`_count`) rather than 252
+    /// `_bucket` lines.
+    pub fn render_prometheus(&self) -> String {
+        let samples = self.snapshot();
+        let mut out = String::new();
+        let mut last_name = "";
+        for s in &samples {
+            if s.name != last_name {
+                let ty = match s.value {
+                    SampleValue::Counter(_) => "counter",
+                    SampleValue::Gauge(_) => "gauge",
+                    SampleValue::Histogram { .. } => "summary",
+                };
+                let _ = writeln!(out, "# TYPE {} {}", s.name, ty);
+            }
+            match &s.value {
+                SampleValue::Counter(v) => {
+                    let _ = writeln!(out, "{}{} {}", s.name, prom_labels(&s.labels, None), v);
+                }
+                SampleValue::Gauge(v) => {
+                    let _ = writeln!(out, "{}{} {}", s.name, prom_labels(&s.labels, None), v);
+                }
+                SampleValue::Histogram {
+                    count,
+                    sum,
+                    p50,
+                    p95,
+                    p99,
+                } => {
+                    for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+                        let _ = writeln!(
+                            out,
+                            "{}{} {}",
+                            s.name,
+                            prom_labels(&s.labels, Some(q)),
+                            v
+                        );
+                    }
+                    let _ =
+                        writeln!(out, "{}_sum{} {}", s.name, prom_labels(&s.labels, None), sum);
+                    let _ = writeln!(
+                        out,
+                        "{}_count{} {}",
+                        s.name,
+                        prom_labels(&s.labels, None),
+                        count
+                    );
+                }
+            }
+            last_name = &s.name;
+        }
+        out
+    }
+
+    /// JSON snapshot: `{"metrics": [{name, labels, type, ...}, ...]}`.
+    pub fn render_json(&self) -> Json {
+        let metrics = self.snapshot().into_iter().map(|smp| {
+            let labels = Json::Obj(
+                smp.labels
+                    .iter()
+                    .map(|(k, v)| (k.clone(), json::s(v)))
+                    .collect(),
+            );
+            let mut pairs = vec![("name", json::s(&smp.name)), ("labels", labels)];
+            match smp.value {
+                SampleValue::Counter(v) => {
+                    pairs.push(("type", json::s("counter")));
+                    pairs.push(("value", json::num(v as f64)));
+                }
+                SampleValue::Gauge(v) => {
+                    pairs.push(("type", json::s("gauge")));
+                    pairs.push(("value", json::num(v)));
+                }
+                SampleValue::Histogram {
+                    count,
+                    sum,
+                    p50,
+                    p95,
+                    p99,
+                } => {
+                    pairs.push(("type", json::s("histogram")));
+                    pairs.push(("count", json::num(count as f64)));
+                    pairs.push(("sum", json::num(sum)));
+                    pairs.push(("p50", json::num(p50)));
+                    pairs.push(("p95", json::num(p95)));
+                    pairs.push(("p99", json::num(p99)));
+                }
+            }
+            json::obj(pairs)
+        });
+        json::obj(vec![("metrics", json::arr(metrics))])
+    }
+}
+
+/// Escape a label value per the Prometheus exposition rules.
+fn prom_escape(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn prom_labels(labels: &[(String, String)], quantile: Option<&str>) -> String {
+    if labels.is_empty() && quantile.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", prom_escape(v)))
+        .collect();
+    if let Some(q) = quantile {
+        parts.push(format!("quantile=\"{q}\""));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+// ---------------------------------------------------------------------------
+// HTTP scrape endpoint
+// ---------------------------------------------------------------------------
+
+/// Minimal HTTP/1.1 scrape endpoint over `std::net::TcpListener`.
+///
+/// Routes: `GET /metrics` (Prometheus text) and `GET /metrics.json`
+/// (JSON snapshot). One request per connection, `Connection: close`,
+/// explicit `Content-Length`. The accept loop polls a non-blocking
+/// listener every 10ms so `shutdown()` returns promptly.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9188`; port 0 picks a free port) and
+    /// serve `registry` until shutdown/drop.
+    pub fn start(addr: &str, registry: Arc<Registry>) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("metrics: bind {addr}"))?;
+        let local = listener.local_addr().context("metrics: local_addr")?;
+        listener
+            .set_nonblocking(true)
+            .context("metrics: set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("bitprune-metrics".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => serve_conn(stream, &registry),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+            })
+            .context("metrics: spawn")?;
+        Ok(MetricsServer {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, registry: &Registry) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    // Read until end of request headers (we ignore any body).
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 8192 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let raw_path = parts.next().unwrap_or("");
+    let path = raw_path.split('?').next().unwrap_or("");
+    let (status, ctype, body) = match (method, path) {
+        ("GET", "/metrics") => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            registry.render_prometheus(),
+        ),
+        ("GET", "/metrics.json") => (
+            "200 OK",
+            "application/json",
+            registry.render_json().to_string(),
+        ),
+        ("GET", _) => ("404 Not Found", "text/plain", "not found\n".to_string()),
+        _ => (
+            "405 Method Not Allowed",
+            "text/plain",
+            "method not allowed\n".to_string(),
+        ),
+    };
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.flush();
+}
+
+/// One-shot HTTP GET against a [`MetricsServer`]-style endpoint; returns
+/// the response body. Used by `bitprune metrics` and the endpoint tests.
+pub fn http_get(addr: &str, path: &str) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("metrics: connect {addr}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    write!(
+        stream,
+        "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let (head, body) = resp
+        .split_once("\r\n\r\n")
+        .context("metrics: malformed HTTP response")?;
+    let status_line = head.lines().next().unwrap_or("");
+    if !status_line.contains(" 200 ") {
+        bail!("metrics: GET {path} -> {status_line}");
+    }
+    Ok(body.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// JSONL event trace
+// ---------------------------------------------------------------------------
+
+/// A typed trace field value.
+#[derive(Debug, Clone)]
+pub enum Tv<'a> {
+    U(u64),
+    F(f64),
+    S(&'a str),
+    B(bool),
+}
+
+/// Append-only JSONL event trace with monotonic microsecond timestamps.
+///
+/// Each line is a flat JSON object: `{"event": "...", "t_us": N, ...}`.
+/// Events are serialized under a mutex through a `BufWriter`; `emit` is
+/// intended for lifecycle edges (admit/shed/batch/swap/promote/rollback),
+/// not per-MAC hot paths, and tracing is opt-in via `--trace-out`.
+pub struct TraceWriter {
+    out: Mutex<std::io::BufWriter<std::fs::File>>,
+    origin: Instant,
+}
+
+impl TraceWriter {
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("trace: create {}", path.display()))?;
+        Ok(TraceWriter {
+            out: Mutex::new(std::io::BufWriter::new(file)),
+            origin: Instant::now(),
+        })
+    }
+
+    /// Microseconds since this writer was created.
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    pub fn emit(&self, event: &str, fields: &[(&str, Tv)]) {
+        let mut pairs: Vec<(&str, Json)> = Vec::with_capacity(fields.len() + 2);
+        pairs.push(("event", json::s(event)));
+        pairs.push(("t_us", json::num(self.now_us() as f64)));
+        for (k, v) in fields {
+            let jv = match v {
+                Tv::U(n) => json::num(*n as f64),
+                Tv::F(x) => json::num(*x),
+                Tv::S(s) => json::s(s),
+                Tv::B(b) => Json::Bool(*b),
+            };
+            pairs.push((k, jv));
+        }
+        let line = json::obj(pairs).to_string();
+        let mut out = self.out.lock().unwrap();
+        let _ = out.write_all(line.as_bytes());
+        let _ = out.write_all(b"\n");
+    }
+
+    pub fn flush(&self) {
+        let _ = self.out.lock().unwrap().flush();
+    }
+}
+
+impl Drop for TraceWriter {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_pinned() {
+        // Exact unit buckets below 4.
+        for v in 0u64..4 {
+            assert_eq!(bucket_of(v), v as usize);
+            assert_eq!(bucket_bounds(v as usize), (v, v + 1));
+        }
+        // First octaves: 4 sub-buckets per power of two.
+        let pins: &[(u64, usize)] = &[
+            (4, 4),
+            (5, 5),
+            (6, 6),
+            (7, 7),
+            (8, 8),
+            (9, 8),
+            (10, 9),
+            (11, 9),
+            (12, 10),
+            (15, 11),
+            (16, 12),
+            (19, 12),
+            (20, 13),
+            (1 << 20, 4 * 20 - 4),
+        ];
+        for &(v, idx) in pins {
+            assert_eq!(bucket_of(v), idx, "bucket_of({v})");
+        }
+        assert_eq!(bucket_bounds(8), (8, 10));
+        assert_eq!(bucket_bounds(12), (16, 20));
+        // Top bucket saturates rather than overflowing.
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        let (lo, hi) = bucket_bounds(HIST_BUCKETS - 1);
+        assert!(lo < hi && hi == u64::MAX);
+    }
+
+    #[test]
+    fn every_value_lands_inside_its_bucket_bounds() {
+        let mut vals: Vec<u64> = (0..200).collect();
+        for e in 2..63 {
+            let b = 1u64 << e;
+            vals.extend_from_slice(&[b - 1, b, b + 1, b + (b >> 1)]);
+        }
+        vals.push(u64::MAX);
+        for v in vals {
+            let idx = bucket_of(v);
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(
+                lo <= v && (v < hi || hi == u64::MAX),
+                "v={v} idx={idx} bounds=({lo},{hi})"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 5050.0).abs() < 1e-9);
+        // p50 rank lands among values ~50; bucket [48,56) interpolated.
+        let p50 = h.quantile(0.50);
+        assert!((45.0..=56.0).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((90.0..=104.0).contains(&p99), "p99={p99}");
+        // Quantiles are monotone in q.
+        let qs: Vec<f64> = [0.0, 0.25, 0.5, 0.75, 0.95, 0.99, 1.0]
+            .iter()
+            .map(|&q| h.quantile(q))
+            .collect();
+        assert!(qs.windows(2).all(|w| w[0] <= w[1]), "{qs:?}");
+        // Empty histogram reports zeros.
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile(0.99), 0.0);
+        assert_eq!(empty.count(), 0);
+    }
+
+    #[test]
+    fn single_bucket_quantiles_stay_in_bounds() {
+        let h = Histogram::new();
+        for _ in 0..1000 {
+            h.observe(42);
+        }
+        let (lo, hi) = bucket_bounds(bucket_of(42));
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!(
+                v >= lo as f64 && v <= hi as f64,
+                "q={q} v={v} bounds=({lo},{hi})"
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_histogram_reads_in_seconds() {
+        let h = Histogram::with_scale(1e-9);
+        h.observe_secs(0.001); // 1ms = 1_000_000 ns
+        assert_eq!(h.count(), 1);
+        let p50 = h.quantile(0.5);
+        // Within one sub-bucket (<=25%) of 1ms.
+        assert!((0.0008..=0.0013).contains(&p50), "p50={p50}");
+        assert!((h.sum() - 0.001).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_get_or_register_returns_same_handle() {
+        let r = Registry::new();
+        let a = r.counter("requests_total", &[("version", "1")]);
+        let b = r.counter("requests_total", &[("version", "1")]);
+        let c = r.counter("requests_total", &[("version", "2")]);
+        a.inc();
+        b.add(2);
+        c.inc();
+        assert_eq!(a.get(), 3);
+        assert_eq!(c.get(), 1);
+        assert_eq!(r.snapshot().len(), 2);
+    }
+
+    #[test]
+    fn prometheus_exposition_golden() {
+        let r = Registry::new();
+        r.counter("serve_requests_total", &[]).add(42);
+        r.gauge("serve_queue_depth", &[]).set(3.0);
+        r.counter("serve_shed_total", &[("reason", "queue_full")]).inc();
+        let h = r.histogram("serve_batch_size", &[], 1.0);
+        for _ in 0..4 {
+            h.observe(2);
+        }
+        let text = r.render_prometheus();
+        let expected = "\
+# TYPE serve_batch_size summary
+serve_batch_size{quantile=\"0.5\"} 2.5
+serve_batch_size{quantile=\"0.95\"} 2.95
+serve_batch_size{quantile=\"0.99\"} 2.99
+serve_batch_size_sum 8
+serve_batch_size_count 4
+# TYPE serve_queue_depth gauge
+serve_queue_depth 3
+# TYPE serve_requests_total counter
+serve_requests_total 42
+# TYPE serve_shed_total counter
+serve_shed_total{reason=\"queue_full\"} 1
+";
+        assert_eq!(text, expected);
+    }
+
+    #[test]
+    fn prometheus_label_escaping() {
+        let r = Registry::new();
+        r.counter("weird_total", &[("path", "a\\b\"c\nd")]).inc();
+        let text = r.render_prometheus();
+        assert!(
+            text.contains("weird_total{path=\"a\\\\b\\\"c\\nd\"} 1"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn json_snapshot_roundtrips_through_util_json() {
+        let r = Registry::new();
+        r.counter("requests_total", &[("version", "3")]).add(7);
+        r.gauge("agreement", &[]).set(0.5);
+        let h = r.histogram("latency_seconds", &[], 1e-9);
+        h.observe_secs(0.002);
+        let text = r.render_json().to_string();
+        let parsed = json::parse(&text).unwrap();
+        let metrics = parsed.get("metrics").unwrap().as_arr().unwrap();
+        assert_eq!(metrics.len(), 3);
+        let by_name = |n: &str| {
+            metrics
+                .iter()
+                .find(|m| m.get("name").unwrap().as_str().unwrap() == n)
+                .unwrap()
+        };
+        let req = by_name("requests_total");
+        assert_eq!(req.get("type").unwrap().as_str().unwrap(), "counter");
+        assert_eq!(req.get("value").unwrap().as_f64().unwrap(), 7.0);
+        assert_eq!(
+            req.get("labels")
+                .unwrap()
+                .get("version")
+                .unwrap()
+                .as_str()
+                .unwrap(),
+            "3"
+        );
+        let lat = by_name("latency_seconds");
+        assert_eq!(lat.get("count").unwrap().as_f64().unwrap(), 1.0);
+        assert!(lat.get("p50").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(by_name("agreement").get("value").unwrap().as_f64().unwrap(), 0.5);
+    }
+
+    #[test]
+    fn endpoint_serves_text_and_json() {
+        let registry = Arc::new(Registry::new());
+        registry.counter("up_total", &[]).inc();
+        let mut srv = MetricsServer::start("127.0.0.1:0", registry.clone()).unwrap();
+        let addr = srv.addr().to_string();
+        let text = http_get(&addr, "/metrics").unwrap();
+        assert!(text.contains("up_total 1"), "{text}");
+        let body = http_get(&addr, "/metrics.json").unwrap();
+        let parsed = json::parse(&body).unwrap();
+        assert_eq!(
+            parsed.get("metrics").unwrap().as_arr().unwrap().len(),
+            1
+        );
+        assert!(http_get(&addr, "/nope").is_err());
+        srv.shutdown();
+        // After shutdown the port stops accepting (bind a fresh one to
+        // prove shutdown released the listener thread).
+        let again = MetricsServer::start("127.0.0.1:0", registry).unwrap();
+        drop(again);
+    }
+
+    #[test]
+    fn trace_writer_emits_parseable_jsonl() {
+        let dir = std::env::temp_dir().join("bitprune_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        {
+            let tw = TraceWriter::create(&path).unwrap();
+            tw.emit("admit", &[("id", Tv::U(1))]);
+            tw.emit(
+                "shed",
+                &[("id", Tv::U(2)), ("reason", Tv::S("queue_full"))],
+            );
+            tw.emit(
+                "batch",
+                &[
+                    ("size", Tv::U(8)),
+                    ("version", Tv::U(1)),
+                    ("canary", Tv::B(false)),
+                    ("forward_s", Tv::F(0.001)),
+                ],
+            );
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let mut last_t = 0.0;
+        for line in &lines {
+            let v = json::parse(line).unwrap();
+            let t = v.get("t_us").unwrap().as_f64().unwrap();
+            assert!(t >= last_t, "timestamps must be monotone");
+            last_t = t;
+            v.get("event").unwrap().as_str().unwrap();
+        }
+        let shed = json::parse(lines[1]).unwrap();
+        assert_eq!(shed.get("reason").unwrap().as_str().unwrap(), "queue_full");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -66,6 +66,19 @@ impl BenchResult {
         percentile(&self.samples, p)
     }
 
+    /// The samples loaded into a nanosecond-bucketed
+    /// [`crate::telemetry::Histogram`] reading in seconds — the same
+    /// implementation behind the serve endpoint's
+    /// `serve_request_latency_seconds`, so bench JSONL percentiles and
+    /// scraped percentiles can never drift apart.
+    pub fn latency_histogram(&self) -> crate::telemetry::Histogram {
+        let h = crate::telemetry::Histogram::with_scale(1e-9);
+        for &s in &self.samples {
+            h.observe_secs(s);
+        }
+        h
+    }
+
     pub fn throughput(&self) -> Option<f64> {
         self.elems_per_iter.map(|e| e / self.mean)
     }
@@ -121,12 +134,18 @@ impl BenchResult {
         let tp = self
             .throughput()
             .map_or("null".to_string(), |t| format!("{t:.3}"));
+        // mean/median stay sample-exact (`scripts/bench_compare.sh`
+        // gates on median_s); the tail percentiles come from the shared
+        // telemetry histogram so this record and a scraped
+        // `serve_request_latency_seconds` agree to bucket resolution.
+        let hist = self.latency_histogram();
         let mut j = String::from("{");
         j.push_str(&format!("\"name\":\"{esc}\","));
         j.push_str(&format!("\"mean_s\":{:.9},", self.mean));
         j.push_str(&format!("\"median_s\":{:.9},", self.median));
-        j.push_str(&format!("\"p95_s\":{:.9},", self.p95));
-        j.push_str(&format!("\"p99_s\":{:.9},", self.percentile(99.0)));
+        j.push_str(&format!("\"p50_s\":{:.9},", hist.quantile(0.50)));
+        j.push_str(&format!("\"p95_s\":{:.9},", hist.quantile(0.95)));
+        j.push_str(&format!("\"p99_s\":{:.9},", hist.quantile(0.99)));
         j.push_str(&format!("\"samples\":{},", self.samples.len()));
         j.push_str(&format!("\"elems_per_iter\":{elems},"));
         j.push_str(&format!("\"throughput_elems_per_s\":{tp}"));
@@ -324,6 +343,9 @@ mod tests {
         let j = r.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
         assert!(j.contains("\"mean_s\":1.000000000"), "{j}");
+        assert!(j.contains("\"median_s\":1.000000000"), "{j}");
+        assert!(j.contains("\"p50_s\":"), "{j}");
+        assert!(j.contains("\"p95_s\":"), "{j}");
         assert!(j.contains("\"p99_s\":"), "{j}");
         assert!(j.contains("\"samples\":2"), "{j}");
         assert!(j.contains("\"elems_per_iter\":1000"), "{j}");
@@ -332,5 +354,39 @@ mod tests {
         // No-throughput records serialize nulls.
         let r2 = BenchResult { elems_per_iter: None, ..r };
         assert!(r2.to_json().contains("\"throughput_elems_per_s\":null"));
+    }
+
+    #[test]
+    fn jsonl_percentiles_share_the_telemetry_histogram() {
+        // Identical samples land in one nanosecond bucket, so every
+        // histogram-derived percentile must stay inside that bucket's
+        // bounds — the bucket-boundary behavior the serve endpoint
+        // exhibits, pinned here against the JSONL record.
+        use crate::telemetry::{bucket_bounds, bucket_of};
+        let s = 1.000e-3; // 1ms -> exactly 1_000_000ns, a bucket lower bound
+        let r = BenchResult::from_samples("pin", vec![s; 8], None);
+        let h = r.latency_histogram();
+        assert_eq!(h.count(), 8);
+        let (lo, hi) = bucket_bounds(bucket_of(1_000_000));
+        assert!(lo <= 1_000_000 && 1_000_000 < hi);
+        for q in [0.50, 0.95, 0.99] {
+            let v = h.quantile(q);
+            assert!(
+                v >= lo as f64 * 1e-9 && v <= hi as f64 * 1e-9,
+                "q{q}: {v} outside bucket [{lo}, {hi}]ns"
+            );
+        }
+        // The JSONL record carries those same histogram values.
+        let j = r.to_json();
+        let field = |key: &str| -> f64 {
+            let tail = j.split(&format!("\"{key}\":")).nth(1).unwrap();
+            tail.split(&[',', '}'][..]).next().unwrap().parse().unwrap()
+        };
+        // (to_json prints 9 decimals, so compare at that resolution.)
+        assert!((field("p50_s") - h.quantile(0.50)).abs() < 1e-9);
+        assert!((field("p95_s") - h.quantile(0.95)).abs() < 1e-9);
+        assert!((field("p99_s") - h.quantile(0.99)).abs() < 1e-9);
+        // Sample-exact fields are untouched by the histogram.
+        assert!((field("median_s") - s).abs() < 1e-12);
     }
 }

@@ -76,6 +76,9 @@ pub struct WorkerPool {
     ctx: WorkerCtx,
     workers: usize,
     respawns: AtomicU64,
+    /// Optional telemetry counter bumped alongside `respawns` (the
+    /// serve subsystem publishes it as `pool_respawns_total`).
+    respawn_counter: Mutex<Option<Arc<crate::telemetry::Counter>>>,
 }
 
 impl WorkerPool {
@@ -111,6 +114,7 @@ impl WorkerPool {
             ctx,
             workers,
             respawns: AtomicU64::new(0),
+            respawn_counter: Mutex::new(None),
         }
     }
 
@@ -126,6 +130,14 @@ impl WorkerPool {
     /// How many dead worker threads have been replaced so far.
     pub fn respawns(&self) -> u64 {
         self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Mirror every future respawn into `counter` (a telemetry handle,
+    /// typically registered as `pool_respawns_total`).  The internal
+    /// [`Self::respawns`] ledger is unaffected.
+    pub fn publish_respawns(&self, counter: Arc<crate::telemetry::Counter>) {
+        *self.respawn_counter.lock().unwrap_or_else(|p| p.into_inner()) =
+            Some(counter);
     }
 
     /// Run `jobs` on the pool and block until all of them have
@@ -212,6 +224,13 @@ impl WorkerPool {
                 let dead = std::mem::replace(h, fresh);
                 let _ = dead.join();
                 self.respawns.fetch_add(1, Ordering::Relaxed);
+                if let Some(c) = &*self
+                    .respawn_counter
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner())
+                {
+                    c.inc();
+                }
             }
         }
     }

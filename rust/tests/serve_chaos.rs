@@ -103,6 +103,7 @@ fn no_request_silently_lost_under_full_chaos() {
         }
     }
     assert_eq!(served + queue_full + expired + panicked, total as u64);
+    let telemetry = server.telemetry();
     let stats = server.shutdown();
     // The ledger must balance exactly: what clients saw is what the
     // server counted.
@@ -110,6 +111,36 @@ fn no_request_silently_lost_under_full_chaos() {
     assert_eq!(stats.shed_queue_full, queue_full);
     assert_eq!(stats.shed_expired, expired);
     assert_eq!(stats.failed, panicked);
+    // And the scrape-able telemetry registry is the same ledger: every
+    // counter equals its ServeStats field, even under full chaos.
+    let counter = |name: &str, label: Option<(&str, &str)>| -> u64 {
+        telemetry
+            .snapshot()
+            .into_iter()
+            .find(|s| {
+                s.name == name
+                    && label.map_or(true, |(k, v)| {
+                        s.labels.iter().any(|(lk, lv)| lk == k && lv == v)
+                    })
+            })
+            .and_then(|s| match s.value {
+                bitprune::telemetry::SampleValue::Counter(v) => Some(v),
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("counter '{name}' missing from registry"))
+    };
+    assert_eq!(counter("serve_requests_total", None), stats.requests);
+    assert_eq!(counter("serve_batches_total", None), stats.batches);
+    assert_eq!(counter("serve_swaps_total", None), stats.swaps);
+    assert_eq!(
+        counter("serve_shed_total", Some(("reason", "queue_full"))),
+        stats.shed_queue_full
+    );
+    assert_eq!(
+        counter("serve_shed_total", Some(("reason", "expired"))),
+        stats.shed_expired
+    );
+    assert_eq!(counter("serve_failed_total", None), stats.failed);
     assert!(served > 0, "chaos must not stop the server from serving");
     // The injectors actually fired (the test would be vacuous otherwise).
     assert!(chaos.injected_stalls() > 0, "no stall was injected");

@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Summarize a `bitprune serve --trace-out` JSONL lifecycle trace.
+
+Each trace line is one event object with at least `event` (type tag)
+and `t_us` (monotonic microseconds since the server started):
+
+    admit    {id, queued}
+    shed     {reason: "queue_full"|"expired", ...}
+    batch    {size, served, version, canary_served}
+    swap     {from, to}
+    promote  {version}
+    rollback {version, reason}
+
+Usage: scripts/trace_summarize.py TRACE.jsonl
+
+Prints per-event counts, batch-size statistics, the served-version
+timeline, and the canary verdict if one resolved.  Exits non-zero on a
+malformed line (a trace that cannot be parsed is a bug, not noise) or
+on an empty trace.
+"""
+
+import json
+import sys
+
+
+def die(msg):
+    print(f"trace_summarize: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def main():
+    if len(sys.argv) != 2:
+        die("usage: trace_summarize.py TRACE.jsonl")
+    path = sys.argv[1]
+    counts = {}
+    batch_sizes = []
+    served_total = 0
+    canary_served = 0
+    versions = []  # (first_t_us, version) in arrival order
+    sheds = {}
+    outcome = None
+    last_t = -1.0
+    n = 0
+    try:
+        fh = open(path, encoding="utf-8")
+    except OSError as e:
+        die(f"cannot open {path}: {e}")
+    with fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as e:
+                die(f"{path}:{lineno}: malformed JSON ({e})")
+            if not isinstance(ev, dict) or "event" not in ev or "t_us" not in ev:
+                die(f"{path}:{lineno}: missing 'event'/'t_us' fields")
+            n += 1
+            kind = ev["event"]
+            counts[kind] = counts.get(kind, 0) + 1
+            t = float(ev["t_us"])
+            if t < last_t:
+                die(f"{path}:{lineno}: non-monotonic t_us ({t} after {last_t})")
+            last_t = t
+            if kind == "batch":
+                batch_sizes.append(int(ev["size"]))
+                served_total += int(ev.get("served", 0))
+                canary_served += int(ev.get("canary_served", 0))
+                v = ev.get("version")
+                if v is not None and (not versions or versions[-1][1] != v):
+                    versions.append((t, v))
+            elif kind == "shed":
+                reason = ev.get("reason", "?")
+                sheds[reason] = sheds.get(reason, 0) + 1
+            elif kind == "promote":
+                outcome = f"canary v{ev.get('version')} PROMOTED"
+            elif kind == "rollback":
+                outcome = (
+                    f"canary v{ev.get('version')} ROLLED BACK"
+                    f" ({ev.get('reason', 'unspecified')})"
+                )
+    if n == 0:
+        die(f"{path}: empty trace")
+
+    span_s = last_t / 1e6
+    print(f"trace: {path}")
+    print(f"  {n} events over {span_s:.3f}s")
+    for kind in sorted(counts):
+        print(f"  {kind:<10} {counts[kind]}")
+    if batch_sizes:
+        batch_sizes.sort()
+        mean = sum(batch_sizes) / len(batch_sizes)
+        p95 = batch_sizes[min(len(batch_sizes) - 1, int(0.95 * len(batch_sizes)))]
+        print(
+            f"  batches: {len(batch_sizes)} | size mean {mean:.2f}"
+            f" min {batch_sizes[0]} p95 {p95} max {batch_sizes[-1]}"
+        )
+        print(f"  served: {served_total} rows ({canary_served} by canary)")
+        if span_s > 0:
+            print(f"  throughput: {served_total / span_s:.0f} req/s over the trace")
+    if versions:
+        timeline = " -> ".join(
+            f"v{int(v)}@{t / 1e6:.3f}s" for t, v in versions
+        )
+        print(f"  version timeline: {timeline}")
+    if outcome:
+        print(f"  outcome: {outcome}")
+
+
+if __name__ == "__main__":
+    main()
