@@ -5,7 +5,7 @@
 //! pack+unpack >= 2x at 4 bits); each pair prints its measured speedup.
 
 use bitprune::bitpack;
-use bitprune::infer::{ConvGeom, IntConv2d, IntDense};
+use bitprune::infer::{simd, ConvGeom, IntConv2d, IntDense};
 use bitprune::quant::Codebook;
 use bitprune::util::bench::Bench;
 use bitprune::util::rng::Rng;
@@ -145,6 +145,63 @@ fn main() {
             &format!("intnet/forward_shift_grouped/{tag}"),
             &format!("intnet/forward_shift_grouped_ref/{tag}"),
         );
+    }
+
+    // Narrow-lane / SIMD dispatch pairs: the same headline shapes, with
+    // the `_ref` leg pinned to the portable scalar kernel via
+    // `simd::force_portable` — so `speedup_vs_ref` isolates the pure
+    // SIMD/dispatch win (both legs are bit-identical; asserted below).
+    // The toggle is confined to this single-threaded bench main, so no
+    // other code can observe the pinned state.
+    {
+        println!("kernel dispatch: {}", simd::describe());
+        let (n, din, dout) = (64usize, 256usize, 256usize);
+        let x = rand_vec(&mut rng, n * din);
+        let w = rand_vec(&mut rng, din * dout);
+        let bias = rand_vec(&mut rng, dout);
+        let macs = (n * din * dout) as f64;
+        let ch_bits: Vec<f32> =
+            (0..dout).map(|j| [2.0f32, 4.0, 8.0][j % 3]).collect();
+
+        let dense =
+            IntDense::new("bench-v", &w, din, dout, &bias, 4, 4, true).unwrap();
+        let grouped = IntDense::new_grouped(
+            "bench-vg", &w, din, dout, &bias, &ch_bits, 4, true,
+        )
+        .unwrap();
+        let pot = IntDense::new_cbk(
+            "bench-vs", &w, din, dout, &bias, 4, 4, true, Codebook::PowerOfTwo,
+        )
+        .unwrap();
+
+        // Bit-identity across the dispatch toggle, checked before timing.
+        for l in [&dense, &grouped, &pot] {
+            let native = l.forward(&x, n);
+            simd::force_portable(true);
+            let portable = l.forward(&x, n);
+            simd::force_portable(false);
+            assert!(
+                native.iter().zip(&portable).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "dispatch paths diverged"
+            );
+        }
+
+        for (name, layer) in [
+            (format!("intnet/forward_simd/{n}x{din}x{dout}/4b"), &dense),
+            (format!("intnet/forward_simd_grouped/{n}x{din}x{dout}/ch248"), &grouped),
+            (format!("intnet/forward_shift_simd/{n}x{din}x{dout}/pot4b"), &pot),
+        ] {
+            b.run_elems(&name, macs, || layer.forward(&x, n));
+            simd::force_portable(true);
+            let ref_name = {
+                let (head, tail) = name.split_once('/').unwrap();
+                let (kind, shape) = tail.split_once('/').unwrap();
+                format!("{head}/{kind}_ref/{shape}")
+            };
+            b.run_elems(&ref_name, macs, || layer.forward(&x, n));
+            simd::force_portable(false);
+            speedup(&b, &name, &ref_name);
+        }
     }
 
     // Group-boundary-aligned fused pack vs its scalar reference:

@@ -367,6 +367,49 @@ fn load_word(data: &[u8], byte: usize) -> u64 {
     }
 }
 
+/// Stream `n` packed fields of width `fb` out of `data` with a rolling
+/// 64-bit register window — the in-register unpack that feeds the SIMD
+/// GEMM kernels.  One word load services `⌊(64 - 7) / fb⌋` extractions
+/// instead of one load per field: the window reloads only when the next
+/// field would spill past bit 64, re-anchoring to the byte holding the
+/// current bit cursor (`byte += used >> 3; used &= 7`), so after a
+/// refill the cursor sits below 8 and any `fb <= 16` field fits
+/// (`used + fb <= 23`).  [`load_word`] zero-pads past the end of the
+/// buffer, which is exactly the packer's tail semantics.  Bit-identical
+/// to [`unpack_fields_ref`] by the `miri_`-prefixed parity tests, which
+/// also UB-check the window arithmetic under miri.
+#[inline]
+fn unpack_fields_into(data: &[u8], fb: u32, n: usize, mut emit: impl FnMut(u64)) {
+    if n == 0 {
+        return;
+    }
+    debug_assert!((1..=16).contains(&fb), "field width {fb} out of range");
+    let mask = (1u64 << fb) - 1;
+    let mut byte = 0usize;
+    let mut used = 0u32;
+    let mut window = load_word(data, 0);
+    for _ in 0..n {
+        if used + fb > 64 {
+            byte += (used >> 3) as usize;
+            used &= 7;
+            window = load_word(data, byte);
+        }
+        emit((window >> used) & mask);
+        used += fb;
+    }
+}
+
+/// Scalar reference for [`unpack_fields_into`]: byte-at-a-time
+/// [`read_bits_ref`] per field, no window state.  Kept as the semantic
+/// baseline the rolling-window unpacker must match bit-for-bit.
+fn unpack_fields_ref(data: &[u8], fb: u32, n: usize, mut emit: impl FnMut(u64)) {
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        emit(read_bits_ref(data, bitpos, fb) as u64);
+        bitpos += fb as usize;
+    }
+}
+
 /// Unpack to dequantized f32 values (word-level, branchless extract:
 /// every field width `<= 16` sits inside one 64-bit load).  Codebook
 /// fields decode to grid codes first; the affine map is unchanged.
@@ -383,25 +426,17 @@ pub fn unpack(p: &PackedTensor) -> Vec<f32> {
 /// decoding here cannot fail.
 pub fn unpack_codes(p: &PackedTensor) -> Vec<u32> {
     debug_assert!((1..=16).contains(&p.bits) || p.len == 0);
-    let fb = field_bits(p.codebook, p.bits) as usize;
-    let mask = if fb == 0 { 0 } else { (1u64 << fb) - 1 };
+    let fb = field_bits(p.codebook, p.bits);
     let mut out = Vec::with_capacity(p.len);
     if p.codebook == Codebook::Uniform {
-        for i in 0..p.len {
-            let bitpos = i * fb;
-            let word = load_word(&p.data, bitpos >> 3);
-            out.push(((word >> (bitpos & 7)) & mask) as u32);
-        }
+        unpack_fields_into(&p.data, fb, p.len, |field| out.push(field as u32));
     } else {
-        for i in 0..p.len {
-            let bitpos = i * fb;
-            let word = load_word(&p.data, bitpos >> 3);
-            let field = (word >> (bitpos & 7)) & mask;
+        unpack_fields_into(&p.data, fb, p.len, |field| {
             out.push(
                 decode_field(p.codebook, p.bits, field)
                     .expect("packed tensor field validated at construction"),
-            );
-        }
+            )
+        });
     }
     out
 }
@@ -709,25 +744,21 @@ impl PackedGroups {
     /// independent), decoding codebook fields when present.
     pub fn group_codes(&self, g: usize) -> Vec<u32> {
         let span = self.spans[g];
-        let fb = field_bits(self.codebook, span.bits) as usize;
-        let mask = (1u64 << fb) - 1;
+        let fb = field_bits(self.codebook, span.bits);
+        // Groups start byte-aligned, so the rolling window runs over
+        // the group's own subslice; zero-padding past `data.len()` only
+        // ever pads the final group's tail, exactly as before.
+        let tail = &self.data[span.start..];
         let mut out = Vec::with_capacity(self.group_size);
         if self.codebook == Codebook::Uniform {
-            for i in 0..self.group_size {
-                let bitpos = i * fb;
-                let word = load_word(&self.data, span.start + (bitpos >> 3));
-                out.push(((word >> (bitpos & 7)) & mask) as u32);
-            }
+            unpack_fields_into(tail, fb, self.group_size, |field| out.push(field as u32));
         } else {
-            for i in 0..self.group_size {
-                let bitpos = i * fb;
-                let word = load_word(&self.data, span.start + (bitpos >> 3));
-                let field = (word >> (bitpos & 7)) & mask;
+            unpack_fields_into(tail, fb, self.group_size, |field| {
                 out.push(
                     decode_field(self.codebook, span.bits, field)
                         .expect("packed groups field validated at construction"),
-                );
-            }
+                )
+            });
         }
         out
     }
@@ -1808,5 +1839,54 @@ mod tests {
         assert_eq!(uni.codebook(), Codebook::Uniform);
         // PoT per-layer payload is half the uniform one at 8 bits.
         assert_eq!(pl.payload().len(), uni.payload().len().div_ceil(2));
+    }
+
+    #[test]
+    fn miri_rolling_window_unpack_matches_ref() {
+        // The in-register rolling-window unpacker vs the byte-at-a-time
+        // reference, over every field width and awkward lengths (window
+        // refills land at different phases for co-prime fb/len).  The
+        // miri_ prefix routes this through the CI `cargo miri test`
+        // job, UB-checking the window arithmetic.
+        let mut rng = Rng::new(0x33AA);
+        for fb in 1u32..=16 {
+            for &n in &[0usize, 1, 2, 7, 8, 9, 63, 64, 65, 129, 257] {
+                let total_bits = n * fb as usize;
+                let mut data = vec![0u8; total_bits.div_ceil(8)];
+                for b in data.iter_mut() {
+                    *b = rng.next_u64() as u8;
+                }
+                let mut fast = Vec::with_capacity(n);
+                let mut slow = Vec::with_capacity(n);
+                unpack_fields_into(&data, fb, n, |f| fast.push(f));
+                unpack_fields_ref(&data, fb, n, |f| slow.push(f));
+                assert_eq!(fast, slow, "fb={fb} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn miri_unpack_codes_roundtrip_all_widths() {
+        // End-to-end over the public surface the GEMM consumes: pack,
+        // then the rolling-window unpack_codes must match the scalar
+        // reference — uniform and codebook fields, per-layer and
+        // grouped (byte-aligned subslice windows).
+        let mut rng = Rng::new(0x7B1D);
+        for bits in 1u32..=16 {
+            let xs: Vec<f32> = (0..77).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let p = pack(&xs, bits).unwrap();
+            assert_eq!(unpack_codes(&p), unpack_codes_ref(&p), "uniform bits={bits}");
+            let pc = pack_cbk(&xs, bits, Codebook::PowerOfTwo).unwrap();
+            assert_eq!(unpack_codes(&pc), unpack_codes_ref(&pc), "pot bits={bits}");
+        }
+        let xs: Vec<f32> = (0..5 * 19).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let g = pack_groups(&xs, 19, &[1, 4, 7, 13, 16]).unwrap();
+        for i in 0..5 {
+            assert_eq!(g.group_codes(i), g.group_codes_ref(i), "group {i}");
+        }
+        let gc = pack_groups_cbk(&xs, 19, &[2, 4, 6, 8, 5], Codebook::AdditivePot2).unwrap();
+        for i in 0..5 {
+            assert_eq!(gc.group_codes(i), gc.group_codes_ref(i), "apot group {i}");
+        }
     }
 }

@@ -1,0 +1,501 @@
+//! Runtime kernel dispatch for the integer GEMM.
+//!
+//! The hot multiply kernels come in three flavors selected once per
+//! process from the CPU actually running:
+//!
+//! - **AVX2** (x86_64): `_mm256_madd_epi16` i32-lane dot kernels, plus
+//!   a 16-lane `_mm256_mullo_epi16`/`_mm256_add_epi16` i16 kernel for
+//!   layers whose whole dot product fits an i16
+//!   ([`crate::quant::AccWidth::I16`]).
+//! - **NEON** (aarch64): `vmlal_s16` widening multiply-accumulate into
+//!   i32 lanes.
+//! - **Portable**: scalar Rust with i32 accumulators (no `std::arch`),
+//!   the fallback every other path must match bit-for-bit.
+//!
+//! Detection runs exactly once ([`OnceLock`]); `BITPRUNE_FORCE_PORTABLE=1`
+//! in the environment pins the portable fallback for a whole process
+//! (the CI dispatch matrix uses this), and [`force_portable`] pins it
+//! from inside a process (benches, parity tests).  Narrow lanes are
+//! only *dispatched* when the layer's stored [`crate::quant::acc_width`]
+//! proves the accumulator cannot wrap, so every kernel here computes
+//! the exact same integer sum as the scalar i64 reference — dispatch
+//! can change speed, never results.
+//!
+//! Under miri every `std::arch` intrinsic is cfg'd out and detection
+//! resolves to `Portable`, so the UB checker exercises the portable
+//! kernels and the in-register unpack helpers without hitting
+//! unsupported vendor intrinsics.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Which kernel family the dispatcher resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// x86_64 AVX2 `std::arch` kernels.
+    Avx2,
+    /// aarch64 NEON `std::arch` kernels.
+    Neon,
+    /// Scalar Rust fallback (also the miri and forced-portable path).
+    Portable,
+}
+
+impl KernelPath {
+    /// Short cpu-feature string ("avx2" / "neon" / "portable") — what
+    /// the bench JSONL and serve startup logs emit.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Neon => "neon",
+            KernelPath::Portable => "portable",
+        }
+    }
+}
+
+static DETECTED: OnceLock<KernelPath> = OnceLock::new();
+/// 1 = portable pinned via [`force_portable`]; 0 = use detection.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+fn detect() -> KernelPath {
+    #[cfg(not(miri))]
+    {
+        let forced_env = std::env::var("BITPRUNE_FORCE_PORTABLE")
+            .map(|v| !matches!(v.as_str(), "" | "0"))
+            .unwrap_or(false);
+        if forced_env {
+            return KernelPath::Portable;
+        }
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelPath::Avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return KernelPath::Neon;
+        }
+    }
+    KernelPath::Portable
+}
+
+/// The once-detected path for this process (environment override
+/// included, [`force_portable`] excluded).
+pub fn detected_path() -> KernelPath {
+    *DETECTED.get_or_init(detect)
+}
+
+/// The path the GEMM dispatch actually uses right now.
+#[inline]
+pub fn kernel_path() -> KernelPath {
+    if FORCED.load(Ordering::Relaxed) != 0 {
+        KernelPath::Portable
+    } else {
+        detected_path()
+    }
+}
+
+/// Pin the portable scalar fallback (`true`) or restore detection
+/// (`false`).  Process-global; used by the benches and the dispatch
+/// parity tests to compare paths inside one process.  Every kernel is
+/// bit-identical, so flipping this mid-flight can only change speed,
+/// never results.
+pub fn force_portable(on: bool) {
+    FORCED.store(on as u8, Ordering::Relaxed);
+}
+
+/// Human-readable dispatch description for logs: active path, arch,
+/// and whether the portable fallback was forced.
+pub fn describe() -> String {
+    let active = kernel_path();
+    let detected = detected_path();
+    let arch = std::env::consts::ARCH;
+    if active == detected {
+        format!("{} (arch {arch})", active.name())
+    } else {
+        format!(
+            "{} (arch {arch}, detected {}, portable forced)",
+            active.name(),
+            detected.name()
+        )
+    }
+}
+
+/// Portable narrow-lane kernel: `[Σ a·w0, Σ a·w1, Σ a·w2, Σ a·w3]`
+/// with scalar i32 accumulators (auto-vectorizable; no `std::arch`).
+///
+/// Contract (guaranteed by [`crate::quant::acc_width`] selection at
+/// layer construction): each dot product fits an i32, so the i32
+/// accumulation cannot wrap and the result equals the i64 reference
+/// exactly.
+pub(crate) fn dot4_i32_portable(
+    a: &[u16],
+    w0: &[u16],
+    w1: &[u16],
+    w2: &[u16],
+    w3: &[u16],
+) -> [i64; 4] {
+    let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+    for ((((&av, &x0), &x1), &x2), &x3) in
+        a.iter().zip(w0).zip(w1).zip(w2).zip(w3)
+    {
+        let av = av as i32;
+        s0 += av * x0 as i32;
+        s1 += av * x1 as i32;
+        s2 += av * x2 as i32;
+        s3 += av * x3 as i32;
+    }
+    [s0 as i64, s1 as i64, s2 as i64, s3 as i64]
+}
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of 8 i32 lanes, widened to i64 before adding so
+    /// the reduction itself cannot wrap.
+    #[target_feature(enable = "avx2")]
+    unsafe fn sum_i32_lanes(v: __m256i) -> i64 {
+        let mut tmp = [0i32; 8];
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, v);
+        tmp.iter().map(|&x| x as i64).sum()
+    }
+
+    /// Horizontal sum of 16 i16 lanes, widened to i64.
+    #[target_feature(enable = "avx2")]
+    unsafe fn sum_i16_lanes(v: __m256i) -> i64 {
+        let mut tmp = [0i16; 16];
+        _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, v);
+        tmp.iter().map(|&x| x as i64).sum()
+    }
+
+    /// i32-lane AVX2 dot kernel over four weight rows.
+    ///
+    /// `_mm256_madd_epi16` multiplies adjacent i16 pairs and sums each
+    /// pair into an i32 lane.  Contract (from `AccWidth <= I32`
+    /// selection): every code `<= 2^15 − 1` and the whole dot product
+    /// fits an i32 — so each pair-sum `< 2^31` and each lane's running
+    /// total (a subset of the nonnegative full sum) cannot wrap.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4_i32(
+        a: &[u16],
+        w0: &[u16],
+        w1: &[u16],
+        w2: &[u16],
+        w3: &[u16],
+    ) -> [i64; 4] {
+        let n = a.len();
+        debug_assert!(
+            w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n
+        );
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut acc2 = _mm256_setzero_si256();
+        let mut acc3 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let v0 = _mm256_loadu_si256(w0.as_ptr().add(i) as *const __m256i);
+            let v1 = _mm256_loadu_si256(w1.as_ptr().add(i) as *const __m256i);
+            let v2 = _mm256_loadu_si256(w2.as_ptr().add(i) as *const __m256i);
+            let v3 = _mm256_loadu_si256(w3.as_ptr().add(i) as *const __m256i);
+            acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(va, v0));
+            acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(va, v1));
+            acc2 = _mm256_add_epi32(acc2, _mm256_madd_epi16(va, v2));
+            acc3 = _mm256_add_epi32(acc3, _mm256_madd_epi16(va, v3));
+            i += 16;
+        }
+        let mut out = [
+            sum_i32_lanes(acc0),
+            sum_i32_lanes(acc1),
+            sum_i32_lanes(acc2),
+            sum_i32_lanes(acc3),
+        ];
+        while i < n {
+            let av = a[i] as i64;
+            out[0] += av * w0[i] as i64;
+            out[1] += av * w1[i] as i64;
+            out[2] += av * w2[i] as i64;
+            out[3] += av * w3[i] as i64;
+            i += 1;
+        }
+        out
+    }
+
+    /// 16-lane i16 AVX2 dot kernel for `AccWidth::I16` layers.
+    ///
+    /// Contract: the *whole* dot product fits an i16.  All products are
+    /// nonnegative, so every per-lane partial sum is a subset of the
+    /// full sum and stays `< 2^15` (no i16 wrap), and each product is
+    /// `<` the full sum so `_mm256_mullo_epi16`'s low 16 bits are the
+    /// exact product.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4_i16(
+        a: &[u16],
+        w0: &[u16],
+        w1: &[u16],
+        w2: &[u16],
+        w3: &[u16],
+    ) -> [i64; 4] {
+        let n = a.len();
+        debug_assert!(
+            w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n
+        );
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut acc2 = _mm256_setzero_si256();
+        let mut acc3 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let v0 = _mm256_loadu_si256(w0.as_ptr().add(i) as *const __m256i);
+            let v1 = _mm256_loadu_si256(w1.as_ptr().add(i) as *const __m256i);
+            let v2 = _mm256_loadu_si256(w2.as_ptr().add(i) as *const __m256i);
+            let v3 = _mm256_loadu_si256(w3.as_ptr().add(i) as *const __m256i);
+            acc0 = _mm256_add_epi16(acc0, _mm256_mullo_epi16(va, v0));
+            acc1 = _mm256_add_epi16(acc1, _mm256_mullo_epi16(va, v1));
+            acc2 = _mm256_add_epi16(acc2, _mm256_mullo_epi16(va, v2));
+            acc3 = _mm256_add_epi16(acc3, _mm256_mullo_epi16(va, v3));
+            i += 16;
+        }
+        let mut out = [
+            sum_i16_lanes(acc0),
+            sum_i16_lanes(acc1),
+            sum_i16_lanes(acc2),
+            sum_i16_lanes(acc3),
+        ];
+        while i < n {
+            let av = a[i] as i64;
+            out[0] += av * w0[i] as i64;
+            out[1] += av * w1[i] as i64;
+            out[2] += av * w2[i] as i64;
+            out[3] += av * w3[i] as i64;
+            i += 1;
+        }
+        out
+    }
+}
+
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+mod arm {
+    use std::arch::aarch64::*;
+
+    /// i32-lane NEON dot kernel over four weight rows: `vmlal_s16`
+    /// widening multiply-accumulate.  Contract (from `AccWidth <= I32`
+    /// selection): every code `<= 2^15 − 1` and the whole dot product
+    /// fits an i32, so each lane's running total (a subset of the
+    /// nonnegative full sum) cannot wrap; `vaddlvq_s32` widens to i64
+    /// during the final reduction.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot4_i32(
+        a: &[u16],
+        w0: &[u16],
+        w1: &[u16],
+        w2: &[u16],
+        w3: &[u16],
+    ) -> [i64; 4] {
+        let n = a.len();
+        debug_assert!(
+            w0.len() == n && w1.len() == n && w2.len() == n && w3.len() == n
+        );
+        let mut acc0 = vdupq_n_s32(0);
+        let mut acc1 = vdupq_n_s32(0);
+        let mut acc2 = vdupq_n_s32(0);
+        let mut acc3 = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let va = vreinterpretq_s16_u16(vld1q_u16(a.as_ptr().add(i)));
+            let v0 = vreinterpretq_s16_u16(vld1q_u16(w0.as_ptr().add(i)));
+            let v1 = vreinterpretq_s16_u16(vld1q_u16(w1.as_ptr().add(i)));
+            let v2 = vreinterpretq_s16_u16(vld1q_u16(w2.as_ptr().add(i)));
+            let v3 = vreinterpretq_s16_u16(vld1q_u16(w3.as_ptr().add(i)));
+            acc0 = vmlal_s16(acc0, vget_low_s16(va), vget_low_s16(v0));
+            acc0 = vmlal_high_s16(acc0, va, v0);
+            acc1 = vmlal_s16(acc1, vget_low_s16(va), vget_low_s16(v1));
+            acc1 = vmlal_high_s16(acc1, va, v1);
+            acc2 = vmlal_s16(acc2, vget_low_s16(va), vget_low_s16(v2));
+            acc2 = vmlal_high_s16(acc2, va, v2);
+            acc3 = vmlal_s16(acc3, vget_low_s16(va), vget_low_s16(v3));
+            acc3 = vmlal_high_s16(acc3, va, v3);
+            i += 8;
+        }
+        let mut out = [
+            vaddlvq_s32(acc0),
+            vaddlvq_s32(acc1),
+            vaddlvq_s32(acc2),
+            vaddlvq_s32(acc3),
+        ];
+        while i < n {
+            let av = a[i] as i64;
+            out[0] += av * w0[i] as i64;
+            out[1] += av * w1[i] as i64;
+            out[2] += av * w2[i] as i64;
+            out[3] += av * w3[i] as i64;
+            i += 1;
+        }
+        out
+    }
+}
+
+/// Narrow-lane 4-column dot product, dispatched over `path`.
+///
+/// `i16_lanes` requests the 16-lane i16 kernel (only meaningful on
+/// AVX2; other paths run their i32 kernel, which is also exact for
+/// I16-lane layers).  Contract: callers pass a `path` obtained from
+/// [`kernel_path`] (so a SIMD path implies the feature is present) and
+/// only dispatch layers whose [`crate::quant::AccWidth`] is at most
+/// `I32` (`I16` when `i16_lanes`).
+#[allow(unused_variables)] // `i16_lanes` is only read on x86_64 non-miri builds
+#[inline]
+pub(crate) fn dot4(
+    path: KernelPath,
+    i16_lanes: bool,
+    a: &[u16],
+    w0: &[u16],
+    w1: &[u16],
+    w2: &[u16],
+    w3: &[u16],
+) -> [i64; 4] {
+    match path {
+        #[cfg(all(target_arch = "x86_64", not(miri)))]
+        KernelPath::Avx2 => unsafe {
+            if i16_lanes {
+                x86::dot4_i16(a, w0, w1, w2, w3)
+            } else {
+                x86::dot4_i32(a, w0, w1, w2, w3)
+            }
+        },
+        #[cfg(all(target_arch = "aarch64", not(miri)))]
+        KernelPath::Neon => unsafe { arm::dot4_i32(a, w0, w1, w2, w3) },
+        _ => dot4_i32_portable(a, w0, w1, w2, w3),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn dot4_i64_ref(
+        a: &[u16],
+        w0: &[u16],
+        w1: &[u16],
+        w2: &[u16],
+        w3: &[u16],
+    ) -> [i64; 4] {
+        let mut out = [0i64; 4];
+        for (i, &av) in a.iter().enumerate() {
+            let av = av as i64;
+            out[0] += av * w0[i] as i64;
+            out[1] += av * w1[i] as i64;
+            out[2] += av * w2[i] as i64;
+            out[3] += av * w3[i] as i64;
+        }
+        out
+    }
+
+    fn rand_codes(rng: &mut Rng, n: usize, bits: u32) -> Vec<u16> {
+        (0..n).map(|_| rng.below(1u64 << bits) as u16).collect()
+    }
+
+    /// Portable narrow-lane kernel vs the i64 scalar reference — the
+    /// miri leg of the unsafe-code gate runs this (pure safe Rust).
+    #[test]
+    fn miri_portable_dot4_matches_i64_reference() {
+        let mut rng = Rng::new(0x51_3D);
+        for case in 0..64 {
+            let n = (case * 7) % 100;
+            // 8+8+ceil(log2(100)) = 23 <= 31: i32 accumulation safe.
+            let a = rand_codes(&mut rng, n, 8);
+            let w: Vec<Vec<u16>> =
+                (0..4).map(|_| rand_codes(&mut rng, n, 8)).collect();
+            assert_eq!(
+                dot4_i32_portable(&a, &w[0], &w[1], &w[2], &w[3]),
+                dot4_i64_ref(&a, &w[0], &w[1], &w[2], &w[3]),
+            );
+        }
+    }
+
+    /// The dispatched kernel (whatever this host resolves to) is
+    /// bit-identical to the scalar i64 reference, for both lane hints,
+    /// across remainder lengths.
+    #[test]
+    fn dispatched_dot4_matches_i64_reference_both_lane_hints() {
+        let mut rng = Rng::new(0xD15_9A7C);
+        let path = kernel_path();
+        for case in 0..128 {
+            let n = (case * 13) % 200;
+            // i16-hint inputs: 4+4+ceil(log2(200)) = 16 > 15, so cap n
+            // at 120 with 3-bit codes: 3+3+7 = 13 <= 15.
+            let n16 = n.min(120);
+            let a16 = rand_codes(&mut rng, n16, 3);
+            let w16: Vec<Vec<u16>> =
+                (0..4).map(|_| rand_codes(&mut rng, n16, 3)).collect();
+            assert_eq!(
+                dot4(path, true, &a16, &w16[0], &w16[1], &w16[2], &w16[3]),
+                dot4_i64_ref(&a16, &w16[0], &w16[1], &w16[2], &w16[3]),
+            );
+            let a = rand_codes(&mut rng, n, 8);
+            let w: Vec<Vec<u16>> =
+                (0..4).map(|_| rand_codes(&mut rng, n, 8)).collect();
+            assert_eq!(
+                dot4(path, false, &a, &w[0], &w[1], &w[2], &w[3]),
+                dot4_i64_ref(&a, &w[0], &w[1], &w[2], &w[3]),
+            );
+        }
+    }
+
+    /// Adversarial max-magnitude codes right at the lane boundary: the
+    /// i16 kernel at the largest sum that still fits i16, the i32
+    /// kernels at a 31-bit-boundary shape.
+    #[test]
+    fn dot4_at_lane_boundaries_max_magnitude() {
+        let path = kernel_path();
+        // 4+4+7 = 15: din 128 of all-max 4-bit codes, acc = 128·225.
+        let a = vec![15u16; 128];
+        let w = vec![15u16; 128];
+        let expect = [128i64 * 225; 4];
+        assert_eq!(dot4(path, true, &a, &w, &w, &w, &w), expect);
+        assert_eq!(dot4_i32_portable(&a, &w, &w, &w, &w), expect);
+        // 11+11+9 = 31: din 512 of all-max 11-bit codes fits i32.
+        let a = vec![2047u16; 512];
+        let w = vec![2047u16; 512];
+        let expect = [512i64 * 2047 * 2047; 4];
+        assert_eq!(dot4(path, false, &a, &w, &w, &w, &w), expect);
+        assert_eq!(dot4_i32_portable(&a, &w, &w, &w, &w), expect);
+    }
+
+    /// `force_portable` pins the fallback and restores cleanly.  (Only
+    /// this test toggles the hook inside the lib test binary, so the
+    /// restore assertion cannot race.)
+    #[test]
+    fn miri_force_portable_pins_and_restores() {
+        force_portable(true);
+        assert_eq!(kernel_path(), KernelPath::Portable);
+        force_portable(false);
+        assert_eq!(kernel_path(), detected_path());
+    }
+
+    /// The CI dispatch matrix runs the suites with
+    /// `BITPRUNE_FORCE_PORTABLE=1` and with `-C target-feature=+avx2`;
+    /// this pins what each leg must resolve to.
+    #[cfg(not(miri))]
+    #[test]
+    fn env_and_build_flags_resolve_expected_path() {
+        let forced_env = std::env::var("BITPRUNE_FORCE_PORTABLE")
+            .map(|v| !matches!(v.as_str(), "" | "0"))
+            .unwrap_or(false);
+        if forced_env {
+            assert_eq!(detected_path(), KernelPath::Portable);
+        } else if cfg!(all(target_arch = "x86_64", target_feature = "avx2")) {
+            // Compiled with AVX2 statically enabled: runtime detection
+            // on the same machine must agree.
+            assert_eq!(detected_path(), KernelPath::Avx2);
+        }
+        // Whatever was resolved, the describe string carries the
+        // cpu-feature token the bench JSONL embeds.
+        let d = describe();
+        assert!(
+            d.starts_with(kernel_path().name()),
+            "describe() = {d:?} should lead with the active path"
+        );
+    }
+}

@@ -879,6 +879,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if net.layers.iter().any(|l| !l.codebook().is_uniform()) {
         eprintln!("non-uniform weight codebooks: serving on the shift-add GEMM");
     }
+    eprintln!("gemm kernel dispatch: {}", bitprune::infer::simd::describe());
     if args.flag("profile") {
         let mut prof = bitprune::infer::ForwardProfile::new();
         let mut scratch = bitprune::infer::NetScratch::default();

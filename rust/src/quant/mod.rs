@@ -28,6 +28,83 @@ pub fn int_bits(n: f32) -> u32 {
     clip_bits(n).ceil() as u32
 }
 
+/// Integer accumulator lane width for the GEMM core, narrowest first.
+///
+/// Ordered so `max` over a set of groups picks the widest (safest)
+/// lane, and `<= AccWidth::I32` asks "is a 32-bit lane safe here".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AccWidth {
+    I16,
+    I32,
+    I64,
+}
+
+impl AccWidth {
+    /// Lane width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            AccWidth::I16 => 16,
+            AccWidth::I32 => 32,
+            AccWidth::I64 => 64,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AccWidth::I16 => "i16",
+            AccWidth::I32 => "i32",
+            AccWidth::I64 => "i64",
+        }
+    }
+}
+
+/// `ceil(log2(n))` for `n >= 1` (0 for `n <= 1`), overflow-free.
+fn ceil_log2(n: usize) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+/// Narrowest accumulator lane that provably holds the integer GEMM
+/// core `Σ_i a_code[i]·w_code[i]` over `din` terms.
+///
+/// Codes are unsigned: `a_code ≤ 2^a_bits − 1`, `w_code ≤ 2^w_bits − 1`,
+/// so the dot product is bounded by
+/// `din·(2^w_bits−1)·(2^a_bits−1) < 2^(w_bits + a_bits + ceil(log2(din)))`.
+/// A signed lane of `B` bits holds any value `< 2^(B−1)`, giving the
+/// promotion thresholds
+///
+/// ```text
+/// w_bits + a_bits + ceil(log2(din)) <= 15  ->  i16
+///                                   <= 31  ->  i32
+///                                   else   ->  i64
+/// ```
+///
+/// The same bound covers the shift-add kernels' *intermediate* sums:
+/// the rising phase peaks at `rsum·2^(w_bits−1) + Σ adds < rsum·2^w_bits
+/// ≤ din·(2^a_bits−1)·2^w_bits`, inside the identical `2^need` envelope.
+///
+/// Two extra guards keep the selection conservative rather than merely
+/// tight: operands wider than 15 bits are forced to `I64` (narrow SIMD
+/// lanes multiply the codes as `i16`, so the *operands* must be
+/// i16-representable too), and `din == 0` degenerates to the narrowest
+/// lane (an empty dot product is 0 everywhere).
+pub fn acc_width(w_bits: u32, a_bits: u32, din: usize) -> AccWidth {
+    if w_bits > 15 || a_bits > 15 {
+        return AccWidth::I64;
+    }
+    let need = w_bits + a_bits + ceil_log2(din);
+    if need <= 15 {
+        AccWidth::I16
+    } else if need <= 31 {
+        AccWidth::I32
+    } else {
+        AccWidth::I64
+    }
+}
+
 /// Smallest representable step of an n-bit group over [lmin, lmax].
 pub fn scale(lmin: f32, lmax: f32, n: f32) -> f32 {
     let rng = (lmax - lmin).max(RANGE_EPS);
@@ -916,6 +993,71 @@ mod tests {
 
     fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
         (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn acc_width_pins_exact_promotion_thresholds() {
+        use AccWidth::*;
+        // i16 -> i32 promotion at w + a + ceil(log2(din)) crossing 15:
+        // 4+4+7 = 15 at din 128; din 129 rounds the log term up to 8.
+        assert_eq!(acc_width(4, 4, 128), I16);
+        assert_eq!(acc_width(4, 4, 129), I32);
+        // i32 -> i64 promotion at the sum crossing 31.
+        assert_eq!(acc_width(8, 8, 1 << 15), I32);
+        assert_eq!(acc_width(8, 8, (1 << 15) + 1), I64);
+        // ceil(log2) is exact, not floor: din 3 counts as 2 bits, so
+        // 8+6+2 = 16 promotes to i32 where floor(log2 3) = 1 would
+        // have (unsafely: 3·255·63 = 48195 > i16::MAX) said i16.
+        assert_eq!(acc_width(7, 6, 3), I16);
+        assert_eq!(acc_width(8, 6, 3), I32);
+        // Degenerate din and the 16-bit-operand guard (narrow lanes
+        // multiply codes as i16, so >15-bit operands force i64 even
+        // when the sum-of-bits test would pass).
+        assert_eq!(acc_width(1, 1, 0), I16);
+        assert_eq!(acc_width(16, 1, 1), I64);
+        assert_eq!(acc_width(1, 16, 1), I64);
+    }
+
+    #[test]
+    fn acc_width_never_wraps_at_max_magnitude() {
+        // Overflow-adversarial sweep: for every (w, a) and a set of
+        // boundary fan-ins, the exact worst-case accumulator
+        // din·(2^w−1)·(2^a−1) — every code at max magnitude — must fit
+        // the selected signed lane.  Computed in i128 so the check
+        // itself cannot wrap.
+        let dins = [
+            1usize,
+            2,
+            3,
+            7,
+            8,
+            127,
+            128,
+            129,
+            255,
+            256,
+            1 << 15,
+            (1 << 15) + 1,
+            1 << 20,
+            (1 << 20) + 1,
+        ];
+        for w in 1..=16u32 {
+            for a in 1..=16u32 {
+                for &din in &dins {
+                    let lane = acc_width(w, a, din);
+                    let max_acc = din as i128
+                        * ((1i128 << w) - 1)
+                        * ((1i128 << a) - 1);
+                    let limit = (1i128 << (lane.bits() - 1)) - 1;
+                    assert!(
+                        max_acc <= limit,
+                        "acc_width({w}, {a}, {din}) = {} wraps: \
+                         max acc {max_acc} > {limit}",
+                        lane.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

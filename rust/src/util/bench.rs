@@ -246,9 +246,33 @@ impl Bench {
     /// If `$BENCH_OUT` is set, append one JSON line per result to that
     /// file (JSONL — every bench target contributes to the same
     /// trajectory file; `scripts/bench.sh` merges it into the
-    /// `BENCH_*.json` suite files).
+    /// `BENCH_*.json` suite files), preceded by a `meta/kernel_dispatch`
+    /// record naming the GEMM kernel path this process resolved
+    /// (cpu-feature string).  `bench.sh` lifts the meta record into the
+    /// suite file's `dispatch` field so baselines recorded on different
+    /// runners never silently compare.
     pub fn flush_jsonl(&self) {
+        append_dispatch_meta();
         append_jsonl(&self.results);
+    }
+}
+
+/// Append the `meta/kernel_dispatch` JSONL record to `$BENCH_OUT`
+/// (no-op when unset).  Split out so ad-hoc harnesses that call
+/// [`append_jsonl`] directly can stamp their records too.
+pub fn append_dispatch_meta() {
+    let Ok(path) = std::env::var("BENCH_OUT") else { return };
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write;
+    let dispatch = crate::infer::simd::describe();
+    match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        Ok(mut f) => {
+            let rec = format!("{{\"name\":\"meta/kernel_dispatch\",\"dispatch\":\"{dispatch}\"}}");
+            let _ = writeln!(f, "{rec}");
+        }
+        Err(e) => eprintln!("bench: cannot open BENCH_OUT '{path}': {e}"),
     }
 }
 

@@ -1,0 +1,217 @@
+//! Dispatch-path parity suite: whatever kernel path the runtime picks
+//! (AVX2 / NEON / portable), the forward pass must be **bit-identical**
+//! to the scalar `forward_ref` oracle — and to itself with the portable
+//! fallback pinned.  This is the binary the CI `dispatch-matrix` job
+//! runs under native features, `-C target-feature=+avx2`, and
+//! `BITPRUNE_FORCE_PORTABLE=1`.
+
+use bitprune::infer::simd::{self, KernelPath};
+use bitprune::infer::{ConvGeom, IntConv2d, IntDense};
+use bitprune::quant::Codebook;
+use bitprune::util::proptest::check;
+use bitprune::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, 1.5)).collect()
+}
+
+/// Bitwise comparison of three forwards with a labelled error.
+fn expect_identical(
+    label: &str,
+    want: &[f32],
+    native: &[f32],
+    portable: &[f32],
+) -> Result<(), String> {
+    if want.len() != native.len() || want.len() != portable.len() {
+        return Err(format!("{label}: length mismatch"));
+    }
+    for (i, ((w, n), p)) in want.iter().zip(native).zip(portable).enumerate() {
+        if w.to_bits() != n.to_bits() {
+            return Err(format!("{label}: native elem {i}: {n} vs ref {w}"));
+        }
+        if w.to_bits() != p.to_bits() {
+            return Err(format!("{label}: portable elem {i}: {p} vs ref {w}"));
+        }
+    }
+    Ok(())
+}
+
+/// The CI matrix's env override must pin the scalar fallback: when
+/// `BITPRUNE_FORCE_PORTABLE` is set truthy, one-time detection resolves
+/// Portable no matter what the CPU offers.  On the `+avx2` build leg
+/// (and any AVX2 runner) an unforced probe must resolve Avx2.
+#[test]
+fn env_override_pins_the_ci_matrix_leg() {
+    println!("dispatch: {}", simd::describe());
+    let forced = std::env::var("BITPRUNE_FORCE_PORTABLE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if forced {
+        assert_eq!(simd::detected_path(), KernelPath::Portable);
+        assert_eq!(simd::kernel_path(), KernelPath::Portable);
+    } else if cfg!(all(target_arch = "x86_64", target_feature = "avx2")) {
+        assert_eq!(simd::detected_path(), KernelPath::Avx2);
+    }
+}
+
+/// One randomized sweep per layer family — dense, grouped, codebook
+/// (per-layer PoT + grouped APoT) and conv — each case comparing the
+/// scalar oracle, the natively dispatched forward, and the forward with
+/// the portable fallback pinned, all bitwise.  208 cases total.
+///
+/// This is the **only** test in this binary that touches
+/// `simd::force_portable` (the pin is process-global; a second toggling
+/// test would race the restore under the parallel test runner).
+#[test]
+fn all_dispatch_paths_bit_identical_to_forward_ref() {
+    // Shapes cross the i16/i32/i64 thresholds: din up to 300 at up to
+    // 16-bit operands lands every lane, and dout % 4 != 0 exercises the
+    // scalar remainder columns of the blocked kernels.
+    check(
+        "simd-dispatch-dense",
+        64,
+        |rng| {
+            let n = 1 + rng.below_usize(9);
+            let din = 1 + rng.below_usize(300);
+            let dout = 1 + rng.below_usize(40);
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let relu = rng.below(2) == 0;
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            (n, din, dout, wb, ab, relu, x, w, b)
+        },
+        |(n, din, dout, wb, ab, relu, x, w, b)| {
+            let layer = IntDense::new("d", w, *din, *dout, b, *wb, *ab, *relu)
+                .map_err(|e| e.to_string())?;
+            let want = layer.forward_ref(x, *n);
+            let native = layer.forward(x, *n);
+            simd::force_portable(true);
+            let portable = layer.forward(x, *n);
+            simd::force_portable(false);
+            expect_identical(
+                &format!("dense ({n},{din},{dout}) bits ({wb},{ab})"),
+                &want,
+                &native,
+                &portable,
+            )
+        },
+    );
+
+    check(
+        "simd-dispatch-grouped",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(8);
+            let din = 1 + rng.below_usize(200);
+            let dout = 1 + rng.below_usize(24);
+            let ab = 1 + rng.below(16) as u32;
+            let relu = rng.below(2) == 0;
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            let ch_bits: Vec<f32> =
+                (0..dout).map(|_| (1 + rng.below(16)) as f32).collect();
+            (n, din, dout, ab, relu, x, w, b, ch_bits)
+        },
+        |(n, din, dout, ab, relu, x, w, b, ch_bits)| {
+            let layer =
+                IntDense::new_grouped("g", w, *din, *dout, b, ch_bits, *ab, *relu)
+                    .map_err(|e| e.to_string())?;
+            let want = layer.forward_ref(x, *n);
+            let native = layer.forward(x, *n);
+            simd::force_portable(true);
+            let portable = layer.forward(x, *n);
+            simd::force_portable(false);
+            expect_identical(
+                &format!("grouped ({n},{din},{dout}) a_bits {ab}"),
+                &want,
+                &native,
+                &portable,
+            )
+        },
+    );
+
+    check(
+        "simd-dispatch-codebook",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(6);
+            let din = 1 + rng.below_usize(120);
+            let dout = 1 + rng.below_usize(20);
+            // Shift-plan grids need bits >= 2 (half = 2^(bits-1) with a
+            // signed part); stay inside the codebook-admissible range.
+            let wb = 2 + rng.below(7) as u32;
+            let ab = 1 + rng.below(8) as u32;
+            let relu = rng.below(2) == 0;
+            let grouped = rng.below(2) == 0;
+            let cbk = if rng.below(2) == 0 {
+                Codebook::PowerOfTwo
+            } else {
+                Codebook::AdditivePot2
+            };
+            let x = rand_vec(rng, n * din);
+            let w = rand_vec(rng, din * dout);
+            let b = rand_vec(rng, dout);
+            let ch_bits: Vec<f32> =
+                (0..dout).map(|_| (2 + rng.below(7)) as f32).collect();
+            (n, din, dout, wb, ab, relu, grouped, cbk, x, w, b, ch_bits)
+        },
+        |(n, din, dout, wb, ab, relu, grouped, cbk, x, w, b, ch_bits)| {
+            let layer = if *grouped {
+                IntDense::new_grouped_cbk(
+                    "s", w, *din, *dout, b, ch_bits, *ab, *relu, *cbk,
+                )
+            } else {
+                IntDense::new_cbk("s", w, *din, *dout, b, *wb, *ab, *relu, *cbk)
+            }
+            .map_err(|e| e.to_string())?;
+            let want = layer.forward_ref(x, *n);
+            let native = layer.forward(x, *n);
+            simd::force_portable(true);
+            let portable = layer.forward(x, *n);
+            simd::force_portable(false);
+            expect_identical(
+                &format!("cbk {cbk:?} grouped={grouped} ({n},{din},{dout})"),
+                &want,
+                &native,
+                &portable,
+            )
+        },
+    );
+
+    check(
+        "simd-dispatch-conv",
+        48,
+        |rng| {
+            let n = 1 + rng.below_usize(3);
+            let cin = 1 + rng.below_usize(4);
+            let h = 3 + rng.below_usize(6);
+            let w = 3 + rng.below_usize(6);
+            let cout = 1 + rng.below_usize(8);
+            let kh = 1 + rng.below_usize(h.min(3));
+            let kw = 1 + rng.below_usize(w.min(3));
+            let stride = 1 + rng.below_usize(2);
+            let pad = rng.below_usize(2);
+            let g = ConvGeom { cin, h, w, cout, kh, kw, stride, pad };
+            let wb = 1 + rng.below(16) as u32;
+            let ab = 1 + rng.below(16) as u32;
+            let relu = rng.below(2) == 0;
+            let x = rand_vec(rng, n * g.in_features());
+            let wt = rand_vec(rng, g.patch_len() * cout);
+            let b = rand_vec(rng, cout);
+            (n, g, wb, ab, relu, x, wt, b)
+        },
+        |(n, g, wb, ab, relu, x, wt, b)| {
+            let layer = IntConv2d::new("c", wt, *g, b, *wb, *ab, *relu)
+                .map_err(|e| e.to_string())?;
+            let want = layer.forward_ref(x, *n);
+            let native = layer.forward(x, *n);
+            simd::force_portable(true);
+            let portable = layer.forward(x, *n);
+            simd::force_portable(false);
+            expect_identical(&format!("conv {g:?} bits ({wb},{ab})"), &want, &native, &portable)
+        },
+    );
+}

@@ -39,6 +39,15 @@ suite, src, dst = sys.argv[1:4]
 recs = [json.loads(line) for line in open(src) if line.strip()]
 if not recs:
     sys.exit(f"error: suite '{suite}' produced an empty record set")
+
+# meta/* records carry run context (kernel dispatch path), not timings:
+# lift them out of the bench list into suite-level fields so baselines
+# from different runners never silently compare.
+meta = [r for r in recs if r["name"].startswith("meta/")]
+recs = [r for r in recs if not r["name"].startswith("meta/")]
+dispatch = next(
+    (m["dispatch"] for m in meta if m["name"] == "meta/kernel_dispatch"), None
+)
 by_name = {r["name"]: r for r in recs}
 
 speedups = {}
@@ -51,10 +60,13 @@ for name, ref in by_name.items():
         speedups[fast["name"]] = round(ref["mean_s"] / fast["mean_s"], 2)
 
 doc = {"suite": suite, "benches": recs, "speedup_vs_ref": speedups}
+if dispatch is not None:
+    doc["dispatch"] = dispatch
 with open(dst, "w") as f:
     json.dump(doc, f, indent=2)
     f.write("\n")
-print(f"wrote {dst}: {len(recs)} records, {len(speedups)} speedup pairs")
+tail = f", dispatch: {dispatch}" if dispatch else ""
+print(f"wrote {dst}: {len(recs)} records, {len(speedups)} speedup pairs{tail}")
 PY
 }
 

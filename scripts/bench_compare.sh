@@ -66,6 +66,9 @@ TRACKED = {
         "intnet/forward_grouped/64x256x256/ch248",
         "intnet/forward_shift/64x256x256/pot4b",
         "intnet/forward_shift_grouped/64x256x256/apot-ch248",
+        "intnet/forward_simd/64x256x256/4b",
+        "intnet/forward_simd_grouped/64x256x256/ch248",
+        "intnet/forward_shift_simd/64x256x256/pot4b",
         "rust/fake_quant/16384",
         "bitpack/pack/65536/4b",
     ],
@@ -93,11 +96,26 @@ def load(path):
 if mode == "compare":
     base_path, cur_path, threshold = sys.argv[2], sys.argv[3], float(sys.argv[4])
     base_doc, suite, base = load(base_path)
-    _, cur_suite, cur = load(cur_path)
+    cur_doc, cur_suite, cur = load(cur_path)
     seeded = bool(base_doc.get("seed_estimate"))
     blocker = base_doc.get("blocker")
     if blocker:
         print(f"NOTE: baseline carries a blocker: {blocker}")
+    if seeded:
+        # Always loud, not just on failure: a seeded baseline means the
+        # gate below cannot hard-fail — "green" here is not a perf signal.
+        print(
+            "NOTE: GATE DISARMED — baseline carries \"seed_estimate\": true "
+            "(placeholder numbers, regressions only WARN).\n"
+            "      Arm it: run scripts/bench.sh on the pinned runner, then "
+            "scripts/bench_compare.sh arm <BENCH_*.json>"
+        )
+    bdisp, cdisp = base_doc.get("dispatch"), cur_doc.get("dispatch")
+    if bdisp and cdisp and bdisp != cdisp:
+        print(
+            f"NOTE: kernel dispatch differs — baseline '{bdisp}' vs "
+            f"current '{cdisp}'; medians are not from the same datapath"
+        )
     if suite != cur_suite:
         sys.exit(f"FAIL: comparing suite '{suite}' against '{cur_suite}'")
     tracked = TRACKED.get(suite)
